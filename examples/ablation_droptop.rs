@@ -1,0 +1,47 @@
+//! Ablation playground: flip KAKURENBO's HE/MB/RF/LR switches and the
+//! DropTop fraction from the command line (paper Table 6 / Appendix D).
+//!
+//!     cargo run --release --example ablation_droptop -- \
+//!         --bits v1011 --fraction 0.4 --droptop 0.02 --preset deepcam
+
+use kakurenbo::cli::Args;
+use kakurenbo::config::{presets, Components, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::hiding::selector::SelectMode;
+use kakurenbo::runtime::XlaRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    let bits = args.flag_or("bits", "v1111");
+    let fraction = args.flag_parse::<f64>("fraction")?.unwrap_or(0.4);
+    let droptop = args.flag_parse::<f64>("droptop")?.unwrap_or(0.0);
+    let preset = args.flag_or("preset", "imagenet_resnet50");
+
+    let rt = XlaRuntime::new(&kakurenbo::runtime::default_artifacts_dir())?;
+    let mut cfg = presets::by_name(preset)?;
+
+    // baseline reference
+    cfg.strategy = StrategyConfig::Baseline;
+    cfg.name = "ablation/baseline".into();
+    let base = run_experiment(&rt, cfg.clone())?;
+
+    cfg.strategy = StrategyConfig::Kakurenbo {
+        max_fraction: fraction,
+        tau: args.flag_parse::<f32>("tau")?.unwrap_or(0.7),
+        components: Components::from_bits(bits)?,
+        drop_top: droptop,
+        select_mode: SelectMode::QuickSelect,
+    };
+    cfg.name = format!("ablation/{bits}");
+    let run = run_experiment(&rt, cfg)?;
+
+    println!("\nbaseline acc {:.2}% time {:.1}s", base.best_acc * 100.0, base.total_time);
+    println!(
+        "{bits} (F={fraction}, droptop={droptop}) acc {:.2}% ({:+.2}) time {:.1}s ({:+.1}%)",
+        run.best_acc * 100.0,
+        (run.best_acc - base.best_acc) * 100.0,
+        run.total_time,
+        (run.total_time / base.total_time - 1.0) * 100.0,
+    );
+    Ok(())
+}

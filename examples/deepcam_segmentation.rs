@@ -1,0 +1,51 @@
+//! DeepCAM-proxy segmentation scenario: KAKURENBO on a per-pixel
+//! segmentation task, including the DropTop extension (paper Appendix D).
+//!
+//!     cargo run --release --example deepcam_segmentation
+
+use kakurenbo::config::{presets, Components, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::hiding::selector::SelectMode;
+use kakurenbo::runtime::XlaRuntime;
+use kakurenbo::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let rt = XlaRuntime::new(&kakurenbo::runtime::default_artifacts_dir())?;
+    let cfg = presets::by_name("deepcam")?;
+    println!("deepcam proxy: segnet, {} epochs, {} virtual workers", cfg.epochs, cfg.workers);
+
+    let strategies = [
+        ("baseline", StrategyConfig::Baseline),
+        ("kakurenbo-0.3", StrategyConfig::kakurenbo(0.3)),
+        (
+            "kakurenbo+droptop",
+            StrategyConfig::Kakurenbo {
+                max_fraction: 0.3,
+                tau: 0.7,
+                components: Components::ALL,
+                drop_top: 0.02,
+                select_mode: SelectMode::QuickSelect,
+            },
+        ),
+        ("iswr", StrategyConfig::Iswr),
+    ];
+
+    let mut t = Table::new("DeepCAM proxy — segmentation").header(&[
+        "strategy", "acc (PA)", "time (s)", "modeled @8w (s)",
+    ]);
+    for (label, strat) in strategies {
+        let mut c = cfg.clone();
+        c.strategy = strat;
+        c.name = format!("deepcam_example/{label}");
+        let r = run_experiment(&rt, c)?;
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}%", r.best_acc * 100.0),
+            format!("{:.2}", r.total_time),
+            format!("{:.2}", r.total_modeled_time),
+        ]);
+    }
+    t.print();
+    println!("PA = fraction of validation samples with pixel accuracy > 75% (paper's DeepCAM metric analogue)");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: train a small classifier with KAKURENBO vs the baseline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Shows the minimal public-API path: pick a preset, choose a strategy,
+//! run, inspect the result.
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::runtime::XlaRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a runtime over the AOT artifacts (Python already ran at build time)
+    let rt = XlaRuntime::new(&kakurenbo::runtime::default_artifacts_dir())?;
+
+    // 2. a preset experiment (CIFAR-100-like proxy + MLP), scaled down
+    let mut cfg = presets::by_name("cifar100_wrn")?;
+    cfg.epochs = 10;
+
+    // 3. baseline run
+    cfg.strategy = StrategyConfig::Baseline;
+    let baseline = run_experiment(&rt, cfg.clone())?;
+
+    // 4. KAKURENBO run: hide up to 30% of samples per epoch
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    let kakurenbo = run_experiment(&rt, cfg)?;
+
+    println!("\n--- quickstart summary ---");
+    println!(
+        "baseline : acc {:.2}%  time {:.2}s",
+        baseline.best_acc * 100.0,
+        baseline.total_time
+    );
+    println!(
+        "kakurenbo: acc {:.2}%  time {:.2}s  ({:+.1}% time, {:+.2} acc)",
+        kakurenbo.best_acc * 100.0,
+        kakurenbo.total_time,
+        (kakurenbo.total_time / baseline.total_time - 1.0) * 100.0,
+        (kakurenbo.best_acc - baseline.best_acc) * 100.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT lowering: every model variant -> artifacts/<name>_<kind>.hlo.txt.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes artifacts/manifest.json describing the calling convention of
+each artifact (parameter names/shapes/init, batch, outputs) for the Rust
+runtime (rust/src/runtime/artifact.rs).
+
+Python runs ONCE at build time (`make artifacts`); it is never on the
+training request path.  Re-lowering is skipped when the source fingerprint
+recorded in the manifest matches (so `make artifacts` is a cheap no-op).
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts] [--force]
+                                          [--only cnn_c32_b64,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import inspect
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fused_loss_stats as k_fls
+from .kernels import matmul_bias_act as k_mba
+from .kernels import sgd_momentum as k_sgd
+
+
+def source_fingerprint() -> str:
+    """Hash of every module whose change must invalidate the artifacts."""
+    h = hashlib.sha256()
+    for mod in (M, k_fls, k_mba, k_sgd):
+        h.update(inspect.getsource(mod).encode())
+    return h.hexdigest()[:16]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+KINDS = ("train_step", "fwd_stats", "fwd_embed")
+
+BUILDERS = {
+    "train_step": M.build_train_step,
+    "fwd_stats": M.build_fwd_stats,
+    "fwd_embed": M.build_fwd_embed,
+}
+
+
+def artifact_kinds(spec: M.ModelSpec):
+    for kind in KINDS:
+        if kind == "fwd_embed" and spec.embed_dim == 0:
+            continue
+        yield kind
+
+
+def lower_variant(spec: M.ModelSpec, kind: str, out_dir: str) -> str:
+    fn = BUILDERS[kind](spec)
+    args = M.example_args(spec, kind)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{spec.name}_{kind}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars in {time.time() - t0:.1f}s", flush=True)
+    return fname
+
+
+def variant_manifest(spec: M.ModelSpec) -> dict:
+    return {
+        "family": spec.family,
+        "batch": spec.batch,
+        "input_shape": list(spec.input_shape),
+        "label_shape": list(spec.label_shape),
+        "classes": spec.classes,
+        "embed_dim": spec.embed_dim,
+        "param_count": spec.param_count,
+        "params": [
+            {"name": p.name, "shape": list(p.shape), "init_std": p.init_std}
+            for p in spec.param_specs
+        ],
+        "artifacts": {
+            kind: f"{spec.name}_{kind}.hlo.txt" for kind in artifact_kinds(spec)
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default="", help="comma-separated variant names")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    fp = source_fingerprint()
+    prev = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            prev = json.load(f)
+
+    only = set(args.only.split(",")) - {""}
+    variants = {
+        name: spec for name, spec in M.VARIANTS.items() if not only or name in only
+    }
+    up_to_date = prev.get("fingerprint") == fp and not args.force
+
+    manifest = {
+        "fingerprint": fp,
+        "convention": {
+            "train_step": "(params.., vel.., x, y, sw, lr, mu) -> (params'.., vel'.., loss, correct, conf)",
+            "fwd_stats": "(params.., x, y) -> (loss, correct, conf)",
+            "fwd_embed": "(params.., x, y) -> (loss, correct, conf, emb, probs)",
+        },
+        "models": dict(prev.get("models", {})),
+    }
+
+    for name, spec in variants.items():
+        vm = variant_manifest(spec)
+        have_all = all(
+            os.path.exists(os.path.join(out_dir, f)) for f in vm["artifacts"].values()
+        )
+        if up_to_date and have_all and prev.get("models", {}).get(name) == vm:
+            print(f"{name}: up to date")
+            manifest["models"][name] = vm
+            continue
+        print(f"{name}: lowering ({spec.param_count} params)")
+        for kind in artifact_kinds(spec):
+            lower_variant(spec, kind, out_dir)
+        manifest["models"][name] = vm
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest['models'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

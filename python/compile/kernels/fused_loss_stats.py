@@ -1,0 +1,137 @@
+"""Pallas kernel: fused per-sample loss / prediction-accuracy / confidence.
+
+This is KAKURENBO's L1 hot-spot.  The hiding decision (paper §3.1) needs,
+for *every* sample on *every* epoch:
+
+  * the softmax cross-entropy loss          (sorting key for hiding),
+  * whether the prediction is correct (PA)  (move-back rule),
+  * the max softmax probability (PC)        (move-back rule, threshold τ).
+
+A naive implementation makes three passes over `logits[B, C]` (softmax,
+argmax, gather).  This kernel computes all three statistics in a single
+pass over each VMEM-resident block of rows, so on a real TPU the logits are
+read from HBM exactly once.  The backward pass (only `loss` is
+differentiable) is a second Pallas kernel that recomputes the row softmax
+in-register instead of saving it (rematerialization: saves B*C*4 bytes of
+residual memory per step for one extra exp).
+
+Lowered with interpret=True so the emitted HLO runs on any PJRT backend
+(see /opt/xla-example/README.md); TPU perf is estimated in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows handled per grid step.  C (classes) is always materialized fully so
+# the row reduction is single-pass; block VMEM = BLOCK_B * C * 4 bytes
+# (64 * 1024 * 4 = 256 KiB at C=1024 — comfortably inside a 16 MiB VMEM).
+BLOCK_B = 64
+
+
+def _block_rows(b: int) -> int:
+    """Largest power-of-two divisor of b <= BLOCK_B; b itself otherwise.
+
+    Row blocks must divide the batch exactly: interpret-mode Pallas pads
+    out-of-bounds reads with NaN.
+    """
+    best = b
+    t = 1
+    while t * 2 <= min(b, BLOCK_B):
+        t *= 2
+        if b % t == 0:
+            best = t
+    return best if best <= BLOCK_B else b
+
+
+def _fwd_kernel(z_ref, y_ref, loss_ref, correct_ref, conf_ref, *, n_classes):
+    """One block of rows: single pass -> (loss, correct, conf)."""
+    z = z_ref[...].astype(jnp.float32)       # (bb, C)
+    y = y_ref[...]                            # (bb,) int32
+    m = jnp.max(z, axis=-1)                   # row max
+    e = jnp.exp(z - m[:, None])
+    s = jnp.sum(e, axis=-1)
+    lse = m + jnp.log(s)
+    # Gather-free label logit: one-hot contraction vectorizes on the VPU.
+    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    onehot = cols == y[:, None]
+    zy = jnp.sum(jnp.where(onehot, z, 0.0), axis=-1)
+    pred = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    loss_ref[...] = lse - zy
+    correct_ref[...] = (pred == y).astype(jnp.float32)
+    conf_ref[...] = jnp.exp(m - lse)          # = max softmax prob
+
+
+def _bwd_kernel(z_ref, y_ref, dloss_ref, dz_ref):
+    """dz = (softmax(z) - onehot(y)) * dloss[:, None], softmax recomputed."""
+    z = z_ref[...].astype(jnp.float32)
+    y = y_ref[...]
+    dloss = dloss_ref[...]
+    m = jnp.max(z, axis=-1)
+    e = jnp.exp(z - m[:, None])
+    p = e / jnp.sum(e, axis=-1)[:, None]
+    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    onehot = (cols == y[:, None]).astype(jnp.float32)
+    dz_ref[...] = (p - onehot) * dloss[:, None]
+
+
+def _fwd_call(logits, labels):
+    b, c = logits.shape
+    bb = _block_rows(b)
+    grid = (pl.cdiv(b, bb),)
+    out_shapes = [jax.ShapeDtypeStruct((b,), jnp.float32)] * 3
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, n_classes=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((bb,), lambda i: (i,))] * 3,
+        out_shape=out_shapes,
+        interpret=True,
+    )(logits, labels)
+
+
+def _bwd_call(logits, labels, dloss):
+    b, c = logits.shape
+    bb = _block_rows(b)
+    grid = (pl.cdiv(b, bb),)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(logits, labels, dloss)
+
+
+@jax.custom_vjp
+def fused_loss_stats(logits, labels):
+    """Per-sample (loss, correct, conf) from logits[B,C] and labels[B]i32."""
+    loss, correct, conf = _fwd_call(logits, labels)
+    return loss, correct, conf
+
+
+def _vjp_fwd(logits, labels):
+    out = _fwd_call(logits, labels)
+    return out, (logits, labels)
+
+
+def _vjp_bwd(res, cotangents):
+    logits, labels = res
+    dloss, _dcorrect, _dconf = cotangents  # correct/conf: non-differentiable
+    dz = _bwd_call(logits, labels, dloss)
+    return dz, None
+
+
+fused_loss_stats.defvjp(_vjp_fwd, _vjp_bwd)

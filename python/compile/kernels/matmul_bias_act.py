@@ -1,0 +1,149 @@
+"""Pallas kernel: tiled fused dense layer  act(x @ w + b).
+
+The classifier head / MLP trunk matmuls of the models in this repo run
+through this kernel so the L2 graph exercises a real tiled MXU schedule:
+
+  grid = (M/bm, N/bn, K/bk); each step accumulates one (bm, bk)x(bk, bn)
+  partial product into a VMEM accumulator; on the last K step the bias add
+  and activation are fused into the epilogue (no second pass over the
+  output tile).
+
+On real TPU the natural tile is (128, 128) f32 / bf16 for the 128x128
+systolic MXU; under interpret=True the tile sizes only shape the HLO, so
+we clamp them to the problem size.  The custom VJP expresses dx / dw as
+two more tiled matmuls through the same kernel (dimension-swapped), with
+the activation mask applied by a small elementwise Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _block(n: int, cap: int) -> int:
+    """Largest power-of-two divisor of n that is <= cap; n itself otherwise.
+
+    Blocks must divide the dimension exactly: interpret-mode Pallas pads
+    out-of-bounds reads with NaN, which would poison the K-accumulation.
+    """
+    best = n
+    t = 1
+    while t * 2 <= min(n, cap):
+        t *= 2
+        if n % t == 0:
+            best = t
+    return best if best <= cap else n
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """Grid (i, j, k): accumulate x[i,k] @ w[k,j] into the revisited o tile.
+
+    The output BlockSpec maps every k step of a given (i, j) to the same
+    tile, so o_ref acts as the VMEM accumulator (standard Pallas pattern);
+    no scratch buffer and no extra HBM traffic for partials.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def pl_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul f32[M,K] @ f32[K,N] -> f32[M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = _block(m, TILE_M), _block(n, TILE_N), _block(k, TILE_K)
+    nk = pl.cdiv(k, bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn), nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _bias_act_kernel(y_ref, b_ref, o_ref, *, act: str):
+    y = y_ref[...] + b_ref[...][None, :]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _bias_act(y: jax.Array, b: jax.Array, act: str) -> jax.Array:
+    m, n = y.shape
+    bm = _block(m, TILE_M)
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, act=act),
+        grid=(pl.cdiv(m, bm),),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(y, b)
+
+
+def _mask_kernel(dy_ref, out_ref, mask_ref):
+    """mask = dy * (out > 0) — relu backward."""
+    mask_ref[...] = dy_ref[...] * (out_ref[...] > 0.0).astype(jnp.float32)
+
+
+def _relu_mask(dy: jax.Array, out: jax.Array) -> jax.Array:
+    m, n = dy.shape
+    bm = _block(m, TILE_M)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(pl.cdiv(m, bm),),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(dy, out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(x, w, b, act: str = "relu"):
+    """Fused dense layer: act(x @ w + b); act in {"relu", "id"}."""
+    return _bias_act(pl_matmul(x, w), b, act)
+
+
+def _mba_fwd(x, w, b, act):
+    out = _bias_act(pl_matmul(x, w), b, act)
+    return out, (x, w, out)
+
+
+def _mba_bwd(act, res, dy):
+    x, w, out = res
+    if act == "relu":
+        dy = _relu_mask(dy, out)
+    dx = pl_matmul(dy, w.T)
+    dw = pl_matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is pytest-compared (to tight fp tolerance) against the function of the same
+name here.  They are also used by `model.py --ref` to build a kernel-free
+version of the full train step for end-to-end L2 checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_loss_stats(logits: jax.Array, labels: jax.Array):
+    """Per-sample softmax cross-entropy loss + prediction stats.
+
+    Args:
+      logits: f32[B, C]
+      labels: i32[B]
+
+    Returns:
+      loss:    f32[B]  -- softmax cross-entropy per sample
+      correct: f32[B]  -- 1.0 where argmax(logits) == label (PA in the paper)
+      conf:    f32[B]  -- max softmax probability (PC in the paper)
+    """
+    z = logits.astype(jnp.float32)
+    m = jnp.max(z, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(z - m[:, None]), axis=-1))
+    zy = jnp.take_along_axis(z, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss = lse - zy
+    pred = jnp.argmax(z, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    conf = jnp.exp(m - lse)
+    return loss, correct, conf
+
+
+def fused_loss_stats_grad(logits: jax.Array, labels: jax.Array, dloss: jax.Array):
+    """VJP of the `loss` output of fused_loss_stats w.r.t. logits.
+
+    d logits = (softmax(z) - onehot(y)) * dloss[:, None]
+    (`correct` and `conf` are non-differentiable outputs.)
+    """
+    z = logits.astype(jnp.float32)
+    p = jax.nn.softmax(z, axis=-1)
+    onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.float32)
+    return (p - onehot) * dloss[:, None]
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain f32 matmul oracle: f32[M,K] @ f32[K,N] -> f32[M,N]."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def matmul_bias_act(x: jax.Array, w: jax.Array, b: jax.Array, act: str) -> jax.Array:
+    """Fused dense layer oracle: act(x @ w + b), act in {"relu", "id"}."""
+    y = jnp.matmul(x, w) + b[None, :]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act != "id":
+        raise ValueError(f"unknown act {act!r}")
+    return y
+
+
+def sgd_momentum(w: jax.Array, v: jax.Array, g: jax.Array, lr, mu):
+    """Heavy-ball SGD oracle: v' = mu*v + g ; w' = w - lr*v'."""
+    v_new = mu * v + g
+    w_new = w - lr * v_new
+    return w_new, v_new

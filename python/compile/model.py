@@ -1,0 +1,332 @@
+"""L2: JAX model definitions + train/eval step builders (build-time only).
+
+Three model families cover the paper's four workloads:
+
+  * ``mlp``    — dense classifier; stand-in for WideResNet-28-10/CIFAR-100
+                 and for the DeiT transfer-learning pipeline (Table 4).
+  * ``cnn``    — small convnet on image tensors; stand-in for
+                 ResNet-50 / EfficientNet-b3 on ImageNet-1K (proxy data).
+  * ``segnet`` — per-pixel segmentation net; stand-in for DeepCAM.
+
+All dense layers run through the Pallas ``matmul_bias_act`` kernel, the
+loss/PA/PC epilogue through ``fused_loss_stats``, and the optimizer through
+``sgd_momentum`` — so the lowered HLO contains the L1 kernels.  A
+``use_ref=True`` switch builds the same computation from the pure-jnp
+oracles, which pytest uses for end-to-end L2 equivalence checks.
+
+Artifact calling convention (shared with rust/src/runtime/artifact.rs):
+
+  train_step(params..., vel..., x, y, sw, lr, mu)
+      -> (params'..., vel'..., loss[B], correct[B], conf[B])
+  fwd_stats(params..., x, y) -> (loss[B], correct[B], conf[B])
+  fwd_embed(params..., x, y) -> (loss, correct, conf, emb[B,D], probs[B,C])
+
+Parameters are ordered by the ``param_specs`` list of each model spec; the
+same order is recorded in artifacts/manifest.json which the Rust runtime
+uses to initialize and thread buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.fused_loss_stats import fused_loss_stats
+from .kernels.matmul_bias_act import matmul_bias_act
+from .kernels.sgd_momentum import sgd_momentum_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init_std: float  # 0.0 => zeros (biases)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A fully-shaped model variant (architecture + batch size)."""
+
+    name: str            # e.g. "cnn_c32_b64"
+    family: str          # mlp | cnn | segnet
+    batch: int
+    input_shape: tuple   # per-sample, e.g. (64,) or (8, 8, 3)
+    label_shape: tuple   # per-sample label shape: () or (H, W)
+    classes: int
+    embed_dim: int       # penultimate feature dim (0 => no fwd_embed artifact)
+    param_specs: tuple   # tuple[ParamSpec]
+    arch: dict           # family-specific sizes
+
+    @property
+    def param_count(self) -> int:
+        return sum(int(math.prod(p.shape)) for p in self.param_specs)
+
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+
+def _he(fan_in: int) -> float:
+    return math.sqrt(2.0 / fan_in)
+
+
+def _glorot(fan_in: int, fan_out: int) -> float:
+    return math.sqrt(2.0 / (fan_in + fan_out))
+
+
+def mlp_spec(name: str, batch: int, d_in: int, hidden: int, classes: int) -> ModelSpec:
+    ps = (
+        ParamSpec("fc1/w", (d_in, hidden), _he(d_in)),
+        ParamSpec("fc1/b", (hidden,), 0.0),
+        ParamSpec("fc2/w", (hidden, hidden), _he(hidden)),
+        ParamSpec("fc2/b", (hidden,), 0.0),
+        ParamSpec("head/w", (hidden, classes), _glorot(hidden, classes)),
+        ParamSpec("head/b", (classes,), 0.0),
+    )
+    return ModelSpec(name, "mlp", batch, (d_in,), (), classes, hidden, ps,
+                     {"d_in": d_in, "hidden": hidden})
+
+
+def cnn_spec(name: str, batch: int, hw: int, c_in: int, ch1: int, ch2: int,
+             hidden: int, classes: int) -> ModelSpec:
+    ps = (
+        ParamSpec("conv1/w", (3, 3, c_in, ch1), _he(9 * c_in)),
+        ParamSpec("conv1/b", (ch1,), 0.0),
+        ParamSpec("conv2/w", (3, 3, ch1, ch2), _he(9 * ch1)),
+        ParamSpec("conv2/b", (ch2,), 0.0),
+        ParamSpec("fc/w", (ch2, hidden), _he(ch2)),
+        ParamSpec("fc/b", (hidden,), 0.0),
+        ParamSpec("head/w", (hidden, classes), _glorot(hidden, classes)),
+        ParamSpec("head/b", (classes,), 0.0),
+    )
+    return ModelSpec(name, "cnn", batch, (hw, hw, c_in), (), classes, hidden, ps,
+                     {"hw": hw, "c_in": c_in, "ch1": ch1, "ch2": ch2, "hidden": hidden})
+
+
+def segnet_spec(name: str, batch: int, hw: int, c_in: int, ch: int,
+                classes: int) -> ModelSpec:
+    ps = (
+        ParamSpec("conv1/w", (3, 3, c_in, ch), _he(9 * c_in)),
+        ParamSpec("conv1/b", (ch,), 0.0),
+        ParamSpec("conv2/w", (3, 3, ch, ch), _he(9 * ch)),
+        ParamSpec("conv2/b", (ch,), 0.0),
+        ParamSpec("head/w", (1, 1, ch, classes), _glorot(ch, classes)),
+        ParamSpec("head/b", (classes,), 0.0),
+    )
+    return ModelSpec(name, "segnet", batch, (hw, hw, c_in), (hw, hw), classes, 0, ps,
+                     {"hw": hw, "c_in": c_in, "ch": ch})
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _dense(use_ref: bool, x, w, b, act: str):
+    if use_ref:
+        return kref.matmul_bias_act(x, w, b, act)
+    return matmul_bias_act(x, w, b, act)
+
+
+def _conv(x, w, b):
+    """3x3 (or 1x1) SAME conv, NHWC/HWIO, + bias."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def _loss_stats(use_ref: bool, logits, labels):
+    if use_ref:
+        return kref.fused_loss_stats(logits, labels)
+    return fused_loss_stats(logits, labels)
+
+
+def forward(spec: ModelSpec, params: dict, x, use_ref: bool = False):
+    """Returns (logits, embed).  segnet: logits [B,H,W,C], embed None."""
+    if spec.family == "mlp":
+        h = _dense(use_ref, x, params["fc1/w"], params["fc1/b"], "relu")
+        h = _dense(use_ref, h, params["fc2/w"], params["fc2/b"], "relu")
+        logits = _dense(use_ref, h, params["head/w"], params["head/b"], "id")
+        return logits, h
+    if spec.family == "cnn":
+        h = jax.nn.relu(_conv(x, params["conv1/w"], params["conv1/b"]))
+        # 2x2 average pool
+        h = jax.lax.reduce_window(
+            h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        ) / 4.0
+        h = jax.nn.relu(_conv(h, params["conv2/w"], params["conv2/b"]))
+        h = jnp.mean(h, axis=(1, 2))  # global average pool -> [B, ch2]
+        h = _dense(use_ref, h, params["fc/w"], params["fc/b"], "relu")
+        logits = _dense(use_ref, h, params["head/w"], params["head/b"], "id")
+        return logits, h
+    if spec.family == "segnet":
+        h = jax.nn.relu(_conv(x, params["conv1/w"], params["conv1/b"]))
+        h = jax.nn.relu(_conv(h, params["conv2/w"], params["conv2/b"]))
+        logits = _conv(h, params["head/w"], params["head/b"])
+        return logits, None
+    raise ValueError(spec.family)
+
+
+# Pixel-accuracy threshold above which a segmentation sample counts as
+# "predicted correctly" (PA) — DeepCAM analogue of top-1 correctness.
+SEG_PA_THRESHOLD = 0.90
+
+
+def sample_stats(spec: ModelSpec, logits, y, use_ref: bool = False):
+    """Per-sample (loss, correct, conf) for either task family."""
+    if spec.family == "segnet":
+        b = logits.shape[0]
+        c = logits.shape[-1]
+        flat_logits = logits.reshape(b, -1, c)
+        flat_y = y.reshape(b, -1)
+        npix = flat_y.shape[1]
+        pl_, pc_, pf_ = _loss_stats(
+            use_ref, flat_logits.reshape(-1, c), flat_y.reshape(-1)
+        )
+        loss = jnp.mean(pl_.reshape(b, npix), axis=1)
+        pixacc = jnp.mean(pc_.reshape(b, npix), axis=1)
+        conf = jnp.mean(pf_.reshape(b, npix), axis=1)
+        correct = (pixacc > SEG_PA_THRESHOLD).astype(jnp.float32)
+        return loss, correct, conf
+    return _loss_stats(use_ref, logits, y)
+
+
+# ---------------------------------------------------------------------------
+# Step builders (the functions that get AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def params_dict(spec: ModelSpec, leaves: Sequence[jax.Array]) -> dict:
+    assert len(leaves) == len(spec.param_specs)
+    return {p.name: l for p, l in zip(spec.param_specs, leaves)}
+
+
+def params_leaves(spec: ModelSpec, d: dict) -> list:
+    return [d[p.name] for p in spec.param_specs]
+
+
+def build_train_step(spec: ModelSpec, use_ref: bool = False) -> Callable:
+    """(params…, vel…, x, y, sw, lr, mu) -> (params'…, vel'…, loss, correct, conf).
+
+    sw are per-sample gradient weights (1.0 for the baseline); the weighted
+    objective is (1/B) * sum_i sw_i * loss_i, which implements importance
+    re-weighting (ISWR), Selective-Backprop subset masks, and GradMatch
+    subset weights with one artifact.
+    """
+    n = len(spec.param_specs)
+
+    def step(*args):
+        p_leaves = args[:n]
+        v_leaves = args[n:2 * n]
+        x, y, sw, lr, mu = args[2 * n:]
+        params = params_dict(spec, p_leaves)
+        vel = params_dict(spec, v_leaves)
+
+        def objective(params):
+            logits, _ = forward(spec, params, x, use_ref)
+            loss, correct, conf = sample_stats(spec, logits, y, use_ref)
+            wmean = jnp.sum(loss * sw) / spec.batch
+            return wmean, (loss, correct, conf)
+
+        grads, (loss, correct, conf) = jax.grad(objective, has_aux=True)(params)
+        if use_ref:
+            new_p, new_v = {}, {}
+            for k in params:
+                new_p[k], new_v[k] = kref.sgd_momentum(params[k], vel[k], grads[k], lr, mu)
+        else:
+            new_p, new_v = sgd_momentum_tree(params, vel, grads, lr, mu)
+        return (*params_leaves(spec, new_p), *params_leaves(spec, new_v),
+                loss, correct, conf)
+
+    return step
+
+
+def build_fwd_stats(spec: ModelSpec, use_ref: bool = False) -> Callable:
+    """(params…, x, y) -> (loss[B], correct[B], conf[B]) — no grad, no update.
+
+    Used by the coordinator for (a) refreshing the hidden list at epoch end
+    (paper §3.4, step D.1), (b) the validation pass, and (c) Selective-
+    Backprop's selection forward pass.
+    """
+    n = len(spec.param_specs)
+
+    def fwd(*args):
+        params = params_dict(spec, args[:n])
+        x, y = args[n:]
+        logits, _ = forward(spec, params, x, use_ref)
+        return sample_stats(spec, logits, y, use_ref)
+
+    return fwd
+
+
+def build_fwd_embed(spec: ModelSpec, use_ref: bool = False) -> Callable:
+    """(params…, x, y) -> (loss, correct, conf, emb[B,D], probs[B,C]).
+
+    GradMatch's last-layer gradient approximation needs the penultimate
+    features and the softmax probabilities: per-sample last-layer gradient
+    = (probs - onehot(y)) ⊗ emb (computed on the Rust side).
+    """
+    assert spec.embed_dim > 0, f"{spec.name} has no embedding output"
+    n = len(spec.param_specs)
+
+    def fwd(*args):
+        params = params_dict(spec, args[:n])
+        x, y = args[n:]
+        logits, emb = forward(spec, params, x, use_ref)
+        loss, correct, conf = sample_stats(spec, logits, y, use_ref)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return loss, correct, conf, emb, probs
+
+    return fwd
+
+
+def example_args(spec: ModelSpec, kind: str):
+    """ShapeDtypeStructs matching the artifact calling convention."""
+    f32, i32 = jnp.float32, jnp.int32
+    p = [jax.ShapeDtypeStruct(ps.shape, f32) for ps in spec.param_specs]
+    x = jax.ShapeDtypeStruct((spec.batch, *spec.input_shape), f32)
+    y = jax.ShapeDtypeStruct((spec.batch, *spec.label_shape), i32)
+    if kind == "train_step":
+        sw = jax.ShapeDtypeStruct((spec.batch,), f32)
+        lr = jax.ShapeDtypeStruct((), f32)
+        mu = jax.ShapeDtypeStruct((), f32)
+        return [*p, *p, x, y, sw, lr, mu]
+    if kind in ("fwd_stats", "fwd_embed"):
+        return [*p, x, y]
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Variant registry — every artifact the Rust side can ask for.
+# ---------------------------------------------------------------------------
+
+# Stand-ins (see DESIGN.md §3):
+#   mlp_c100_b64  — WRN-28-10 / CIFAR-100
+#   cnn_c32_b64   — ResNet-50 / ImageNet-1K proxy
+#   cnnw_c32_b64  — EfficientNet-b3 (wider CNN)
+#   segnet_b32    — DeepCAM
+#   mlp_c64_b64   — DeiT-Tiny / Fractal-3K upstream
+#   mlp_c10_b64   — downstream CIFAR-10 transfer head
+#   cnn_c32_b{128,256} — Table 11 global-batch scaling
+VARIANTS = {
+    s.name: s
+    for s in [
+        mlp_spec("mlp_c100_b64", 64, 64, 128, 100),
+        mlp_spec("mlp_c64_b64", 64, 64, 128, 64),
+        mlp_spec("mlp_c10_b64", 64, 64, 128, 10),
+        cnn_spec("cnn_c32_b64", 64, 8, 3, 16, 32, 64, 32),
+        cnn_spec("cnn_c32_b128", 128, 8, 3, 16, 32, 64, 32),
+        cnn_spec("cnn_c32_b256", 256, 8, 3, 16, 32, 64, 32),
+        cnn_spec("cnnw_c32_b64", 64, 8, 3, 24, 48, 96, 32),
+        cnn_spec("cnn_c100_b64", 64, 8, 3, 16, 32, 64, 100),
+        segnet_spec("segnet_b32", 32, 16, 3, 16, 2),
+    ]
+}

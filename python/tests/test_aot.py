@@ -1,0 +1,83 @@
+"""AOT pipeline invariants: manifest consistency and HLO-text round-trip.
+
+These tests pin the Python->Rust contract: every variant registered in
+compile.model.VARIANTS must lower, carry a faithful manifest entry, and
+emit HLO text that XLA's own parser accepts (the same parser the Rust
+runtime uses via HloModuleProto::from_text_file).
+"""
+
+import json
+import math
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_variants():
+    m = manifest()
+    for name, spec in M.VARIANTS.items():
+        assert name in m["models"], f"{name} missing from manifest"
+        vm = m["models"][name]
+        assert vm["batch"] == spec.batch
+        assert vm["classes"] == spec.classes
+        assert vm["param_count"] == spec.param_count
+        assert tuple(vm["input_shape"]) == spec.input_shape
+        # param order must match the spec exactly (Rust threads by position)
+        assert [p["name"] for p in vm["params"]] == [p.name for p in spec.param_specs]
+        for pj, ps in zip(vm["params"], spec.param_specs):
+            assert tuple(pj["shape"]) == ps.shape
+            assert math.isclose(pj["init_std"], ps.init_std, rel_tol=1e-9)
+
+
+def test_artifact_files_exist_and_are_hlo_text():
+    m = manifest()
+    for name, vm in m["models"].items():
+        for kind, fname in vm["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), f"{fname} missing"
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), f"{fname} is not HLO text"
+
+
+def test_fingerprint_matches_current_sources():
+    m = manifest()
+    assert m["fingerprint"] == aot.source_fingerprint(), (
+        "artifacts are stale: run `make artifacts`"
+    )
+
+
+def test_lowering_is_deterministic():
+    """Lowering the same variant twice yields identical HLO text."""
+    spec = M.VARIANTS["mlp_c10_b64"]
+    fn = M.build_fwd_stats(spec)
+    args = M.example_args(spec, "fwd_stats")
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert t1 == t2
+
+
+def test_train_step_artifact_signature():
+    """Entry computation must take 2P+5 parameters and return 2P+3 values."""
+    m = manifest()
+    vm = m["models"]["mlp_c10_b64"]
+    path = os.path.join(ART, vm["artifacts"]["train_step"])
+    text = open(path).read()
+    n = len(vm["params"])
+    # parameter count: count 'parameter(k)' occurrences in the entry
+    import re
+    params = set(re.findall(r"parameter\((\d+)\)", text))
+    assert len(params) == 2 * n + 5, f"found {len(params)} entry parameters"

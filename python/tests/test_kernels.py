@@ -1,0 +1,181 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+hypothesis sweeps shapes, magnitudes, and seeds; the oracle comparison is
+the core correctness signal for the whole stack (the lowered HLO contains
+exactly these kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_loss_stats import fused_loss_stats
+from compile.kernels.matmul_bias_act import matmul_bias_act, pl_matmul
+from compile.kernels.sgd_momentum import sgd_momentum, sgd_momentum_tree
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# fused_loss_stats
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 130),
+    c=st.integers(2, 64),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_stats_matches_ref(b, c, scale, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    z = _rand(k1, (b, c), scale)
+    y = jax.random.randint(k2, (b,), 0, c)
+    loss, correct, conf = fused_loss_stats(z, y)
+    rl, rc, rp = ref.fused_loss_stats(z, y)
+    np.testing.assert_allclose(loss, rl, rtol=RTOL, atol=ATOL)
+    np.testing.assert_array_equal(np.asarray(correct), np.asarray(rc))
+    np.testing.assert_allclose(conf, rp, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(2, 64), c=st.integers(2, 32), seed=st.integers(0, 999))
+def test_loss_stats_grad_matches_ref(b, c, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    z = _rand(k1, (b, c), 3.0)
+    y = jax.random.randint(k2, (b,), 0, c)
+    dl = _rand(k3, (b,))
+
+    g1 = jax.grad(lambda z: jnp.sum(fused_loss_stats(z, y)[0] * dl))(z)
+    g2 = ref.fused_loss_stats_grad(z, y, dl)
+    np.testing.assert_allclose(g1, g2, rtol=RTOL, atol=ATOL)
+
+
+def test_loss_stats_invariants():
+    """conf in (0,1]; loss >= -log(conf_of_label); correct in {0,1}."""
+    k = jax.random.PRNGKey(7)
+    z = _rand(k, (128, 10), 5.0)
+    y = jax.random.randint(k, (128,), 0, 10)
+    loss, correct, conf = fused_loss_stats(z, y)
+    assert np.all(np.asarray(conf) > 0) and np.all(np.asarray(conf) <= 1 + 1e-6)
+    assert np.all(np.asarray(loss) >= -1e-5)
+    assert set(np.unique(np.asarray(correct))) <= {0.0, 1.0}
+    # a correct prediction with confidence p has loss = -log(p) exactly
+    li = np.asarray(loss)[np.asarray(correct) == 1.0]
+    ci = np.asarray(conf)[np.asarray(correct) == 1.0]
+    np.testing.assert_allclose(li, -np.log(ci), rtol=1e-4, atol=1e-5)
+
+
+def test_loss_stats_extreme_logits_stable():
+    z = jnp.array([[1e4, -1e4, 0.0], [-1e4, 1e4, 0.0]], jnp.float32)
+    y = jnp.array([0, 0], jnp.int32)
+    loss, correct, conf = fused_loss_stats(z, y)
+    assert np.all(np.isfinite(np.asarray(loss)))
+    np.testing.assert_allclose(np.asarray(correct), [1.0, 0.0])
+    np.testing.assert_allclose(np.asarray(conf), [1.0, 1.0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pl_matmul_matches_ref(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n))
+    np.testing.assert_allclose(
+        pl_matmul(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("act", ["relu", "id"])
+@pytest.mark.parametrize("shape", [(4, 8, 16), (64, 64, 100), (33, 70, 20), (128, 128, 128)])
+def test_matmul_bias_act_matches_ref(act, shape):
+    m, k, n = shape
+    keys = jax.random.split(jax.random.PRNGKey(m * 1000 + n), 3)
+    x, w = _rand(keys[0], (m, k)), _rand(keys[1], (k, n))
+    b = _rand(keys[2], (n,))
+    np.testing.assert_allclose(
+        matmul_bias_act(x, w, b, act),
+        ref.matmul_bias_act(x, w, b, act),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("act", ["relu", "id"])
+def test_matmul_bias_act_grads(act):
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    x, w = _rand(keys[0], (32, 48)), _rand(keys[1], (48, 24))
+    b, co = _rand(keys[2], (24,)), _rand(keys[3], (32, 24))
+
+    def f_pl(x, w, b):
+        return jnp.sum(matmul_bias_act(x, w, b, act) * co)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.matmul_bias_act(x, w, b, act) * co)
+
+    g1 = jax.grad(f_pl, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g1, g2):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sgd_momentum
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 20000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_momentum_matches_ref(n, lr, mu, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w, v, g = _rand(keys[0], (n,)), _rand(keys[1], (n,)), _rand(keys[2], (n,))
+    w1, v1 = sgd_momentum(w, v, g, lr, mu)
+    w2, v2 = ref.sgd_momentum(w, v, g, jnp.float32(lr), jnp.float32(mu))
+    np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_momentum_nd_shapes():
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    for shape in [(3, 3, 3, 16), (64, 128), (7,), (1, 1, 16, 2)]:
+        w, v, g = (_rand(k, shape) for k in keys)
+        w1, v1 = sgd_momentum(w, v, g, 0.05, 0.9)
+        w2, v2 = ref.sgd_momentum(w, v, g, 0.05, 0.9)
+        np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+        assert w1.shape == shape and v1.shape == shape
+
+
+def test_sgd_momentum_tree():
+    params = {"a/w": jnp.ones((4, 4)), "a/b": jnp.zeros((4,))}
+    vel = {k: jnp.zeros_like(x) for k, x in params.items()}
+    grads = {k: jnp.ones_like(x) for k, x in params.items()}
+    p1, v1 = sgd_momentum_tree(params, vel, grads, 0.1, 0.9)
+    np.testing.assert_allclose(p1["a/w"], 0.9 * np.ones((4, 4)), rtol=1e-6)
+    np.testing.assert_allclose(v1["a/b"], np.ones((4,)), rtol=1e-6)
+    # two steps accumulate momentum: v2 = 0.9*1 + 1 = 1.9
+    p2, v2 = sgd_momentum_tree(p1, v1, grads, 0.1, 0.9)
+    np.testing.assert_allclose(v2["a/w"], 1.9 * np.ones((4, 4)), rtol=1e-6)

@@ -1,0 +1,38 @@
+//! Extension bench (paper Appendix C.4 discussion): KAKURENBO vs the
+//! related dynamic-pruning methods the paper discusses but does not run —
+//! InfoBatch [28] (unbiased dynamic pruning) and EL2N [15] (early
+//! error-norm pruning) — plus Random hiding as the floor.
+//!
+//! Expectation from the paper's arguments: InfoBatch is competitive on
+//! accuracy (its rescaling keeps the gradient unbiased) with similar
+//! step savings; EL2N loses accuracy when the score epoch is early and
+//! the pruning permanent; Random sits below all informed methods.
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::report::{comparison_table, BenchCtx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Extensions: InfoBatch / EL2N / Random vs KAKURENBO")?;
+    let mut cfg = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut cfg);
+    let score_epoch = (cfg.epochs / 5).max(2);
+
+    let strategies = vec![
+        ("Baseline".to_string(), StrategyConfig::Baseline),
+        ("KAKURENBO".to_string(), StrategyConfig::kakurenbo(0.3)),
+        ("InfoBatch".to_string(), StrategyConfig::InfoBatch { r: 0.5 }),
+        (
+            "EL2N".to_string(),
+            StrategyConfig::El2n { score_epoch, fraction: 0.3, restart: false },
+        ),
+        ("Random".to_string(), StrategyConfig::RandomHiding { fraction: 0.3 }),
+    ];
+    let runs = comparison_table(
+        &ctx,
+        "Extensions — dynamic pruning methods (ImageNet proxy)",
+        &cfg,
+        &strategies,
+    )?;
+    ctx.save_runs("ext_strategies", &runs)?;
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Figure 10 (Appendix D): component ablation on DeepCAM, plus DropTop.
+//!
+//! Paper shape: v1000 (HE only) degrades; v1001 (+LR) recovers most of
+//! it; full KAKURENBO ~= baseline; DropTop (cutting the top-2% highest
+//! loss each epoch) *improves* accuracy over plain KAKURENBO because the
+//! DeepCAM tail is noise (Fig. 11).
+
+use kakurenbo::config::{presets, Components, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::hiding::selector::SelectMode;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::{diff_pct, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Fig 10: DeepCAM ablation incl. DropTop")?;
+    let mut base = presets::by_name("deepcam")?;
+    ctx.scale_config(&mut base);
+    // DropTop matters when the tail is noisy: use a visible corruption rate
+    if let kakurenbo::config::DatasetConfig::DeepcamProxy(ref mut c) = base.dataset {
+        c.corrupt_frac = 0.02;
+    }
+
+    let fracs = [0.2, 0.3, 0.4];
+    let kakurenbo = |f: f64, comps: &str, droptop: f64| StrategyConfig::Kakurenbo {
+        max_fraction: f,
+        tau: 0.7,
+        components: Components::from_bits(comps).unwrap(),
+        drop_top: droptop,
+        select_mode: SelectMode::QuickSelect,
+    };
+
+    let mut b_cfg = base.clone();
+    b_cfg.strategy = StrategyConfig::Baseline;
+    b_cfg.name = "fig10/baseline".into();
+    let rb = run_experiment(&ctx.rt, b_cfg)?;
+    println!("  baseline acc {:.4}", rb.best_acc);
+
+    let mut t = Table::new("Fig 10 — DeepCAM ablation").header(&[
+        "F", "v1000 (HE)", "v1001 (HE+LR)", "KAKURENBO", "KAKUR.+DropTop2%",
+    ]);
+    let mut payload = Vec::new();
+    for f in fracs {
+        let mut accs = Vec::new();
+        for (label, comps, dt) in [
+            ("v1000", "v1000", 0.0),
+            ("v1001", "v1001", 0.0),
+            ("kakurenbo", "v1111", 0.0),
+            ("droptop", "v1111", 0.02),
+        ] {
+            let mut cfg = base.clone();
+            cfg.strategy = kakurenbo(f, comps, dt);
+            cfg.name = format!("fig10/{label}-{f}");
+            let r = run_experiment(&ctx.rt, cfg)?;
+            println!("  F={f} {label}: {:.4}", r.best_acc);
+            accs.push(r.best_acc);
+        }
+        t.row(vec![
+            format!("{f}"),
+            format!("{} {}", pct(accs[0]), diff_pct(accs[0], rb.best_acc)),
+            format!("{} {}", pct(accs[1]), diff_pct(accs[1], rb.best_acc)),
+            format!("{} {}", pct(accs[2]), diff_pct(accs[2], rb.best_acc)),
+            format!("{} {}", pct(accs[3]), diff_pct(accs[3], rb.best_acc)),
+        ]);
+        payload.push(kakurenbo::jobj![
+            ("fraction", f),
+            ("baseline", rb.best_acc),
+            ("v1000", accs[0]),
+            ("v1001", accs[1]),
+            ("kakurenbo", accs[2]),
+            ("droptop", accs[3]),
+        ]);
+    }
+    t.print();
+    ctx.save_json("fig10_deepcam_ablation", &kakurenbo::util::json::Json::Arr(payload))?;
+    Ok(())
+}

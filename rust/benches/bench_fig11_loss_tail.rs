@@ -1,0 +1,81 @@
+//! Figure 11: loss distributions of the full DeepCAM training set vs the
+//! bottom-98% and top-2% (by loss) over the last epochs.
+//!
+//! Paper shape: the top-2% tail keeps a substantially higher loss through
+//! the final epochs — hard-to-learn or mislabeled samples — motivating
+//! DropTop.  Our proxy plants that tail via `corrupt_frac` mask
+//! corruption; the bench additionally verifies the planted corrupt
+//! samples are over-represented in the top-2%.
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::Trainer;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::stats::{mean, percentile};
+use kakurenbo::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Fig 11: DeepCAM loss tail (top-2% vs bottom-98%)")?;
+    let mut cfg = presets::by_name("deepcam")?;
+    ctx.scale_config(&mut cfg);
+    if let kakurenbo::config::DatasetConfig::DeepcamProxy(ref mut c) = cfg.dataset {
+        c.corrupt_frac = 0.02;
+    }
+    cfg.strategy = StrategyConfig::Baseline;
+    cfg.name = "fig11".into();
+
+    let mut trainer = Trainer::new(&ctx.rt, cfg.clone())?;
+    let last_k = 5.min(cfg.epochs);
+    let mut t = Table::new("Fig 11 — per-epoch loss split").header(&[
+        "Epoch", "mean(all)", "mean(bot98%)", "mean(top2%)", "top2%/bot98%",
+    ]);
+    let mut payload = Vec::new();
+    for epoch in 0..cfg.epochs {
+        trainer.run_epoch(epoch)?;
+        if epoch + last_k < cfg.epochs {
+            continue;
+        }
+        let losses: Vec<f32> = trainer
+            .state
+            .loss
+            .iter()
+            .copied()
+            .filter(|l| l.is_finite())
+            .collect();
+        let p98 = percentile(&losses, 98.0);
+        let bot: Vec<f32> = losses.iter().copied().filter(|&l| l <= p98).collect();
+        let top: Vec<f32> = losses.iter().copied().filter(|&l| l > p98).collect();
+        let (ma, mb, mt) = (mean(&losses), mean(&bot), mean(&top));
+        t.row(vec![
+            epoch.to_string(),
+            format!("{ma:.4}"),
+            format!("{mb:.4}"),
+            format!("{mt:.4}"),
+            format!("{:.1}x", mt / mb.max(1e-9)),
+        ]);
+        payload.push(kakurenbo::jobj![
+            ("epoch", epoch),
+            ("mean_all", ma),
+            ("mean_bot98", mb),
+            ("mean_top2", mt),
+        ]);
+    }
+    t.print();
+
+    // planted-noise check: corrupt samples should dominate the top tail
+    let losses = &trainer.state.loss;
+    let finite: Vec<f32> = losses.iter().copied().filter(|l| l.is_finite()).collect();
+    let p98 = percentile(&finite, 98.0);
+    let n = trainer.data.train.n;
+    let top_idx: Vec<usize> = (0..n).filter(|&i| losses[i] > p98).collect();
+    let corrupt_in_top =
+        top_idx.iter().filter(|&&i| trainer.data.train.noisy[i]).count();
+    let total_corrupt = trainer.data.train.noisy.iter().filter(|&&b| b).count();
+    println!(
+        "top-2% contains {corrupt_in_top}/{} samples; dataset has {total_corrupt} corrupted ({}x over-representation)",
+        top_idx.len(),
+        (corrupt_in_top as f64 / top_idx.len().max(1) as f64)
+            / (total_corrupt as f64 / n as f64).max(1e-9)
+    );
+    ctx.save_json("fig11_loss_tail", &kakurenbo::util::json::Json::Arr(payload))?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Figure 3: test accuracy vs epoch for different maximum hiding
+//! fractions F (paper: F∈{0.1..0.5}; small F matches baseline, large F
+//! visibly degrades).
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::report::{convergence_json, BenchCtx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Fig 3: accuracy vs epoch across hiding fractions")?;
+    let mut base = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut base);
+
+    let mut runs = Vec::new();
+    // F = 0 is the baseline curve.
+    let mut cfg = base.clone();
+    cfg.strategy = StrategyConfig::Baseline;
+    cfg.name = "fig3/baseline".into();
+    let mut r = run_experiment(&ctx.rt, cfg)?;
+    r.strategy = "F=0.0 (baseline)".into();
+    println!("  F=0.0 acc {:.4}", r.best_acc);
+    runs.push(r);
+
+    for f in [0.1, 0.2, 0.3, 0.4, 0.5] {
+        let mut cfg = base.clone();
+        cfg.strategy = StrategyConfig::kakurenbo(f);
+        cfg.name = format!("fig3/f{f}");
+        let mut r = run_experiment(&ctx.rt, cfg)?;
+        r.strategy = format!("F={f}");
+        println!("  F={f} acc {:.4} time {:.1}s", r.best_acc, r.total_time);
+        runs.push(r);
+    }
+
+    // print final accuracies as the figure's summary
+    println!("\nfinal accuracy by fraction:");
+    for r in &runs {
+        println!("  {:<16} {:.4}", r.strategy, r.best_acc);
+    }
+    ctx.save_json("fig3_fractions", &convergence_json(&runs))?;
+    Ok(())
+}

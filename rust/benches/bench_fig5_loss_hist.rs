@@ -1,0 +1,55 @@
+//! Figure 5: histogram of the lagging loss as training progresses
+//! (ImageNet proxy).
+//!
+//! Paper shape: early epochs ~Gaussian; later epochs pile most samples
+//! into the lowest bins (">50% of samples below 5% of the max loss from
+//! epoch 30") while a hard tail persists — the motivation for RF.
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::report::BenchCtx;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Fig 5: lagging-loss histograms across epochs")?;
+    let mut cfg = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut cfg);
+    cfg.strategy = StrategyConfig::Baseline; // paper plots the plain run
+    cfg.detailed_metrics = true;
+    cfg.name = "fig5".into();
+    let r = run_experiment(&ctx.rt, cfg)?;
+
+    let picks: Vec<usize> = {
+        let e = r.records.len();
+        vec![0, e / 4, e / 2, 3 * e / 4, e - 1]
+    };
+    let mut payload = Vec::new();
+    let mut low_fracs = Vec::new();
+    for &e in &picks {
+        if let Some(h) = &r.records[e].loss_hist {
+            println!("  epoch {e:>3}: {}  (max-loss bin edge {:.2})", h.sparkline(), h.hi);
+            // fraction of samples with loss < 5% of the max observed loss
+            let bins_5pct = (h.counts.len() as f64 * 0.05).ceil() as usize;
+            let low: u64 = h.counts[..bins_5pct.max(1)].iter().sum();
+            let frac = low as f64 / h.total() as f64;
+            low_fracs.push((e, frac));
+            payload.push(kakurenbo::jobj![
+                ("epoch", e),
+                ("lo", h.lo),
+                ("hi", h.hi),
+                ("counts", h.counts.iter().map(|&c| c as usize).collect::<Vec<_>>()),
+                ("frac_below_5pct_maxloss", frac),
+            ]);
+        }
+    }
+    println!("\nfraction of samples below 5% of max loss:");
+    for (e, f) in &low_fracs {
+        println!("  epoch {e:>3}: {:.1}%", f * 100.0);
+    }
+    // paper check: low-loss mass grows over training
+    assert!(
+        low_fracs.last().unwrap().1 > low_fracs.first().unwrap().1,
+        "low-loss mass should grow as training progresses"
+    );
+    ctx.save_json("fig5_loss_hist", &kakurenbo::util::json::Json::Arr(payload))?;
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Figures 6 & 7: number of hidden samples per class across epochs
+//! (ImageNet proxy).
+//!
+//! Paper shape: hiding is class-heterogeneous and drifts over training —
+//! easy classes are hidden much more than hard ones, and a class's hidden
+//! count changes epoch to epoch (the selection is truly dynamic).
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Fig 6/7: hidden samples per class per epoch")?;
+    let mut cfg = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut cfg);
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    cfg.detailed_metrics = true;
+    cfg.name = "fig6".into();
+    let r = run_experiment(&ctx.rt, cfg)?;
+
+    let e = r.records.len();
+    let picks = [e / 4, e / 2, e - 1];
+    let classes = r.records[e - 1].hidden_per_class.len();
+    let show = classes.min(16);
+
+    let mut t = Table::new("Fig 6 — hidden per class (first classes)").header(
+        &std::iter::once("epoch".to_string())
+            .chain((0..show).map(|c| format!("c{c}")))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(String::as_str)
+            .collect::<Vec<_>>(),
+    );
+    for &ep in &picks {
+        let counts = &r.records[ep].hidden_per_class;
+        if counts.is_empty() {
+            continue;
+        }
+        t.row(
+            std::iter::once(ep.to_string())
+                .chain(counts[..show].iter().map(|c| c.to_string()))
+                .collect(),
+        );
+    }
+    t.print();
+
+    // heterogeneity check (Fig. 7): per-class totals over the run differ
+    let mut totals = vec![0usize; classes];
+    for rec in &r.records {
+        for (c, &v) in rec.hidden_per_class.iter().enumerate() {
+            totals[c] += v;
+        }
+    }
+    let max = *totals.iter().max().unwrap_or(&0);
+    let min = *totals.iter().min().unwrap_or(&0);
+    println!("per-class cumulative hidden: min {min}, max {max} (heterogeneous: {})", max > 2 * (min + 1));
+
+    let payload = kakurenbo::util::json::Json::Arr(
+        r.records
+            .iter()
+            .map(|rec| {
+                kakurenbo::jobj![
+                    ("epoch", rec.epoch),
+                    ("hidden_per_class", rec.hidden_per_class.clone()),
+                ]
+            })
+            .collect(),
+    );
+    ctx.save_json("fig6_class_hidden", &payload)?;
+    Ok(())
+}

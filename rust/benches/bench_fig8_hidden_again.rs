@@ -1,0 +1,65 @@
+//! Figure 8: per-epoch counts of max-hidden candidates, actually hidden
+//! samples, and "hidden again" (hidden in consecutive epochs).
+//!
+//! Paper shape: only ~30% of hidden samples repeat between epochs (the
+//! importance ranking is genuinely dynamic), and the moved-back count
+//! shrinks over training as prediction confidence rises.
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Fig 8: hidden / hidden-again / moved-back per epoch")?;
+    let mut cfg = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut cfg);
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    cfg.name = "fig8".into();
+    let r = run_experiment(&ctx.rt, cfg)?;
+
+    let mut t = Table::new("Fig 8 — hidden-set dynamics").header(&[
+        "Epoch", "Max hidden", "Hidden", "Hidden again", "again/hidden", "Moved back",
+    ]);
+    let mut series = Vec::new();
+    for rec in &r.records {
+        let ratio = if rec.hidden > 0 {
+            rec.hidden_again as f64 / rec.hidden as f64
+        } else {
+            0.0
+        };
+        t.row(vec![
+            rec.epoch.to_string(),
+            rec.max_hidden.to_string(),
+            rec.hidden.to_string(),
+            rec.hidden_again.to_string(),
+            format!("{:.2}", ratio),
+            rec.moved_back.to_string(),
+        ]);
+        series.push(kakurenbo::jobj![
+            ("epoch", rec.epoch),
+            ("max_hidden", rec.max_hidden),
+            ("hidden", rec.hidden),
+            ("hidden_again", rec.hidden_again),
+            ("moved_back", rec.moved_back),
+        ]);
+    }
+    t.print();
+
+    // paper checks
+    let mid: Vec<&kakurenbo::metrics::EpochRecord> =
+        r.records.iter().filter(|x| x.hidden > 0).collect();
+    if mid.len() >= 4 {
+        let early_mb = mid[0].moved_back;
+        let late_mb = mid[mid.len() - 1].moved_back;
+        println!("moved-back early {early_mb} -> late {late_mb} (should shrink)");
+        let mean_again: f64 = mid
+            .iter()
+            .map(|x| x.hidden_again as f64 / x.hidden.max(1) as f64)
+            .sum::<f64>()
+            / mid.len() as f64;
+        println!("mean hidden-again ratio {mean_again:.2} (paper: ~0.3 — dynamic selection)");
+    }
+    ctx.save_json("fig8_hidden_again", &kakurenbo::util::json::Json::Arr(series))?;
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! L3 hot-path micro-benchmarks (criterion-free harness):
+//!   * hiding selector: quickselect vs full sort (the §Perf optimization)
+//!   * weighted samplers: alias build+draw vs Fenwick draw/update
+//!   * batch assembly gather
+//!   * executor step latency (train vs fwd) — the PJRT dispatch floor
+//!
+//! Prints ns/op style rows and records them in results/hotpath.json.
+
+use kakurenbo::data::batch::BatchAssembler;
+use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::hiding::selector::{select, SelectMode, SelectorCfg};
+use kakurenbo::report::BenchCtx;
+use kakurenbo::runtime::ModelExecutor;
+use kakurenbo::sampler::alias::AliasTable;
+use kakurenbo::sampler::fenwick::FenwickSampler;
+use kakurenbo::state::SampleState;
+use kakurenbo::util::rng::Rng;
+use kakurenbo::util::table::Table;
+use kakurenbo::util::timer::Timer;
+
+fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
+    let t = Timer::start();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed_s() / reps as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("hot-path micro-benchmarks")?;
+    let n = ctx.scale(1_000_000, 100_000);
+    let reps = ctx.scale(20, 5);
+    let mut rng = Rng::new(1);
+    let mut payload = Vec::new();
+    let mut t = Table::new(format!("hot paths (N={n})")).header(&["op", "time", "per-elem"]);
+    let mut row = |name: &str, secs: f64, n_elems: usize, payload: &mut Vec<kakurenbo::util::json::Json>| {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3} ms", secs * 1e3),
+            format!("{:.1} ns", secs / n_elems as f64 * 1e9),
+        ]);
+        payload.push(kakurenbo::jobj![("op", name), ("seconds", secs), ("n", n_elems)]);
+    };
+
+    // --- selector ------------------------------------------------------------
+    let mut state = SampleState::new(n);
+    for i in 0..n {
+        state.record(i, rng.f32() * 10.0, rng.chance(0.6), rng.f32(), 0);
+    }
+    let cfg_q = SelectorCfg { mode: SelectMode::QuickSelect, ..Default::default() };
+    let cfg_s = SelectorCfg { mode: SelectMode::FullSort, ..Default::default() };
+    let tq = time_it(reps, || {
+        let s = select(&state, 0.3, &cfg_q);
+        std::hint::black_box(s.hidden.len());
+    });
+    let ts = time_it(reps, || {
+        let s = select(&state, 0.3, &cfg_s);
+        std::hint::black_box(s.hidden.len());
+    });
+    row("selector quickselect (O(N))", tq, n, &mut payload);
+    row("selector full-sort (O(N log N))", ts, n, &mut payload);
+    println!("  selector speedup quickselect vs sort: {:.2}x", ts / tq);
+
+    // --- samplers --------------------------------------------------------------
+    let weights: Vec<f64> = (0..n).map(|i| (i % 100) as f64 + 0.5).collect();
+    let tb = time_it(reps.max(3), || {
+        let a = AliasTable::new(&weights);
+        std::hint::black_box(a.len());
+    });
+    row("alias build", tb, n, &mut payload);
+    let table = AliasTable::new(&weights);
+    let td = time_it(3, || {
+        let mut acc = 0u64;
+        for _ in 0..n {
+            acc += table.draw(&mut rng) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    row("alias draw xN", td, n, &mut payload);
+    let fenwick = FenwickSampler::new(&weights);
+    let tf = time_it(3, || {
+        let mut acc = 0u64;
+        for _ in 0..n {
+            acc += fenwick.draw(&mut rng).unwrap() as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    row("fenwick draw xN", tf, n, &mut payload);
+
+    // --- batch assembly ---------------------------------------------------------
+    let data = gauss_mixture(
+        &GaussMixtureCfg { n_train: 8192, n_val: 8, dim: 192, classes: 32, ..Default::default() },
+        3,
+    )
+    .train;
+    let mut asm = BatchAssembler::new(&data, 64);
+    let idx: Vec<u32> = (0..64u32).map(|i| (i * 113) % 8192).collect();
+    let ta = time_it(5000, || {
+        asm.fill(&data, &idx, None);
+        std::hint::black_box(asm.real);
+    });
+    row("batch assembly (64x192 gather)", ta, 64, &mut payload);
+
+    // --- executor step latency ---------------------------------------------------
+    let mut exec = ModelExecutor::new(&ctx.rt, "cnn_c32_b64", 1)?;
+    let b = exec.meta.batch;
+    let x = vec![0.1f32; b * exec.meta.sample_dim()];
+    let y = vec![0i32; b];
+    let sw = vec![1.0f32; b];
+    exec.train_step(&x, &y, &sw, 0.01)?; // warmup
+    let tt = time_it(ctx.scale(50, 10), || {
+        exec.train_step(&x, &y, &sw, 0.01).unwrap();
+    });
+    let tf2 = time_it(ctx.scale(50, 10), || {
+        exec.fwd_stats(&x, &y).unwrap();
+    });
+    row("executor train_step (B=64 cnn)", tt, b, &mut payload);
+    row("executor fwd_stats (B=64 cnn)", tf2, b, &mut payload);
+    println!("  bwd+update share of step: {:.0}%", (1.0 - tf2 / tt) * 100.0);
+
+    t.print();
+    ctx.save_json("hotpath", &kakurenbo::util::json::Json::Arr(payload))?;
+    Ok(())
+}

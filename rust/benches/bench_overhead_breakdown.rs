@@ -1,0 +1,97 @@
+//! §4.2 epoch-time accounting + distributed cost-model projection.
+//!
+//! Reports (a) the measured per-epoch breakdown (select / train / refresh)
+//! for each strategy, and (b) the calibrated cost model's projection of
+//! epoch time across worker counts — reproducing the paper's claims that
+//! KAKURENBO's overheads are amortized at scale while single-GPU runs can
+//! lose (Table 3), and that the speedup cannot reach the hiding rate
+//! because of the hidden-list forward refresh (Fig. 4).
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::{CostModel, Trainer};
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Overhead breakdown + distributed projection")?;
+    let mut base = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut base);
+
+    // --- measured breakdown -------------------------------------------------
+    let mut t = Table::new("Measured epoch-time breakdown (s/epoch)").header(&[
+        "Strategy", "select", "train", "refresh", "total", "vs baseline",
+    ]);
+    let mut base_total = 0.0;
+    for (label, strat) in [
+        ("Baseline", StrategyConfig::Baseline),
+        ("KAKURENBO", StrategyConfig::kakurenbo(0.3)),
+        ("ISWR", StrategyConfig::Iswr),
+        ("SB", StrategyConfig::SelectiveBackprop { beta: 1.0 }),
+    ] {
+        let mut cfg = base.clone();
+        cfg.strategy = strat;
+        cfg.name = format!("overhead/{label}");
+        let r = kakurenbo::coordinator::run_experiment(&ctx.rt, cfg)?;
+        let n = r.records.len() as f64;
+        let sel: f64 = r.records.iter().map(|x| x.time_select).sum::<f64>() / n;
+        let tr: f64 = r.records.iter().map(|x| x.time_train).sum::<f64>() / n;
+        let rf: f64 = r.records.iter().map(|x| x.time_refresh).sum::<f64>() / n;
+        let tot = sel + tr + rf;
+        if label == "Baseline" {
+            base_total = tot;
+        }
+        println!("  {label}: select {sel:.4} train {tr:.4} refresh {rf:.4}");
+        t.row(vec![
+            label.to_string(),
+            format!("{sel:.4}"),
+            format!("{tr:.4}"),
+            format!("{rf:.4}"),
+            format!("{tot:.4}"),
+            format!("{:+.1}%", (tot / base_total - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+
+    // --- cost-model projection ----------------------------------------------
+    let mut cal_cfg = base.clone();
+    cal_cfg.strategy = StrategyConfig::Baseline;
+    let mut trainer = Trainer::new(&ctx.rt, cal_cfg)?;
+    let cost: CostModel = CostModel::calibrate(&mut trainer.exec, 5)?;
+    let n = trainer.data.train.n;
+    println!(
+        "\ncalibrated: t_train {:.2}us/sample, t_fwd {:.2}us/sample, dispatch {:.1}us, {} params",
+        cost.t_train * 1e6,
+        cost.t_fwd * 1e6,
+        cost.t_dispatch * 1e6,
+        cost.params
+    );
+
+    let mut t = Table::new("Cost-model epoch time vs workers (ImageNet proxy scale)").header(&[
+        "Workers", "Baseline (s)", "KAKURENBO F=0.3 (s)", "saving", "ISWR (s)", "vs base",
+    ]);
+    let mut payload = Vec::new();
+    for w in [1usize, 4, 16, 64, 256] {
+        let tb = cost.epoch_time(n, 0, 0, w);
+        // kakurenbo: train 70%, refresh 30% forward-only, select over N
+        let tk = cost.epoch_time(n * 7 / 10, n * 3 / 10, n, w);
+        // ISWR: full N training + per-epoch weight rebuild over N
+        let ti = cost.epoch_time(n, 0, n, w) + n as f64 * cost.t_select_per_sample;
+        t.row(vec![
+            w.to_string(),
+            format!("{tb:.3}"),
+            format!("{tk:.3}"),
+            format!("{:+.1}%", (tk / tb - 1.0) * 100.0),
+            format!("{ti:.3}"),
+            format!("{:+.1}%", (ti / tb - 1.0) * 100.0),
+        ]);
+        payload.push(kakurenbo::jobj![
+            ("workers", w),
+            ("baseline_s", tb),
+            ("kakurenbo_s", tk),
+            ("iswr_s", ti),
+        ]);
+    }
+    t.print();
+    ctx.save_json("overhead_breakdown", &kakurenbo::util::json::Json::Arr(payload))?;
+    Ok(())
+}

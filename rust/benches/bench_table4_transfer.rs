@@ -1,0 +1,110 @@
+//! Table 4: transfer learning (DeiT-Tiny / Fractal-3K stand-in).
+//!
+//! Upstream: pretrain on the fractal proxy under each strategy, reporting
+//! final training loss and wall-clock time (paper: KAKURENBO -15.1% time).
+//! Downstream: import the pretrained trunk into fresh classifiers for the
+//! CIFAR-10/100 proxies and fine-tune with the *baseline* regime,
+//! reporting accuracy deltas (paper: KAKURENBO within ±0.35%).
+
+use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+use kakurenbo::coordinator::Trainer;
+use kakurenbo::data::synth::GaussMixtureCfg;
+use kakurenbo::report::{paper_strategies, BenchCtx};
+use kakurenbo::util::table::{diff_pct, pct, speedup_pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Table 4: transfer learning (fractal -> downstream)")?;
+
+    let mut up_cfg = presets::by_name("fractal_pretrain")?;
+    ctx.scale_config(&mut up_cfg);
+    let prune_epoch = (up_cfg.epochs / 5).max(2);
+
+    struct Row {
+        label: String,
+        up_loss: f64,
+        up_time: f64,
+        down: Vec<(String, f64)>, // (dataset, acc)
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    for (label, strat) in paper_strategies(0.3, prune_epoch) {
+        let mut cfg = up_cfg.clone();
+        cfg.strategy = strat.clone();
+        cfg.name = format!("fractal/{label}");
+        if let StrategyConfig::Forget { prune_epoch, .. } = &strat {
+            cfg.epochs += prune_epoch;
+        }
+        let mut up = Trainer::new(&ctx.rt, cfg)?;
+        let up_run = up.run()?;
+        let trunk = up.exec.export_params()?;
+
+        // Downstream: two class-count proxies, baseline fine-tuning.
+        let mut down = Vec::new();
+        for (dname, classes, variant) in
+            [("CIFAR-10*", 10usize, "mlp_c10_b64"), ("CIFAR-100*", 100usize, "mlp_c100_b64")]
+        {
+            let mut dcfg = presets::by_name("transfer_downstream")?;
+            dcfg.variant = variant.to_string();
+            dcfg.dataset = DatasetConfig::GaussMixture(GaussMixtureCfg {
+                classes,
+                n_train: ctx.scale(3072, 512),
+                n_val: ctx.scale(1024, 256),
+                ..Default::default()
+            });
+            ctx.scale_config(&mut dcfg);
+            dcfg.name = format!("down_{dname}/{label}");
+            let mut ft = Trainer::new(&ctx.rt, dcfg)?;
+            // Import the pretrained trunk (head shapes differ -> re-init).
+            let imported = ft.exec.import_params(&trunk)?;
+            assert!(imported >= 4, "trunk transfer failed: {imported} leaves");
+            let run = ft.run()?;
+            down.push((dname.to_string(), run.best_acc));
+        }
+        let up_loss = up_run
+            .records
+            .last()
+            .map(|r| r.train_loss)
+            .unwrap_or(f64::NAN);
+        println!(
+            "  {label:<10} upstream loss {up_loss:.3} time {:.1}s  downstream {:?}",
+            up_run.total_time,
+            down.iter().map(|(_, a)| (a * 1e4).round() / 1e2).collect::<Vec<_>>()
+        );
+        rows.push(Row { label, up_loss, up_time: up_run.total_time, down });
+    }
+
+    let base = &rows[0];
+    let mut t = Table::new("Table 4 — transfer learning").header(&[
+        "Setting", "Up loss", "Up time (s)", "Impr.", "C10 acc", "Diff", "C100 acc", "Diff",
+    ]);
+    for r in &rows {
+        let is_base = r.label == base.label;
+        t.row(vec![
+            r.label.clone(),
+            format!("{:.3}", r.up_loss),
+            format!("{:.1}", r.up_time),
+            if is_base { "-".into() } else { speedup_pct(r.up_time, base.up_time) },
+            pct(r.down[0].1),
+            if is_base { "-".into() } else { diff_pct(r.down[0].1, base.down[0].1) },
+            pct(r.down[1].1),
+            if is_base { "-".into() } else { diff_pct(r.down[1].1, base.down[1].1) },
+        ]);
+    }
+    t.print();
+
+    let j = kakurenbo::util::json::Json::Arr(
+        rows.iter()
+            .map(|r| {
+                kakurenbo::jobj![
+                    ("strategy", r.label.as_str()),
+                    ("up_loss", r.up_loss),
+                    ("up_time", r.up_time),
+                    ("down_c10_acc", r.down[0].1),
+                    ("down_c100_acc", r.down[1].1),
+                ]
+            })
+            .collect(),
+    );
+    ctx.save_json("table4_transfer", &j)?;
+    Ok(())
+}

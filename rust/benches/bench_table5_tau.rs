@@ -1,0 +1,45 @@
+//! Table 5: impact of the prediction-confidence threshold τ on
+//! KAKURENBO accuracy/time (paper: τ∈{0.5,0.7,0.9} on CIFAR-100/WRN;
+//! higher τ -> fewer hidden samples -> better accuracy, less speedup).
+
+use kakurenbo::config::{presets, Components, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::hiding::selector::SelectMode;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Table 5: prediction-confidence threshold τ")?;
+    let mut base = presets::by_name("cifar100_wrn")?;
+    ctx.scale_config(&mut base);
+
+    let mut t = Table::new("Table 5 — τ sweep (CIFAR-100 proxy, F=0.3)").header(&[
+        "Setting", "Acc.", "Time (s)", "Mean hidden/epoch",
+    ]);
+    let mut out = Vec::new();
+    for tau in [0.5f32, 0.7, 0.9] {
+        let mut cfg = base.clone();
+        cfg.strategy = StrategyConfig::Kakurenbo {
+            max_fraction: 0.3,
+            tau,
+            components: Components::ALL,
+            drop_top: 0.0,
+            select_mode: SelectMode::QuickSelect,
+        };
+        cfg.name = format!("tau_{tau}");
+        let r = run_experiment(&ctx.rt, cfg)?;
+        let mean_hidden: f64 = r.records.iter().map(|x| x.hidden as f64).sum::<f64>()
+            / r.records.len() as f64;
+        println!("  tau={tau}: acc {:.4} time {:.1}s hidden/epoch {:.0}", r.best_acc, r.total_time, mean_hidden);
+        t.row(vec![
+            format!("tau = {tau}"),
+            pct(r.best_acc),
+            format!("{:.1}", r.total_time),
+            format!("{mean_hidden:.0}"),
+        ]);
+        out.push(r);
+    }
+    t.print();
+    ctx.save_runs("table5_tau", &out)?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Table 6: component ablation of KAKURENBO on the ImageNet proxy with
+//! F=0.4 — HE (hide), MB (move back), RF (reduce fraction), LR (adjust LR).
+//!
+//! Paper shape: v1000 (HE only) loses ~1.8%; adding LR recovers most of
+//! it; RF and MB each add a little; the full v1111 sits within ~0.1% of
+//! the baseline.
+
+use kakurenbo::config::{presets, Components, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::hiding::selector::SelectMode;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::{diff_pct, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Table 6: HE/MB/RF/LR component ablation (F=0.4)")?;
+    let mut base = presets::by_name("imagenet_resnet50")?;
+    ctx.scale_config(&mut base);
+
+    // Baseline first.
+    let mut cfg = base.clone();
+    cfg.strategy = StrategyConfig::Baseline;
+    cfg.name = "ablation/baseline".into();
+    let baseline = run_experiment(&ctx.rt, cfg)?;
+    println!("  baseline acc {:.4}", baseline.best_acc);
+
+    let variants = ["v1000", "v1001", "v1010", "v1011", "v1100", "v1101", "v1110", "v1111"];
+    let mut t = Table::new("Table 6 — ablation (ImageNet proxy, F=0.4)").header(&[
+        "Variant", "HE", "MB", "RF", "LR", "Accuracy", "vs baseline",
+    ]);
+    t.row(vec![
+        "Baseline".into(), "x".into(), "x".into(), "x".into(), "x".into(),
+        pct(baseline.best_acc), "-".into(),
+    ]);
+    let mut out = vec![baseline.clone()];
+    for v in variants {
+        let comps = Components::from_bits(v)?;
+        let mut cfg = base.clone();
+        cfg.strategy = StrategyConfig::Kakurenbo {
+            max_fraction: 0.4,
+            tau: 0.7,
+            components: comps,
+            drop_top: 0.0,
+            select_mode: SelectMode::QuickSelect,
+        };
+        cfg.name = format!("ablation/{v}");
+        let r = run_experiment(&ctx.rt, cfg)?;
+        println!("  {v} acc {:.4} ({:+.2})", r.best_acc, (r.best_acc - baseline.best_acc) * 100.0);
+        let mark = |b: bool| if b { "ok".to_string() } else { "x".to_string() };
+        t.row(vec![
+            if v == "v1111" { "KAKUR. (v1111)".into() } else { v.to_string() },
+            mark(comps.hide), mark(comps.move_back), mark(comps.reduce_fraction), mark(comps.adjust_lr),
+            pct(r.best_acc),
+            diff_pct(r.best_acc, baseline.best_acc),
+        ]);
+        out.push(r);
+    }
+    t.print();
+    ctx.save_runs("table6_ablation", &out)?;
+    Ok(())
+}

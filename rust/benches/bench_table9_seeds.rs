@@ -1,0 +1,56 @@
+//! Table 9: seed robustness — Baseline / KAKURENBO / Random-hiding across
+//! 3 random seeds (mean ± std), CIFAR-100 proxy.
+//!
+//! Paper shape: KAKURENBO's mean within ~0.3% of baseline with comparable
+//! std; Random hiding lands clearly below both.
+
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::run_experiment;
+use kakurenbo::report::BenchCtx;
+use kakurenbo::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::init("Table 9: robustness across random seeds")?;
+    let mut base = presets::by_name("cifar100_wrn")?;
+    ctx.scale_config(&mut base);
+    let seeds: &[u64] = if ctx.quick { &[1, 2] } else { &[1, 2, 3] };
+
+    let strategies = [
+        ("Baseline", StrategyConfig::Baseline),
+        ("KAKURENBO", StrategyConfig::kakurenbo(0.1)),
+        ("Random", StrategyConfig::RandomHiding { fraction: 0.1 }),
+    ];
+
+    let mut t = Table::new("Table 9 — accuracy over seeds (CIFAR-100 proxy)")
+        .header(&["Setting", "Acc. mean", "± std", "runs"]);
+    let mut payload = Vec::new();
+    for (label, strat) in strategies {
+        let mut accs = Vec::new();
+        for &seed in seeds {
+            let mut cfg = base.clone();
+            cfg.strategy = strat.clone();
+            cfg.seed = seed;
+            cfg.name = format!("seeds/{label}/{seed}");
+            let r = run_experiment(&ctx.rt, cfg)?;
+            println!("  {label} seed {seed}: {:.4}", r.best_acc);
+            accs.push(r.best_acc as f32);
+        }
+        let mean = kakurenbo::util::stats::mean(&accs);
+        let std = kakurenbo::util::stats::std_dev(&accs);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", mean * 100.0),
+            format!("{:.2}", std * 100.0),
+            format!("{}", accs.len()),
+        ]);
+        payload.push(kakurenbo::jobj![
+            ("strategy", label),
+            ("mean", mean),
+            ("std", std),
+            ("accs", accs.iter().map(|&a| a as f64).collect::<Vec<f64>>()),
+        ]);
+    }
+    t.print();
+    ctx.save_json("table9_seeds", &kakurenbo::util::json::Json::Arr(payload))?;
+    Ok(())
+}

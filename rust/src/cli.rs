@@ -1,0 +1,117 @@
+//! Hand-rolled CLI parsing (no clap offline): subcommand + `--key value` /
+//! `--key=value` flags + positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                anyhow::ensure!(!body.is_empty(), "bare -- not supported");
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // --flag value, or boolean --flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn flag_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--preset", "deepcam", "--epochs=5", "--verbose"]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("preset"), Some("deepcam"));
+        assert_eq!(a.flag("epochs"), Some("5"));
+        assert!(a.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["bench", "table2", "--quick"]);
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert!(a.bool_flag("quick"));
+    }
+
+    #[test]
+    fn typed_flag_parsing() {
+        let a = parse(&["x", "--frac", "0.3"]);
+        assert_eq!(a.flag_parse::<f64>("frac").unwrap(), Some(0.3));
+        assert_eq!(a.flag_parse::<f64>("missing").unwrap(), None);
+        let bad = parse(&["x", "--frac", "abc"]);
+        assert!(bad.flag_parse::<f64>("frac").is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.command, "");
+        assert!(a.bool_flag("help"));
+    }
+}

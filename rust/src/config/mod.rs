@@ -1,0 +1,315 @@
+//! Experiment configuration: typed configs, JSON loading, CLI overrides,
+//! and presets mirroring the paper's Appendix B hyper-parameter tables.
+
+pub mod presets;
+
+use std::path::PathBuf;
+
+use crate::data::image::{DeepcamProxyCfg, ImagenetProxyCfg};
+use crate::data::synth::{FractalCfg, GaussMixtureCfg};
+use crate::data::TrainVal;
+use crate::hiding::selector::SelectMode;
+use crate::schedule::{LrConfig, LrSchedule};
+use crate::util::json::Json;
+
+/// Which synthetic proxy dataset to train on (DESIGN.md §3).
+#[derive(Clone, Debug)]
+pub enum DatasetConfig {
+    GaussMixture(GaussMixtureCfg),
+    ImagenetProxy(ImagenetProxyCfg),
+    DeepcamProxy(DeepcamProxyCfg),
+    Fractal(FractalCfg),
+}
+
+impl DatasetConfig {
+    pub fn generate(&self, seed: u64) -> TrainVal {
+        match self {
+            DatasetConfig::GaussMixture(c) => crate::data::synth::gauss_mixture(c, seed),
+            DatasetConfig::ImagenetProxy(c) => crate::data::image::imagenet_proxy(c, seed),
+            DatasetConfig::DeepcamProxy(c) => crate::data::image::deepcam_proxy(c, seed),
+            DatasetConfig::Fractal(c) => crate::data::synth::fractal_proxy(c, seed),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DatasetConfig::GaussMixture(_) => "gauss_mixture",
+            DatasetConfig::ImagenetProxy(_) => "imagenet_proxy",
+            DatasetConfig::DeepcamProxy(_) => "deepcam_proxy",
+            DatasetConfig::Fractal(_) => "fractal",
+        }
+    }
+}
+
+/// KAKURENBO component switches (Table 6 ablation: HE/MB/RF/LR).
+#[derive(Clone, Copy, Debug)]
+pub struct Components {
+    pub hide: bool,
+    pub move_back: bool,
+    pub reduce_fraction: bool,
+    pub adjust_lr: bool,
+}
+
+impl Components {
+    pub const ALL: Components = Components {
+        hide: true,
+        move_back: true,
+        reduce_fraction: true,
+        adjust_lr: true,
+    };
+
+    /// Parse the paper's vXXXX naming: v1011 = HE, no MB, RF, LR.
+    pub fn from_bits(name: &str) -> anyhow::Result<Self> {
+        let bits: Vec<char> = name.trim_start_matches('v').chars().collect();
+        anyhow::ensure!(bits.len() == 4, "expected vXXXX, got {name}");
+        let b = |i: usize| bits[i] == '1';
+        Ok(Components { hide: b(0), move_back: b(1), reduce_fraction: b(2), adjust_lr: b(3) })
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "v{}{}{}{}",
+            self.hide as u8, self.move_back as u8, self.reduce_fraction as u8, self.adjust_lr as u8
+        )
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum StrategyConfig {
+    /// Uniform sampling without replacement (paper "Baseline").
+    Baseline,
+    /// KAKURENBO (§3) with component switches and optional DropTop (App. D).
+    Kakurenbo {
+        max_fraction: f64,
+        tau: f32,
+        components: Components,
+        drop_top: f64,
+        select_mode: SelectMode,
+    },
+    /// Importance Sampling With Replacement [11].
+    Iswr,
+    /// Selective-Backprop [17].
+    SelectiveBackprop { beta: f64 },
+    /// Online FORGET pruning [13]: train `prune_epoch` epochs, prune the
+    /// least-forgettable fraction, restart.
+    Forget { prune_epoch: usize, fraction: f64 },
+    /// GradMatch [18] (simplified per-class last-layer OMP, every R epochs).
+    GradMatch { fraction: f64, every_r: usize },
+    /// Random hiding baseline (Table 9 / GradMatch paper).
+    RandomHiding { fraction: f64 },
+    /// InfoBatch [28] extension: unbiased dynamic pruning with rescaling.
+    InfoBatch { r: f64 },
+    /// EL2N [15] extension: early error-norm scoring + permanent pruning.
+    El2n { score_epoch: usize, fraction: f64, restart: bool },
+}
+
+impl StrategyConfig {
+    pub fn kakurenbo(max_fraction: f64) -> Self {
+        StrategyConfig::Kakurenbo {
+            max_fraction,
+            tau: 0.7,
+            components: Components::ALL,
+            drop_top: 0.0,
+            select_mode: SelectMode::QuickSelect,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            StrategyConfig::Baseline => "baseline".into(),
+            StrategyConfig::Kakurenbo { components, .. } if *components
+                == Components::ALL => "kakurenbo".into(),
+            StrategyConfig::Kakurenbo { components, .. } => {
+                format!("kakurenbo-{}", components.label())
+            }
+            StrategyConfig::Iswr => "iswr".into(),
+            StrategyConfig::SelectiveBackprop { .. } => "sb".into(),
+            StrategyConfig::Forget { .. } => "forget".into(),
+            StrategyConfig::GradMatch { .. } => "gradmatch".into(),
+            StrategyConfig::RandomHiding { .. } => "random".into(),
+            StrategyConfig::InfoBatch { .. } => "infobatch".into(),
+            StrategyConfig::El2n { .. } => "el2n".into(),
+        }
+    }
+}
+
+impl PartialEq for Components {
+    fn eq(&self, o: &Self) -> bool {
+        self.hide == o.hide
+            && self.move_back == o.move_back
+            && self.reduce_fraction == o.reduce_fraction
+            && self.adjust_lr == o.adjust_lr
+    }
+}
+
+/// A complete experiment: model variant + dataset + strategy + schedules.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Artifact variant (manifest key), e.g. "cnn_c32_b64".
+    pub variant: String,
+    pub dataset: DatasetConfig,
+    pub strategy: StrategyConfig,
+    pub epochs: usize,
+    pub seed: u64,
+    pub lr: LrConfig,
+    pub momentum: f32,
+    /// Virtual data-parallel workers (distributed simulation + cost model).
+    pub workers: usize,
+    /// Evaluate on the validation set every k epochs (always on last).
+    pub eval_every: usize,
+    pub artifacts_dir: PathBuf,
+    /// Collect per-class hidden counts / loss histograms (Figs. 5-8).
+    pub detailed_metrics: bool,
+    /// Save a parameter checkpoint every k epochs (0 = disabled).
+    pub checkpoint_every: usize,
+    /// Directory for checkpoints (and resume source when `resume`).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from the checkpoint in `checkpoint_dir` before training.
+    pub resume: bool,
+}
+
+impl ExperimentConfig {
+    pub fn new(name: &str, variant: &str, dataset: DatasetConfig, strategy: StrategyConfig) -> Self {
+        ExperimentConfig {
+            name: name.to_string(),
+            variant: variant.to_string(),
+            dataset,
+            strategy,
+            epochs: 30,
+            seed: 42,
+            lr: LrConfig {
+                base_lr: 0.05,
+                schedule: LrSchedule::Step { milestones: vec![], rate: 0.1 },
+                warmup_epochs: 2,
+            },
+            momentum: 0.9,
+            workers: 1,
+            eval_every: 1,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            detailed_metrics: false,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: false,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.epochs > 0, "epochs must be positive");
+        anyhow::ensure!(self.workers > 0, "workers must be positive");
+        anyhow::ensure!((0.0..=1.0).contains(&(self.momentum as f64)), "momentum");
+        if let StrategyConfig::Kakurenbo { max_fraction, tau, .. } = &self.strategy {
+            anyhow::ensure!((0.0..1.0).contains(max_fraction), "max_fraction");
+            anyhow::ensure!((0.0..=1.0).contains(&(*tau as f64)), "tau");
+        }
+        if let StrategyConfig::Forget { prune_epoch, .. } = &self.strategy {
+            anyhow::ensure!(*prune_epoch < self.epochs, "prune_epoch >= epochs");
+        }
+        Ok(())
+    }
+
+    /// Apply `--key=value` CLI overrides (a subset of fields that sweeps
+    /// and the launcher need).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "epochs" => self.epochs = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "workers" => self.workers = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "base_lr" => self.lr.base_lr = value.parse()?,
+            "warmup_epochs" => self.lr.warmup_epochs = value.parse()?,
+            "momentum" => self.momentum = value.parse()?,
+            "variant" => self.variant = value.to_string(),
+            "detailed_metrics" => self.detailed_metrics = value.parse()?,
+            "checkpoint_every" => self.checkpoint_every = value.parse()?,
+            "checkpoint_dir" => self.checkpoint_dir = Some(PathBuf::from(value)),
+            "resume" => self.resume = value.parse()?,
+            "max_fraction" => match &mut self.strategy {
+                StrategyConfig::Kakurenbo { max_fraction, .. } => *max_fraction = value.parse()?,
+                StrategyConfig::Forget { fraction, .. }
+                | StrategyConfig::GradMatch { fraction, .. }
+                | StrategyConfig::El2n { fraction, .. }
+                | StrategyConfig::RandomHiding { fraction } => *fraction = value.parse()?,
+                StrategyConfig::InfoBatch { r } => *r = value.parse()?,
+                _ => anyhow::bail!("strategy has no fraction"),
+            },
+            "tau" => match &mut self.strategy {
+                StrategyConfig::Kakurenbo { tau, .. } => *tau = value.parse()?,
+                _ => anyhow::bail!("strategy has no tau"),
+            },
+            "drop_top" => match &mut self.strategy {
+                StrategyConfig::Kakurenbo { drop_top, .. } => *drop_top = value.parse()?,
+                _ => anyhow::bail!("strategy has no drop_top"),
+            },
+            _ => anyhow::bail!("unknown override key {key:?}"),
+        }
+        Ok(())
+    }
+
+    /// Summary for logs / result JSON.
+    pub fn to_json(&self) -> Json {
+        crate::jobj![
+            ("name", self.name.as_str()),
+            ("variant", self.variant.as_str()),
+            ("dataset", self.dataset.kind()),
+            ("strategy", self.strategy.name()),
+            ("epochs", self.epochs),
+            ("seed", self.seed as usize),
+            ("workers", self.workers),
+            ("base_lr", self.lr.base_lr),
+            ("momentum", self.momentum),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn components_bits_roundtrip() {
+        for name in ["v1000", "v1011", "v1111", "v1100"] {
+            let c = Components::from_bits(name).unwrap();
+            assert_eq!(c.label(), name);
+        }
+        assert!(Components::from_bits("v10").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = ExperimentConfig::new(
+            "t",
+            "cnn_c32_b64",
+            DatasetConfig::ImagenetProxy(Default::default()),
+            StrategyConfig::kakurenbo(0.3),
+        );
+        c.apply_override("epochs", "7").unwrap();
+        c.apply_override("max_fraction", "0.4").unwrap();
+        c.apply_override("tau", "0.9").unwrap();
+        assert_eq!(c.epochs, 7);
+        match c.strategy {
+            StrategyConfig::Kakurenbo { max_fraction, tau, .. } => {
+                assert_eq!(max_fraction, 0.4);
+                assert_eq!(tau, 0.9);
+            }
+            _ => unreachable!(),
+        }
+        assert!(c.apply_override("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ExperimentConfig::new(
+            "t",
+            "cnn_c32_b64",
+            DatasetConfig::ImagenetProxy(Default::default()),
+            StrategyConfig::kakurenbo(0.3),
+        );
+        assert!(c.validate().is_ok());
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+        c.epochs = 10;
+        c.strategy = StrategyConfig::Forget { prune_epoch: 20, fraction: 0.3 };
+        assert!(c.validate().is_err());
+    }
+}

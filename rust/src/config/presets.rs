@@ -1,0 +1,205 @@
+//! Experiment presets: one per paper workload (Appendix B, Table 7/8),
+//! scaled to this testbed (proxy datasets, CPU-PJRT compute).
+//!
+//! Epoch counts and dataset sizes are reduced from the paper's scale (e.g.
+//! ImageNet 100 epochs x 1.28M samples -> 24 epochs x 8192 samples): the
+//! reproduction targets *relative* behaviour across strategies, and every
+//! preset keeps the paper's schedule structure (warmup + step/cosine decay,
+//! fraction milestones at the same relative positions).
+
+use super::*;
+use crate::schedule::{LrConfig, LrSchedule};
+
+/// CIFAR-100 / WideResNet-28-10 stand-in (paper: 200 epochs, step LR).
+pub fn cifar100_wrn() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "cifar100_wrn",
+        "mlp_c100_b64",
+        DatasetConfig::GaussMixture(GaussMixtureCfg::default()),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 30;
+    c.lr = LrConfig {
+        base_lr: 0.08,
+        // paper: decay 0.2 at [60,120,160]/200 -> same relative milestones
+        schedule: LrSchedule::Step { milestones: vec![9, 18, 24], rate: 0.2 },
+        warmup_epochs: 1,
+    };
+    c
+}
+
+/// ImageNet-1K / ResNet-50 (A) stand-in (paper: 100 epochs, step 0.1 at
+/// [30,60,80], linear warmup 5).
+pub fn imagenet_resnet50() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "imagenet_resnet50",
+        "cnn_c32_b64",
+        DatasetConfig::ImagenetProxy(ImagenetProxyCfg::default()),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 24;
+    c.lr = LrConfig {
+        base_lr: 0.06,
+        schedule: LrSchedule::Step { milestones: vec![7, 14, 19], rate: 0.1 },
+        warmup_epochs: 2,
+    };
+    c.workers = 4;
+    c
+}
+
+/// ImageNet-1K / ResNet-50 (B) stand-in (cosine annealing, 600-epoch
+/// regime scaled down).
+pub fn imagenet_resnet50_b() -> ExperimentConfig {
+    let mut c = imagenet_resnet50();
+    c.name = "imagenet_resnet50_b".into();
+    c.epochs = 36;
+    c.lr = LrConfig {
+        base_lr: 0.08,
+        schedule: LrSchedule::Cosine { total: 36 },
+        warmup_epochs: 2,
+    };
+    c
+}
+
+/// EfficientNet-b3 stand-in (wider CNN, exp decay 0.9 every 2 epochs).
+pub fn imagenet_efficientnet() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "imagenet_efficientnet",
+        "cnnw_c32_b64",
+        DatasetConfig::ImagenetProxy(ImagenetProxyCfg::default()),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 24;
+    c.lr = LrConfig {
+        base_lr: 0.05,
+        schedule: LrSchedule::ExpEvery { every: 2, rate: 0.9 },
+        warmup_epochs: 2,
+    };
+    c.workers = 4;
+    c
+}
+
+/// DeepCAM stand-in (paper: 35 epochs, 1024 GPUs, top LR 0.0055).
+pub fn deepcam() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "deepcam",
+        "segnet_b32",
+        DatasetConfig::DeepcamProxy(DeepcamProxyCfg::default()),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 18;
+    c.lr = LrConfig {
+        base_lr: 0.04,
+        schedule: LrSchedule::Cosine { total: 18 },
+        warmup_epochs: 1,
+    };
+    c.workers = 8;
+    c
+}
+
+/// Fractal-3K upstream pretraining (DeiT-Tiny stand-in, Table 4).
+pub fn fractal_pretrain() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "fractal_pretrain",
+        "mlp_c64_b64",
+        DatasetConfig::Fractal(FractalCfg::default()),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 20;
+    c.lr = LrConfig {
+        base_lr: 0.06,
+        schedule: LrSchedule::Cosine { total: 20 },
+        warmup_epochs: 2,
+    };
+    c
+}
+
+/// Downstream fine-tuning preset (CIFAR-10 proxy head).
+pub fn transfer_downstream() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "transfer_downstream",
+        "mlp_c10_b64",
+        DatasetConfig::GaussMixture(GaussMixtureCfg {
+            classes: 10,
+            n_train: 3072,
+            n_val: 1024,
+            ..Default::default()
+        }),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 16;
+    c.lr = LrConfig {
+        base_lr: 0.03,
+        schedule: LrSchedule::Cosine { total: 16 },
+        warmup_epochs: 1,
+    };
+    c
+}
+
+/// Single-GPU GradMatch comparison setting (Table 3: CIFAR-100/ResNet-18).
+pub fn gradmatch_setting() -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(
+        "gradmatch_cifar",
+        "cnn_c100_b64",
+        DatasetConfig::ImagenetProxy(ImagenetProxyCfg {
+            classes: 100,
+            n_train: 6144,
+            n_val: 1536,
+            ..Default::default()
+        }),
+        StrategyConfig::Baseline,
+    );
+    c.epochs = 20;
+    c.workers = 1;
+    c.lr = LrConfig {
+        base_lr: 0.06,
+        schedule: LrSchedule::Cosine { total: 20 },
+        warmup_epochs: 1,
+    };
+    c
+}
+
+/// Look up a preset by name (CLI / launcher).
+pub fn by_name(name: &str) -> anyhow::Result<ExperimentConfig> {
+    Ok(match name {
+        "cifar100_wrn" => cifar100_wrn(),
+        "imagenet_resnet50" => imagenet_resnet50(),
+        "imagenet_resnet50_b" => imagenet_resnet50_b(),
+        "imagenet_efficientnet" => imagenet_efficientnet(),
+        "deepcam" => deepcam(),
+        "fractal_pretrain" => fractal_pretrain(),
+        "transfer_downstream" => transfer_downstream(),
+        "gradmatch_cifar" => gradmatch_setting(),
+        other => anyhow::bail!(
+            "unknown preset {other:?}; available: cifar100_wrn, imagenet_resnet50, \
+             imagenet_resnet50_b, imagenet_efficientnet, deepcam, fractal_pretrain, \
+             transfer_downstream, gradmatch_cifar"
+        ),
+    })
+}
+
+pub const ALL: &[&str] = &[
+    "cifar100_wrn",
+    "imagenet_resnet50",
+    "imagenet_resnet50_b",
+    "imagenet_efficientnet",
+    "deepcam",
+    "fractal_pretrain",
+    "transfer_downstream",
+    "gradmatch_cifar",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_valid() {
+        for name in ALL {
+            let c = by_name(name).unwrap();
+            c.validate().unwrap();
+            assert_eq!(&c.name, name);
+        }
+        assert!(by_name("nope").is_err());
+    }
+}

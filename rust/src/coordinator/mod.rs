@@ -1,0 +1,35 @@
+//! L3 coordination: the training loop, the distributed (virtual-worker)
+//! projection, and the calibrated cost model.
+
+pub mod costmodel;
+pub mod trainer;
+
+pub use costmodel::CostModel;
+pub use trainer::Trainer;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunResult;
+use crate::runtime::XlaRuntime;
+
+/// Convenience: build + run one experiment.
+pub fn run_experiment(rt: &XlaRuntime, cfg: ExperimentConfig) -> anyhow::Result<RunResult> {
+    Trainer::new(rt, cfg)?.run()
+}
+
+/// Run the same experiment once per strategy (shared runtime; fresh
+/// dataset/executor per run) — the pattern behind every comparison table.
+pub fn run_comparison(
+    rt: &XlaRuntime,
+    base: &ExperimentConfig,
+    strategies: &[crate::config::StrategyConfig],
+) -> anyhow::Result<Vec<RunResult>> {
+    strategies
+        .iter()
+        .map(|s| {
+            let mut cfg = base.clone();
+            cfg.strategy = s.clone();
+            cfg.name = format!("{}/{}", base.name, s.name());
+            run_experiment(rt, cfg)
+        })
+        .collect()
+}

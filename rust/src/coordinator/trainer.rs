@@ -1,0 +1,391 @@
+//! The training coordinator: runs a full experiment (epochs x batches)
+//! against the PJRT runtime, driving the configured strategy, schedules,
+//! stat bookkeeping, evaluation, and the cost model.
+//!
+//! This is the L3 "request path": after construction no Python and no
+//! compilation happens — only artifact execution and host-side
+//! coordination.
+
+use crate::config::{ExperimentConfig, StrategyConfig};
+use crate::coordinator::costmodel::CostModel;
+use crate::data::batch::BatchAssembler;
+use crate::data::shard::{global_step_order, shard_order};
+use crate::data::TrainVal;
+use crate::hiding::fraction::FractionSchedule;
+use crate::metrics::{EpochRecord, RunResult};
+use crate::runtime::{ModelExecutor, XlaRuntime};
+use crate::state::SampleState;
+use crate::strategies::sb::SbSelector;
+use crate::strategies::{BatchMode, EpochPlan, PlanCtx, Strategy};
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+use crate::util::timer::Timer;
+
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub exec: ModelExecutor,
+    pub data: TrainVal,
+    pub state: SampleState,
+    pub cost: CostModel,
+    strategy: Box<dyn Strategy>,
+    rng: Rng,
+    sb: SbSelector,
+    asm: BatchAssembler,
+    /// Pending SB-selected samples waiting to fill a training batch.
+    sb_queue: Vec<u32>,
+    /// Epoch at which training last (re)started — FORGET resets the LR
+    /// schedule when it restarts from scratch (paper §4: "training then
+    /// restarts from epoch 0").
+    schedule_offset: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: &XlaRuntime, cfg: ExperimentConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let data = cfg.dataset.generate(cfg.seed);
+        let mut exec = ModelExecutor::new(rt, &cfg.variant, cfg.seed)?;
+        exec.momentum = cfg.momentum;
+        anyhow::ensure!(
+            exec.meta.sample_dim() == data.train.sample_dim,
+            "variant {} expects sample dim {}, dataset {} provides {}",
+            cfg.variant,
+            exec.meta.sample_dim(),
+            data.train.name,
+            data.train.sample_dim
+        );
+        anyhow::ensure!(
+            exec.meta.label_len() == data.train.label_len,
+            "label shape mismatch between variant and dataset"
+        );
+        anyhow::ensure!(
+            exec.meta.classes == data.train.classes,
+            "variant {} has {} classes, dataset {} has {}",
+            cfg.variant,
+            exec.meta.classes,
+            data.train.name,
+            data.train.classes
+        );
+        let state = SampleState::new(data.train.n);
+        let cost = rt.cost_model(&mut exec)?;
+        // calibration perturbs params: reset to the seeded init
+        exec.reset_params(cfg.seed)?;
+        let strategy = crate::strategies::build(&cfg.strategy, cfg.epochs);
+        let beta = match cfg.strategy {
+            StrategyConfig::SelectiveBackprop { beta } => beta,
+            _ => 1.0,
+        };
+        let asm = BatchAssembler::new(&data.train, exec.meta.batch);
+        Ok(Trainer {
+            rng: Rng::new(cfg.seed ^ 0x7472_6169),
+            sb: SbSelector::new(beta, 4096),
+            sb_queue: Vec::new(),
+            schedule_offset: 0,
+            cfg,
+            exec,
+            data,
+            state,
+            cost,
+            strategy,
+            asm,
+        })
+    }
+
+    /// Run the configured number of epochs; returns the full RunResult.
+    pub fn run(&mut self) -> anyhow::Result<RunResult> {
+        let mut start_epoch = 0;
+        if self.cfg.resume {
+            let dir = self.cfg.checkpoint_dir.clone().ok_or_else(|| {
+                anyhow::anyhow!("resume requested without checkpoint_dir")
+            })?;
+            start_epoch = crate::runtime::checkpoint::load(&mut self.exec, &dir)? + 1;
+            crate::info!("resumed from {dir:?} at epoch {start_epoch}");
+        }
+        let mut records = Vec::with_capacity(self.cfg.epochs);
+        for epoch in start_epoch..self.cfg.epochs {
+            let rec = self.run_epoch(epoch)?;
+            if self.cfg.checkpoint_every > 0
+                && (epoch % self.cfg.checkpoint_every == 0 || epoch + 1 == self.cfg.epochs)
+            {
+                if let Some(dir) = &self.cfg.checkpoint_dir {
+                    crate::runtime::checkpoint::save(&self.exec, dir, epoch)?;
+                }
+            }
+            if crate::util::logging::enabled(crate::util::logging::Level::Info) {
+                crate::info!(
+                    "[{}] epoch {:>3}  loss {:.4}  acc {}  hidden {:>5} (mb {:>4})  lr {:.4}  {:.2}s",
+                    self.strategy.name(),
+                    rec.epoch,
+                    rec.train_loss,
+                    if rec.val_acc.is_finite() { format!("{:.4}", rec.val_acc) } else { "  -  ".into() },
+                    rec.hidden,
+                    rec.moved_back,
+                    rec.lr,
+                    rec.time_total,
+                );
+            }
+            records.push(rec);
+        }
+        Ok(RunResult::from_records(
+            &self.cfg.name,
+            &self.strategy.name(),
+            records,
+        ))
+    }
+
+    pub fn run_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochRecord> {
+        let mut rec = EpochRecord { epoch, val_acc: f64::NAN, ..Default::default() };
+
+        // --- plan (selection) -------------------------------------------
+        let t = Timer::start();
+        let plan = {
+            let mut ctx = PlanCtx {
+                epoch,
+                total_epochs: self.cfg.epochs,
+                data: &self.data.train,
+                state: &mut self.state,
+                rng: &mut self.rng,
+                exec: Some(&mut self.exec),
+            };
+            self.strategy.plan_epoch(&mut ctx)?
+        };
+        rec.time_select = t.elapsed_s();
+
+        if plan.reset_params {
+            self.exec.reset_params(self.cfg.seed)?;
+            self.schedule_offset = epoch;
+        }
+
+        // --- learning rate -----------------------------------------------
+        rec.base_lr = self.cfg.lr.at(epoch - self.schedule_offset);
+        rec.lr = rec.base_lr * plan.lr_scale;
+        rec.fraction_ceiling = self.fraction_ceiling(epoch);
+        rec.max_hidden = plan.max_hidden;
+        rec.hidden = plan.hidden.len();
+        rec.moved_back = plan.moved_back;
+
+        // --- train --------------------------------------------------------
+        let t = Timer::start();
+        match plan.batch_mode {
+            BatchMode::Plain => self.execute_plain(&plan, rec.lr as f32, epoch, &mut rec)?,
+            BatchMode::SelectiveBackprop { .. } => {
+                self.execute_sb(&plan, rec.lr as f32, epoch, &mut rec)?
+            }
+        }
+        rec.time_train = t.elapsed_s();
+
+        // --- hidden-list stat refresh (paper step D.1) ---------------------
+        let t = Timer::start();
+        let mut refreshed = 0usize;
+        if self.strategy.refresh_hidden_stats() && !plan.hidden.is_empty() {
+            refreshed = plan.hidden.len();
+            self.refresh_stats(&plan.hidden, epoch as u32)?;
+        }
+        rec.time_refresh = t.elapsed_s();
+        rec.hidden_again = self.state.hidden_again_count();
+
+        // --- evaluation ----------------------------------------------------
+        let eval_due =
+            epoch % self.cfg.eval_every.max(1) == 0 || epoch + 1 == self.cfg.epochs;
+        if eval_due {
+            let t = Timer::start();
+            let (acc, loss) = self.evaluate()?;
+            rec.val_acc = acc;
+            rec.val_loss = loss;
+            rec.time_eval = t.elapsed_s();
+        }
+
+        // --- detailed metrics (Figs. 5-8) ----------------------------------
+        if self.cfg.detailed_metrics {
+            rec.hidden_per_class = self.state.hidden_per_class(&self.data.train);
+            let finite: Vec<f32> = self
+                .state
+                .loss
+                .iter()
+                .copied()
+                .filter(|l| l.is_finite())
+                .collect();
+            if !finite.is_empty() {
+                let hi = crate::util::stats::percentile(&finite, 99.5).max(0.1);
+                rec.loss_hist = Some(Histogram::of(&finite, 0.0, hi, 40));
+            }
+        }
+
+        // Training time excludes eval (the paper's epoch timing measures
+        // the training pipeline; top-1 curves are checkpoint evals).
+        rec.time_total = rec.time_select + rec.time_train + rec.time_refresh;
+
+        // --- cost model: paper-scale projection -----------------------------
+        let select_n = match &self.cfg.strategy {
+            StrategyConfig::Baseline => 0,
+            _ => self.data.train.n,
+        };
+        rec.modeled_time = self.cost.epoch_time(
+            rec.backprop_samples,
+            refreshed + rec.trained_samples.saturating_sub(rec.backprop_samples),
+            select_n,
+            self.cfg.workers,
+        );
+        Ok(rec)
+    }
+
+    fn fraction_ceiling(&self, epoch: usize) -> f64 {
+        match &self.cfg.strategy {
+            StrategyConfig::Kakurenbo { max_fraction, components, .. } => {
+                let mut s = FractionSchedule::paper_default(*max_fraction, self.cfg.epochs);
+                s.enabled = components.reduce_fraction;
+                s.at(epoch)
+            }
+            StrategyConfig::RandomHiding { fraction }
+            | StrategyConfig::Forget { fraction, .. }
+            | StrategyConfig::El2n { fraction, .. }
+            | StrategyConfig::GradMatch { fraction, .. } => *fraction,
+            StrategyConfig::InfoBatch { r } => *r,
+            _ => 0.0,
+        }
+    }
+
+    /// Plain mode: train on plan.order, batch by batch, recording stats.
+    fn execute_plain(
+        &mut self,
+        plan: &EpochPlan,
+        lr: f32,
+        epoch: usize,
+        rec: &mut EpochRecord,
+    ) -> anyhow::Result<()> {
+        let b = self.exec.meta.batch;
+        // Distributed fidelity: interleave worker shards into the global
+        // batch order (weighted plans skip this — they are W=1 per paper).
+        // Avoid cloning the epoch order in the common single-worker /
+        // unweighted case (§Perf: saves an O(N) copy per epoch).
+        let sharded: Option<Vec<u32>> = if self.cfg.workers > 1 && plan.weights.is_none() {
+            Some(global_step_order(&shard_order(&plan.order, self.cfg.workers)))
+        } else {
+            None
+        };
+        let order: &[u32] = sharded.as_deref().unwrap_or(&plan.order);
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for (ci, chunk) in order.chunks(b).enumerate() {
+            let w: Option<&[f32]> = plan
+                .weights
+                .as_ref()
+                .map(|ws| &ws[ci * b..ci * b + chunk.len()]);
+            self.asm.fill(&self.data.train, chunk, w);
+            let stats = self
+                .exec
+                .train_step(&self.asm.x, &self.asm.y, &self.asm.sw, lr)?;
+            for (slot, &sample) in chunk.iter().enumerate() {
+                self.state.record(
+                    sample as usize,
+                    stats.loss[slot],
+                    stats.correct[slot] > 0.5,
+                    stats.conf[slot],
+                    epoch as u32,
+                );
+                loss_sum += stats.loss[slot] as f64;
+                loss_n += 1;
+            }
+        }
+        rec.trained_samples = order.len();
+        rec.backprop_samples = order.len();
+        rec.train_loss = loss_sum / loss_n.max(1) as f64;
+        Ok(())
+    }
+
+    /// Selective-Backprop mode: forward every candidate batch, accept
+    /// samples with probability CDF(loss)^beta, backprop full batches of
+    /// accepted samples.
+    fn execute_sb(
+        &mut self,
+        plan: &EpochPlan,
+        lr: f32,
+        epoch: usize,
+        rec: &mut EpochRecord,
+    ) -> anyhow::Result<()> {
+        let b = self.exec.meta.batch;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut backprop = 0usize;
+        self.sb_queue.clear();
+        for chunk in plan.order.chunks(b) {
+            self.asm.fill(&self.data.train, chunk, None);
+            let stats = self.exec.fwd_stats(&self.asm.x, &self.asm.y)?;
+            for (slot, &sample) in chunk.iter().enumerate() {
+                self.state.record(
+                    sample as usize,
+                    stats.loss[slot],
+                    stats.correct[slot] > 0.5,
+                    stats.conf[slot],
+                    epoch as u32,
+                );
+                loss_sum += stats.loss[slot] as f64;
+                loss_n += 1;
+                if self.sb.accept(stats.loss[slot], &mut self.rng) {
+                    self.sb_queue.push(sample);
+                }
+            }
+            while self.sb_queue.len() >= b {
+                let batch: Vec<u32> = self.sb_queue.drain(..b).collect();
+                self.asm.fill(&self.data.train, &batch, None);
+                self.exec
+                    .train_step(&self.asm.x, &self.asm.y, &self.asm.sw, lr)?;
+                backprop += b;
+            }
+        }
+        if !self.sb_queue.is_empty() {
+            let batch: Vec<u32> = self.sb_queue.drain(..).collect();
+            self.asm.fill(&self.data.train, &batch, None);
+            self.exec
+                .train_step(&self.asm.x, &self.asm.y, &self.asm.sw, lr)?;
+            backprop += batch.len();
+        }
+        rec.trained_samples = plan.order.len();
+        rec.backprop_samples = backprop;
+        rec.train_loss = loss_sum / loss_n.max(1) as f64;
+        Ok(())
+    }
+
+    /// Forward-only stat refresh over `indices` (hidden list).
+    fn refresh_stats(&mut self, indices: &[u32], epoch: u32) -> anyhow::Result<()> {
+        let b = self.exec.meta.batch;
+        for chunk in indices.chunks(b) {
+            self.asm.fill(&self.data.train, chunk, None);
+            let stats = self.exec.fwd_stats(&self.asm.x, &self.asm.y)?;
+            for (slot, &sample) in chunk.iter().enumerate() {
+                self.state.record(
+                    sample as usize,
+                    stats.loss[slot],
+                    stats.correct[slot] > 0.5,
+                    stats.conf[slot],
+                    epoch,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Validation top-1 accuracy + mean loss.
+    pub fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
+        let b = self.exec.meta.batch;
+        let val = &self.data.val;
+        let mut asm = BatchAssembler::new(val, b);
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        let mut n = 0usize;
+        let all: Vec<u32> = (0..val.n as u32).collect();
+        for chunk in all.chunks(b) {
+            asm.fill(val, chunk, None);
+            let stats = self.exec.fwd_stats(&asm.x, &asm.y)?;
+            for slot in 0..chunk.len() {
+                correct += stats.correct[slot] as f64;
+                loss += stats.loss[slot] as f64;
+                n += 1;
+            }
+        }
+        Ok((correct / n.max(1) as f64, loss / n.max(1) as f64))
+    }
+
+    pub fn strategy_name(&self) -> String {
+        self.strategy.name()
+    }
+}

@@ -1,0 +1,112 @@
+//! Batch assembly: gather sample rows into contiguous host buffers ready
+//! for upload as PJRT literals.
+//!
+//! This is on the per-step hot path, so the assembler reuses its buffers
+//! across steps (no per-batch allocation) and the gather is a straight
+//! memcpy per sample row.
+
+use super::Dataset;
+
+/// Reusable batch staging buffers.
+pub struct BatchAssembler {
+    pub batch: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub sw: Vec<f32>,
+    /// How many real (non-padding) samples the current batch holds.
+    pub real: usize,
+    /// The sample index each slot holds (padding slots repeat the last).
+    pub slots: Vec<u32>,
+}
+
+impl BatchAssembler {
+    pub fn new(data: &Dataset, batch: usize) -> Self {
+        BatchAssembler {
+            batch,
+            x: vec![0.0; batch * data.sample_dim],
+            y: vec![0; batch * data.label_len],
+            sw: vec![1.0; batch],
+            real: 0,
+            slots: vec![0; batch],
+        }
+    }
+
+    /// Gather `indices` (<= batch) into the staging buffers; missing slots
+    /// are padded with sample 0 and weight 0 (they contribute nothing to
+    /// the weighted objective, preserving SGD semantics on ragged tails).
+    pub fn fill(&mut self, data: &Dataset, indices: &[u32], weights: Option<&[f32]>) {
+        assert!(indices.len() <= self.batch, "{} > {}", indices.len(), self.batch);
+        let sd = data.sample_dim;
+        let ll = data.label_len;
+        self.real = indices.len();
+        for (slot, &i) in indices.iter().enumerate() {
+            let i = i as usize;
+            self.x[slot * sd..(slot + 1) * sd].copy_from_slice(data.sample_x(i));
+            self.y[slot * ll..(slot + 1) * ll].copy_from_slice(data.sample_y(i));
+            self.sw[slot] = weights.map_or(1.0, |w| w[slot]);
+            self.slots[slot] = i as u32;
+        }
+        for slot in indices.len()..self.batch {
+            self.x[slot * sd..(slot + 1) * sd].copy_from_slice(data.sample_x(0));
+            self.y[slot * ll..(slot + 1) * ll].copy_from_slice(data.sample_y(0));
+            self.sw[slot] = 0.0; // padding: zero weight => zero gradient
+            self.slots[slot] = u32::MAX; // sentinel: not a real sample
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+
+    fn tiny() -> Dataset {
+        gauss_mixture(
+            &GaussMixtureCfg { n_train: 10, n_val: 2, dim: 4, classes: 3, ..Default::default() },
+            1,
+        )
+        .train
+    }
+
+    #[test]
+    fn gathers_rows() {
+        let d = tiny();
+        let mut a = BatchAssembler::new(&d, 4);
+        a.fill(&d, &[3, 1, 7, 0], None);
+        assert_eq!(a.real, 4);
+        assert_eq!(&a.x[0..4], d.sample_x(3));
+        assert_eq!(&a.x[4..8], d.sample_x(1));
+        assert_eq!(a.y[2], d.label(7));
+        assert!(a.sw.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn pads_ragged_tail_with_zero_weight() {
+        let d = tiny();
+        let mut a = BatchAssembler::new(&d, 4);
+        a.fill(&d, &[5, 2], None);
+        assert_eq!(a.real, 2);
+        assert_eq!(a.sw, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&a.x[8..12], d.sample_x(0)); // padded with sample 0
+        assert_eq!(a.slots[2], u32::MAX);
+    }
+
+    #[test]
+    fn custom_weights() {
+        let d = tiny();
+        let mut a = BatchAssembler::new(&d, 3);
+        a.fill(&d, &[1, 2, 3], Some(&[0.5, 2.0, 1.5]));
+        assert_eq!(a.sw, vec![0.5, 2.0, 1.5]);
+    }
+
+    #[test]
+    fn buffers_reused_across_fills() {
+        let d = tiny();
+        let mut a = BatchAssembler::new(&d, 2);
+        a.fill(&d, &[1, 2], None);
+        let p1 = a.x.as_ptr();
+        a.fill(&d, &[3], None);
+        assert_eq!(p1, a.x.as_ptr()); // no reallocation
+        assert_eq!(a.real, 1);
+    }
+}

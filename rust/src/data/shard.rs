@@ -1,0 +1,190 @@
+//! Worker sharding of an epoch's training order (distributed simulation).
+//!
+//! The paper runs data-parallel training with one MPI rank per GPU (32-1024
+//! workers, Appendix B.1).  Our virtual-worker runtime shards the epoch
+//! order the same way the PyTorch DistributedSampler does — contiguous
+//! equal chunks after the global shuffle, padded by wrap-around so every
+//! worker takes the same number of steps (the allreduce is bulk-synchronous:
+//! ragged shards would deadlock a real job).
+
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub worker: usize,
+    pub indices: Vec<u32>,
+}
+
+/// Split `order` into `workers` equal shards (wrap-around padding).
+pub fn shard_order(order: &[u32], workers: usize) -> Vec<Shard> {
+    assert!(workers > 0);
+    if order.is_empty() {
+        return (0..workers).map(|w| Shard { worker: w, indices: vec![] }).collect();
+    }
+    let per = order.len().div_ceil(workers);
+    (0..workers)
+        .map(|w| {
+            let mut indices = Vec::with_capacity(per);
+            for k in 0..per {
+                indices.push(order[(w * per + k) % order.len()]);
+            }
+            Shard { worker: w, indices }
+        })
+        .collect()
+}
+
+/// Interleave shards back into the global step order: step s consumes
+/// shard[w].indices[s] across workers — this is the order the *global
+/// batch* (W x b samples) is assembled in by the coordinator.
+pub fn global_step_order(shards: &[Shard]) -> Vec<u32> {
+    if shards.is_empty() {
+        return vec![];
+    }
+    let steps = shards[0].indices.len();
+    let mut out = Vec::with_capacity(steps * shards.len());
+    for s in 0..steps {
+        for shard in shards {
+            out.push(shard.indices[s]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_are_equal_and_cover() {
+        let order: Vec<u32> = (0..103).collect();
+        let shards = shard_order(&order, 4);
+        assert!(shards.iter().all(|s| s.indices.len() == 26));
+        let mut all: Vec<u32> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all, order); // every sample appears (padding duplicates allowed)
+    }
+
+    #[test]
+    fn exact_division_no_padding() {
+        let order: Vec<u32> = (0..100).collect();
+        let shards = shard_order(&order, 4);
+        let all: Vec<u32> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        assert_eq!(all.len(), 100);
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, order);
+    }
+
+    #[test]
+    fn global_order_interleaves() {
+        let order: Vec<u32> = (0..8).collect();
+        let shards = shard_order(&order, 2);
+        let g = global_step_order(&shards);
+        // worker0 gets 0..4, worker1 gets 4..8; steps interleave
+        assert_eq!(g, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn empty_order() {
+        let shards = shard_order(&[], 3);
+        assert_eq!(shards.len(), 3);
+        assert!(global_step_order(&shards).is_empty());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Importance-aware sharding (Mercury-style, paper ref [22])
+// ---------------------------------------------------------------------------
+
+/// Shard `order` so that every worker receives approximately equal *total
+/// importance* (e.g. lagging loss), not just equal counts — Mercury's
+/// importance-aware data sharding.  Greedy LPT assignment: visit samples
+/// in descending importance, always assigning to the currently lightest
+/// worker; worker-local order is then shuffled by the caller if needed.
+///
+/// Shards may differ in length by design; `pad_equal` wraps them to the
+/// max length so a bulk-synchronous step loop still lines up.
+pub fn shard_by_importance(
+    order: &[u32],
+    importance: &[f32],
+    workers: usize,
+    pad_equal: bool,
+) -> Vec<Shard> {
+    assert!(workers > 0);
+    let mut shards: Vec<Shard> = (0..workers)
+        .map(|w| Shard { worker: w, indices: Vec::new() })
+        .collect();
+    if order.is_empty() {
+        return shards;
+    }
+    let mut by_imp: Vec<u32> = order.to_vec();
+    by_imp.sort_by(|&a, &b| {
+        let ia = importance.get(a as usize).copied().unwrap_or(0.0);
+        let ib = importance.get(b as usize).copied().unwrap_or(0.0);
+        ib.total_cmp(&ia)
+    });
+    let mut loads = vec![0.0f64; workers];
+    for &i in &by_imp {
+        let w = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(w, _)| w)
+            .unwrap();
+        loads[w] += importance.get(i as usize).copied().unwrap_or(0.0).max(0.0) as f64;
+        shards[w].indices.push(i);
+    }
+    if pad_equal {
+        let max_len = shards.iter().map(|s| s.indices.len()).max().unwrap_or(0);
+        for s in shards.iter_mut() {
+            let mut k = 0;
+            while s.indices.len() < max_len {
+                let v = s.indices[k % s.indices.len().max(1)];
+                s.indices.push(v);
+                k += 1;
+            }
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod importance_tests {
+    use super::*;
+
+    #[test]
+    fn balances_total_importance() {
+        let order: Vec<u32> = (0..100).collect();
+        // skewed importance: sample i has importance i
+        let imp: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let shards = shard_by_importance(&order, &imp, 4, false);
+        let loads: Vec<f64> = shards
+            .iter()
+            .map(|s| s.indices.iter().map(|&i| imp[i as usize] as f64).sum())
+            .collect();
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max - min <= 99.0, "loads {loads:?}"); // within one max item
+        // all samples assigned exactly once
+        let mut all: Vec<u32> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, order);
+    }
+
+    #[test]
+    fn pad_equal_lines_up_steps() {
+        let order: Vec<u32> = (0..10).collect();
+        let imp = vec![1.0f32; 10];
+        let shards = shard_by_importance(&order, &imp, 3, true);
+        let len = shards[0].indices.len();
+        assert!(shards.iter().all(|s| s.indices.len() == len));
+    }
+
+    #[test]
+    fn empty_and_single_worker() {
+        let shards = shard_by_importance(&[], &[], 2, true);
+        assert_eq!(shards.len(), 2);
+        let order: Vec<u32> = (0..5).collect();
+        let shards = shard_by_importance(&order, &[1.0; 5], 1, false);
+        assert_eq!(shards[0].indices.len(), 5);
+    }
+}

@@ -1,0 +1,284 @@
+//! Vector-input synthetic generators: Gaussian mixture (CIFAR-100 proxy for
+//! the MLP) and sinusoid "fractal" features (Fractal-3K proxy for the
+//! transfer-learning pipeline, Table 4).
+//!
+//! The key knob is the *difficulty profile*: each sample gets a noise scale
+//! drawn from a two-component mixture — an easy mass (low noise, quickly
+//! learned, loss collapses early: these are what KAKURENBO hides) and a
+//! hard tail (high noise and/or flipped labels: loss stays high, paper
+//! Fig. 5 / Fig. 11).
+
+use super::{Dataset, TrainVal};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GaussMixtureCfg {
+    pub n_train: usize,
+    pub n_val: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// Distance scale between class centers (higher = easier task).
+    pub separation: f32,
+    /// Base within-class noise for "easy" samples.
+    pub noise_easy: f32,
+    /// Noise multiplier for hard-tail samples.
+    pub noise_hard: f32,
+    /// Fraction of samples in the hard tail.
+    pub hard_frac: f64,
+    /// Fraction of samples whose label is flipped to a random class
+    /// (memorization tail — can never be predicted from x).
+    pub label_noise: f64,
+}
+
+impl Default for GaussMixtureCfg {
+    fn default() -> Self {
+        GaussMixtureCfg {
+            n_train: 4096,
+            n_val: 1024,
+            dim: 64,
+            classes: 100,
+            separation: 2.0,
+            noise_easy: 1.1,
+            noise_hard: 3.0,
+            hard_frac: 0.18,
+            label_noise: 0.05,
+        }
+    }
+}
+
+fn class_centers(rng: &mut Rng, classes: usize, dim: usize, sep: f32) -> Vec<f32> {
+    let mut c = vec![0.0f32; classes * dim];
+    for v in c.iter_mut() {
+        *v = rng.normal_f32(0.0, sep / 2.0);
+    }
+    c
+}
+
+fn gen_split(
+    cfg: &GaussMixtureCfg,
+    centers: &[f32],
+    n: usize,
+    rng: &mut Rng,
+    name: &str,
+    with_tail: bool,
+) -> Dataset {
+    let dim = cfg.dim;
+    let mut x = vec![0.0f32; n * dim];
+    let mut y = vec![0i32; n];
+    let mut noisy = vec![false; n];
+    // Per-sample metadata drawn serially (determinism), pixels in parallel.
+    let mut sigma = vec![0.0f32; n];
+    for i in 0..n {
+        let label = rng.below(cfg.classes);
+        let hard = with_tail && rng.chance(cfg.hard_frac);
+        let flipped = with_tail && rng.chance(cfg.label_noise);
+        sigma[i] = if hard { cfg.noise_hard } else { cfg.noise_easy };
+        y[i] = if flipped {
+            noisy[i] = true;
+            rng.below(cfg.classes) as i32
+        } else {
+            noisy[i] = hard;
+            label as i32
+        };
+        // When flipped we still draw x from the *original* class: the label
+        // is unlearnable, which is what creates the persistent loss tail.
+        let c = label;
+        let mut r = rng.fork(i as u64);
+        let row = &mut x[i * dim..(i + 1) * dim];
+        for (d, v) in row.iter_mut().enumerate() {
+            *v = centers[c * dim + d] + r.normal_f32(0.0, sigma[i]);
+        }
+    }
+    let d = Dataset {
+        name: name.to_string(),
+        n,
+        sample_dim: dim,
+        label_len: 1,
+        classes: cfg.classes,
+        x,
+        y,
+        noisy,
+    };
+    debug_assert!(d.validate().is_ok());
+    d
+}
+
+/// Gaussian-mixture classification: the CIFAR-100 / WRN-28-10 stand-in.
+pub fn gauss_mixture(cfg: &GaussMixtureCfg, seed: u64) -> TrainVal {
+    let mut rng = Rng::new(seed ^ 0x6d69_7874);
+    let centers = class_centers(&mut rng, cfg.classes, cfg.dim, cfg.separation);
+    let train = gen_split(cfg, &centers, cfg.n_train, &mut rng, "gauss_mixture/train", true);
+    // Validation has no label noise / hard tail: clean generalization probe.
+    let val = gen_split(cfg, &centers, cfg.n_val, &mut rng, "gauss_mixture/val", false);
+    TrainVal { train, val }
+}
+
+// ---------------------------------------------------------------------------
+// Fractal proxy (upstream pretraining geometry, Table 4)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct FractalCfg {
+    pub n_train: usize,
+    pub n_val: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub noise: f32,
+    pub hard_frac: f64,
+    pub label_noise: f64,
+}
+
+impl Default for FractalCfg {
+    fn default() -> Self {
+        FractalCfg {
+            n_train: 6144,
+            n_val: 1024,
+            dim: 64,
+            classes: 64,
+            noise: 0.35,
+            hard_frac: 0.12,
+            label_noise: 0.03,
+        }
+    }
+}
+
+/// Sinusoidal class signatures: x[d] = Σ_k a_ck sin(f_ck d + φ_ck) + noise.
+/// A deliberately different geometry from the Gaussian mixture so that a
+/// trunk pretrained here transfers (rather than trivially matching) the
+/// downstream task — mirroring Fractal-3K → CIFAR in the paper.
+pub fn fractal_proxy(cfg: &FractalCfg, seed: u64) -> TrainVal {
+    let mut rng = Rng::new(seed ^ 0x6672_6163);
+    let harmonics = 3usize;
+    // class signature parameters
+    let mut amp = vec![0.0f32; cfg.classes * harmonics];
+    let mut freq = vec![0.0f32; cfg.classes * harmonics];
+    let mut phase = vec![0.0f32; cfg.classes * harmonics];
+    for i in 0..cfg.classes * harmonics {
+        amp[i] = 0.5 + rng.f32();
+        freq[i] = 0.2 + 2.0 * rng.f32();
+        phase[i] = rng.f32() * std::f32::consts::TAU;
+    }
+    let gen = |n: usize, with_tail: bool, name: &str, rng: &mut Rng| -> Dataset {
+        let dim = cfg.dim;
+        let mut x = vec![0.0f32; n * dim];
+        let mut y = vec![0i32; n];
+        let mut noisy = vec![false; n];
+        let mut meta: Vec<(usize, f32, u64)> = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = rng.below(cfg.classes);
+            let hard = with_tail && rng.chance(cfg.hard_frac);
+            let flipped = with_tail && rng.chance(cfg.label_noise);
+            y[i] = if flipped { rng.below(cfg.classes) as i32 } else { label as i32 };
+            noisy[i] = flipped || hard;
+            let sigma = if hard { cfg.noise * 4.0 } else { cfg.noise };
+            meta.push((label, sigma, rng.next_u64()));
+        }
+        // Row fill: each row re-seeds its own RNG from `meta`, so the result
+        // is independent of iteration order (and of any future chunking).
+        for (i, row) in x.chunks_mut(dim).enumerate() {
+            let (label, sigma, s) = meta[i];
+            let mut r = Rng::new(s);
+            for (d, v) in row.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for h in 0..harmonics {
+                    let k = label * harmonics + h;
+                    acc += amp[k] * (freq[k] * d as f32 + phase[k]).sin();
+                }
+                *v = acc + r.normal_f32(0.0, sigma);
+            }
+        }
+        Dataset {
+            name: name.to_string(),
+            n,
+            sample_dim: dim,
+            label_len: 1,
+            classes: cfg.classes,
+            x,
+            y,
+            noisy,
+        }
+    };
+    let train = gen(cfg.n_train, true, "fractal/train", &mut rng);
+    let val = gen(cfg.n_val, false, "fractal/val", &mut rng);
+    TrainVal { train, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = GaussMixtureCfg { n_train: 64, n_val: 16, dim: 8, classes: 4, ..Default::default() };
+        let a = gauss_mixture(&cfg, 7);
+        let b = gauss_mixture(&cfg, 7);
+        assert_eq!(a.train.x, b.train.x);
+        assert_eq!(a.train.y, b.train.y);
+        let c = gauss_mixture(&cfg, 8);
+        assert_ne!(a.train.x, c.train.x);
+    }
+
+    #[test]
+    fn tail_fractions_approximately_respected() {
+        let cfg = GaussMixtureCfg {
+            n_train: 8000,
+            n_val: 10,
+            dim: 4,
+            classes: 10,
+            hard_frac: 0.2,
+            label_noise: 0.05,
+            ..Default::default()
+        };
+        let tv = gauss_mixture(&cfg, 3);
+        let frac = tv.train.noisy.iter().filter(|&&b| b).count() as f64 / 8000.0;
+        // hard ∪ flipped ≈ 1 - (1-0.2)(1-0.05) ≈ 0.24
+        assert!((frac - 0.24).abs() < 0.03, "noisy frac {frac}");
+        // validation is clean
+        assert!(tv.val.noisy.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn classes_are_separable_in_expectation() {
+        // mean distance between same-class samples < cross-class distance
+        let cfg = GaussMixtureCfg {
+            n_train: 400,
+            n_val: 10,
+            dim: 16,
+            classes: 4,
+            separation: 4.0,
+            noise_easy: 0.5,
+            hard_frac: 0.0,
+            label_noise: 0.0,
+            ..Default::default()
+        };
+        let tv = gauss_mixture(&cfg, 5);
+        let d = &tv.train;
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        let (mut same, mut cross, mut ns, mut nc) = (0.0f64, 0.0f64, 0, 0);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dd = dist(d.sample_x(i), d.sample_x(j)) as f64;
+                if d.label(i) == d.label(j) {
+                    same += dd;
+                    ns += 1;
+                } else {
+                    cross += dd;
+                    nc += 1;
+                }
+            }
+        }
+        assert!(same / ns as f64 * 1.5 < cross / nc as f64);
+    }
+
+    #[test]
+    fn fractal_deterministic_and_valid() {
+        let cfg = FractalCfg { n_train: 128, n_val: 32, dim: 16, classes: 8, ..Default::default() };
+        let a = fractal_proxy(&cfg, 11);
+        let b = fractal_proxy(&cfg, 11);
+        assert_eq!(a.train.x, b.train.x);
+        a.train.validate().unwrap();
+        a.val.validate().unwrap();
+    }
+}

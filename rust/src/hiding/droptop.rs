@@ -1,0 +1,99 @@
+//! DropTop (paper Appendix D): additionally cut the highest-loss tail.
+//!
+//! On DeepCAM the top ~2% of samples keep a persistently high loss through
+//! the final epochs (Fig. 11) — hard-to-learn or mislabeled data.  Cutting
+//! them at each epoch *improved* accuracy (77.16% -> 77.37% at F=0.3).
+//! DropTop composes with the main selector: it removes the top fraction
+//! from the epoch's training list (they are not added to the hidden list's
+//! stat-refresh pass either; their loss stays lagging, like the paper's
+//! implementation which simply filters them from the batch stream).
+
+use crate::state::SampleState;
+use crate::util::stats::argselect_smallest;
+
+/// Remove the `top_fraction` highest-loss samples from `train`.
+/// Returns (kept, dropped).
+pub fn drop_top(
+    state: &SampleState,
+    train: &[u32],
+    top_fraction: f64,
+) -> (Vec<u32>, Vec<u32>) {
+    let k_drop = ((train.len() as f64) * top_fraction).floor() as usize;
+    if k_drop == 0 {
+        return (train.to_vec(), vec![]);
+    }
+    // Select the (len - k_drop) smallest-loss entries among `train`.
+    let losses: Vec<f32> = train
+        .iter()
+        .map(|&i| {
+            let l = state.loss[i as usize];
+            if l.is_finite() { l } else { -1.0 } // unseen: never dropped
+        })
+        .collect();
+    let keep_local = argselect_smallest(&losses, train.len() - k_drop);
+    let mut keep_mask = vec![false; train.len()];
+    for &li in &keep_local {
+        keep_mask[li as usize] = true;
+    }
+    let mut kept = Vec::with_capacity(train.len() - k_drop);
+    let mut dropped = Vec::with_capacity(k_drop);
+    for (li, &sample) in train.iter().enumerate() {
+        if keep_mask[li] {
+            kept.push(sample);
+        } else {
+            dropped.push(sample);
+        }
+    }
+    (kept, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state_with(losses: &[f32]) -> SampleState {
+        let mut s = SampleState::new(losses.len());
+        for (i, &l) in losses.iter().enumerate() {
+            s.record(i, l, true, 0.9, 0);
+        }
+        s
+    }
+
+    #[test]
+    fn drops_highest_loss() {
+        let s = state_with(&[1.0, 9.0, 2.0, 8.0, 3.0]);
+        let train: Vec<u32> = (0..5).collect();
+        let (kept, dropped) = drop_top(&s, &train, 0.4);
+        let mut d = dropped.clone();
+        d.sort_unstable();
+        assert_eq!(d, vec![1, 3]);
+        assert_eq!(kept.len(), 3);
+    }
+
+    #[test]
+    fn zero_fraction_noop() {
+        let s = state_with(&[1.0, 2.0]);
+        let (kept, dropped) = drop_top(&s, &[0, 1], 0.0);
+        assert_eq!(kept, vec![0, 1]);
+        assert!(dropped.is_empty());
+    }
+
+    #[test]
+    fn unseen_samples_survive() {
+        let mut s = state_with(&[1.0, 2.0, 3.0]);
+        s.loss[0] = f32::INFINITY; // unseen
+        let (kept, dropped) = drop_top(&s, &[0, 1, 2], 0.34);
+        assert!(kept.contains(&0));
+        assert_eq!(dropped, vec![2]);
+    }
+
+    #[test]
+    fn partition_preserved() {
+        let s = state_with(&[5.0, 1.0, 4.0, 2.0, 3.0, 0.5, 6.0]);
+        let train: Vec<u32> = (0..7).collect();
+        let (kept, dropped) = drop_top(&s, &train, 0.3);
+        let mut all: Vec<u32> = kept.iter().chain(&dropped).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<u32>>());
+    }
+}

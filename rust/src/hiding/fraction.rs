@@ -1,0 +1,123 @@
+//! RF: the maximum-hidden-fraction schedule (paper §3.3).
+//!
+//! The ceiling F_e starts at F and decays by a step schedule
+//! (α = [1, 0.8, 0.6, ...] at epoch milestones), because late in training
+//! most samples have similar near-zero loss and hiding a fixed fraction
+//! would cut samples that still matter (Appendix C.1, Fig. 5).
+
+#[derive(Clone, Debug)]
+pub struct FractionSchedule {
+    /// Initial maximum hidden fraction F (e.g. 0.3).
+    pub max_fraction: f64,
+    /// Decay multipliers α applied from the matching milestone onward.
+    pub decay: Vec<f64>,
+    /// Epoch milestones (same length as `decay`).
+    pub milestones: Vec<usize>,
+    /// RF enabled?  When disabled (ablation v1x0x) F_e = F for all e.
+    pub enabled: bool,
+}
+
+impl FractionSchedule {
+    /// Paper defaults: α=[1, 0.8, 0.6] at [30%, 60%, 80%] of training
+    /// (the ImageNet schedule [30, 60, 80]/100 generalized to any run
+    /// length, mirroring Appendix B's per-dataset milestone tables).
+    pub fn paper_default(max_fraction: f64, total_epochs: usize) -> Self {
+        FractionSchedule {
+            max_fraction,
+            decay: vec![1.0, 0.8, 0.6],
+            milestones: vec![
+                0,
+                (total_epochs as f64 * 0.3) as usize,
+                (total_epochs as f64 * 0.6) as usize,
+            ],
+            enabled: true,
+        }
+    }
+
+    pub fn constant(max_fraction: f64) -> Self {
+        FractionSchedule {
+            max_fraction,
+            decay: vec![1.0],
+            milestones: vec![0],
+            enabled: false,
+        }
+    }
+
+    /// Maximum fraction ceiling F_e for epoch e.
+    pub fn at(&self, epoch: usize) -> f64 {
+        if !self.enabled {
+            return self.max_fraction;
+        }
+        let mut alpha = 1.0;
+        for (m, a) in self.milestones.iter().zip(&self.decay) {
+            if epoch >= *m {
+                alpha = *a;
+            }
+        }
+        self.max_fraction * alpha
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.max_fraction),
+            "max_fraction must be in [0,1), got {}",
+            self.max_fraction
+        );
+        anyhow::ensure!(self.decay.len() == self.milestones.len(), "decay/milestone length");
+        anyhow::ensure!(
+            self.milestones.windows(2).all(|w| w[0] < w[1]),
+            "milestones must increase"
+        );
+        anyhow::ensure!(
+            self.decay.iter().all(|&a| (0.0..=1.0).contains(&a)),
+            "decay factors in [0,1]"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_steps_down() {
+        let s = FractionSchedule::paper_default(0.3, 100);
+        assert!((s.at(0) - 0.3).abs() < 1e-12);
+        assert!((s.at(29) - 0.3).abs() < 1e-12);
+        assert!((s.at(30) - 0.24).abs() < 1e-12);
+        assert!((s.at(60) - 0.18).abs() < 1e-12);
+        assert!((s.at(99) - 0.18).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let s = FractionSchedule::paper_default(0.4, 200);
+        let mut prev = f64::INFINITY;
+        for e in 0..200 {
+            let f = s.at(e);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn disabled_is_constant() {
+        let s = FractionSchedule::constant(0.3);
+        assert_eq!(s.at(0), 0.3);
+        assert_eq!(s.at(1000), 0.3);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(FractionSchedule::paper_default(0.3, 100).validate().is_ok());
+        assert!(FractionSchedule::constant(1.5).validate().is_err());
+        let bad = FractionSchedule {
+            max_fraction: 0.3,
+            decay: vec![1.0, 0.8],
+            milestones: vec![10, 5],
+            enabled: true,
+        };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! LR: learning-rate compensation (paper Eq. 8).
+//!
+//! Hiding a fraction F_e of samples removes F_e of the SGD iterations of
+//! the epoch; §3.2 argues the lost progress admits sharp minima unless the
+//! learning rate is scaled up by 1/(1-F_e).  The rule wraps *any* base
+//! scheduler, matching the paper's claim of scheduler independence.
+
+/// η_e = η_base,e · 1/(1 - F_e), where F_e is the *effective* hidden
+/// fraction of the epoch (|hidden|/N, not the ceiling).
+pub fn adjusted_lr(base_lr: f64, effective_fraction: f64) -> f64 {
+    assert!(
+        (0.0..1.0).contains(&effective_fraction),
+        "fraction {effective_fraction} out of range"
+    );
+    base_lr / (1.0 - effective_fraction)
+}
+
+/// Scale factor alone (for logging / the EpochPlan).
+pub fn lr_scale(effective_fraction: f64) -> f64 {
+    adjusted_lr(1.0, effective_fraction)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_eq8() {
+        assert!((adjusted_lr(0.1, 0.0) - 0.1).abs() < 1e-12);
+        assert!((adjusted_lr(0.1, 0.3) - 0.1 / 0.7).abs() < 1e-12);
+        assert!((adjusted_lr(1.0, 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_sample_update_mass_preserved() {
+        // (N - M) steps at η/(1-F) carry the same total step mass as N at η.
+        let n = 1000.0;
+        for f in [0.1, 0.25, 0.4] {
+            let steps = n * (1.0 - f);
+            let mass = steps * adjusted_lr(0.1, f);
+            assert!((mass - n * 0.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_full_hiding() {
+        adjusted_lr(0.1, 1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! KAKURENBO §3: the hiding machinery.
+//!
+//! * `selector` — sort by lagging loss, cut the lowest-loss fraction, move
+//!   back samples without high-confidence-correct predictions (HE + MB).
+//! * `fraction` — the maximum-hidden-fraction step schedule (RF, §3.3).
+//! * `lr`       — the learning-rate compensation rule (LR, Eq. 8).
+//! * `droptop`  — Appendix D: additionally drop the top-loss tail.
+
+pub mod droptop;
+pub mod fraction;
+pub mod lr;
+pub mod selector;

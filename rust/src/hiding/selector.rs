@@ -1,0 +1,200 @@
+//! Hidden-sample selection: HE (hide lowest-loss fraction) + MB (move back
+//! samples that lack a high-confidence correct prediction).  Paper §3.1,
+//! boxes B.1-B.3 of Fig. 1.
+//!
+//! Selection is O(N) (quickselect partition around the F·N-th loss) rather
+//! than the O(N log N) full sort the paper reports — the full-sort path is
+//! kept behind `SelectMode::FullSort` for the overhead ablation bench.
+
+use crate::state::SampleState;
+use crate::util::stats::{argselect_smallest, argsort_by_f32};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectMode {
+    /// O(N) quickselect partition (default; measured faster — see §Perf).
+    QuickSelect,
+    /// O(N log N) full sort (paper's description; ablation baseline).
+    FullSort,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorCfg {
+    /// Prediction-confidence threshold τ for the move-back rule.
+    pub tau: f32,
+    /// Enable MB (move-back).  Disabled in ablation v1x0x.
+    pub move_back: bool,
+    pub mode: SelectMode,
+}
+
+impl Default for SelectorCfg {
+    fn default() -> Self {
+        SelectorCfg { tau: 0.7, move_back: true, mode: SelectMode::QuickSelect }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Selection {
+    /// Samples to hide this epoch.
+    pub hidden: Vec<u32>,
+    /// Samples to train on this epoch.
+    pub train: Vec<u32>,
+    /// Of the F·N lowest-loss candidates, how many were moved back.
+    pub moved_back: usize,
+    /// Effective hiding fraction F* = |hidden| / N.
+    pub effective_fraction: f64,
+}
+
+/// Select the hidden set for this epoch.
+///
+/// `max_fraction` is the epoch's ceiling F_e (after the RF schedule).  The
+/// candidates are the F_e*N samples with the lowest lagging loss; each
+/// candidate is *kept hidden* only if its last prediction was correct with
+/// confidence >= tau (PA & PC rule) — otherwise it is moved back to the
+/// training list.
+pub fn select(state: &SampleState, max_fraction: f64, cfg: &SelectorCfg) -> Selection {
+    let n = state.n;
+    let k = ((n as f64) * max_fraction).floor() as usize;
+    let k = k.min(n);
+    if k == 0 {
+        return Selection {
+            hidden: vec![],
+            train: (0..n as u32).collect(),
+            moved_back: 0,
+            effective_fraction: 0.0,
+        };
+    }
+
+    let candidates: Vec<u32> = match cfg.mode {
+        SelectMode::QuickSelect => argselect_smallest(&state.loss, k),
+        SelectMode::FullSort => argsort_by_f32(&state.loss)[..k].to_vec(),
+    };
+
+    let mut hidden = Vec::with_capacity(k);
+    let mut moved_back = 0usize;
+    let mut is_candidate = vec![false; n];
+    for &i in &candidates {
+        is_candidate[i as usize] = true;
+        let keep_hidden = if cfg.move_back {
+            state.high_confidence_correct(i as usize, cfg.tau)
+        } else {
+            true
+        };
+        // Unseen samples (loss = +inf) can never be candidates unless
+        // F*N > number of seen samples; guard anyway.
+        let keep_hidden = keep_hidden && state.loss[i as usize].is_finite();
+        if keep_hidden {
+            hidden.push(i);
+        } else {
+            moved_back += 1;
+        }
+    }
+
+    let mut is_hidden = vec![false; n];
+    for &i in &hidden {
+        is_hidden[i as usize] = true;
+    }
+    let train: Vec<u32> = (0..n as u32).filter(|&i| !is_hidden[i as usize]).collect();
+
+    Selection {
+        effective_fraction: hidden.len() as f64 / n.max(1) as f64,
+        moved_back,
+        hidden,
+        train,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state_with_losses(losses: &[f32]) -> SampleState {
+        let mut s = SampleState::new(losses.len());
+        for (i, &l) in losses.iter().enumerate() {
+            s.record(i, l, true, 0.9, 0); // all confident-correct by default
+        }
+        s
+    }
+
+    #[test]
+    fn hides_lowest_loss_fraction() {
+        let s = state_with_losses(&[5.0, 1.0, 4.0, 0.5, 3.0, 0.1, 2.0, 6.0, 7.0, 8.0]);
+        let sel = select(&s, 0.3, &SelectorCfg::default());
+        let mut h = sel.hidden.clone();
+        h.sort_unstable();
+        assert_eq!(h, vec![1, 3, 5]); // losses 1.0, 0.5, 0.1
+        assert_eq!(sel.train.len(), 7);
+        assert!((sel.effective_fraction - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn move_back_filters_low_confidence() {
+        let mut s = state_with_losses(&[0.1, 0.2, 0.3, 10.0]);
+        s.record(0, 0.1, true, 0.5, 0); // low confidence -> move back
+        s.record(1, 0.2, false, 0.9, 0); // mispredicted -> move back
+        let sel = select(&s, 0.75, &SelectorCfg::default());
+        assert_eq!(sel.hidden, vec![2]);
+        assert_eq!(sel.moved_back, 2);
+        let mut t = sel.train.clone();
+        t.sort_unstable();
+        assert_eq!(t, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn move_back_disabled_hides_all_candidates() {
+        let mut s = state_with_losses(&[0.1, 0.2, 0.3, 10.0]);
+        s.record(0, 0.1, true, 0.5, 0);
+        s.record(1, 0.2, false, 0.9, 0);
+        let cfg = SelectorCfg { move_back: false, ..Default::default() };
+        let sel = select(&s, 0.75, &cfg);
+        let mut h = sel.hidden.clone();
+        h.sort_unstable();
+        assert_eq!(h, vec![0, 1, 2]);
+        assert_eq!(sel.moved_back, 0);
+    }
+
+    #[test]
+    fn quickselect_equals_fullsort_selection() {
+        // property: the two modes hide the same *set*
+        let mut s = SampleState::new(500);
+        for i in 0..500 {
+            let loss = ((i * 7919) % 500) as f32 / 100.0;
+            let conf = if i % 3 == 0 { 0.9 } else { 0.5 };
+            s.record(i, loss, i % 2 == 0, conf, 0);
+        }
+        for f in [0.0, 0.1, 0.3, 0.9, 1.0] {
+            let a = select(&s, f, &SelectorCfg { mode: SelectMode::QuickSelect, ..Default::default() });
+            let b = select(&s, f, &SelectorCfg { mode: SelectMode::FullSort, ..Default::default() });
+            let mut ha = a.hidden.clone();
+            let mut hb = b.hidden.clone();
+            ha.sort_unstable();
+            hb.sort_unstable();
+            assert_eq!(ha, hb, "fraction {f}");
+        }
+    }
+
+    #[test]
+    fn unseen_samples_never_hidden() {
+        let mut s = SampleState::new(4); // all losses +inf
+        s.record(0, 0.5, true, 0.99, 0);
+        let sel = select(&s, 1.0, &SelectorCfg::default());
+        assert_eq!(sel.hidden, vec![0]); // only the seen sample can hide
+        assert_eq!(sel.train.len(), 3);
+    }
+
+    #[test]
+    fn zero_fraction_hides_nothing() {
+        let s = state_with_losses(&[1.0, 2.0]);
+        let sel = select(&s, 0.0, &SelectorCfg::default());
+        assert!(sel.hidden.is_empty());
+        assert_eq!(sel.train.len(), 2);
+    }
+
+    #[test]
+    fn train_plus_hidden_partition_dataset() {
+        let s = state_with_losses(&[3.0, 1.0, 2.0, 0.1, 5.0, 4.0, 0.2]);
+        let sel = select(&s, 0.4, &SelectorCfg::default());
+        let mut all: Vec<u32> = sel.train.iter().chain(sel.hidden.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,25 @@
+//! KAKURENBO: Adaptively Hiding Samples in Deep Neural Network Training
+//! (NeurIPS 2023) — full-system reproduction.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!   * L3 (this crate): training coordinator — data pipeline, per-sample
+//!     state, the hiding selector + schedules, baselines, distributed
+//!     simulation, metrics, bench harness.
+//!   * L2/L1 (python/, build time only): JAX models + Pallas kernels,
+//!     AOT-lowered to `artifacts/*.hlo.txt`.
+//!   * runtime: PJRT CPU client executing the AOT artifacts — Python is
+//!     never on the training path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hiding;
+pub mod metrics;
+pub mod runtime;
+pub mod report;
+pub mod sampler;
+pub mod schedule;
+pub mod state;
+pub mod strategies;
+pub mod util;

@@ -1,0 +1,188 @@
+//! `kakurenbo` — the launcher.
+//!
+//! Subcommands:
+//!   train     --preset <name> --strategy <name> [overrides]   one training run
+//!   compare   --preset <name> [--strategies a,b,c]            strategy comparison table
+//!   presets                                                   list presets
+//!   variants                                                  list artifact variants
+//!
+//! Overrides (any subset): --epochs --seed --workers --base_lr --momentum
+//!   --max_fraction --tau --drop_top --variant --eval_every --detailed_metrics
+
+use kakurenbo::cli::Args;
+use kakurenbo::config::{presets, StrategyConfig};
+use kakurenbo::coordinator::{run_comparison, run_experiment};
+use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+use kakurenbo::util::logging::{set_level, Level};
+use kakurenbo::util::table::{diff_pct, pct, speedup_pct, Table};
+
+const OVERRIDE_KEYS: &[&str] = &[
+    "epochs", "seed", "workers", "base_lr", "warmup_epochs", "momentum",
+    "max_fraction", "tau", "drop_top", "variant", "eval_every", "detailed_metrics",
+    "checkpoint_every", "checkpoint_dir", "resume",
+];
+
+fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
+    Ok(match name {
+        "baseline" => StrategyConfig::Baseline,
+        "kakurenbo" => StrategyConfig::kakurenbo(fraction),
+        "iswr" => StrategyConfig::Iswr,
+        "sb" => StrategyConfig::SelectiveBackprop { beta: 1.0 },
+        "forget" => StrategyConfig::Forget { prune_epoch: 5, fraction },
+        "gradmatch" => StrategyConfig::GradMatch { fraction, every_r: 3 },
+        "random" => StrategyConfig::RandomHiding { fraction },
+        "infobatch" => StrategyConfig::InfoBatch { r: fraction },
+        "el2n" => StrategyConfig::El2n { score_epoch: 4, fraction, restart: false },
+        other if other.starts_with("kakurenbo-v") => {
+            let comps = kakurenbo::config::Components::from_bits(&other["kakurenbo-".len()..])?;
+            StrategyConfig::Kakurenbo {
+                max_fraction: fraction,
+                tau: 0.7,
+                components: comps,
+                drop_top: 0.0,
+                select_mode: kakurenbo::hiding::selector::SelectMode::QuickSelect,
+            }
+        }
+        other => anyhow::bail!(
+            "unknown strategy {other:?}; available: baseline kakurenbo kakurenbo-vXXXX iswr sb forget gradmatch random infobatch el2n"
+        ),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    if args.bool_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    if args.bool_flag("quiet") {
+        set_level(Level::Warn);
+    }
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "presets" => {
+            for p in presets::ALL {
+                println!("{p}");
+            }
+            Ok(())
+        }
+        "variants" => {
+            let rt_dir = default_artifacts_dir();
+            let manifest = kakurenbo::runtime::Manifest::load(&rt_dir)?;
+            let mut t = Table::new("artifact variants")
+                .header(&["variant", "family", "batch", "classes", "params"]);
+            for (name, m) in &manifest.models {
+                t.row(vec![
+                    name.clone(),
+                    m.family.clone(),
+                    m.batch.to_string(),
+                    m.classes.to_string(),
+                    m.param_count.to_string(),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `kakurenbo help`)"),
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<kakurenbo::config::ExperimentConfig> {
+    let preset = args.flag_or("preset", "imagenet_resnet50");
+    let mut cfg = presets::by_name(preset)?;
+    let fraction = args.flag_parse::<f64>("max_fraction")?.unwrap_or(0.3);
+    if let Some(strategy) = args.flag("strategy") {
+        cfg.strategy = strategy_by_name(strategy, fraction)?;
+    }
+    for key in OVERRIDE_KEYS {
+        if let Some(v) = args.flag(key) {
+            // strategy-dependent keys may not apply; ignore mismatches for
+            // generic sweeps but surface truly unknown keys
+            if let Err(e) = cfg.apply_override(key, v) {
+                kakurenbo::warn_!("override --{key}={v} skipped: {e}");
+            }
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
+    let name = format!("{}_{}", cfg.name, cfg.strategy.name());
+    let result = run_experiment(&rt, cfg)?;
+    let mut t = Table::new(format!("run: {name}")).header(&[
+        "strategy", "final acc", "best acc", "time (s)", "modeled (s)",
+    ]);
+    t.row(vec![
+        result.strategy.clone(),
+        pct(result.final_acc),
+        pct(result.best_acc),
+        format!("{:.1}", result.total_time),
+        format!("{:.1}", result.total_modeled_time),
+    ]);
+    t.print();
+    if let Some(dir) = args.flag("out") {
+        result.save(std::path::Path::new(dir), &name)?;
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let fraction = args.flag_parse::<f64>("max_fraction")?.unwrap_or(0.3);
+    let list = args.flag_or("strategies", "baseline,kakurenbo,iswr,sb");
+    let strategies: Vec<StrategyConfig> = list
+        .split(',')
+        .map(|s| strategy_by_name(s.trim(), fraction))
+        .collect::<anyhow::Result<_>>()?;
+    let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
+    let results = run_comparison(&rt, &cfg, &strategies)?;
+    let base = &results[0];
+    let mut t = Table::new(format!("comparison: {} (F={fraction})", cfg.name)).header(&[
+        "strategy", "acc", "diff", "time (s)", "vs base", "modeled (s)", "vs base",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.strategy.clone(),
+            pct(r.best_acc),
+            if r.strategy == base.strategy { "".into() } else { diff_pct(r.best_acc, base.best_acc) },
+            format!("{:.1}", r.total_time),
+            if r.strategy == base.strategy { "".into() } else { speedup_pct(r.total_time, base.total_time) },
+            format!("{:.1}", r.total_modeled_time),
+            if r.strategy == base.strategy {
+                "".into()
+            } else {
+                speedup_pct(r.total_modeled_time, base.total_modeled_time)
+            },
+        ]);
+    }
+    t.print();
+    if let Some(dir) = args.flag("out") {
+        for r in &results {
+            r.save(std::path::Path::new(dir), &r.name.replace('/', "_"))?;
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+kakurenbo — NeurIPS'23 'Adaptively Hiding Samples' reproduction (rust+JAX+Pallas)
+
+USAGE:
+  kakurenbo train   --preset imagenet_resnet50 --strategy kakurenbo [--max_fraction 0.3] [--epochs N] [--out results/]
+  kakurenbo compare --preset deepcam --strategies baseline,kakurenbo,iswr
+  kakurenbo presets
+  kakurenbo variants
+
+Strategies: baseline kakurenbo kakurenbo-vXXXX (ablation bits HE/MB/RF/LR)
+            iswr sb forget gradmatch random infobatch el2n
+Overrides:  --epochs --seed --workers --base_lr --warmup_epochs --momentum
+            --max_fraction --tau --drop_top --variant --eval_every
+Flags:      --verbose --quiet --out <dir>
+";

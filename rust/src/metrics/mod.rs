@@ -1,0 +1,224 @@
+//! Per-epoch metric records + run results, with JSON export — the raw
+//! material every bench table/figure is rendered from.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+/// Everything measured in one epoch (paper Figs. 2, 4-8 are projections
+/// of these fields over epochs).
+#[derive(Clone, Debug, Default)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Base LR after scheduler, before KAKURENBO scaling.
+    pub base_lr: f64,
+    /// Actual LR used (includes 1/(1-F) adjustment).
+    pub lr: f64,
+    /// Maximum hidden fraction ceiling F_e for the epoch.
+    pub fraction_ceiling: f64,
+    /// Hide candidates before move-back (Fig. 8 "max hidden").
+    pub max_hidden: usize,
+    /// Actually hidden samples (Fig. 8 "hidden").
+    pub hidden: usize,
+    /// Hidden in this *and* the previous epoch (Fig. 8 "hidden again").
+    pub hidden_again: usize,
+    /// Candidates returned to training by the MB rule.
+    pub moved_back: usize,
+    /// Samples trained on (SGD steps × batch ≈ this).
+    pub trained_samples: usize,
+    /// Backward passes actually executed (differs from trained for SB).
+    pub backprop_samples: usize,
+    /// Mean training loss over the epoch's training passes.
+    pub train_loss: f64,
+    /// Validation top-1 accuracy (NaN when not evaluated this epoch).
+    pub val_acc: f64,
+    pub val_loss: f64,
+    /// Measured wall-clock seconds: total and components.
+    pub time_total: f64,
+    pub time_train: f64,
+    pub time_select: f64,
+    pub time_refresh: f64,
+    pub time_eval: f64,
+    /// Modeled epoch seconds at paper scale (cost model, W workers).
+    pub modeled_time: f64,
+    /// Per-class hidden counts (only when detailed_metrics).
+    pub hidden_per_class: Vec<usize>,
+    /// Loss histogram over the full dataset (only when detailed_metrics).
+    pub loss_hist: Option<Histogram>,
+}
+
+impl EpochRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = crate::jobj![
+            ("epoch", self.epoch),
+            ("base_lr", self.base_lr),
+            ("lr", self.lr),
+            ("fraction_ceiling", self.fraction_ceiling),
+            ("max_hidden", self.max_hidden),
+            ("hidden", self.hidden),
+            ("hidden_again", self.hidden_again),
+            ("moved_back", self.moved_back),
+            ("trained_samples", self.trained_samples),
+            ("backprop_samples", self.backprop_samples),
+            ("train_loss", self.train_loss),
+            ("val_acc", self.val_acc),
+            ("val_loss", self.val_loss),
+            ("time_total", self.time_total),
+            ("time_train", self.time_train),
+            ("time_select", self.time_select),
+            ("time_refresh", self.time_refresh),
+            ("time_eval", self.time_eval),
+            ("modeled_time", self.modeled_time),
+        ];
+        if let Json::Obj(m) = &mut o {
+            if !self.hidden_per_class.is_empty() {
+                m.insert(
+                    "hidden_per_class".into(),
+                    Json::from(self.hidden_per_class.clone()),
+                );
+            }
+            if let Some(h) = &self.loss_hist {
+                m.insert(
+                    "loss_hist".into(),
+                    crate::jobj![
+                        ("lo", h.lo),
+                        ("hi", h.hi),
+                        (
+                            "counts",
+                            h.counts.iter().map(|&c| c as usize).collect::<Vec<_>>()
+                        )
+                    ],
+                );
+            }
+        }
+        o
+    }
+}
+
+/// A complete training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub name: String,
+    pub strategy: String,
+    pub records: Vec<EpochRecord>,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    pub total_time: f64,
+    pub total_modeled_time: f64,
+}
+
+impl RunResult {
+    pub fn from_records(name: &str, strategy: &str, records: Vec<EpochRecord>) -> Self {
+        let evals: Vec<f64> = records
+            .iter()
+            .map(|r| r.val_acc)
+            .filter(|a| a.is_finite())
+            .collect();
+        RunResult {
+            name: name.to_string(),
+            strategy: strategy.to_string(),
+            final_acc: evals.last().copied().unwrap_or(f64::NAN),
+            best_acc: evals.iter().copied().fold(f64::NAN, f64::max),
+            total_time: records.iter().map(|r| r.time_total).sum(),
+            total_modeled_time: records.iter().map(|r| r.modeled_time).sum(),
+            records,
+        }
+    }
+
+    /// First wall-clock second at which validation accuracy reached
+    /// `target` (time-to-accuracy, Fig. 2's "speedup" metric);
+    /// None if never reached.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        let mut elapsed = 0.0;
+        for r in &self.records {
+            elapsed += r.time_total;
+            if r.val_acc.is_finite() && r.val_acc >= target {
+                return Some(elapsed);
+            }
+        }
+        None
+    }
+
+    /// Same in modeled (paper-scale) time.
+    pub fn modeled_time_to_accuracy(&self, target: f64) -> Option<f64> {
+        let mut elapsed = 0.0;
+        for r in &self.records {
+            elapsed += r.modeled_time;
+            if r.val_acc.is_finite() && r.val_acc >= target {
+                return Some(elapsed);
+            }
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::jobj![
+            ("name", self.name.as_str()),
+            ("strategy", self.strategy.as_str()),
+            ("final_acc", self.final_acc),
+            ("best_acc", self.best_acc),
+            ("total_time", self.total_time),
+            ("total_modeled_time", self.total_modeled_time),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(|r| r.to_json()).collect::<Vec<_>>())
+            ),
+        ]
+    }
+
+    /// Write the run result under results/<file>.json.
+    pub fn save(&self, dir: &Path, file: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{file}.json"));
+        std::fs::write(&path, self.to_json().to_pretty())?;
+        crate::info!("wrote {path:?}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, acc: f64, t: f64) -> EpochRecord {
+        EpochRecord { epoch, val_acc: acc, time_total: t, ..Default::default() }
+    }
+
+    #[test]
+    fn run_result_aggregates() {
+        let r = RunResult::from_records(
+            "t",
+            "baseline",
+            vec![rec(0, 0.3, 1.0), rec(1, 0.7, 1.0), rec(2, 0.6, 1.0)],
+        );
+        assert_eq!(r.final_acc, 0.6);
+        assert_eq!(r.best_acc, 0.7);
+        assert_eq!(r.total_time, 3.0);
+        assert_eq!(r.time_to_accuracy(0.65), Some(2.0));
+        assert_eq!(r.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let r = RunResult::from_records("t", "iswr", vec![rec(0, 0.5, 2.0)]);
+        let j = r.to_json().to_pretty();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("strategy").unwrap().as_str(), Some("iswr"));
+        assert_eq!(
+            parsed.get("records").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn nan_val_acc_skipped_in_aggregates() {
+        let r = RunResult::from_records(
+            "t",
+            "b",
+            vec![rec(0, f64::NAN, 1.0), rec(1, 0.4, 1.0)],
+        );
+        assert_eq!(r.final_acc, 0.4);
+        assert_eq!(r.best_acc, 0.4);
+    }
+}

@@ -1,0 +1,189 @@
+//! Shared bench harness (criterion is unavailable offline): scale control,
+//! result persistence, convergence-series export, and the comparison-table
+//! runner reused by most paper-table benches.
+
+use std::path::PathBuf;
+
+use crate::config::{ExperimentConfig, StrategyConfig};
+use crate::coordinator::run_experiment;
+use crate::metrics::RunResult;
+use crate::runtime::XlaRuntime;
+use crate::util::json::Json;
+use crate::util::table::{diff_pct, pct, speedup_pct, Table};
+
+/// Bench context: scale flag (`cargo bench -- --quick`), output directory,
+/// shared XLA runtime.
+pub struct BenchCtx {
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub rt: XlaRuntime,
+}
+
+impl BenchCtx {
+    /// Parse bench argv (after the `--`), init the runtime.
+    pub fn init(bench_name: &str) -> anyhow::Result<Self> {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("KAKURENBO_QUICK").is_ok();
+        // `cargo bench` passes --bench; tolerate any unknown flags.
+        let out_dir = PathBuf::from("results");
+        std::fs::create_dir_all(&out_dir)?;
+        let rt = XlaRuntime::new(&crate::runtime::default_artifacts_dir())?;
+        crate::util::logging::set_level(crate::util::logging::Level::Warn);
+        println!("=== {bench_name}{} ===", if quick { " (quick)" } else { "" });
+        Ok(BenchCtx { quick, out_dir, rt })
+    }
+
+    /// Scale an epoch/sample count down in quick mode.
+    pub fn scale(&self, full: usize, quick: usize) -> usize {
+        if self.quick { quick } else { full }
+    }
+
+    /// Shrink the dataset sizes of a config in quick mode.
+    pub fn scale_config(&self, cfg: &mut ExperimentConfig) {
+        if !self.quick {
+            return;
+        }
+        cfg.epochs = cfg.epochs.div_ceil(3);
+        use crate::config::DatasetConfig::*;
+        match &mut cfg.dataset {
+            GaussMixture(c) => {
+                c.n_train = (c.n_train / 4).max(256);
+                c.n_val = (c.n_val / 4).max(128);
+            }
+            ImagenetProxy(c) => {
+                c.n_train = (c.n_train / 4).max(256);
+                c.n_val = (c.n_val / 4).max(128);
+            }
+            DeepcamProxy(c) => {
+                c.n_train = (c.n_train / 4).max(128);
+                c.n_val = (c.n_val / 4).max(64);
+            }
+            Fractal(c) => {
+                c.n_train = (c.n_train / 4).max(256);
+                c.n_val = (c.n_val / 4).max(128);
+            }
+        }
+    }
+
+    /// Persist a set of run results under results/<exp>.json.
+    pub fn save_runs(&self, exp: &str, runs: &[RunResult]) -> anyhow::Result<()> {
+        let j = Json::Arr(runs.iter().map(|r| r.to_json()).collect());
+        let path = self.out_dir.join(format!("{exp}.json"));
+        std::fs::write(&path, j.to_pretty())?;
+        println!("[saved {}]", path.display());
+        Ok(())
+    }
+
+    /// Persist an arbitrary JSON payload.
+    pub fn save_json(&self, exp: &str, j: &Json) -> anyhow::Result<()> {
+        let path = self.out_dir.join(format!("{exp}.json"));
+        std::fs::write(&path, j.to_pretty())?;
+        println!("[saved {}]", path.display());
+        Ok(())
+    }
+}
+
+/// Run `base` once per strategy and print the paper-style comparison table
+/// (accuracy, diff vs baseline, measured + modeled time, speedups).
+/// The first strategy is treated as the baseline row.
+pub fn comparison_table(
+    ctx: &BenchCtx,
+    title: &str,
+    base: &ExperimentConfig,
+    strategies: &[(String, StrategyConfig)],
+) -> anyhow::Result<Vec<RunResult>> {
+    let mut runs = Vec::new();
+    for (label, s) in strategies {
+        let mut cfg = base.clone();
+        cfg.strategy = s.clone();
+        cfg.name = format!("{}/{}", base.name, label);
+        // FORGET trains a pruning prologue *plus* the full budget (the
+        // paper reports total time including the extra epochs, §4.2).
+        if let StrategyConfig::Forget { prune_epoch, .. } = s {
+            cfg.epochs += prune_epoch;
+        }
+        let t = crate::util::timer::Timer::start();
+        let mut r = run_experiment(&ctx.rt, cfg)?;
+        r.strategy = label.clone();
+        println!(
+            "  {label:<16} acc {:.4}  time {:.1}s  modeled {:.1}s  ({:.1}s wall)",
+            r.best_acc,
+            r.total_time,
+            r.total_modeled_time,
+            t.elapsed_s()
+        );
+        runs.push(r);
+    }
+    print_comparison(title, &runs);
+    Ok(runs)
+}
+
+pub fn print_comparison(title: &str, runs: &[RunResult]) {
+    let base = &runs[0];
+    let mut t = Table::new(title).header(&[
+        "Setting", "Acc.", "Diff.", "Time (s)", "Impr.", "Modeled (s)", "Impr.",
+    ]);
+    for r in runs {
+        let is_base = std::ptr::eq(r, base);
+        t.row(vec![
+            r.strategy.clone(),
+            pct(r.best_acc),
+            if is_base { "-".into() } else { diff_pct(r.best_acc, base.best_acc) },
+            format!("{:.1}", r.total_time),
+            if is_base { "-".into() } else { speedup_pct(r.total_time, base.total_time) },
+            format!("{:.1}", r.total_modeled_time),
+            if is_base {
+                "-".into()
+            } else {
+                speedup_pct(r.total_modeled_time, base.total_modeled_time)
+            },
+        ]);
+    }
+    t.print();
+}
+
+/// Export per-epoch convergence series (Fig. 2/3-style) as JSON.
+pub fn convergence_json(runs: &[RunResult]) -> Json {
+    Json::Arr(
+        runs.iter()
+            .map(|r| {
+                let epochs: Vec<usize> = r.records.iter().map(|x| x.epoch).collect();
+                let acc: Vec<f64> = r.records.iter().map(|x| x.val_acc).collect();
+                let time: Vec<f64> = r
+                    .records
+                    .iter()
+                    .scan(0.0, |t, x| {
+                        *t += x.time_total;
+                        Some(*t)
+                    })
+                    .collect();
+                let modeled: Vec<f64> = r
+                    .records
+                    .iter()
+                    .scan(0.0, |t, x| {
+                        *t += x.modeled_time;
+                        Some(*t)
+                    })
+                    .collect();
+                crate::jobj![
+                    ("strategy", r.strategy.as_str()),
+                    ("epoch", epochs),
+                    ("val_acc", acc),
+                    ("elapsed_s", time),
+                    ("modeled_s", modeled),
+                ]
+            })
+            .collect(),
+    )
+}
+
+/// Standard strategy set for Table 2-style comparisons.
+pub fn paper_strategies(fraction: f64, prune_epoch: usize) -> Vec<(String, StrategyConfig)> {
+    vec![
+        ("Baseline".into(), StrategyConfig::Baseline),
+        ("ISWR".into(), StrategyConfig::Iswr),
+        ("FORGET".into(), StrategyConfig::Forget { prune_epoch, fraction }),
+        ("SB".into(), StrategyConfig::SelectiveBackprop { beta: 1.0 }),
+        ("KAKURENBO".into(), StrategyConfig::kakurenbo(fraction)),
+    ]
+}

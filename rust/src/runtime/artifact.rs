@@ -1,0 +1,183 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes artifacts/manifest.json + *.hlo.txt) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Std-dev for normal init; 0.0 means zeros (biases).
+    pub init_std: f64,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub family: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub label_shape: Vec<usize>,
+    pub classes: usize,
+    pub embed_dim: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamMeta>,
+    /// kind ("train_step" | "fwd_stats" | "fwd_embed") -> file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl VariantMeta {
+    /// Flattened input size per sample.
+    pub fn sample_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Labels per sample (1 for classification, H*W for segmentation).
+    pub fn label_len(&self) -> usize {
+        self.label_shape.iter().product()
+    }
+
+    fn from_json(name: &str, v: &Json) -> anyhow::Result<Self> {
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not array"))?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamMeta> {
+                Ok(ParamMeta {
+                    name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: p.req("shape")?.usize_list()?,
+                    init_std: p.req("init_std")?.as_f64().unwrap_or(0.0),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not object"))?
+            .iter()
+            .map(|(k, f)| (k.clone(), f.as_str().unwrap_or_default().to_string()))
+            .collect();
+        let meta = VariantMeta {
+            name: name.to_string(),
+            family: v.req("family")?.as_str().unwrap_or_default().to_string(),
+            batch: v.req("batch")?.as_usize().unwrap_or(0),
+            input_shape: v.req("input_shape")?.usize_list()?,
+            label_shape: v.req("label_shape")?.usize_list()?,
+            classes: v.req("classes")?.as_usize().unwrap_or(0),
+            embed_dim: v.req("embed_dim")?.as_usize().unwrap_or(0),
+            param_count: v.req("param_count")?.as_usize().unwrap_or(0),
+            params,
+            artifacts,
+        };
+        anyhow::ensure!(meta.batch > 0, "{name}: zero batch");
+        anyhow::ensure!(
+            meta.param_count == meta.params.iter().map(ParamMeta::numel).sum::<usize>(),
+            "{name}: param_count mismatch"
+        );
+        anyhow::ensure!(
+            meta.artifacts.contains_key("train_step") && meta.artifacts.contains_key("fwd_stats"),
+            "{name}: missing core artifacts"
+        );
+        Ok(meta)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub models: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate the referenced HLO files exist.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let v = parse_file(&dir.join("manifest.json"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not object"))?
+        {
+            let meta = VariantMeta::from_json(name, m)?;
+            for f in meta.artifacts.values() {
+                anyhow::ensure!(dir.join(f).exists(), "missing artifact file {f}");
+            }
+            models.insert(name.clone(), meta);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            fingerprint: v
+                .req("fingerprint")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            models,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&VariantMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model variant {name:?}; available: {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, meta: &VariantMeta, kind: &str) -> anyhow::Result<PathBuf> {
+        let f = meta
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("{}: no {kind} artifact", meta.name))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+/// Default artifacts directory: $KAKURENBO_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("KAKURENBO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_present() {
+        // `make artifacts` must have run for this to exercise fully; the
+        // test is skipped (not failed) when artifacts are absent so pure
+        // cargo-test environments stay green.
+        let Some(m) = repo_artifacts() else { return };
+        assert!(!m.models.is_empty());
+        let v = m.variant("cnn_c32_b64").unwrap();
+        assert_eq!(v.batch, 64);
+        assert_eq!(v.sample_dim(), 8 * 8 * 3);
+        assert_eq!(v.label_len(), 1);
+        assert!(v.embed_dim > 0);
+        assert!(m.artifact_path(v, "train_step").unwrap().exists());
+    }
+
+    #[test]
+    fn rejects_bad_variant_lookup() {
+        let Some(m) = repo_artifacts() else { return };
+        assert!(m.variant("nonexistent").is_err());
+    }
+}

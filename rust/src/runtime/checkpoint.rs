@@ -1,0 +1,91 @@
+//! Checkpointing: save/restore model parameters as a directory of `.npy`
+//! files plus a JSON index — inspectable from Python (`np.load`) and
+//! stable across runs.
+//!
+//! Layout:   <dir>/checkpoint.json      (variant, epoch, param index)
+//!           <dir>/p000_fc1_w.npy ...   (one array per parameter leaf)
+
+use std::path::Path;
+
+use crate::runtime::executor::ModelExecutor;
+use crate::util::json::{parse_file, Json};
+use crate::util::npy;
+
+/// Save the executor's parameters at `dir` (created if needed).
+pub fn save(exec: &ModelExecutor, dir: &Path, epoch: usize) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let params = exec.export_params()?;
+    let mut index = Vec::new();
+    for (i, ((name, data), meta)) in params.iter().zip(&exec.meta.params).enumerate() {
+        let fname = format!("p{:03}_{}.npy", i, name.replace('/', "_"));
+        npy::write_f32(&dir.join(&fname), data, &meta.shape)?;
+        index.push(crate::jobj![("name", name.as_str()), ("file", fname.as_str())]);
+    }
+    let manifest = crate::jobj![
+        ("variant", exec.meta.name.as_str()),
+        ("epoch", epoch),
+        ("param_count", exec.meta.param_count),
+        ("params", Json::Arr(index)),
+    ];
+    std::fs::write(dir.join("checkpoint.json"), manifest.to_pretty())?;
+    Ok(())
+}
+
+/// Load a checkpoint into the executor.  The checkpoint's variant must
+/// match (same parameter names/shapes).  Returns the saved epoch.
+pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
+    let m = parse_file(&dir.join("checkpoint.json"))?;
+    let variant = m.req("variant")?.as_str().unwrap_or_default();
+    anyhow::ensure!(
+        variant == exec.meta.name,
+        "checkpoint is for variant {variant:?}, executor is {:?}",
+        exec.meta.name
+    );
+    let mut source = Vec::new();
+    for p in m.req("params")?.as_arr().unwrap_or(&[]) {
+        let name = p.req("name")?.as_str().unwrap_or_default().to_string();
+        let file = p.req("file")?.as_str().unwrap_or_default();
+        let (data, _shape) = npy::read_f32(&dir.join(file))?;
+        source.push((name, data));
+    }
+    let imported = exec.import_params(&source)?;
+    anyhow::ensure!(
+        imported == exec.meta.params.len(),
+        "checkpoint restored only {imported}/{} leaves",
+        exec.meta.params.len()
+    );
+    Ok(m.req("epoch")?.as_usize().unwrap_or(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, XlaRuntime};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
+        let dir = std::env::temp_dir().join(format!("kakurenbo_ckpt_{}", std::process::id()));
+        let mut a = ModelExecutor::new(&rt, "mlp_c10_b64", 11).unwrap();
+        // perturb params so we're not just checking the seeded init
+        let x = vec![0.3f32; 64 * 64];
+        let y = vec![1i32; 64];
+        let sw = vec![1.0f32; 64];
+        a.train_step(&x, &y, &sw, 0.1).unwrap();
+        save(&a, &dir, 7).unwrap();
+
+        let mut b = ModelExecutor::new(&rt, "mlp_c10_b64", 999).unwrap();
+        let epoch = load(&mut b, &dir).unwrap();
+        assert_eq!(epoch, 7);
+        let pa = a.export_params().unwrap();
+        let pb = b.export_params().unwrap();
+        for ((n1, d1), (n2, d2)) in pa.iter().zip(&pb) {
+            assert_eq!(n1, n2);
+            assert_eq!(d1, d2);
+        }
+        // wrong variant rejected
+        let mut c = ModelExecutor::new(&rt, "mlp_c100_b64", 1).unwrap();
+        assert!(load(&mut c, &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,88 @@
+//! PJRT client wrapper: loads HLO-text artifacts and compiles them once.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs: HLO *text* ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile`.  Compiled executables are cached per artifact path so
+//! repeated `ModelExecutor` constructions (benches, multi-run sweeps)
+//! don't pay XLA compilation twice.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::artifact::Manifest;
+
+pub struct XlaRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Per-variant calibrated cost models (calibration is noisy on a busy
+    /// host; one measurement per variant keeps comparisons consistent).
+    cost_cache: Mutex<HashMap<String, crate::coordinator::costmodel::CostModel>>,
+}
+
+impl XlaRuntime {
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        crate::info!(
+            "PJRT client up: platform={} devices={} ({} artifact variants)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.len()
+        );
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            cost_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile one HLO-text artifact (cached).
+    pub fn compile(&self, path: &Path) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let t = crate::util::timer::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?,
+        );
+        crate::debug!("compiled {path:?} in {:.2}s", t.elapsed_s());
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Calibrated cost model for a variant (cached across trainers).
+    pub fn cost_model(
+        &self,
+        exec: &mut crate::runtime::executor::ModelExecutor,
+    ) -> anyhow::Result<crate::coordinator::costmodel::CostModel> {
+        let key = exec.meta.name.clone();
+        if let Some(m) = self.cost_cache.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        let m = crate::coordinator::costmodel::CostModel::calibrate(exec, 8)?;
+        self.cost_cache.lock().unwrap().insert(key, m.clone());
+        Ok(m)
+    }
+
+    /// Compile a variant's artifact by kind.
+    pub fn compile_kind(
+        &self,
+        variant: &str,
+        kind: &str,
+    ) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        let meta = self.manifest.variant(variant)?;
+        let path = self.manifest.artifact_path(meta, kind)?;
+        self.compile(&path)
+    }
+}

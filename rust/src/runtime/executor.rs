@@ -1,0 +1,289 @@
+//! ModelExecutor: owns one model variant's parameters + momentum and runs
+//! the AOT-compiled train/eval steps on the PJRT client.
+//!
+//! Calling convention (must match python/compile/model.py):
+//!   train_step(params.., vel.., x, y, sw, lr, mu)
+//!       -> tuple(params'.., vel'.., loss[B], correct[B], conf[B])
+//!   fwd_stats(params.., x, y) -> tuple(loss, correct, conf)
+//!   fwd_embed(params.., x, y) -> tuple(loss, correct, conf, emb, probs)
+//!
+//! Parameters are kept as XLA literals and threaded output->input across
+//! steps; the per-step host traffic is the batch upload plus the 3 stat
+//! vectors (exactly what KAKURENBO's selector consumes).
+
+use std::sync::Arc;
+
+use crate::runtime::artifact::VariantMeta;
+use crate::runtime::client::XlaRuntime;
+use crate::util::rng::Rng;
+
+/// Per-batch statistics returned by every step (paper Fig. 1 "D: update
+/// loss and prediction info").
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    pub loss: Vec<f32>,
+    pub correct: Vec<f32>,
+    pub conf: Vec<f32>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EmbedStats {
+    pub stats: BatchStats,
+    /// [B, embed_dim] row-major penultimate features.
+    pub emb: Vec<f32>,
+    /// [B, classes] row-major softmax probabilities.
+    pub probs: Vec<f32>,
+}
+
+pub struct ModelExecutor {
+    pub meta: VariantMeta,
+    train_exe: Arc<xla::PjRtLoadedExecutable>,
+    fwd_exe: Arc<xla::PjRtLoadedExecutable>,
+    embed_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    params: Vec<xla::Literal>,
+    vel: Vec<xla::Literal>,
+    /// SGD momentum coefficient (mu).
+    pub momentum: f32,
+    /// Cumulative executed train steps (diagnostics).
+    pub steps: u64,
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("literal reshape {dims:?}: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("literal reshape {dims:?}: {e:?}"))
+}
+
+impl ModelExecutor {
+    pub fn new(rt: &XlaRuntime, variant: &str, seed: u64) -> anyhow::Result<Self> {
+        let meta = rt.manifest.variant(variant)?.clone();
+        let train_exe = rt.compile_kind(variant, "train_step")?;
+        let fwd_exe = rt.compile_kind(variant, "fwd_stats")?;
+        let embed_exe = if meta.artifacts.contains_key("fwd_embed") {
+            Some(rt.compile_kind(variant, "fwd_embed")?)
+        } else {
+            None
+        };
+        let mut ex = ModelExecutor {
+            meta,
+            train_exe,
+            fwd_exe,
+            embed_exe,
+            params: vec![],
+            vel: vec![],
+            momentum: 0.9,
+            steps: 0,
+        };
+        ex.reset_params(seed)?;
+        Ok(ex)
+    }
+
+    /// (Re-)initialize parameters: N(0, init_std) weights, zero biases,
+    /// zero momentum.  Deterministic in `seed` (used by FORGET's restart
+    /// and the seed-robustness bench, Table 9).
+    pub fn reset_params(&mut self, seed: u64) -> anyhow::Result<()> {
+        let mut rng = Rng::new(seed ^ 0x7061_7261);
+        self.params = self
+            .meta
+            .params
+            .iter()
+            .map(|p| {
+                let data: Vec<f32> = if p.init_std == 0.0 {
+                    vec![0.0; p.numel()]
+                } else {
+                    (0..p.numel())
+                        .map(|_| rng.normal_f32(0.0, p.init_std as f32))
+                        .collect()
+                };
+                lit_f32(&data, &p.shape)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        self.vel = self
+            .meta
+            .params
+            .iter()
+            .map(|p| lit_f32(&vec![0.0; p.numel()], &p.shape))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        self.steps = 0;
+        Ok(())
+    }
+
+    fn x_dims(&self) -> Vec<usize> {
+        let mut d = vec![self.meta.batch];
+        d.extend_from_slice(&self.meta.input_shape);
+        d
+    }
+
+    fn y_dims(&self) -> Vec<usize> {
+        let mut d = vec![self.meta.batch];
+        d.extend_from_slice(&self.meta.label_shape);
+        d
+    }
+
+    /// One SGD step on a full batch.  `x`, `y`, `sw` must match the
+    /// artifact batch size (pad via `BatchAssembler`).
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        let b = self.meta.batch;
+        anyhow::ensure!(sw.len() == b, "sw len {} != batch {b}", sw.len());
+        let n = self.params.len();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 * n + 5);
+        args.extend(self.params.iter());
+        args.extend(self.vel.iter());
+        let xl = lit_f32(x, &self.x_dims())?;
+        let yl = lit_i32(y, &self.y_dims())?;
+        let swl = lit_f32(sw, &[b])?;
+        let lrl = xla::Literal::from(lr);
+        let mul = xla::Literal::from(self.momentum);
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&swl);
+        args.push(&lrl);
+        args.push(&mul);
+
+        let result = self
+            .train_exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("train_step execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("train_step download: {e:?}"))?;
+        let mut parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("train_step untuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == 2 * n + 3,
+            "train_step returned {} outputs, expected {}",
+            parts.len(),
+            2 * n + 3
+        );
+        let conf = parts.pop().unwrap();
+        let correct = parts.pop().unwrap();
+        let loss = parts.pop().unwrap();
+        self.vel = parts.split_off(n);
+        self.params = parts;
+        self.steps += 1;
+        Ok(BatchStats {
+            loss: loss.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            correct: correct.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            conf: conf.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// Forward-only stats (hidden-list refresh, eval, SB selection pass).
+    pub fn fwd_stats(&self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        let n = self.params.len();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(n + 2);
+        args.extend(self.params.iter());
+        let xl = lit_f32(x, &self.x_dims())?;
+        let yl = lit_i32(y, &self.y_dims())?;
+        args.push(&xl);
+        args.push(&yl);
+        let result = self
+            .fwd_exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("fwd_stats execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fwd_stats download: {e:?}"))?;
+        let (loss, correct, conf) = result
+            .to_tuple3()
+            .map_err(|e| anyhow::anyhow!("fwd_stats untuple: {e:?}"))?;
+        Ok(BatchStats {
+            loss: loss.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            correct: correct.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            conf: conf.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// Forward pass with embeddings + probs (GradMatch selection).
+    pub fn fwd_embed(&self, x: &[f32], y: &[i32]) -> anyhow::Result<EmbedStats> {
+        let exe = self
+            .embed_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{} has no fwd_embed artifact", self.meta.name))?;
+        let n = self.params.len();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(n + 2);
+        args.extend(self.params.iter());
+        let xl = lit_f32(x, &self.x_dims())?;
+        let yl = lit_i32(y, &self.y_dims())?;
+        args.push(&xl);
+        args.push(&yl);
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("fwd_embed execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fwd_embed download: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("fwd_embed untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 5, "fwd_embed returned {} outputs", parts.len());
+        let as_vec = |l: &xla::Literal| -> anyhow::Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+        };
+        Ok(EmbedStats {
+            stats: BatchStats {
+                loss: as_vec(&parts[0])?,
+                correct: as_vec(&parts[1])?,
+                conf: as_vec(&parts[2])?,
+            },
+            emb: as_vec(&parts[3])?,
+            probs: as_vec(&parts[4])?,
+        })
+    }
+
+    /// Export parameters by name (transfer learning / checkpoints).
+    pub fn export_params(&self) -> anyhow::Result<Vec<(String, Vec<f32>)>> {
+        self.meta
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|(m, l)| {
+                Ok((
+                    m.name.clone(),
+                    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                ))
+            })
+            .collect()
+    }
+
+    /// Import matching parameters by (name, shape); others keep their
+    /// current values.  Returns how many leaves were imported.  Used by the
+    /// transfer-learning pipeline: trunk transfers, head re-initializes.
+    pub fn import_params(&mut self, source: &[(String, Vec<f32>)]) -> anyhow::Result<usize> {
+        let mut imported = 0;
+        for (i, m) in self.meta.params.iter().enumerate() {
+            if let Some((_, data)) = source
+                .iter()
+                .find(|(n, d)| n == &m.name && d.len() == m.numel())
+            {
+                self.params[i] = lit_f32(data, &m.shape)?;
+                imported += 1;
+            }
+        }
+        Ok(imported)
+    }
+
+    /// L2 norm of all parameters (drift diagnostics in tests).
+    pub fn param_norm(&self) -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for l in &self.params {
+            for v in l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))? {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+        Ok(acc.sqrt())
+    }
+}

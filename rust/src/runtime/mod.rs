@@ -1,0 +1,11 @@
+//! Runtime: PJRT CPU client + AOT artifact loading + model execution.
+//! Python never runs here — artifacts are produced once by `make artifacts`.
+
+pub mod artifact;
+pub mod checkpoint;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{default_artifacts_dir, Manifest, VariantMeta};
+pub use client::XlaRuntime;
+pub use executor::{BatchStats, EmbedStats, ModelExecutor};

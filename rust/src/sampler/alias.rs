@@ -1,0 +1,137 @@
+//! Walker alias method: O(N) construction, O(1) weighted draws with
+//! replacement.  This is ISWR's sampling engine — the paper draws every
+//! sample of every epoch proportionally to its (lagging) loss, so draw
+//! cost matters at N = millions.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,   // acceptance probability per bucket
+    alias: Vec<u32>,  // fallback index per bucket
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    /// All-zero weight vectors degrade to uniform.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        let uniform = total <= 0.0;
+        let scale = if uniform { 1.0 } else { n as f64 / total };
+
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        // scaled weights; "small" stack has p < 1, "large" has p >= 1
+        let mut p: Vec<f64> = weights
+            .iter()
+            .map(|&w| if uniform { 1.0 } else { w * scale })
+            .collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &pi) in p.iter().enumerate() {
+            if pi < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = *large.last().unwrap(); // peek: l may stay large
+            prob[s as usize] = p[s as usize];
+            alias[s as usize] = l;
+            p[l as usize] = (p[l as usize] + p[s as usize]) - 1.0;
+            if p[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// One O(1) draw.
+    #[inline]
+    pub fn draw(&self, rng: &mut Rng) -> u32 {
+        let i = rng.below(self.len());
+        if rng.f64() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// k draws with replacement.
+    pub fn draw_many(&self, k: usize, rng: &mut Rng) -> Vec<u32> {
+        (0..k).map(|_| self.draw(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(weights: &[f64], draws: usize, seed: u64) -> Vec<f64> {
+        let t = AliasTable::new(weights);
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[t.draw(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn matches_target_distribution() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let f = empirical(&w, 100_000, 1);
+        for (i, &wi) in w.iter().enumerate() {
+            let target = wi / 10.0;
+            assert!((f[i] - target).abs() < 0.01, "i={i} f={} target={target}", f[i]);
+        }
+    }
+
+    #[test]
+    fn zero_weight_entries_never_drawn() {
+        let w = [0.0, 5.0, 0.0, 5.0];
+        let f = empirical(&w, 20_000, 2);
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[2], 0.0);
+    }
+
+    #[test]
+    fn all_zero_degrades_to_uniform() {
+        let f = empirical(&[0.0, 0.0, 0.0], 30_000, 3);
+        for &fi in &f {
+            assert!((fi - 1.0 / 3.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let t = AliasTable::new(&[7.0]);
+        let mut rng = Rng::new(4);
+        assert_eq!(t.draw(&mut rng), 0);
+    }
+
+    #[test]
+    fn heavy_skew() {
+        let mut w = vec![1e-6; 100];
+        w[42] = 1e6;
+        let f = empirical(&w, 10_000, 5);
+        assert!(f[42] > 0.99);
+    }
+}

@@ -1,0 +1,158 @@
+//! Fenwick (binary indexed) tree weighted sampler.
+//!
+//! O(log N) draw + O(log N) single-weight update, which the alias table
+//! cannot do (it needs a full O(N) rebuild per change).  Used where
+//! importance weights mutate *during* an epoch: Selective-Backprop's
+//! loss-CDF selection and the ISWR variant that refreshes weights with
+//! every batch's fresh losses (Katharopoulos & Fleuret keep a live
+//! importance store; Mercury [22] does the same per shard).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FenwickSampler {
+    tree: Vec<f64>, // 1-based partial sums
+    weights: Vec<f64>,
+}
+
+impl FenwickSampler {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let mut s = FenwickSampler { tree: vec![0.0; n + 1], weights: vec![0.0; n] };
+        for (i, &w) in weights.iter().enumerate() {
+            s.set(i, w);
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.prefix_sum(self.len())
+    }
+
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Sum of weights[0..i].
+    fn prefix_sum(&self, i: usize) -> f64 {
+        let mut i = i;
+        let mut s = 0.0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Set weight i to w (must be >= 0).
+    pub fn set(&mut self, i: usize, w: f64) {
+        assert!(w >= 0.0 && w.is_finite(), "weight {w}");
+        let delta = w - self.weights[i];
+        self.weights[i] = w;
+        let mut j = i + 1;
+        while j < self.tree.len() {
+            self.tree[j] += delta;
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    /// Draw an index with probability proportional to its weight.
+    /// Returns None when total weight is zero.
+    pub fn draw(&self, rng: &mut Rng) -> Option<u32> {
+        let total = self.total();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut t = rng.f64() * total;
+        // descend the implicit tree
+        let mut pos = 0usize;
+        let mut mask = self.tree.len().next_power_of_two() >> 1;
+        while mask > 0 {
+            let next = pos + mask;
+            if next < self.tree.len() && self.tree[next] < t {
+                t -= self.tree[next];
+                pos = next;
+            }
+            mask >>= 1;
+        }
+        // pos is now the largest index with prefix_sum(pos) < t
+        Some((pos.min(self.len() - 1)) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_sums_match_naive() {
+        let w = [1.0, 0.5, 2.0, 0.0, 3.0];
+        let s = FenwickSampler::new(&w);
+        let mut acc = 0.0;
+        for i in 0..=w.len() {
+            assert!((s.prefix_sum(i) - acc).abs() < 1e-12);
+            if i < w.len() {
+                acc += w[i];
+            }
+        }
+    }
+
+    #[test]
+    fn draws_match_distribution() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let s = FenwickSampler::new(&w);
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 4];
+        for _ in 0..100_000 {
+            counts[s.draw(&mut rng).unwrap() as usize] += 1;
+        }
+        for (i, &wi) in w.iter().enumerate() {
+            let f = counts[i] as f64 / 100_000.0;
+            assert!((f - wi / 10.0).abs() < 0.01, "i={i} f={f}");
+        }
+    }
+
+    #[test]
+    fn online_updates() {
+        let mut s = FenwickSampler::new(&[1.0, 1.0, 1.0]);
+        s.set(0, 0.0);
+        s.set(2, 9.0);
+        let mut rng = Rng::new(2);
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[s.draw(&mut rng).unwrap() as usize] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let f2 = counts[2] as f64 / 20_000.0;
+        assert!((f2 - 0.9).abs() < 0.01, "f2={f2}");
+    }
+
+    #[test]
+    fn zero_total_returns_none() {
+        let s = FenwickSampler::new(&[0.0, 0.0]);
+        let mut rng = Rng::new(3);
+        assert!(s.draw(&mut rng).is_none());
+    }
+
+    #[test]
+    fn non_power_of_two_sizes() {
+        for n in [1usize, 2, 3, 5, 17, 100, 1000] {
+            let w: Vec<f64> = (0..n).map(|i| (i % 7) as f64 + 0.1).collect();
+            let s = FenwickSampler::new(&w);
+            let mut rng = Rng::new(n as u64);
+            for _ in 0..200 {
+                let i = s.draw(&mut rng).unwrap() as usize;
+                assert!(i < n);
+                assert!(w[i] > 0.0);
+            }
+        }
+    }
+}

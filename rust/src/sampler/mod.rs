@@ -1,0 +1,49 @@
+//! Sampling primitives used by the training strategies.
+//!
+//! * `uniform` — without-replacement epoch permutation (baseline, KAKURENBO).
+//! * `alias`   — Walker alias table: O(N) build, O(1) per draw; ISWR's
+//!   loss-proportional with-replacement sampling (paper [11]).
+//! * `fenwick` — Fenwick-tree weighted sampler with O(log N) draws *and*
+//!   O(log N) online weight updates; used when importance weights change
+//!   within an epoch (Selective-Backprop style selection).
+
+pub mod alias;
+pub mod fenwick;
+
+use crate::util::rng::Rng;
+
+/// A shuffled epoch permutation of 0..n (uniform without replacement).
+pub fn epoch_permutation(n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+/// A shuffled copy of an index list.
+pub fn shuffled(indices: &[u32], rng: &mut Rng) -> Vec<u32> {
+    let mut v = indices.to_vec();
+    rng.shuffle(&mut v);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_is_complete() {
+        let mut rng = Rng::new(1);
+        let p = epoch_permutation(100, &mut rng);
+        let mut s = p.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn permutations_differ_across_draws() {
+        let mut rng = Rng::new(1);
+        let a = epoch_permutation(50, &mut rng);
+        let b = epoch_permutation(50, &mut rng);
+        assert_ne!(a, b);
+    }
+}

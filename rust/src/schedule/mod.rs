@@ -1,0 +1,100 @@
+//! Base learning-rate schedulers mirroring the paper's Appendix B
+//! hyper-parameter tables: step decay (ResNet-50 (A)), cosine annealing
+//! (ResNet-50 / (B), DeiT), exponential decay (EfficientNet-b3), all
+//! wrapped in the Goyal et al. linear warmup used everywhere in the paper.
+//!
+//! KAKURENBO's 1/(1-F_e) factor (hiding/lr.rs) multiplies *on top of*
+//! whatever these produce — it is scheduler-independent by construction.
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    /// Constant base LR.
+    Constant,
+    /// Multiply by `rate` at each epoch milestone ("step" in App. B).
+    Step { milestones: Vec<usize>, rate: f64 },
+    /// Cosine annealing to ~0 over `total` epochs.
+    Cosine { total: usize },
+    /// Decay by `rate` every `every` epochs (EfficientNet: 0.9 every 2).
+    ExpEvery { every: usize, rate: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct LrConfig {
+    pub base_lr: f64,
+    pub schedule: LrSchedule,
+    /// Linear warmup from 0 over this many epochs (Goyal et al. [34]).
+    pub warmup_epochs: usize,
+}
+
+impl LrConfig {
+    pub fn constant(base_lr: f64) -> Self {
+        LrConfig { base_lr, schedule: LrSchedule::Constant, warmup_epochs: 0 }
+    }
+
+    /// Base learning rate for an epoch, before KAKURENBO's adjustment.
+    pub fn at(&self, epoch: usize) -> f64 {
+        let warm = if self.warmup_epochs > 0 && epoch < self.warmup_epochs {
+            (epoch + 1) as f64 / self.warmup_epochs as f64
+        } else {
+            1.0
+        };
+        let sched = match &self.schedule {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Step { milestones, rate } => {
+                let k = milestones.iter().filter(|&&m| epoch >= m).count();
+                rate.powi(k as i32)
+            }
+            LrSchedule::Cosine { total } => {
+                let t = (epoch as f64 / (*total).max(1) as f64).min(1.0);
+                0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::ExpEvery { every, rate } => rate.powi((epoch / (*every).max(1)) as i32),
+        };
+        self.base_lr * warm * sched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let c = LrConfig { base_lr: 1.0, schedule: LrSchedule::Constant, warmup_epochs: 5 };
+        assert!((c.at(0) - 0.2).abs() < 1e-12);
+        assert!((c.at(4) - 1.0).abs() < 1e-12);
+        assert!((c.at(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_decays_at_milestones() {
+        let c = LrConfig {
+            base_lr: 0.1,
+            schedule: LrSchedule::Step { milestones: vec![30, 60, 80], rate: 0.1 },
+            warmup_epochs: 0,
+        };
+        assert!((c.at(29) - 0.1).abs() < 1e-12);
+        assert!((c.at(30) - 0.01).abs() < 1e-12);
+        assert!((c.at(85) - 0.0001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let c = LrConfig { base_lr: 1.0, schedule: LrSchedule::Cosine { total: 100 }, warmup_epochs: 0 };
+        assert!((c.at(0) - 1.0).abs() < 1e-9);
+        assert!(c.at(99) < 0.01);
+        assert!(c.at(50) < c.at(25));
+    }
+
+    #[test]
+    fn exp_every() {
+        let c = LrConfig {
+            base_lr: 0.016,
+            schedule: LrSchedule::ExpEvery { every: 2, rate: 0.9 },
+            warmup_epochs: 0,
+        };
+        assert!((c.at(0) - 0.016).abs() < 1e-12);
+        assert!((c.at(2) - 0.016 * 0.9).abs() < 1e-12);
+        assert!((c.at(5) - 0.016 * 0.81).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Per-sample training state: the "lagging" loss / PA / PC store.
+//!
+//! Paper §3.4: per-sample statistics are recorded when the sample passes
+//! through the training forward pass (so they lag the final model by up to
+//! one epoch), and only the hidden list is refreshed with an extra forward
+//! pass at epoch end.  This store is the single source of truth that the
+//! hiding selector, the baselines (ISWR / SB / FORGET), and all the
+//! per-class diagnostics (Figs. 6-8) read from.
+
+use crate::data::Dataset;
+
+#[derive(Clone)]
+pub struct SampleState {
+    pub n: usize,
+    /// Lagging per-sample loss (sorting key for hiding / ISWR weights).
+    pub loss: Vec<f32>,
+    /// Prediction accuracy (PA): was the sample predicted correctly the
+    /// last time we saw it?
+    pub correct: Vec<bool>,
+    /// Prediction confidence (PC): max softmax prob at last evaluation.
+    pub conf: Vec<f32>,
+    /// Hidden in the current epoch.
+    pub hidden: Vec<bool>,
+    /// Hidden in the previous epoch (for the "hidden again" diagnostic,
+    /// Fig. 8).
+    pub hidden_prev: Vec<bool>,
+    /// FORGET baseline: number of correct->incorrect transitions observed.
+    pub forget_events: Vec<u32>,
+    /// Whether the sample has ever been predicted correctly (samples never
+    /// learned count as forgettable in [13]).
+    pub ever_correct: Vec<bool>,
+    /// Epochs since stats were last updated (staleness diagnostics).
+    pub last_update_epoch: Vec<u32>,
+    /// How many times the sample has been hidden over the run (Figs. 6/7).
+    pub hide_count: Vec<u32>,
+}
+
+impl SampleState {
+    pub fn new(n: usize) -> Self {
+        SampleState {
+            n,
+            // Optimistic init: +inf loss means "never seen, definitely keep"
+            // — every sample must be trained on at least once before it can
+            // be hidden (matches the paper: hiding starts from epoch 1).
+            loss: vec![f32::INFINITY; n],
+            correct: vec![false; n],
+            conf: vec![0.0; n],
+            hidden: vec![false; n],
+            hidden_prev: vec![false; n],
+            forget_events: vec![0; n],
+            ever_correct: vec![false; n],
+            last_update_epoch: vec![0; n],
+            hide_count: vec![0; n],
+        }
+    }
+
+    /// Record fresh stats for one sample (from a training or refresh
+    /// forward pass).  Tracks forgetting events for the FORGET baseline.
+    #[inline]
+    pub fn record(&mut self, i: usize, loss: f32, correct: bool, conf: f32, epoch: u32) {
+        if self.correct[i] && !correct {
+            self.forget_events[i] += 1;
+        }
+        if correct {
+            self.ever_correct[i] = true;
+        }
+        self.loss[i] = loss;
+        self.correct[i] = correct;
+        self.conf[i] = conf;
+        self.last_update_epoch[i] = epoch;
+    }
+
+    /// Move to the next epoch's hidden bookkeeping: `hidden` becomes
+    /// `hidden_prev`, and `hidden` is cleared for the selector to refill.
+    pub fn roll_epoch(&mut self) {
+        std::mem::swap(&mut self.hidden, &mut self.hidden_prev);
+        self.hidden.iter_mut().for_each(|h| *h = false);
+    }
+
+    /// Mark the hidden set for this epoch (after selection).
+    pub fn set_hidden(&mut self, hidden_indices: &[u32]) {
+        for &i in hidden_indices {
+            self.hidden[i as usize] = true;
+            self.hide_count[i as usize] += 1;
+        }
+    }
+
+    pub fn hidden_count(&self) -> usize {
+        self.hidden.iter().filter(|&&h| h).count()
+    }
+
+    /// Samples hidden both this epoch and the previous one (Fig. 8).
+    pub fn hidden_again_count(&self) -> usize {
+        self.hidden
+            .iter()
+            .zip(&self.hidden_prev)
+            .filter(|(&a, &b)| a && b)
+            .count()
+    }
+
+    /// Per-class hidden counts (Figs. 6/7).
+    pub fn hidden_per_class(&self, data: &Dataset) -> Vec<usize> {
+        let mut counts = vec![0usize; data.classes];
+        for i in 0..self.n {
+            if self.hidden[i] {
+                counts[data.label(i) as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// True where the sample was correctly predicted with confidence >= tau
+    /// at its last evaluation — the paper's move-back predicate (§3.1).
+    #[inline]
+    pub fn high_confidence_correct(&self, i: usize, tau: f32) -> bool {
+        self.correct[i] && self.conf[i] >= tau
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+
+    #[test]
+    fn optimistic_init_keeps_unseen_samples() {
+        let s = SampleState::new(4);
+        assert!(s.loss.iter().all(|l| l.is_infinite()));
+        assert!(!s.high_confidence_correct(0, 0.7));
+    }
+
+    #[test]
+    fn record_tracks_forgetting() {
+        let mut s = SampleState::new(2);
+        s.record(0, 1.0, true, 0.9, 0);
+        assert_eq!(s.forget_events[0], 0);
+        s.record(0, 2.0, false, 0.4, 1); // correct -> incorrect: forgotten
+        assert_eq!(s.forget_events[0], 1);
+        s.record(0, 0.5, true, 0.8, 2);
+        s.record(0, 0.4, true, 0.9, 3); // stays correct: no event
+        assert_eq!(s.forget_events[0], 1);
+        assert!(s.ever_correct[0]);
+        assert!(!s.ever_correct[1]);
+    }
+
+    #[test]
+    fn roll_epoch_moves_hidden() {
+        let mut s = SampleState::new(3);
+        s.set_hidden(&[1]);
+        assert_eq!(s.hidden_count(), 1);
+        s.roll_epoch();
+        assert_eq!(s.hidden_count(), 0);
+        assert!(s.hidden_prev[1]);
+        s.set_hidden(&[1, 2]);
+        assert_eq!(s.hidden_again_count(), 1); // only idx 1 repeats
+        assert_eq!(s.hide_count[1], 2);
+    }
+
+    #[test]
+    fn move_back_predicate() {
+        let mut s = SampleState::new(1);
+        s.record(0, 0.1, true, 0.69, 0);
+        assert!(!s.high_confidence_correct(0, 0.7));
+        s.record(0, 0.1, true, 0.71, 1);
+        assert!(s.high_confidence_correct(0, 0.7));
+        s.record(0, 0.1, false, 0.99, 2);
+        assert!(!s.high_confidence_correct(0, 0.7));
+    }
+
+    #[test]
+    fn per_class_hidden_counts() {
+        let tv = gauss_mixture(
+            &GaussMixtureCfg { n_train: 30, n_val: 5, dim: 4, classes: 3, ..Default::default() },
+            1,
+        );
+        let mut s = SampleState::new(30);
+        s.set_hidden(&[0, 1, 2, 3, 4]);
+        let counts = s.hidden_per_class(&tv.train);
+        assert_eq!(counts.iter().sum::<usize>(), 5);
+    }
+}

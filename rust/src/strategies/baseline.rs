@@ -1,0 +1,41 @@
+//! Baseline: uniform sampling without replacement over the full dataset —
+//! the training regime every other strategy is judged against.
+
+use super::{EpochPlan, PlanCtx, Strategy};
+use crate::sampler::epoch_permutation;
+
+pub struct Baseline;
+
+impl Strategy for Baseline {
+    fn name(&self) -> String {
+        "baseline".into()
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        Ok(EpochPlan::plain(epoch_permutation(ctx.data.n, ctx.rng)))
+    }
+
+    fn refresh_hidden_stats(&self) -> bool {
+        false // nothing hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::testutil::*;
+
+    #[test]
+    fn full_permutation_every_epoch() {
+        let tv = tiny_data(32);
+        let mut state = graded_state(32);
+        let mut s = Baseline;
+        let plan = run_plan(&mut s, 0, &tv.train, &mut state);
+        assert_eq!(plan.order.len(), 32);
+        assert!(plan.hidden.is_empty());
+        assert_eq!(plan.lr_scale, 1.0);
+        let mut sorted = plan.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..32).collect::<Vec<u32>>());
+    }
+}

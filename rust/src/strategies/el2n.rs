@@ -1,0 +1,134 @@
+//! EL2N pruning (Paul et al. [15], paper Table 1 / Appendix E):
+//! score each sample by the L2 norm of its error vector ||p - onehot(y)||
+//! early in training (a cheap proxy for the gradient norm), prune the
+//! lowest-scoring fraction permanently, and keep training.
+//!
+//! Unlike FORGET, EL2N does not need a restart — its selling point is
+//! scoring "early in training" — but the optional `restart` flag
+//! reproduces the train-from-scratch protocol of the original paper.
+
+use super::{EpochPlan, PlanCtx, Strategy};
+use crate::data::batch::BatchAssembler;
+use crate::sampler::shuffled;
+
+pub struct El2n {
+    /// Epoch at which scores are computed and pruning happens.
+    pub score_epoch: usize,
+    /// Fraction of the dataset to prune (lowest EL2N scores).
+    pub fraction: f64,
+    /// Re-initialize the model after pruning (original protocol).
+    pub restart: bool,
+    kept: Option<Vec<u32>>,
+}
+
+impl El2n {
+    pub fn new(score_epoch: usize, fraction: f64, restart: bool) -> Self {
+        El2n { score_epoch: score_epoch.max(1), fraction, restart, kept: None }
+    }
+
+    /// EL2N score for every sample: ||softmax(z) - onehot(y)||_2 from the
+    /// fwd_embed artifact's probability output.
+    fn scores(&self, ctx: &mut PlanCtx) -> anyhow::Result<Vec<f32>> {
+        let exec = ctx
+            .exec
+            .as_deref_mut()
+            .ok_or_else(|| anyhow::anyhow!("EL2N needs executor access (fwd_embed)"))?;
+        let data = ctx.data;
+        let b = exec.meta.batch;
+        let classes = exec.meta.classes;
+        let mut scores = vec![0.0f32; data.n];
+        let mut asm = BatchAssembler::new(data, b);
+        let all: Vec<u32> = (0..data.n as u32).collect();
+        for chunk in all.chunks(b) {
+            asm.fill(data, chunk, None);
+            let es = exec.fwd_embed(&asm.x, &asm.y)?;
+            for (slot, &sample) in chunk.iter().enumerate() {
+                let label = data.label(sample as usize) as usize;
+                let mut acc = 0.0f32;
+                for c in 0..classes {
+                    let p = es.probs[slot * classes + c];
+                    let t = if c == label { 1.0 } else { 0.0 };
+                    acc += (p - t) * (p - t);
+                }
+                scores[sample as usize] = acc.sqrt();
+            }
+        }
+        Ok(scores)
+    }
+}
+
+impl Strategy for El2n {
+    fn name(&self) -> String {
+        "el2n".into()
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        if ctx.epoch < self.score_epoch {
+            return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(
+                ctx.data.n, ctx.rng,
+            )));
+        }
+        if ctx.epoch == self.score_epoch {
+            let scores = self.scores(ctx)?;
+            let n = ctx.data.n;
+            let k_prune = ((n as f64) * self.fraction).floor() as usize;
+            let pruned = crate::util::stats::argselect_smallest(&scores, k_prune);
+            let mut is_pruned = vec![false; n];
+            for &i in &pruned {
+                is_pruned[i as usize] = true;
+            }
+            let kept: Vec<u32> = (0..n as u32).filter(|&i| !is_pruned[i as usize]).collect();
+            crate::info!(
+                "EL2N: pruned {k_prune} of {n} at epoch {} (restart={})",
+                ctx.epoch,
+                self.restart
+            );
+            self.kept = Some(kept);
+            let mut plan = EpochPlan::plain(shuffled(self.kept.as_ref().unwrap(), ctx.rng));
+            plan.reset_params = self.restart;
+            return Ok(plan);
+        }
+        let kept = self
+            .kept
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("EL2N: score epoch skipped"))?;
+        Ok(EpochPlan::plain(shuffled(kept, ctx.rng)))
+    }
+
+    fn refresh_hidden_stats(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::testutil::*;
+
+    #[test]
+    fn full_epochs_before_scoring() {
+        let tv = tiny_data(30);
+        let mut state = graded_state(30);
+        let mut s = El2n::new(4, 0.3, false);
+        let plan = run_plan(&mut s, 2, &tv.train, &mut state);
+        assert_eq!(plan.order.len(), 30);
+    }
+
+    #[test]
+    fn errors_without_executor_at_score_epoch() {
+        // run_plan passes exec: None — the scoring epoch must surface that
+        let tv = tiny_data(30);
+        let mut state = graded_state(30);
+        let mut s = El2n::new(2, 0.3, false);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut ctx = crate::strategies::PlanCtx {
+            epoch: 2,
+            total_epochs: 10,
+            data: &tv.train,
+            state: &mut state,
+            rng: &mut rng,
+            exec: None,
+        };
+        assert!(s.plan_epoch(&mut ctx).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! FORGET: the paper's online variant of forgetting-event pruning
+//! (Toneva et al. [13], §4 "FORGET" baseline).
+//!
+//! Train on the full dataset for `prune_epoch` epochs while counting
+//! forgetting events (correct -> incorrect transitions, tracked by
+//! `SampleState`).  Then permanently prune the fraction F of *least
+//! forgettable* samples (ordered by ascending forgetting count; never-
+//! correct samples count as most forgettable, as in [13]) and restart
+//! training from scratch on the pruned set.  The reported training time
+//! includes the prologue — which is why FORGET loses wall-clock on short
+//! schedules (Table 2 / §4.2).
+
+use super::{EpochPlan, PlanCtx, Strategy};
+use crate::sampler::shuffled;
+
+pub struct Forget {
+    pub prune_epoch: usize,
+    pub fraction: f64,
+    kept: Option<Vec<u32>>,
+}
+
+impl Forget {
+    pub fn new(prune_epoch: usize, fraction: f64) -> Self {
+        Forget { prune_epoch, fraction, kept: None }
+    }
+
+    /// Ordering key: forgetting events, with never-learned samples treated
+    /// as infinitely forgettable (pruned last), matching [13] footnote 1.
+    fn prune(&self, ctx: &PlanCtx) -> Vec<u32> {
+        let n = ctx.data.n;
+        let k_prune = ((n as f64) * self.fraction).floor() as usize;
+        let keys: Vec<f32> = (0..n)
+            .map(|i| {
+                if !ctx.state.ever_correct[i] {
+                    f32::INFINITY // unlearned: most forgettable, keep
+                } else {
+                    ctx.state.forget_events[i] as f32
+                }
+            })
+            .collect();
+        // prune the k smallest keys (never/least forgotten)
+        let pruned = crate::util::stats::argselect_smallest(&keys, k_prune);
+        let mut is_pruned = vec![false; n];
+        for &i in &pruned {
+            is_pruned[i as usize] = true;
+        }
+        (0..n as u32).filter(|&i| !is_pruned[i as usize]).collect()
+    }
+}
+
+impl Strategy for Forget {
+    fn name(&self) -> String {
+        "forget".into()
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        if ctx.epoch < self.prune_epoch {
+            return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(
+                ctx.data.n, ctx.rng,
+            )));
+        }
+        if ctx.epoch == self.prune_epoch {
+            let kept = self.prune(ctx);
+            crate::info!(
+                "FORGET: pruned {} of {} samples at epoch {}; restarting",
+                ctx.data.n - kept.len(),
+                ctx.data.n,
+                ctx.epoch
+            );
+            self.kept = Some(kept);
+            let mut plan = EpochPlan::plain(shuffled(self.kept.as_ref().unwrap(), ctx.rng));
+            plan.reset_params = true; // restart training from scratch
+            return Ok(plan);
+        }
+        let kept = self
+            .kept
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("FORGET: prune epoch skipped"))?;
+        Ok(EpochPlan::plain(shuffled(kept, ctx.rng)))
+    }
+
+    fn refresh_hidden_stats(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::testutil::*;
+
+    #[test]
+    fn full_dataset_before_prune() {
+        let tv = tiny_data(30);
+        let mut state = graded_state(30);
+        let mut f = Forget::new(5, 0.3);
+        let plan = run_plan(&mut f, 2, &tv.train, &mut state);
+        assert_eq!(plan.order.len(), 30);
+        assert!(!plan.reset_params);
+    }
+
+    #[test]
+    fn prunes_least_forgettable_and_resets() {
+        let tv = tiny_data(30);
+        let mut state = graded_state(30);
+        // make samples 0..10 never-forgotten-but-learned (events=0,
+        // ever_correct), 10..20 forgotten twice, 20..30 never learned
+        for i in 0..30 {
+            state.forget_events[i] = if (10..20).contains(&i) { 2 } else { 0 };
+            state.ever_correct[i] = i < 20;
+        }
+        let mut f = Forget::new(3, 0.333);
+        let plan = run_plan(&mut f, 3, &tv.train, &mut state);
+        assert!(plan.reset_params);
+        assert_eq!(plan.order.len(), 21); // 9 pruned (floor(30*0.333))
+        // pruned must all come from the never-forgotten learned group 0..10
+        let pruned: Vec<u32> = (0..30u32).filter(|i| !plan.order.contains(i)).collect();
+        assert_eq!(pruned.len(), 9);
+        assert!(pruned.iter().all(|&i| i < 10), "pruned={pruned:?}");
+        // subsequent epochs reuse the pruned set without reset
+        let plan2 = run_plan(&mut f, 4, &tv.train, &mut state);
+        assert!(!plan2.reset_params);
+        assert_eq!(plan2.order.len(), 21);
+    }
+
+    #[test]
+    fn never_learned_samples_survive_pruning() {
+        let tv = tiny_data(20);
+        let mut state = graded_state(20);
+        for i in 0..20 {
+            state.ever_correct[i] = i < 10; // 10..20 never learned
+            state.forget_events[i] = 0;
+        }
+        let mut f = Forget::new(1, 0.5);
+        let plan = run_plan(&mut f, 1, &tv.train, &mut state);
+        // all 10 pruned samples must be the learned ones
+        for &i in &plan.order {
+            assert!(i >= 10);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! InfoBatch (Qin et al. [28], discussed in paper Appendix C.4):
+//! *unbiased* dynamic data pruning — implemented as an extension strategy
+//! so the repo can reproduce the paper's discussion of it.
+//!
+//! Each epoch, samples whose lagging loss is below the epoch mean are
+//! pruned with probability `r`; the surviving below-mean samples have
+//! their gradient rescaled by 1/(1-r), which keeps the expected gradient
+//! equal to the full-data gradient (the "lossless" claim).  In the final
+//! `anneal` fraction of training, pruning is disabled so every sample is
+//! revisited before convergence.
+
+use super::{EpochPlan, PlanCtx, Strategy};
+use crate::sampler::shuffled;
+
+pub struct InfoBatch {
+    /// Prune probability r for below-mean-loss samples.
+    pub r: f64,
+    /// Fraction of final epochs with pruning disabled (paper [28]: 12.5%).
+    pub anneal: f64,
+}
+
+impl InfoBatch {
+    pub fn new(r: f64) -> Self {
+        InfoBatch { r, anneal: 0.125 }
+    }
+}
+
+impl Strategy for InfoBatch {
+    fn name(&self) -> String {
+        "infobatch".into()
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        ctx.state.roll_epoch();
+        let n = ctx.data.n;
+        let annealing = ctx.epoch as f64 >= ctx.total_epochs as f64 * (1.0 - self.anneal);
+        if ctx.epoch == 0 || annealing {
+            return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(n, ctx.rng)));
+        }
+        // mean of known losses
+        let finite: Vec<f32> = ctx.state.loss.iter().copied().filter(|l| l.is_finite()).collect();
+        if finite.is_empty() {
+            return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(n, ctx.rng)));
+        }
+        let mean = crate::util::stats::mean(&finite) as f32;
+
+        let mut kept: Vec<u32> = Vec::with_capacity(n);
+        let mut weights: Vec<f32> = Vec::with_capacity(n);
+        let mut hidden: Vec<u32> = Vec::new();
+        let rescale = (1.0 / (1.0 - self.r)) as f32;
+        for i in 0..n as u32 {
+            let l = ctx.state.loss[i as usize];
+            let below = l.is_finite() && l < mean;
+            if below && ctx.rng.chance(self.r) {
+                hidden.push(i);
+            } else {
+                kept.push(i);
+                weights.push(if below { rescale } else { 1.0 });
+            }
+        }
+        ctx.state.set_hidden(&hidden);
+        // shuffle kept + weights together
+        let mut idx: Vec<u32> = (0..kept.len() as u32).collect();
+        idx = shuffled(&idx, ctx.rng);
+        let order: Vec<u32> = idx.iter().map(|&k| kept[k as usize]).collect();
+        let w: Vec<f32> = idx.iter().map(|&k| weights[k as usize]).collect();
+        let max_hidden = hidden.len();
+        Ok(EpochPlan {
+            order,
+            weights: Some(w),
+            hidden,
+            max_hidden,
+            ..EpochPlan::plain(vec![])
+        })
+    }
+
+    /// InfoBatch does not refresh pruned-sample stats (its pruning is
+    /// probabilistic, so stale losses self-correct when re-drawn).
+    fn refresh_hidden_stats(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::testutil::*;
+
+    #[test]
+    fn epoch0_and_anneal_train_everything() {
+        let tv = tiny_data(40);
+        let mut state = graded_state(40);
+        let mut s = InfoBatch::new(0.5);
+        let p0 = run_plan(&mut s, 0, &tv.train, &mut state);
+        assert_eq!(p0.order.len(), 40);
+        // run_plan uses total_epochs = 20; epoch 19 is in the anneal window
+        let p19 = run_plan(&mut s, 19, &tv.train, &mut state);
+        assert_eq!(p19.order.len(), 40);
+        assert!(p19.weights.is_none());
+    }
+
+    #[test]
+    fn prunes_only_below_mean_and_rescales() {
+        let tv = tiny_data(100);
+        let mut state = graded_state(100); // loss(i) = i, mean ~ 49.5
+        let mut s = InfoBatch::new(0.5);
+        let plan = run_plan(&mut s, 3, &tv.train, &mut state);
+        // every hidden sample has below-mean loss
+        for &h in &plan.hidden {
+            assert!((h as f32) < 49.5, "pruned above-mean sample {h}");
+        }
+        // roughly r * (below-mean count) pruned
+        assert!(plan.hidden.len() > 10 && plan.hidden.len() < 40, "{}", plan.hidden.len());
+        // kept below-mean samples carry weight 2.0, others 1.0
+        let w = plan.weights.as_ref().unwrap();
+        for (pos, &i) in plan.order.iter().enumerate() {
+            if (i as f32) < 49.5 {
+                assert!((w[pos] - 2.0).abs() < 1e-6);
+            } else {
+                assert!((w[pos] - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn expected_gradient_mass_is_unbiased() {
+        // sum of weights over kept ~= n (the full-data gradient mass)
+        let tv = tiny_data(2000);
+        let mut state = graded_state(2000);
+        let mut s = InfoBatch::new(0.4);
+        let plan = run_plan(&mut s, 2, &tv.train, &mut state);
+        let total: f32 = plan.weights.as_ref().unwrap().iter().sum();
+        let rel = (total - 2000.0).abs() / 2000.0;
+        assert!(rel < 0.05, "weight mass off by {rel}");
+    }
+}

@@ -1,0 +1,198 @@
+//! KAKURENBO (paper §3): adaptive sample hiding with move-back,
+//! fraction scheduling, and learning-rate compensation.
+//!
+//! Component switches reproduce the Table 6 ablation grid (HE/MB/RF/LR)
+//! and the optional DropTop extension reproduces Appendix D.
+
+use super::{EpochPlan, PlanCtx, Strategy};
+use crate::config::Components;
+use crate::hiding::droptop::drop_top;
+use crate::hiding::fraction::FractionSchedule;
+use crate::hiding::lr::lr_scale;
+use crate::hiding::selector::{select, SelectMode, SelectorCfg};
+use crate::sampler::shuffled;
+
+pub struct Kakurenbo {
+    pub max_fraction: f64,
+    pub tau: f32,
+    pub components: Components,
+    /// Fraction of highest-loss samples to cut per epoch (Appendix D;
+    /// 0.0 disables DropTop).
+    pub drop_top: f64,
+    pub select_mode: SelectMode,
+    schedule: FractionSchedule,
+}
+
+impl Kakurenbo {
+    pub fn new(
+        max_fraction: f64,
+        tau: f32,
+        components: Components,
+        drop_top: f64,
+        select_mode: SelectMode,
+        total_epochs: usize,
+    ) -> Self {
+        let mut schedule = FractionSchedule::paper_default(max_fraction, total_epochs);
+        schedule.enabled = components.reduce_fraction;
+        Kakurenbo { max_fraction, tau, components, drop_top, select_mode, schedule }
+    }
+}
+
+impl Strategy for Kakurenbo {
+    fn name(&self) -> String {
+        if self.components == Components::ALL && self.drop_top == 0.0 {
+            "kakurenbo".into()
+        } else if self.drop_top > 0.0 {
+            format!("kakurenbo+droptop{:.2}", self.drop_top)
+        } else {
+            format!("kakurenbo-{}", self.components.label())
+        }
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        ctx.state.roll_epoch();
+
+        if !self.components.hide || ctx.epoch == 0 {
+            // Epoch 0 trains on everything: losses are not yet known
+            // (optimistic +inf init also enforces this; see state/mod.rs).
+            return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(
+                ctx.data.n, ctx.rng,
+            )));
+        }
+
+        // B.1-B.3: sort by lagging loss, cut F_e, move back low-confidence.
+        let f_e = self.schedule.at(ctx.epoch);
+        let sel_cfg = SelectorCfg {
+            tau: self.tau,
+            move_back: self.components.move_back,
+            mode: self.select_mode,
+        };
+        let sel = select(ctx.state, f_e, &sel_cfg);
+        let max_hidden = sel.hidden.len() + sel.moved_back;
+
+        // Appendix D: optionally drop the highest-loss tail from training.
+        // (Dropped samples are *not* stats-refreshed; their loss lags, as
+        // in the paper's filter-from-batch-stream implementation.)
+        let train_list = if self.drop_top > 0.0 {
+            let (kept, _dropped) = drop_top(ctx.state, &sel.train, self.drop_top);
+            kept
+        } else {
+            sel.train
+        };
+
+        ctx.state.set_hidden(&sel.hidden);
+
+        // C.2 / Eq. 8: LR compensation by the *effective* hidden fraction.
+        let scale = if self.components.adjust_lr {
+            lr_scale(sel.hidden.len() as f64 / ctx.data.n.max(1) as f64)
+        } else {
+            1.0
+        };
+
+        Ok(EpochPlan {
+            order: shuffled(&train_list, ctx.rng),
+            weights: None,
+            lr_scale: scale,
+            hidden: sel.hidden,
+            max_hidden,
+            moved_back: sel.moved_back,
+            reset_params: false,
+            batch_mode: super::BatchMode::Plain,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::testutil::*;
+
+    fn kakurenbo(frac: f64) -> Kakurenbo {
+        Kakurenbo::new(frac, 0.7, Components::ALL, 0.0, SelectMode::QuickSelect, 20)
+    }
+
+    #[test]
+    fn epoch0_trains_on_everything() {
+        let tv = tiny_data(40);
+        let mut state = graded_state(40);
+        let mut k = kakurenbo(0.3);
+        let plan = run_plan(&mut k, 0, &tv.train, &mut state);
+        assert_eq!(plan.order.len(), 40);
+        assert!(plan.hidden.is_empty());
+    }
+
+    #[test]
+    fn hides_confident_low_loss_and_scales_lr() {
+        let tv = tiny_data(40);
+        let mut state = graded_state(40); // even idx confident-correct
+        let mut k = kakurenbo(0.3);
+        let plan = run_plan(&mut k, 1, &tv.train, &mut state);
+        // candidates = 12 lowest-loss (idx 0..12); odd ones move back
+        assert_eq!(plan.max_hidden, 12);
+        assert_eq!(plan.moved_back, 6);
+        assert_eq!(plan.hidden.len(), 6);
+        assert!(plan.hidden.iter().all(|&i| i % 2 == 0 && i < 12));
+        assert_eq!(plan.order.len(), 34);
+        let expected = 1.0 / (1.0 - 6.0 / 40.0);
+        assert!((plan.lr_scale - expected).abs() < 1e-12);
+        // state is marked
+        assert_eq!(state.hidden_count(), 6);
+    }
+
+    #[test]
+    fn ablation_no_mb_hides_all_candidates() {
+        let tv = tiny_data(40);
+        let mut state = graded_state(40);
+        let comps = crate::config::Components::from_bits("v1011").unwrap();
+        let mut k = Kakurenbo::new(0.3, 0.7, comps, 0.0, SelectMode::QuickSelect, 20);
+        let plan = run_plan(&mut k, 1, &tv.train, &mut state);
+        assert_eq!(plan.hidden.len(), 12);
+        assert_eq!(plan.moved_back, 0);
+    }
+
+    #[test]
+    fn ablation_no_lr_keeps_scale_one() {
+        let tv = tiny_data(40);
+        let mut state = graded_state(40);
+        let comps = crate::config::Components::from_bits("v1110").unwrap();
+        let mut k = Kakurenbo::new(0.3, 0.7, comps, 0.0, SelectMode::QuickSelect, 20);
+        let plan = run_plan(&mut k, 1, &tv.train, &mut state);
+        assert!(plan.hidden.len() > 0);
+        assert_eq!(plan.lr_scale, 1.0);
+    }
+
+    #[test]
+    fn rf_reduces_fraction_late_in_training() {
+        let tv = tiny_data(100);
+        let mut k = kakurenbo(0.4);
+        let mut state = graded_state(100);
+        let early = run_plan(&mut k, 1, &tv.train, &mut state);
+        let mut state2 = graded_state(100);
+        let late = run_plan(&mut k, 19, &tv.train, &mut state2);
+        assert!(late.max_hidden < early.max_hidden);
+    }
+
+    #[test]
+    fn droptop_removes_top_losses_from_order() {
+        let tv = tiny_data(50);
+        let mut state = graded_state(50);
+        let mut k = Kakurenbo::new(0.2, 0.7, Components::ALL, 0.1, SelectMode::QuickSelect, 20);
+        let plan = run_plan(&mut k, 1, &tv.train, &mut state);
+        // top losses are the highest indices; 5 should be dropped
+        assert!(!plan.order.contains(&49));
+        assert!(!plan.order.contains(&48));
+        // hidden + order + dropped <= n
+        assert!(plan.order.len() + plan.hidden.len() < 50);
+    }
+
+    #[test]
+    fn order_and_hidden_are_disjoint() {
+        let tv = tiny_data(64);
+        let mut state = graded_state(64);
+        let mut k = kakurenbo(0.4);
+        let plan = run_plan(&mut k, 2, &tv.train, &mut state);
+        for h in &plan.hidden {
+            assert!(!plan.order.contains(h));
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Training strategies: KAKURENBO and every baseline the paper compares
+//! against (Table 2/3).  Each strategy turns per-sample state into an
+//! `EpochPlan` that the coordinator executes.
+
+pub mod baseline;
+pub mod el2n;
+pub mod forget;
+pub mod infobatch;
+pub mod gradmatch;
+pub mod iswr;
+pub mod kakurenbo;
+pub mod random_hiding;
+pub mod sb;
+
+use crate::config::StrategyConfig;
+use crate::data::Dataset;
+use crate::runtime::ModelExecutor;
+use crate::state::SampleState;
+use crate::util::rng::Rng;
+
+/// How the coordinator consumes the plan's order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchMode {
+    /// Train on `order` directly, batch by batch.
+    Plain,
+    /// Selective-Backprop: forward-select from `order`, backprop only the
+    /// selected (loss-CDF^beta acceptance).
+    SelectiveBackprop { beta: f64 },
+}
+
+/// One epoch's worth of scheduling decisions.
+#[derive(Clone, Debug)]
+pub struct EpochPlan {
+    /// Samples to feed to training, in order (may contain repeats for
+    /// with-replacement strategies).
+    pub order: Vec<u32>,
+    /// Per-position gradient weights (importance re-weighting); None = 1.0.
+    pub weights: Option<Vec<f32>>,
+    /// Multiplier applied to the epoch's base learning rate (Eq. 8).
+    pub lr_scale: f64,
+    /// Hidden list to stats-refresh at epoch end (forward-only pass).
+    pub hidden: Vec<u32>,
+    /// Number of hide *candidates* before move-back (Fig. 8 "max hidden").
+    pub max_hidden: usize,
+    /// How many candidates the MB rule returned to the training list.
+    pub moved_back: usize,
+    /// Re-initialize model parameters before this epoch (FORGET restart).
+    pub reset_params: bool,
+    pub batch_mode: BatchMode,
+}
+
+impl EpochPlan {
+    pub fn plain(order: Vec<u32>) -> Self {
+        EpochPlan {
+            order,
+            weights: None,
+            lr_scale: 1.0,
+            hidden: vec![],
+            max_hidden: 0,
+            moved_back: 0,
+            reset_params: false,
+            batch_mode: BatchMode::Plain,
+        }
+    }
+}
+
+/// Context handed to `plan_epoch`.  `exec` is available for strategies
+/// that need an extra model pass to select (GradMatch's embedding pass).
+pub struct PlanCtx<'a> {
+    pub epoch: usize,
+    pub total_epochs: usize,
+    pub data: &'a Dataset,
+    pub state: &'a mut SampleState,
+    pub rng: &'a mut Rng,
+    pub exec: Option<&'a mut ModelExecutor>,
+}
+
+pub trait Strategy: Send {
+    fn name(&self) -> String;
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan>;
+    /// Whether the coordinator should refresh hidden-list stats at epoch
+    /// end (paper step D.1).  ISWR instead needs *all* stats fresh, which
+    /// it gets from the with-replacement training pass itself.
+    fn refresh_hidden_stats(&self) -> bool {
+        true
+    }
+}
+
+/// Instantiate a strategy from config.
+pub fn build(cfg: &StrategyConfig, total_epochs: usize) -> Box<dyn Strategy> {
+    match cfg {
+        StrategyConfig::Baseline => Box::new(baseline::Baseline),
+        StrategyConfig::Kakurenbo { max_fraction, tau, components, drop_top, select_mode } => {
+            Box::new(kakurenbo::Kakurenbo::new(
+                *max_fraction,
+                *tau,
+                *components,
+                *drop_top,
+                *select_mode,
+                total_epochs,
+            ))
+        }
+        StrategyConfig::Iswr => Box::new(iswr::Iswr::default()),
+        StrategyConfig::SelectiveBackprop { beta } => Box::new(sb::SelectiveBackprop::new(*beta)),
+        StrategyConfig::Forget { prune_epoch, fraction } => {
+            Box::new(forget::Forget::new(*prune_epoch, *fraction))
+        }
+        StrategyConfig::GradMatch { fraction, every_r } => {
+            Box::new(gradmatch::GradMatch::new(*fraction, *every_r))
+        }
+        StrategyConfig::RandomHiding { fraction } => {
+            Box::new(random_hiding::RandomHiding::new(*fraction))
+        }
+        StrategyConfig::InfoBatch { r } => Box::new(infobatch::InfoBatch::new(*r)),
+        StrategyConfig::El2n { score_epoch, fraction, restart } => {
+            Box::new(el2n::El2n::new(*score_epoch, *fraction, *restart))
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+    use crate::data::TrainVal;
+
+    pub fn tiny_data(n: usize) -> TrainVal {
+        gauss_mixture(
+            &GaussMixtureCfg {
+                n_train: n,
+                n_val: 16,
+                dim: 8,
+                classes: 4,
+                ..Default::default()
+            },
+            9,
+        )
+    }
+
+    /// State where sample i has loss = i (ascending), confident-correct for
+    /// even i, low-confidence for odd i.
+    pub fn graded_state(n: usize) -> SampleState {
+        let mut s = SampleState::new(n);
+        for i in 0..n {
+            s.record(i, i as f32, i % 2 == 0, if i % 2 == 0 { 0.95 } else { 0.4 }, 0);
+        }
+        s
+    }
+
+    pub fn run_plan(
+        strat: &mut dyn Strategy,
+        epoch: usize,
+        data: &Dataset,
+        state: &mut SampleState,
+    ) -> EpochPlan {
+        // per-epoch RNG stream, as the trainer's persistent RNG would give
+        let mut rng = Rng::new(7 + 1000 * epoch as u64);
+        let mut ctx = PlanCtx {
+            epoch,
+            total_epochs: 20,
+            data,
+            state,
+            rng: &mut rng,
+            exec: None,
+        };
+        strat.plan_epoch(&mut ctx).unwrap()
+    }
+}

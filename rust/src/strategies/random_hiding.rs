@@ -1,0 +1,70 @@
+//! Random hiding baseline (paper Appendix C.4 / Table 9 "Random"):
+//! hide a uniformly random fraction F of samples each epoch.  Shows that
+//! KAKURENBO's gains come from *which* samples it hides, not merely from
+//! training on fewer samples per epoch.
+
+use super::{EpochPlan, PlanCtx, Strategy};
+
+pub struct RandomHiding {
+    pub fraction: f64,
+}
+
+impl RandomHiding {
+    pub fn new(fraction: f64) -> Self {
+        RandomHiding { fraction }
+    }
+}
+
+impl Strategy for RandomHiding {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        ctx.state.roll_epoch();
+        let n = ctx.data.n;
+        let k_hide = ((n as f64) * self.fraction).floor() as usize;
+        let mut perm = crate::sampler::epoch_permutation(n, ctx.rng);
+        let hidden = perm.split_off(n - k_hide);
+        ctx.state.set_hidden(&hidden);
+        Ok(EpochPlan {
+            order: perm,
+            hidden,
+            max_hidden: k_hide,
+            ..EpochPlan::plain(vec![])
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::testutil::*;
+
+    #[test]
+    fn hides_exact_fraction_uniformly() {
+        let tv = tiny_data(50);
+        let mut state = graded_state(50);
+        let mut s = RandomHiding::new(0.2);
+        let plan = run_plan(&mut s, 1, &tv.train, &mut state);
+        assert_eq!(plan.hidden.len(), 10);
+        assert_eq!(plan.order.len(), 40);
+        let mut all: Vec<u32> = plan.order.iter().chain(&plan.hidden).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn hidden_set_varies_across_epochs() {
+        let tv = tiny_data(60);
+        let mut state = graded_state(60);
+        let mut s = RandomHiding::new(0.3);
+        let a = run_plan(&mut s, 1, &tv.train, &mut state);
+        let b = run_plan(&mut s, 2, &tv.train, &mut state);
+        let mut ha = a.hidden.clone();
+        let mut hb = b.hidden.clone();
+        ha.sort_unstable();
+        hb.sort_unstable();
+        assert_ne!(ha, hb);
+    }
+}

@@ -1,0 +1,156 @@
+//! Selective-Backprop (Jiang et al. [17]).
+//!
+//! Forward pass on every sample, backprop only on samples accepted with
+//! probability CDF_loss(ℓ)^beta (beta=1 cuts ~50%, the paper's setting).
+//! The acceptance CDF comes from a rolling reservoir of recent losses,
+//! as in the reference implementation.
+//!
+//! The strategy emits a full epoch order with `BatchMode::SelectiveBackprop`;
+//! the coordinator performs the fwd-select-train loop (it owns the
+//! executor), calling back into [`SbSelector`] for accept decisions.
+
+use super::{BatchMode, EpochPlan, PlanCtx, Strategy};
+use crate::sampler::epoch_permutation;
+use crate::util::rng::Rng;
+
+/// Rolling loss history + acceptance rule, shared with the coordinator.
+pub struct SbSelector {
+    pub beta: f64,
+    history: Vec<f32>,
+    cap: usize,
+    cursor: usize,
+}
+
+impl SbSelector {
+    pub fn new(beta: f64, cap: usize) -> Self {
+        SbSelector { beta, history: Vec::with_capacity(cap), cap, cursor: 0 }
+    }
+
+    pub fn record(&mut self, loss: f32) {
+        if self.history.len() < self.cap {
+            self.history.push(loss);
+        } else {
+            self.history[self.cursor] = loss;
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+    }
+
+    /// Empirical CDF of `loss` within the rolling history.
+    pub fn cdf(&self, loss: f32) -> f64 {
+        if self.history.is_empty() {
+            return 1.0;
+        }
+        let below = self.history.iter().filter(|&&h| h <= loss).count();
+        below as f64 / self.history.len() as f64
+    }
+
+    /// Accept-for-backprop probability: CDF(loss)^beta.
+    pub fn accept(&mut self, loss: f32, rng: &mut Rng) -> bool {
+        let p = self.cdf(loss).powf(self.beta);
+        self.record(loss);
+        rng.chance(p)
+    }
+
+    /// Expected selectivity over the current history (diagnostics).
+    pub fn mean_accept_prob(&self) -> f64 {
+        if self.history.is_empty() {
+            return 1.0;
+        }
+        self.history
+            .iter()
+            .map(|&l| self.cdf(l).powf(self.beta))
+            .sum::<f64>()
+            / self.history.len() as f64
+    }
+}
+
+pub struct SelectiveBackprop {
+    pub beta: f64,
+    pub selector: SbSelector,
+}
+
+impl SelectiveBackprop {
+    pub fn new(beta: f64) -> Self {
+        SelectiveBackprop { beta, selector: SbSelector::new(beta, 4096) }
+    }
+}
+
+impl Strategy for SelectiveBackprop {
+    fn name(&self) -> String {
+        "sb".into()
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        let mut plan = EpochPlan::plain(epoch_permutation(ctx.data.n, ctx.rng));
+        plan.batch_mode = BatchMode::SelectiveBackprop { beta: self.beta };
+        Ok(plan)
+    }
+
+    fn refresh_hidden_stats(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = SbSelector::new(1.0, 100);
+        for i in 0..100 {
+            s.record(i as f32);
+        }
+        assert!(s.cdf(10.0) < s.cdf(50.0));
+        assert!(s.cdf(99.0) >= 0.99);
+    }
+
+    #[test]
+    fn beta1_accepts_about_half() {
+        let mut s = SbSelector::new(1.0, 1000);
+        let mut rng = Rng::new(1);
+        // warm the history with uniform losses
+        for i in 0..1000 {
+            s.record((i % 100) as f32);
+        }
+        let mut accepted = 0;
+        let total = 5000;
+        for i in 0..total {
+            if s.accept((i % 100) as f32, &mut rng) {
+                accepted += 1;
+            }
+        }
+        let frac = accepted as f64 / total as f64;
+        // E[CDF(U)^1] = 0.5 for uniform losses
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn high_loss_always_preferred() {
+        let mut s = SbSelector::new(1.0, 100);
+        for i in 0..100 {
+            s.record(i as f32);
+        }
+        let mut rng = Rng::new(2);
+        let (mut hi, mut lo) = (0, 0);
+        for _ in 0..500 {
+            if s.accept(99.0, &mut rng) {
+                hi += 1;
+            }
+            if s.accept(1.0, &mut rng) {
+                lo += 1;
+            }
+        }
+        // interleaved accepts keep recording 99s and 1s, so the history
+        // settles at cdf(99)=1.0 vs cdf(1)~0.5: expect hi ~ 2x lo.
+        assert!(hi as f64 > lo as f64 * 1.7, "hi={hi} lo={lo}");
+        assert!(hi > 450, "hi={hi}"); // top-loss nearly always kept
+    }
+
+    #[test]
+    fn empty_history_accepts_everything() {
+        let mut s = SbSelector::new(1.0, 10);
+        let mut rng = Rng::new(3);
+        assert!(s.accept(0.0, &mut rng));
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CSV writer (RFC-4180 quoting) for exporting metric records to
+//! spreadsheet-friendly files alongside the JSON dumps.
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+}
+
+fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = CsvWriter {
+            out: std::io::BufWriter::new(std::fs::File::create(path)?),
+            columns: header.len(),
+        };
+        w.write_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())?;
+        Ok(w)
+    }
+
+    pub fn write_row(&mut self, cells: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cells.len() == self.columns,
+            "row has {} cells, header has {}",
+            cells.len(),
+            self.columns
+        );
+        let line: Vec<String> = cells.iter().map(|c| quote(c)).collect();
+        writeln!(self.out, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Export a run's epoch records as CSV.
+pub fn export_run(run: &crate::metrics::RunResult, path: &Path) -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "epoch", "lr", "fraction_ceiling", "hidden", "moved_back", "hidden_again",
+            "trained", "backprop", "train_loss", "val_acc", "time_total", "modeled_time",
+        ],
+    )?;
+    for r in &run.records {
+        w.write_row(&[
+            r.epoch.to_string(),
+            format!("{}", r.lr),
+            format!("{}", r.fraction_ceiling),
+            r.hidden.to_string(),
+            r.moved_back.to_string(),
+            r.hidden_again.to_string(),
+            r.trained_samples.to_string(),
+            r.backprop_samples.to_string(),
+            format!("{}", r.train_loss),
+            format!("{}", r.val_acc),
+            format!("{}", r.time_total),
+            format!("{}", r.modeled_time),
+        ])?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let path = std::env::temp_dir().join(format!("kakurenbo_csv_{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.write_row(&["1".into(), "x,y".into()]).unwrap();
+        w.write_row(&["2".into(), "say \"hi\"".into()]).unwrap();
+        assert!(w.write_row(&["only-one".into()]).is_err());
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().next().unwrap(), "a,b");
+        assert!(text.contains("\"x,y\""));
+        assert!(text.contains("\"say \"\"hi\"\"\""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_run_produces_rows() {
+        let run = crate::metrics::RunResult::from_records(
+            "t",
+            "baseline",
+            vec![crate::metrics::EpochRecord { epoch: 0, val_acc: 0.5, ..Default::default() }],
+        );
+        let path = std::env::temp_dir().join(format!("kakurenbo_run_{}.csv", std::process::id()));
+        export_run(&run, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

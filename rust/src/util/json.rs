@@ -1,0 +1,511 @@
+//! Minimal JSON parser / serializer.
+//!
+//! The offline build has no `serde`; this module covers everything the
+//! coordinator needs: the artifact manifest written by `python/compile/aot.py`,
+//! experiment configs, and metric dumps under `results/`.
+//!
+//! Full JSON value model, recursive-descent parser with line/column errors,
+//! escape handling, and a compact + pretty serializer.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+#[derive(Debug)]
+pub struct JsonError {
+    pub msg: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at {}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+// ---------------------------------------------------------------------------
+// Accessors
+// ---------------------------------------------------------------------------
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup that reports *which* key was missing.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing json key {key:?} in {self:.60?}"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn usize_list(&self) -> anyhow::Result<Vec<usize>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("expected number")))
+            .collect()
+    }
+}
+
+// Builders for ergonomic construction in metric writers.
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+impl From<f32> for Json {
+    fn from(n: f32) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(n: u32) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(n: i64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Self {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// `obj![("k", v), ...]` convenience.
+#[macro_export]
+macro_rules! jobj {
+    ($(($k:expr, $v:expr)),* $(,)?) => {{
+        let mut m = std::collections::BTreeMap::new();
+        $( m.insert($k.to_string(), $crate::util::json::Json::from($v)); )*
+        $crate::util::json::Json::Obj(m)
+    }};
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { bytes: s.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, JsonError> {
+        Err(JsonError { msg: msg.into(), line: self.line, col: self.col })
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.bump();
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        match self.bump() {
+            Some(c) if c == b => Ok(()),
+            other => self.err(format!("expected {:?}, got {:?}", b as char, other.map(|c| c as char))),
+        }
+    }
+
+    fn parse_value(&mut self) -> Result<Json, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.parse_obj(),
+            Some(b'[') => self.parse_arr(),
+            Some(b'"') => Ok(Json::Str(self.parse_string()?)),
+            Some(b't') => self.parse_lit("true", Json::Bool(true)),
+            Some(b'f') => self.parse_lit("false", Json::Bool(false)),
+            Some(b'n') => self.parse_lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.parse_num(),
+            other => self.err(format!("unexpected {:?}", other.map(|c| c as char))),
+        }
+    }
+
+    fn parse_lit(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+        for &b in lit.as_bytes() {
+            self.expect(b)?;
+        }
+        Ok(v)
+    }
+
+    fn parse_num(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.bump();
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        match s.parse::<f64>() {
+            Ok(n) => Ok(Json::Num(n)),
+            Err(_) => self.err(format!("bad number {s:?}")),
+        }
+    }
+
+    fn parse_string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = Vec::new();
+        loop {
+            match self.bump() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => break,
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push(b'"'),
+                    Some(b'\\') => out.push(b'\\'),
+                    Some(b'/') => out.push(b'/'),
+                    Some(b'n') => out.push(b'\n'),
+                    Some(b't') => out.push(b'\t'),
+                    Some(b'r') => out.push(b'\r'),
+                    Some(b'b') => out.push(0x08),
+                    Some(b'f') => out.push(0x0C),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.bump().ok_or(JsonError {
+                                msg: "bad \\u".into(),
+                                line: self.line,
+                                col: self.col,
+                            })?;
+                            code = code * 16
+                                + (d as char).to_digit(16).ok_or(JsonError {
+                                    msg: "bad \\u digit".into(),
+                                    line: self.line,
+                                    col: self.col,
+                                })?;
+                        }
+                        let ch = char::from_u32(code).unwrap_or('\u{FFFD}');
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                    }
+                    other => {
+                        return self.err(format!("bad escape {:?}", other.map(|c| c as char)))
+                    }
+                },
+                Some(b) => out.push(b),
+            }
+        }
+        String::from_utf8(out).map_err(|_| JsonError {
+            msg: "invalid utf8".into(),
+            line: self.line,
+            col: self.col,
+        })
+    }
+
+    fn parse_arr(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.bump();
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.parse_value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(v)),
+                other => return self.err(format!("expected , or ], got {:?}", other.map(|c| c as char))),
+            }
+        }
+    }
+
+    fn parse_obj(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.bump();
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.parse_string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.parse_value()?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(m)),
+                other => return self.err(format!("expected , or }}, got {:?}", other.map(|c| c as char))),
+            }
+        }
+    }
+}
+
+pub fn parse(s: &str) -> Result<Json, JsonError> {
+    let mut p = Parser::new(s);
+    let v = p.parse_value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return p.err("trailing data");
+    }
+    Ok(v)
+}
+
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Serializer
+// ---------------------------------------------------------------------------
+
+fn esc(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn fmt_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        out.push_str("null"); // JSON has no NaN/Inf
+    } else if n == n.trunc() && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+impl Json {
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => fmt_num(*n, out),
+            Json::Str(s) => esc(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(w) = indent {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(w * (depth + 1)));
+                    }
+                    x.write(out, indent, depth + 1);
+                }
+                if let Some(w) = indent {
+                    if !v.is_empty() {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(w * depth));
+                    }
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(w) = indent {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(w * (depth + 1)));
+                    }
+                    esc(k, out);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    x.write(out, indent, depth + 1);
+                }
+                if let Some(w) = indent {
+                    if !m.is_empty() {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(w * depth));
+                    }
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn to_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        s
+    }
+
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(1), 0);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let src = r#"{"models": {"cnn": {"batch": 64, "params": [{"name": "w", "shape": [3, 3]}], "ok": true, "x": null}}, "v": 1.5e-3}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(
+            v.get("models").unwrap().get("cnn").unwrap().get("batch").unwrap().as_usize(),
+            Some(64)
+        );
+        let re = parse(&v.to_compact()).unwrap();
+        assert_eq!(v, re);
+        let re2 = parse(&v.to_pretty()).unwrap();
+        assert_eq!(v, re2);
+    }
+
+    #[test]
+    fn parses_negative_and_exponent() {
+        assert_eq!(parse("-3.25").unwrap().as_f64(), Some(-3.25));
+        assert_eq!(parse("2e3").unwrap().as_f64(), Some(2000.0));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\n\"b\"A""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\n\"b\"A"));
+        let out = v.to_compact();
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn error_positions() {
+        let e = parse("{\n  \"a\": x\n}").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn jobj_macro() {
+        let v = jobj![("a", 1usize), ("b", "hi"), ("c", vec![1.0f64, 2.0])];
+        assert_eq!(v.get("a").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("c").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_compact(), "null");
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline substrates: everything a crates.io-connected project would pull
+//! in as dependencies, implemented in-tree (see DESIGN.md §4).
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod npy;
+pub mod plot;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,127 @@
+//! Minimal NumPy `.npy` v1.0 reader/writer for f32 arrays.
+//!
+//! Used by the checkpoint module so saved parameters can be inspected
+//! from Python (`np.load`) — handy when debugging the Rust/JAX boundary.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Write a C-contiguous f32 array.
+pub fn write_f32(path: &Path, data: &[f32], shape: &[usize]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "data/shape mismatch"
+    );
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read an f32 `.npy` file; returns (data, shape).
+pub fn read_f32(path: &Path) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not an npy file");
+    let mut ver = [0u8; 2];
+    f.read_exact(&mut ver)?;
+    anyhow::ensure!(ver[0] == 1, "unsupported npy version {}", ver[0]);
+    let mut len = [0u8; 2];
+    f.read_exact(&mut len)?;
+    let hlen = u16::from_le_bytes(len) as usize;
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header)?;
+    anyhow::ensure!(header.contains("'<f4'"), "only <f4 supported: {header}");
+    anyhow::ensure!(header.contains("False"), "fortran order unsupported");
+    // parse shape tuple
+    let s = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|t| t.split('(').nth(1))
+        .and_then(|t| t.split(')').next())
+        .ok_or_else(|| anyhow::anyhow!("bad header {header}"))?;
+    let shape: Vec<usize> = s
+        .split(',')
+        .filter_map(|p| {
+            let p = p.trim();
+            if p.is_empty() { None } else { Some(p.parse()) }
+        })
+        .collect::<Result<_, _>>()?;
+    let n: usize = shape.iter().product();
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() >= n * 4, "truncated npy payload");
+    let data = bytes[..n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((data, shape))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("kakurenbo_npy_{name}_{}.npy", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let path = tmp("2d");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_f32(&path, &data, &[3, 4]).unwrap();
+        let (d, s) = read_f32(&path).unwrap();
+        assert_eq!(s, vec![3, 4]);
+        assert_eq!(d, data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_1d_and_scalar() {
+        let path = tmp("1d");
+        write_f32(&path, &[1.5, -2.5], &[2]).unwrap();
+        let (d, s) = read_f32(&path).unwrap();
+        assert_eq!(s, vec![2]);
+        assert_eq!(d, vec![1.5, -2.5]);
+        std::fs::remove_file(&path).ok();
+
+        let path = tmp("0d");
+        write_f32(&path, &[7.0], &[]).unwrap();
+        let (d, s) = read_f32(&path).unwrap();
+        assert!(s.is_empty());
+        assert_eq!(d, vec![7.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        assert!(write_f32(&tmp("bad"), &[1.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Terminal line charts for convergence curves (Fig. 2/3 style output):
+//! multiple named series rendered onto an ASCII canvas with axes.
+
+pub struct Series<'a> {
+    pub name: &'a str,
+    pub xs: &'a [f64],
+    pub ys: &'a [f64],
+}
+
+/// Render series onto a width x height canvas; x/y ranges auto-fit.
+/// Each series gets a distinct glyph; a legend line follows the chart.
+pub fn line_chart(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let finite = |v: f64| v.is_finite();
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for s in series {
+        for (&x, &y) in s.xs.iter().zip(s.ys) {
+            if finite(x) && finite(y) {
+                xmin = xmin.min(x);
+                xmax = xmax.max(x);
+                ymin = ymin.min(y);
+                ymax = ymax.max(y);
+            }
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        return format!("== {title} == (no data)\n");
+    }
+    if ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for (&x, &y) in s.xs.iter().zip(s.ys) {
+            if !finite(x) || !finite(y) {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = glyph;
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    for (i, row) in canvas.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:8.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:8.3} |")
+        } else {
+            "         |".to_string()
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "          +{}\n           {:<10.3}{:>width$.3}\n",
+        "-".repeat(width),
+        xmin,
+        xmax,
+        width = width - 10
+    ));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_within_bounds() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x / 5.0).sin()).collect();
+        let s = line_chart("t", &[Series { name: "sin", xs: &xs, ys: &ys }], 40, 10);
+        assert!(s.contains("legend: *=sin"));
+        assert!(s.lines().count() >= 12);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let s = line_chart("t", &[Series { name: "e", xs: &[], ys: &[] }], 20, 5);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn multiple_series_distinct_glyphs() {
+        let xs = [0.0, 1.0, 2.0];
+        let y1 = [0.0, 1.0, 2.0];
+        let y2 = [2.0, 1.0, 0.0];
+        let s = line_chart(
+            "t",
+            &[
+                Series { name: "a", xs: &xs, ys: &y1 },
+                Series { name: "b", xs: &xs, ys: &y2 },
+            ],
+            20,
+            8,
+        );
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [0.5, f64::NAN, 1.5];
+        let s = line_chart("t", &[Series { name: "a", xs: &xs, ys: &ys }], 20, 6);
+        assert!(s.contains('*'));
+    }
+}

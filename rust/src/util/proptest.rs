@@ -1,0 +1,157 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` generated inputs; on failure it
+//! re-seeds and greedily shrinks via the generator's `shrink` hook, then
+//! panics with the minimal counterexample and the seed needed to replay.
+//!
+//! Used by the coordinator's invariant tests: hiding selector, fraction
+//! schedule, samplers, sharder, state store.
+
+use super::rng::Rng;
+
+/// A generator of random test cases with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of a failing value (simplest first).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs; panics with minimal counterexample.
+pub fn check<G: Gen>(name: &str, seed: u64, cases: usize, gen_: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen_.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first shrunk candidate that
+            // still fails, until none fail.
+            let mut cur = value;
+            let mut cur_msg = msg;
+            'outer: loop {
+                for cand in gen_.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}):\n  {cur_msg}\n  minimal counterexample: {cur:?}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vec<f32> of length in [min_len, max_len], values in [lo, hi].
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n)
+            .map(|_| self.lo + (self.hi - self.lo) * rng.f32())
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2].to_vec().into_iter().collect());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        out.retain(|c: &Vec<f32>| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// usize in [lo, hi].
+pub struct USize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for USize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Tuple combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sorted-idempotent", 1, 50, &VecF32 { min_len: 0, max_len: 40, lo: -5.0, hi: 5.0 }, |v| {
+            let mut a = v.clone();
+            a.sort_by(|x, y| x.total_cmp(y));
+            let mut b = a.clone();
+            b.sort_by(|x, y| x.total_cmp(y));
+            if a == b { Ok(()) } else { Err("sort not idempotent".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check("len<5", 1, 200, &VecF32 { min_len: 0, max_len: 64, lo: 0.0, hi: 1.0 }, |v| {
+            if v.len() < 5 { Ok(()) } else { Err(format!("len={}", v.len())) }
+        });
+    }
+
+    #[test]
+    fn pair_generator() {
+        check("pair", 3, 50, &Pair(USize { lo: 1, hi: 10 }, USize { lo: 0, hi: 5 }), |&(a, b)| {
+            if a >= 1 && b <= 5 { Ok(()) } else { Err("bounds".into()) }
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Small numeric/statistics helpers shared across the coordinator:
+//! summary stats, percentiles, histograms (paper Figs. 5 & 11), EMA.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f32], q: f64) -> f32 {
+    assert!((0.0..=100.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let t = (pos - lo as f64) as f32;
+        v[lo] * (1.0 - t) + v[hi] * t
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi]; values outside clamp to edge bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn of(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Self {
+        let mut h = Histogram::new(lo, hi, bins);
+        for &x in xs {
+            h.add(x);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f32) {
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f32) as i64;
+        let idx = t.clamp(0, bins as i64 - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Normalized bin densities.
+    pub fn densities(&self) -> Vec<f64> {
+        let n = self.total().max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// Bin centers, for plotting/reporting.
+    pub fn centers(&self) -> Vec<f32> {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f32 + 0.5))
+            .collect()
+    }
+
+    /// Render a one-line ASCII sparkline (for log output).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        self.counts
+            .iter()
+            .map(|&c| GLYPHS[(c * 7 / max) as usize])
+            .collect()
+    }
+}
+
+/// Exponential moving average.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// argsort ascending by key (stable); the hiding selector's O(N log N) core.
+pub fn argsort_by_f32(keys: &[f32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+    idx.sort_by(|&a, &b| keys[a as usize].total_cmp(&keys[b as usize]));
+    idx
+}
+
+/// Indices of the k smallest keys, O(N) average via select_nth (quickselect),
+/// unordered within the selected set.  Used by the optimized hiding path.
+pub fn argselect_smallest(keys: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= idx.len() {
+        return idx;
+    }
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        keys[a as usize].total_cmp(&keys[b as usize])
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((std_dev(&xs) - 1.118033988).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [3.0f32, 1.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let h = Histogram::of(&[0.1, 0.2, 0.9, 5.0, -3.0], 0.0, 1.0, 10);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts[9], 2); // 0.9 and clamped 5.0
+        assert_eq!(h.counts[0], 1); // clamped -3.0
+        assert_eq!(h.centers().len(), 10);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.push(0.0);
+        for _ in 0..20 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argsort_orders() {
+        let keys = [3.0f32, 1.0, 2.0];
+        assert_eq!(argsort_by_f32(&keys), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn argselect_matches_argsort_prefix_set() {
+        let keys: Vec<f32> = (0..100).map(|i| ((i * 37) % 100) as f32).collect();
+        for k in [0, 1, 10, 50, 99, 100] {
+            let mut a = argselect_smallest(&keys, k);
+            let mut b = argsort_by_f32(&keys)[..k].to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "k={k}");
+        }
+    }
+
+    #[test]
+    fn argsort_handles_nan_total_order() {
+        let keys = [f32::NAN, 1.0, 0.5];
+        let idx = argsort_by_f32(&keys);
+        assert_eq!(&idx[..2], &[2, 1]); // NaN sorts last under total_cmp
+    }
+}

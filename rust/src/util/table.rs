@@ -1,0 +1,129 @@
+//! Paper-style ASCII table rendering for the bench harness output.
+//!
+//! Every `bench_*` binary prints its reproduction of a paper table through
+//! this module so rows line up and can be diffed against EXPERIMENTS.md.
+
+#[derive(Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table { title: title.into(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for i in 0..ncols {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                s.push_str(&format!("| {:width$} ", c, width = widths[i]));
+            }
+            s.push('|');
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers matching the paper's reporting style.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+pub fn diff_pct(x: f64, baseline: f64) -> String {
+    let d = (x - baseline) * 100.0;
+    if d >= 0.0 {
+        format!("(+{d:.2})")
+    } else {
+        format!("({d:.2})")
+    }
+}
+
+pub fn secs(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn speedup_pct(time: f64, baseline: f64) -> String {
+    let d = (time / baseline - 1.0) * 100.0;
+    if d >= 0.0 {
+        format!("(+{d:.1}%)")
+    } else {
+        format!("({d:.1}%)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T").header(&["Setting", "Acc."]);
+        t.row(vec!["Baseline".into(), "77.49".into()]);
+        t.row(vec!["KAKURENBO".into(), "77.21".into()]);
+        let s = t.render();
+        assert!(s.contains("| Baseline  |"));
+        assert!(s.lines().all(|l| l.len() <= 40));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.7749), "77.49");
+        assert_eq!(diff_pct(0.7721, 0.7749), "(-0.28)");
+        assert_eq!(speedup_pct(78.3, 100.0), "(-21.7%)");
+    }
+}

@@ -1,0 +1,133 @@
+//! Scoped data-parallel helpers (no rayon offline).
+//!
+//! `parallel_for_chunks` splits an index range across threads with
+//! `std::thread::scope`.  On this image (1 core) it degrades to the serial
+//! path automatically; on multi-core hosts the synthetic dataset
+//! generation, full-dataset stat refreshes, and sorting shards fan out.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for host-side parallel sections.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over disjoint chunks of `0..n` on up to
+/// `threads` OS threads.  Falls back to a single call when threads == 1 or
+/// the range is small.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 || n < 1024 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let f = &f;
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo < hi {
+                scope.spawn(move || f(lo, hi));
+            }
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a Vec<T>, preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(n, threads, move |lo, hi| {
+        // Force whole-struct capture (edition-2021 disjoint capture would
+        // otherwise grab the raw pointer field, which is !Sync).
+        let p = out_ptr;
+        // SAFETY: chunks are disjoint; each index is written exactly once.
+        for i in lo..hi {
+            unsafe { *p.0.add(i) = f(i) };
+        }
+    });
+    out
+}
+
+struct SendPtr<T>(*mut T);
+// Manual Clone/Copy: derive would wrongly require T: Copy.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Atomic work-stealing-ish dynamic scheduler for irregular tasks.
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            scope.spawn(move || loop {
+                let lo = next.fetch_add(grain, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                for i in lo..(lo + grain).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(10_000, 4, |lo, hi| {
+            let mut s = 0u64;
+            for i in lo..hi {
+                s += i as u64;
+            }
+            sum.fetch_add(s, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10_000 * 9_999 / 2);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(5000, 4, |i| i * 2);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * 2));
+    }
+
+    #[test]
+    fn dynamic_visits_all() {
+        let count = AtomicU64::new(0);
+        parallel_for_dynamic(3000, 3, 64, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3000);
+    }
+}

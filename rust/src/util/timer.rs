@@ -1,0 +1,109 @@
+//! Wall-clock timing + a named-section time accounting ledger.
+//!
+//! The paper's speedup accounting (§4.2, Fig. 4) separates epoch time into
+//! training compute, hidden-list forward refresh, sorting/selection
+//! overhead, and (in the cost model) communication.  `TimeLedger` gives each
+//! component a named bucket so every epoch record can report the same
+//! breakdown.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Accumulates seconds per named section.
+#[derive(Default, Clone, Debug)]
+pub struct TimeLedger {
+    buckets: BTreeMap<&'static str, f64>,
+}
+
+impl TimeLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &'static str, seconds: f64) {
+        *self.buckets.entry(name).or_insert(0.0) += seconds;
+    }
+
+    /// Time `f` and charge it to `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed_s());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.buckets.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.buckets.values().sum()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.buckets.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn merge(&mut self, other: &TimeLedger) {
+        for (k, v) in other.entries() {
+            self.add(k, v);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.buckets.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = TimeLedger::new();
+        l.add("train", 1.0);
+        l.add("train", 2.0);
+        l.add("sort", 0.5);
+        assert_eq!(l.get("train"), 3.0);
+        assert_eq!(l.total(), 3.5);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut l = TimeLedger::new();
+        let v = l.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(l.get("x") >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = TimeLedger::new();
+        a.add("t", 1.0);
+        let mut b = TimeLedger::new();
+        b.add("t", 2.0);
+        b.add("u", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("t"), 3.0);
+        assert_eq!(a.get("u"), 3.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Integration: the PJRT runtime layer against the AOT artifacts.
+//! Requires `make artifacts` (skips cleanly when artifacts are absent so
+//! cargo test works in a fresh checkout).
+
+use kakurenbo::runtime::{default_artifacts_dir, ModelExecutor, XlaRuntime};
+
+fn runtime() -> Option<XlaRuntime> {
+    XlaRuntime::new(&default_artifacts_dir()).ok()
+}
+
+fn batch_inputs(exec: &ModelExecutor, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let mut rng = kakurenbo::util::rng::Rng::new(seed);
+    let b = exec.meta.batch;
+    let x: Vec<f32> = (0..b * exec.meta.sample_dim()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..b * exec.meta.label_len())
+        .map(|_| rng.below(exec.meta.classes) as i32)
+        .collect();
+    let sw = vec![1.0f32; b];
+    (x, y, sw)
+}
+
+#[test]
+fn train_step_zero_lr_preserves_params() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 7).unwrap();
+    let before = exec.export_params().unwrap();
+    let (x, y, sw) = batch_inputs(&exec, 1);
+    // lr = 0: momentum update runs but w' = w - 0*v' = w
+    exec.train_step(&x, &y, &sw, 0.0).unwrap();
+    let after = exec.export_params().unwrap();
+    for ((n1, p1), (n2, p2)) in before.iter().zip(&after) {
+        assert_eq!(n1, n2);
+        for (a, b) in p1.iter().zip(p2) {
+            assert!((a - b).abs() < 1e-7, "{n1} changed under lr=0");
+        }
+    }
+}
+
+#[test]
+fn train_step_zero_weights_preserve_params() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 7).unwrap();
+    let before = exec.export_params().unwrap();
+    let (x, y, _) = batch_inputs(&exec, 2);
+    let sw = vec![0.0f32; exec.meta.batch];
+    exec.train_step(&x, &y, &sw, 0.5).unwrap();
+    let after = exec.export_params().unwrap();
+    for ((n1, p1), (_, p2)) in before.iter().zip(&after) {
+        for (a, b) in p1.iter().zip(p2) {
+            assert!((a - b).abs() < 1e-6, "{n1} changed under sw=0");
+        }
+    }
+}
+
+#[test]
+fn fwd_stats_matches_train_step_stats() {
+    // the stats returned by train_step are computed on the pre-update
+    // params, so a fwd_stats call *before* the step must agree.
+    let Some(rt) = runtime() else { return };
+    let mut exec = ModelExecutor::new(&rt, "cnn_c32_b64", 3).unwrap();
+    let (x, y, sw) = batch_inputs(&exec, 3);
+    let fwd = exec.fwd_stats(&x, &y).unwrap();
+    let step = exec.train_step(&x, &y, &sw, 0.05).unwrap();
+    for i in 0..exec.meta.batch {
+        assert!((fwd.loss[i] - step.loss[i]).abs() < 1e-4, "loss[{i}]");
+        assert_eq!(fwd.correct[i], step.correct[i], "correct[{i}]");
+        assert!((fwd.conf[i] - step.conf[i]).abs() < 1e-4, "conf[{i}]");
+    }
+}
+
+#[test]
+fn stats_are_well_formed() {
+    let Some(rt) = runtime() else { return };
+    let exec = ModelExecutor::new(&rt, "mlp_c100_b64", 11).unwrap();
+    let (x, y, _) = batch_inputs(&exec, 4);
+    let s = exec.fwd_stats(&x, &y).unwrap();
+    assert_eq!(s.loss.len(), 64);
+    for i in 0..64 {
+        assert!(s.loss[i].is_finite() && s.loss[i] >= 0.0);
+        assert!(s.correct[i] == 0.0 || s.correct[i] == 1.0);
+        assert!(s.conf[i] > 0.0 && s.conf[i] <= 1.0 + 1e-5);
+    }
+}
+
+#[test]
+fn training_reduces_loss_on_learnable_batch() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 5).unwrap();
+    let (x, y, sw) = batch_inputs(&exec, 5);
+    let first = exec.fwd_stats(&x, &y).unwrap();
+    for _ in 0..60 {
+        exec.train_step(&x, &y, &sw, 0.05).unwrap();
+    }
+    let last = exec.fwd_stats(&x, &y).unwrap();
+    let m0: f32 = first.loss.iter().sum::<f32>() / 64.0;
+    let m1: f32 = last.loss.iter().sum::<f32>() / 64.0;
+    assert!(m1 < m0 * 0.3, "memorization failed: {m0} -> {m1}");
+}
+
+#[test]
+fn fwd_embed_shapes_and_probs() {
+    let Some(rt) = runtime() else { return };
+    let exec = ModelExecutor::new(&rt, "cnn_c32_b64", 9).unwrap();
+    let (x, y, _) = batch_inputs(&exec, 6);
+    let e = exec.fwd_embed(&x, &y).unwrap();
+    assert_eq!(e.emb.len(), 64 * exec.meta.embed_dim);
+    assert_eq!(e.probs.len(), 64 * exec.meta.classes);
+    for row in e.probs.chunks(exec.meta.classes) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "probs row sums to {s}");
+        assert!(row.iter().all(|&p| (0.0..=1.0 + 1e-5).contains(&p)));
+    }
+}
+
+#[test]
+fn reset_params_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 42).unwrap();
+    let a = exec.export_params().unwrap();
+    let (x, y, sw) = batch_inputs(&exec, 7);
+    exec.train_step(&x, &y, &sw, 0.1).unwrap();
+    exec.reset_params(42).unwrap();
+    let b = exec.export_params().unwrap();
+    assert_eq!(a.len(), b.len());
+    for ((_, pa), (_, pb)) in a.iter().zip(&b) {
+        assert_eq!(pa, pb);
+    }
+    exec.reset_params(43).unwrap();
+    let c = exec.export_params().unwrap();
+    assert!(a.iter().zip(&c).any(|((_, pa), (_, pc))| pa != pc));
+}
+
+#[test]
+fn import_params_matches_by_name_and_shape() {
+    let Some(rt) = runtime() else { return };
+    let src = ModelExecutor::new(&rt, "mlp_c64_b64", 1).unwrap();
+    let mut dst = ModelExecutor::new(&rt, "mlp_c10_b64", 2).unwrap();
+    let trunk = src.export_params().unwrap();
+    let imported = dst.import_params(&trunk).unwrap();
+    // fc1/fc2 (w+b) match; the c64 vs c10 heads must NOT transfer
+    assert_eq!(imported, 4, "expected exactly the 4 trunk leaves");
+    let dst_params = dst.export_params().unwrap();
+    let src_fc1 = &trunk.iter().find(|(n, _)| n == "fc1/w").unwrap().1;
+    let dst_fc1 = &dst_params.iter().find(|(n, _)| n == "fc1/w").unwrap().1;
+    assert_eq!(src_fc1, dst_fc1);
+}
+
+#[test]
+fn segnet_variant_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut exec = ModelExecutor::new(&rt, "segnet_b32", 3).unwrap();
+    assert_eq!(exec.meta.label_len(), 16 * 16);
+    let (x, y, sw) = batch_inputs(&exec, 8);
+    let s = exec.train_step(&x, &y, &sw, 0.01).unwrap();
+    assert_eq!(s.loss.len(), 32);
+    assert!(s.loss.iter().all(|l| l.is_finite()));
+    // segnet has no embed artifact
+    assert!(exec.fwd_embed(&x, &y).is_err());
+}

@@ -1,0 +1,188 @@
+//! Integration: full training runs through the coordinator for every
+//! strategy — each must complete, learn, and exhibit its paper-defining
+//! behaviour at small scale.
+
+use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+use kakurenbo::coordinator::Trainer;
+use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn runtime() -> Option<XlaRuntime> {
+    XlaRuntime::new(&default_artifacts_dir()).ok()
+}
+
+/// Small, fast config used across tests.
+fn small_cfg() -> kakurenbo::config::ExperimentConfig {
+    let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+    cfg.epochs = 6;
+    if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
+        c.n_train = 768;
+        c.n_val = 256;
+    }
+    cfg.eval_every = 2;
+    cfg
+}
+
+fn run(strategy: StrategyConfig) -> kakurenbo::metrics::RunResult {
+    let rt = runtime().unwrap();
+    let mut cfg = small_cfg();
+    cfg.strategy = strategy;
+    Trainer::new(&rt, cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn baseline_learns() {
+    if runtime().is_none() { return }
+    let r = run(StrategyConfig::Baseline);
+    assert_eq!(r.records.len(), 6);
+    assert!(r.best_acc > 0.3, "acc {}", r.best_acc);
+    // loss decreases
+    assert!(r.records.last().unwrap().train_loss < r.records[0].train_loss);
+}
+
+#[test]
+fn kakurenbo_hides_and_stays_close_to_baseline() {
+    if runtime().is_none() { return }
+    let b = run(StrategyConfig::Baseline);
+    let k = run(StrategyConfig::kakurenbo(0.3));
+    // hides samples from epoch 1 on
+    assert_eq!(k.records[0].hidden, 0, "epoch 0 must train on everything");
+    assert!(k.records[2..].iter().any(|r| r.hidden > 0), "never hid anything");
+    // trains on fewer samples in hiding epochs
+    let hid = k.records.iter().find(|r| r.hidden > 0).unwrap();
+    assert_eq!(hid.trained_samples + hid.hidden, 768);
+    // accuracy within a few points of baseline at this tiny scale
+    assert!(
+        k.best_acc > b.best_acc - 0.08,
+        "kakurenbo {} vs baseline {}",
+        k.best_acc,
+        b.best_acc
+    );
+    // LR adjustment applied in hiding epochs
+    assert!(hid.lr > hid.base_lr);
+}
+
+#[test]
+fn iswr_trains_full_epochs_with_weights() {
+    if runtime().is_none() { return }
+    let r = run(StrategyConfig::Iswr);
+    for rec in &r.records {
+        assert_eq!(rec.trained_samples, 768, "ISWR keeps the epoch size");
+        assert_eq!(rec.hidden, 0);
+    }
+    assert!(r.best_acc > 0.25);
+}
+
+#[test]
+fn sb_backprops_fewer_samples() {
+    if runtime().is_none() { return }
+    let r = run(StrategyConfig::SelectiveBackprop { beta: 1.0 });
+    let late = &r.records[3..];
+    for rec in late {
+        assert_eq!(rec.trained_samples, 768); // forward over everything
+        assert!(
+            rec.backprop_samples < 700,
+            "SB should cut backprops, got {}",
+            rec.backprop_samples
+        );
+    }
+}
+
+#[test]
+fn forget_prunes_and_restarts() {
+    if runtime().is_none() { return }
+    let rt = runtime().unwrap();
+    let mut cfg = small_cfg();
+    cfg.epochs = 8;
+    cfg.strategy = StrategyConfig::Forget { prune_epoch: 3, fraction: 0.25 };
+    let r = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    for e in 0..3 {
+        assert_eq!(r.records[e].trained_samples, 768);
+    }
+    for e in 3..8 {
+        assert_eq!(r.records[e].trained_samples, 768 - 192, "epoch {e}");
+    }
+    // LR schedule restarted: warmup epoch right after the prune
+    assert!(r.records[3].base_lr <= r.records[2].base_lr + 1e-12);
+}
+
+#[test]
+fn gradmatch_selects_weighted_subset() {
+    if runtime().is_none() { return }
+    let r = run(StrategyConfig::GradMatch { fraction: 0.3, every_r: 2 });
+    // epoch 0 full, later epochs ~70%
+    assert_eq!(r.records[0].trained_samples, 768);
+    for rec in &r.records[1..] {
+        assert!(
+            rec.trained_samples < 700 && rec.trained_samples > 300,
+            "epoch {} trained {}",
+            rec.epoch,
+            rec.trained_samples
+        );
+    }
+}
+
+#[test]
+fn random_hiding_fixed_fraction() {
+    if runtime().is_none() { return }
+    let r = run(StrategyConfig::RandomHiding { fraction: 0.2 });
+    for rec in &r.records[1..] {
+        assert_eq!(rec.hidden, (768.0 * 0.2) as usize);
+    }
+}
+
+#[test]
+fn deterministic_runs_same_seed() {
+    if runtime().is_none() { return }
+    let a = run(StrategyConfig::kakurenbo(0.3));
+    let b = run(StrategyConfig::kakurenbo(0.3));
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.final_acc, b.final_acc);
+    let ha: Vec<usize> = a.records.iter().map(|r| r.hidden).collect();
+    let hb: Vec<usize> = b.records.iter().map(|r| r.hidden).collect();
+    assert_eq!(ha, hb);
+}
+
+#[test]
+fn different_seeds_differ() {
+    if runtime().is_none() { return }
+    let rt = runtime().unwrap();
+    let mut cfg = small_cfg();
+    cfg.strategy = StrategyConfig::Baseline;
+    let a = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    cfg.seed = 4242;
+    let b = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_ne!(a.final_acc, b.final_acc);
+}
+
+#[test]
+fn segnet_workload_trains() {
+    if runtime().is_none() { return }
+    let rt = runtime().unwrap();
+    let mut cfg = presets::by_name("deepcam").unwrap();
+    cfg.epochs = 4;
+    if let DatasetConfig::DeepcamProxy(ref mut c) = cfg.dataset {
+        c.n_train = 256;
+        c.n_val = 64;
+    }
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    let r = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(r.records.last().unwrap().train_loss < r.records[0].train_loss);
+}
+
+#[test]
+fn workers_change_modeled_time_not_semantics() {
+    if runtime().is_none() { return }
+    let rt = runtime().unwrap();
+    let mut cfg = small_cfg();
+    cfg.strategy = StrategyConfig::Baseline;
+    cfg.workers = 1;
+    let w1 = Trainer::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    cfg.workers = 8;
+    let w8 = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    // modeled time shrinks with workers; trained sample count unchanged
+    assert!(w8.total_modeled_time < w1.total_modeled_time);
+    assert_eq!(
+        w1.records[0].trained_samples,
+        w8.records[0].trained_samples
+    );
+}

@@ -1,0 +1,311 @@
+//! Property-based tests (mini-proptest harness, util::proptest) over the
+//! coordinator's invariants: hiding selector, schedules, samplers,
+//! sharding, DropTop, and the LR rule.
+
+use kakurenbo::data::shard::{global_step_order, shard_order};
+use kakurenbo::hiding::droptop::drop_top;
+use kakurenbo::hiding::fraction::FractionSchedule;
+use kakurenbo::hiding::lr::adjusted_lr;
+use kakurenbo::hiding::selector::{select, SelectMode, SelectorCfg};
+use kakurenbo::sampler::alias::AliasTable;
+use kakurenbo::sampler::fenwick::FenwickSampler;
+use kakurenbo::state::SampleState;
+use kakurenbo::util::proptest::{check, Gen, Pair, USize, VecF32};
+use kakurenbo::util::rng::Rng;
+
+/// Random SampleState generator (losses + PA/PC flags).
+struct StateGen {
+    max_n: usize,
+}
+
+#[derive(Clone, Debug)]
+struct StateCase {
+    losses: Vec<f32>,
+    correct: Vec<bool>,
+    conf: Vec<f32>,
+}
+
+impl Gen for StateGen {
+    type Value = StateCase;
+
+    fn generate(&self, rng: &mut Rng) -> StateCase {
+        let n = 1 + rng.below(self.max_n);
+        StateCase {
+            losses: (0..n).map(|_| rng.f32() * 12.0).collect(),
+            correct: (0..n).map(|_| rng.chance(0.6)).collect(),
+            conf: (0..n).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    fn shrink(&self, v: &StateCase) -> Vec<StateCase> {
+        if v.losses.len() <= 1 {
+            return vec![];
+        }
+        let h = v.losses.len() / 2;
+        vec![StateCase {
+            losses: v.losses[..h].to_vec(),
+            correct: v.correct[..h].to_vec(),
+            conf: v.conf[..h].to_vec(),
+        }]
+    }
+}
+
+fn build_state(c: &StateCase) -> SampleState {
+    let mut s = SampleState::new(c.losses.len());
+    for i in 0..c.losses.len() {
+        s.record(i, c.losses[i], c.correct[i], c.conf[i], 0);
+    }
+    s
+}
+
+#[test]
+fn selector_partitions_and_respects_ceiling() {
+    check("selector-partition", 11, 150, &StateGen { max_n: 300 }, |case| {
+        let state = build_state(case);
+        let n = case.losses.len();
+        for f in [0.0, 0.13, 0.3, 0.77, 0.999] {
+            let sel = select(&state, f, &SelectorCfg::default());
+            let mut all: Vec<u32> = sel.train.iter().chain(&sel.hidden).copied().collect();
+            all.sort_unstable();
+            if all != (0..n as u32).collect::<Vec<_>>() {
+                return Err(format!("not a partition at f={f}"));
+            }
+            if sel.hidden.len() > (n as f64 * f).floor() as usize {
+                return Err(format!("ceiling exceeded at f={f}"));
+            }
+            // every hidden sample satisfies the MB predicate
+            for &h in &sel.hidden {
+                let i = h as usize;
+                if !(case.correct[i] && case.conf[i] >= 0.7) {
+                    return Err(format!("hidden sample {i} fails PA/PC rule"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn selector_hidden_losses_dominated_by_train_losses() {
+    // max(loss of hidden candidates) <= max loss overall, and hidden set
+    // comes from the F*N smallest losses: every hidden loss must be <= the
+    // (F*N)-th smallest loss.
+    check("selector-order", 13, 100, &StateGen { max_n: 200 }, |case| {
+        let state = build_state(case);
+        let n = case.losses.len();
+        let f = 0.4;
+        let k = (n as f64 * f).floor() as usize;
+        if k == 0 {
+            return Ok(());
+        }
+        let mut sorted = case.losses.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let kth = sorted[k - 1];
+        let sel = select(&state, f, &SelectorCfg::default());
+        for &h in &sel.hidden {
+            if case.losses[h as usize] > kth {
+                return Err(format!(
+                    "hidden loss {} above k-th smallest {kth}",
+                    case.losses[h as usize]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quickselect_and_fullsort_agree() {
+    check("select-modes-agree", 17, 100, &StateGen { max_n: 250 }, |case| {
+        let state = build_state(case);
+        for f in [0.1, 0.5, 0.9] {
+            let a = select(&state, f, &SelectorCfg { mode: SelectMode::QuickSelect, ..Default::default() });
+            let b = select(&state, f, &SelectorCfg { mode: SelectMode::FullSort, ..Default::default() });
+            let mut ha = a.hidden;
+            let mut hb = b.hidden;
+            ha.sort_unstable();
+            hb.sort_unstable();
+            if ha != hb {
+                return Err(format!("modes disagree at f={f}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fraction_schedule_monotone_and_bounded() {
+    check(
+        "fraction-monotone",
+        3,
+        100,
+        &Pair(USize { lo: 1, hi: 500 }, USize { lo: 1, hi: 99 }),
+        |&(total, f_pct)| {
+            let f = f_pct as f64 / 100.0;
+            let s = FractionSchedule::paper_default(f, total);
+            s.validate().map_err(|e| e.to_string())?;
+            let mut prev = f64::INFINITY;
+            for e in 0..total {
+                let v = s.at(e);
+                if v > f + 1e-12 {
+                    return Err(format!("F_e {v} above ceiling {f} at {e}"));
+                }
+                if v > prev + 1e-12 {
+                    return Err(format!("non-monotone at {e}"));
+                }
+                prev = v;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lr_rule_update_mass_invariant() {
+    check("lr-mass", 5, 200, &USize { lo: 0, hi: 99 }, |&f_pct| {
+        let f = f_pct as f64 / 100.0;
+        let eta = adjusted_lr(0.1, f);
+        // (1-F) N steps at eta == N steps at 0.1
+        let mass = (1.0 - f) * eta;
+        if (mass - 0.1).abs() > 1e-12 {
+            return Err(format!("mass {mass}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shard_union_covers_order() {
+    check(
+        "shard-cover",
+        7,
+        150,
+        &Pair(USize { lo: 1, hi: 2000 }, USize { lo: 1, hi: 17 }),
+        |&(n, w)| {
+            let order: Vec<u32> = (0..n as u32).rev().collect();
+            let shards = shard_order(&order, w);
+            // equal sizes
+            let sz = shards[0].indices.len();
+            if !shards.iter().all(|s| s.indices.len() == sz) {
+                return Err("ragged shards".into());
+            }
+            // union covers all samples
+            let mut seen = vec![false; n];
+            for s in &shards {
+                for &i in &s.indices {
+                    seen[i as usize] = true;
+                }
+            }
+            if !seen.iter().all(|&b| b) {
+                return Err("missing samples".into());
+            }
+            // global order has w*sz entries
+            if global_step_order(&shards).len() != w * sz {
+                return Err("global order size".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn droptop_drops_exactly_top_fraction() {
+    check("droptop", 23, 150, &StateGen { max_n: 300 }, |case| {
+        let state = build_state(case);
+        let n = case.losses.len();
+        let train: Vec<u32> = (0..n as u32).collect();
+        let (kept, dropped) = drop_top(&state, &train, 0.1);
+        let k = (n as f64 * 0.1).floor() as usize;
+        if dropped.len() != k {
+            return Err(format!("dropped {} expected {k}", dropped.len()));
+        }
+        if kept.len() + dropped.len() != n {
+            return Err("partition broken".into());
+        }
+        let max_kept = kept
+            .iter()
+            .map(|&i| case.losses[i as usize])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let min_dropped = dropped
+            .iter()
+            .map(|&i| case.losses[i as usize])
+            .fold(f32::INFINITY, f32::min);
+        if !dropped.is_empty() && min_dropped < max_kept - 1e-6 {
+            return Err(format!("dropped {min_dropped} < kept {max_kept}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn alias_table_unbiased_on_random_weights() {
+    check("alias-unbiased", 29, 12, &VecF32 { min_len: 2, max_len: 40, lo: 0.0, hi: 5.0 }, |ws| {
+        let weights: Vec<f64> = ws.iter().map(|&w| w as f64).collect();
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return Ok(());
+        }
+        let table = AliasTable::new(&weights);
+        let mut rng = Rng::new(77);
+        let draws = 60_000;
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[table.draw(&mut rng) as usize] += 1;
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            let expect = w / total;
+            let got = counts[i] as f64 / draws as f64;
+            if (got - expect).abs() > 0.02 {
+                return Err(format!("i={i} got {got:.3} expect {expect:.3}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fenwick_matches_alias_distribution() {
+    check("fenwick-alias", 31, 8, &VecF32 { min_len: 2, max_len: 30, lo: 0.1, hi: 3.0 }, |ws| {
+        let weights: Vec<f64> = ws.iter().map(|&w| w as f64).collect();
+        let total: f64 = weights.iter().sum();
+        let fen = FenwickSampler::new(&weights);
+        let mut rng = Rng::new(123);
+        let draws = 40_000;
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[fen.draw(&mut rng).unwrap() as usize] += 1;
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            let expect = w / total;
+            let got = counts[i] as f64 / draws as f64;
+            if (got - expect).abs() > 0.025 {
+                return Err(format!("i={i} got {got:.3} expect {expect:.3}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn state_roll_epoch_preserves_counts() {
+    check("state-roll", 37, 100, &USize { lo: 1, hi: 500 }, |&n| {
+        let mut s = SampleState::new(n);
+        let mut rng = Rng::new(n as u64);
+        let k = rng.below(n + 1);
+        let hidden: Vec<u32> = rng.sample_indices(n, k);
+        s.set_hidden(&hidden);
+        if s.hidden_count() != k {
+            return Err("hidden count".into());
+        }
+        s.roll_epoch();
+        if s.hidden_count() != 0 {
+            return Err("roll didn't clear".into());
+        }
+        // hiding the same set again: hidden_again == k
+        s.set_hidden(&hidden);
+        if s.hidden_again_count() != k {
+            return Err("hidden_again mismatch".into());
+        }
+        Ok(())
+    });
+}
