@@ -8,6 +8,7 @@
 
 use kakurenbo::data::batch::BatchAssembler;
 use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::engine::{Engine, EvalSink, StepMode};
 use kakurenbo::hiding::selector::{select, SelectMode, SelectorCfg};
 use kakurenbo::report::BenchCtx;
 use kakurenbo::runtime::ModelExecutor;
@@ -117,6 +118,33 @@ fn main() -> anyhow::Result<()> {
     row("executor train_step (B=64 cnn)", tt, b, &mut payload);
     row("executor fwd_stats (B=64 cnn)", tf2, b, &mut payload);
     println!("  bwd+update share of step: {:.0}%", (1.0 - tf2 / tt) * 100.0);
+
+    // --- step engine: serial vs pipelined (gather overlapped with exec) ------
+    let cfg = kakurenbo::config::presets::by_name("cifar100_wrn")?;
+    let tv = cfg.dataset.generate(cfg.seed);
+    let mut eexec = ModelExecutor::new(&ctx.rt, &cfg.variant, cfg.seed)?;
+    let mut eng = Engine::new(&tv.train, eexec.meta.batch);
+    let sweep: Vec<u32> = (0..tv.train.n as u32).collect();
+    let ereps = ctx.scale(5, 2);
+    let mut sweep_time = |eng: &mut Engine, exec: &mut ModelExecutor| {
+        time_it(ereps, || {
+            let mut sink = EvalSink::default();
+            eng.run(exec, &tv.train, &sweep, None, StepMode::Forward, &mut sink)
+                .unwrap();
+            std::hint::black_box(sink.result());
+        })
+    };
+    eng.overlap = false;
+    let e_serial = sweep_time(&mut eng, &mut eexec);
+    eng.overlap = true;
+    let e_olap = sweep_time(&mut eng, &mut eexec);
+    row("engine fwd sweep serial", e_serial, tv.train.n, &mut payload);
+    row("engine fwd sweep pipelined", e_olap, tv.train.n, &mut payload);
+    println!(
+        "  engine pipelining: {:.2}x vs serial (1 prefetch thread, {} cores)",
+        e_serial / e_olap,
+        kakurenbo::util::threadpool::default_threads()
+    );
 
     t.print();
     ctx.save_json("hotpath", &kakurenbo::util::json::Json::Arr(payload))?;

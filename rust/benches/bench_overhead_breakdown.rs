@@ -9,8 +9,10 @@
 
 use kakurenbo::config::{presets, StrategyConfig};
 use kakurenbo::coordinator::{CostModel, Trainer};
+use kakurenbo::engine::{EvalSink, StepMode};
 use kakurenbo::report::BenchCtx;
 use kakurenbo::util::table::Table;
+use kakurenbo::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
     let ctx = BenchCtx::init("Overhead breakdown + distributed projection")?;
@@ -49,6 +51,44 @@ fn main() -> anyhow::Result<()> {
             format!("{tot:.4}"),
             format!("{:+.1}%", (tot / base_total - 1.0) * 100.0),
         ]);
+    }
+    t.print();
+
+    // --- engine schedule: host gather on vs off the critical path -----------
+    // The paper's overhead argument (§5, Fig. 9) needs the non-GPU epoch
+    // work overlapped with device execution; measure the engine's two
+    // schedules on a full-train forward sweep (the refresh/eval shape).
+    let mut ecfg = base.clone();
+    ecfg.strategy = StrategyConfig::Baseline;
+    ecfg.name = "overhead/engine".into();
+    let mut etr = Trainer::new(&ctx.rt, ecfg)?;
+    let sweep: Vec<u32> = (0..etr.data.train.n as u32).collect();
+    let mut t = Table::new("Engine schedule (full-train fwd sweep)")
+        .header(&["schedule", "time (s)", "vs serial"]);
+    let mut serial_s = 0.0;
+    let mut engine_payload = Vec::new();
+    for (label, overlap) in [("serial", false), ("pipelined", true)] {
+        etr.engine.overlap = overlap;
+        let timer = Timer::start();
+        let mut sink = EvalSink::default();
+        etr.engine.run(
+            &mut etr.exec,
+            &etr.data.train,
+            &sweep,
+            None,
+            StepMode::Forward,
+            &mut sink,
+        )?;
+        let secs = timer.elapsed_s();
+        if !overlap {
+            serial_s = secs;
+        }
+        t.row(vec![
+            label.to_string(),
+            format!("{secs:.4}"),
+            if overlap { format!("{:+.1}%", (secs / serial_s - 1.0) * 100.0) } else { "-".into() },
+        ]);
+        engine_payload.push(kakurenbo::jobj![("schedule", label), ("seconds", secs)]);
     }
     t.print();
 
@@ -92,6 +132,10 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    payload.push(kakurenbo::jobj![(
+        "engine_schedules",
+        kakurenbo::util::json::Json::Arr(engine_payload)
+    )]);
     ctx.save_json("overhead_breakdown", &kakurenbo::util::json::Json::Arr(payload))?;
     Ok(())
 }

@@ -4,19 +4,21 @@
 //!
 //! This is the L3 "request path": after construction no Python and no
 //! compilation happens — only artifact execution and host-side
-//! coordination.
+//! coordination.  The coordinator *plans* (strategy selection, sharding,
+//! learning rate); all per-step execution — batch gather, device steps,
+//! stat recording — routes through the pipelined `engine` module, which
+//! overlaps host-side gather with device execution.
 
 use crate::config::{ExperimentConfig, StrategyConfig};
 use crate::coordinator::costmodel::CostModel;
-use crate::data::batch::BatchAssembler;
 use crate::data::shard::{global_step_order, shard_order};
 use crate::data::TrainVal;
-use crate::hiding::fraction::FractionSchedule;
+use crate::engine::{execute_plan, Engine, EvalSink, RefreshSink, StepMode};
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
 use crate::state::SampleState;
 use crate::strategies::sb::SbSelector;
-use crate::strategies::{BatchMode, EpochPlan, PlanCtx, Strategy};
+use crate::strategies::{BatchMode, PlanCtx, Strategy};
 use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 use crate::util::timer::Timer;
@@ -27,12 +29,16 @@ pub struct Trainer {
     pub data: TrainVal,
     pub state: SampleState,
     pub cost: CostModel,
+    /// The pipelined step-execution driver (owns the reusable batch
+    /// buffers shared by training, refresh, and eval passes).
+    pub engine: Engine,
     strategy: Box<dyn Strategy>,
     rng: Rng,
     sb: SbSelector,
-    asm: BatchAssembler,
     /// Pending SB-selected samples waiting to fill a training batch.
     sb_queue: Vec<u32>,
+    /// Cached 0..val.n index list (reused across evals).
+    eval_idx: Vec<u32>,
     /// Epoch at which training last (re)started — FORGET resets the LR
     /// schedule when it restarts from scratch (paper §4: "training then
     /// restarts from epoch 0").
@@ -74,19 +80,21 @@ impl Trainer {
             StrategyConfig::SelectiveBackprop { beta } => beta,
             _ => 1.0,
         };
-        let asm = BatchAssembler::new(&data.train, exec.meta.batch);
+        let engine = Engine::new(&data.train, exec.meta.batch);
+        let eval_idx: Vec<u32> = (0..data.val.n as u32).collect();
         Ok(Trainer {
             rng: Rng::new(cfg.seed ^ 0x7472_6169),
             sb: SbSelector::new(beta, 4096),
             sb_queue: Vec::new(),
+            eval_idx,
             schedule_offset: 0,
             cfg,
             exec,
             data,
             state,
             cost,
+            engine,
             strategy,
-            asm,
         })
     }
 
@@ -158,19 +166,42 @@ impl Trainer {
         // --- learning rate -----------------------------------------------
         rec.base_lr = self.cfg.lr.at(epoch - self.schedule_offset);
         rec.lr = rec.base_lr * plan.lr_scale;
-        rec.fraction_ceiling = self.fraction_ceiling(epoch);
+        rec.fraction_ceiling = self.strategy.fraction_ceiling(epoch);
         rec.max_hidden = plan.max_hidden;
         rec.hidden = plan.hidden.len();
         rec.moved_back = plan.moved_back;
 
-        // --- train --------------------------------------------------------
+        // --- train (through the step engine) -------------------------------
         let t = Timer::start();
-        match plan.batch_mode {
-            BatchMode::Plain => self.execute_plain(&plan, rec.lr as f32, epoch, &mut rec)?,
-            BatchMode::SelectiveBackprop { .. } => {
-                self.execute_sb(&plan, rec.lr as f32, epoch, &mut rec)?
+        // Distributed fidelity: interleave worker shards into the global
+        // batch order (weighted plans skip this — they are W=1 per paper;
+        // SB consumes its candidate stream unsharded).  Avoid cloning the
+        // epoch order in the common single-worker / unweighted case
+        // (§Perf: saves an O(N) copy per epoch).
+        let sharded: Option<Vec<u32>> = match plan.batch_mode {
+            BatchMode::Plain if self.cfg.workers > 1 && plan.weights.is_none() => {
+                Some(global_step_order(&shard_order(&plan.order, self.cfg.workers)))
             }
-        }
+            _ => None,
+        };
+        let order: &[u32] = sharded.as_deref().unwrap_or(&plan.order);
+        let outcome = execute_plan(
+            &mut self.engine,
+            &mut self.exec,
+            &self.data.train,
+            order,
+            plan.weights.as_deref(),
+            plan.batch_mode,
+            rec.lr as f32,
+            epoch as u32,
+            &mut self.state,
+            &mut self.sb,
+            &mut self.rng,
+            &mut self.sb_queue,
+        )?;
+        rec.trained_samples = outcome.trained_samples;
+        rec.backprop_samples = outcome.backprop_samples;
+        rec.train_loss = outcome.train_loss;
         rec.time_train = t.elapsed_s();
 
         // --- hidden-list stat refresh (paper step D.1) ---------------------
@@ -228,161 +259,31 @@ impl Trainer {
         Ok(rec)
     }
 
-    fn fraction_ceiling(&self, epoch: usize) -> f64 {
-        match &self.cfg.strategy {
-            StrategyConfig::Kakurenbo { max_fraction, components, .. } => {
-                let mut s = FractionSchedule::paper_default(*max_fraction, self.cfg.epochs);
-                s.enabled = components.reduce_fraction;
-                s.at(epoch)
-            }
-            StrategyConfig::RandomHiding { fraction }
-            | StrategyConfig::Forget { fraction, .. }
-            | StrategyConfig::El2n { fraction, .. }
-            | StrategyConfig::GradMatch { fraction, .. } => *fraction,
-            StrategyConfig::InfoBatch { r } => *r,
-            _ => 0.0,
-        }
-    }
-
-    /// Plain mode: train on plan.order, batch by batch, recording stats.
-    fn execute_plain(
-        &mut self,
-        plan: &EpochPlan,
-        lr: f32,
-        epoch: usize,
-        rec: &mut EpochRecord,
-    ) -> anyhow::Result<()> {
-        let b = self.exec.meta.batch;
-        // Distributed fidelity: interleave worker shards into the global
-        // batch order (weighted plans skip this — they are W=1 per paper).
-        // Avoid cloning the epoch order in the common single-worker /
-        // unweighted case (§Perf: saves an O(N) copy per epoch).
-        let sharded: Option<Vec<u32>> = if self.cfg.workers > 1 && plan.weights.is_none() {
-            Some(global_step_order(&shard_order(&plan.order, self.cfg.workers)))
-        } else {
-            None
-        };
-        let order: &[u32] = sharded.as_deref().unwrap_or(&plan.order);
-        let mut loss_sum = 0.0f64;
-        let mut loss_n = 0usize;
-        for (ci, chunk) in order.chunks(b).enumerate() {
-            let w: Option<&[f32]> = plan
-                .weights
-                .as_ref()
-                .map(|ws| &ws[ci * b..ci * b + chunk.len()]);
-            self.asm.fill(&self.data.train, chunk, w);
-            let stats = self
-                .exec
-                .train_step(&self.asm.x, &self.asm.y, &self.asm.sw, lr)?;
-            for (slot, &sample) in chunk.iter().enumerate() {
-                self.state.record(
-                    sample as usize,
-                    stats.loss[slot],
-                    stats.correct[slot] > 0.5,
-                    stats.conf[slot],
-                    epoch as u32,
-                );
-                loss_sum += stats.loss[slot] as f64;
-                loss_n += 1;
-            }
-        }
-        rec.trained_samples = order.len();
-        rec.backprop_samples = order.len();
-        rec.train_loss = loss_sum / loss_n.max(1) as f64;
-        Ok(())
-    }
-
-    /// Selective-Backprop mode: forward every candidate batch, accept
-    /// samples with probability CDF(loss)^beta, backprop full batches of
-    /// accepted samples.
-    fn execute_sb(
-        &mut self,
-        plan: &EpochPlan,
-        lr: f32,
-        epoch: usize,
-        rec: &mut EpochRecord,
-    ) -> anyhow::Result<()> {
-        let b = self.exec.meta.batch;
-        let mut loss_sum = 0.0f64;
-        let mut loss_n = 0usize;
-        let mut backprop = 0usize;
-        self.sb_queue.clear();
-        for chunk in plan.order.chunks(b) {
-            self.asm.fill(&self.data.train, chunk, None);
-            let stats = self.exec.fwd_stats(&self.asm.x, &self.asm.y)?;
-            for (slot, &sample) in chunk.iter().enumerate() {
-                self.state.record(
-                    sample as usize,
-                    stats.loss[slot],
-                    stats.correct[slot] > 0.5,
-                    stats.conf[slot],
-                    epoch as u32,
-                );
-                loss_sum += stats.loss[slot] as f64;
-                loss_n += 1;
-                if self.sb.accept(stats.loss[slot], &mut self.rng) {
-                    self.sb_queue.push(sample);
-                }
-            }
-            while self.sb_queue.len() >= b {
-                let batch: Vec<u32> = self.sb_queue.drain(..b).collect();
-                self.asm.fill(&self.data.train, &batch, None);
-                self.exec
-                    .train_step(&self.asm.x, &self.asm.y, &self.asm.sw, lr)?;
-                backprop += b;
-            }
-        }
-        if !self.sb_queue.is_empty() {
-            let batch: Vec<u32> = self.sb_queue.drain(..).collect();
-            self.asm.fill(&self.data.train, &batch, None);
-            self.exec
-                .train_step(&self.asm.x, &self.asm.y, &self.asm.sw, lr)?;
-            backprop += batch.len();
-        }
-        rec.trained_samples = plan.order.len();
-        rec.backprop_samples = backprop;
-        rec.train_loss = loss_sum / loss_n.max(1) as f64;
-        Ok(())
-    }
-
     /// Forward-only stat refresh over `indices` (hidden list).
     fn refresh_stats(&mut self, indices: &[u32], epoch: u32) -> anyhow::Result<()> {
-        let b = self.exec.meta.batch;
-        for chunk in indices.chunks(b) {
-            self.asm.fill(&self.data.train, chunk, None);
-            let stats = self.exec.fwd_stats(&self.asm.x, &self.asm.y)?;
-            for (slot, &sample) in chunk.iter().enumerate() {
-                self.state.record(
-                    sample as usize,
-                    stats.loss[slot],
-                    stats.correct[slot] > 0.5,
-                    stats.conf[slot],
-                    epoch,
-                );
-            }
-        }
-        Ok(())
+        let mut sink = RefreshSink::new(&mut self.state, epoch);
+        self.engine.run(
+            &mut self.exec,
+            &self.data.train,
+            indices,
+            None,
+            StepMode::Forward,
+            &mut sink,
+        )
     }
 
     /// Validation top-1 accuracy + mean loss.
     pub fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
-        let b = self.exec.meta.batch;
-        let val = &self.data.val;
-        let mut asm = BatchAssembler::new(val, b);
-        let mut correct = 0.0f64;
-        let mut loss = 0.0f64;
-        let mut n = 0usize;
-        let all: Vec<u32> = (0..val.n as u32).collect();
-        for chunk in all.chunks(b) {
-            asm.fill(val, chunk, None);
-            let stats = self.exec.fwd_stats(&asm.x, &asm.y)?;
-            for slot in 0..chunk.len() {
-                correct += stats.correct[slot] as f64;
-                loss += stats.loss[slot] as f64;
-                n += 1;
-            }
-        }
-        Ok((correct / n.max(1) as f64, loss / n.max(1) as f64))
+        let mut sink = EvalSink::default();
+        self.engine.run(
+            &mut self.exec,
+            &self.data.val,
+            &self.eval_idx,
+            None,
+            StepMode::Forward,
+            &mut sink,
+        )?;
+        Ok(sink.result())
     }
 
     pub fn strategy_name(&self) -> String {

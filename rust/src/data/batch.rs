@@ -15,7 +15,8 @@ pub struct BatchAssembler {
     pub sw: Vec<f32>,
     /// How many real (non-padding) samples the current batch holds.
     pub real: usize,
-    /// The sample index each slot holds (padding slots repeat the last).
+    /// The sample index each slot holds (padding slots carry the
+    /// `u32::MAX` sentinel: not a real sample).
     pub slots: Vec<u32>,
 }
 
@@ -29,6 +30,12 @@ impl BatchAssembler {
             real: 0,
             slots: vec![0; batch],
         }
+    }
+
+    /// Whether the staging buffers are sized for `data`'s sample layout.
+    pub fn matches(&self, data: &Dataset) -> bool {
+        self.x.len() == self.batch * data.sample_dim
+            && self.y.len() == self.batch * data.label_len
     }
 
     /// Gather `indices` (<= batch) into the staging buffers; missing slots
@@ -51,6 +58,46 @@ impl BatchAssembler {
             self.y[slot * ll..(slot + 1) * ll].copy_from_slice(data.sample_y(0));
             self.sw[slot] = 0.0; // padding: zero weight => zero gradient
             self.slots[slot] = u32::MAX; // sentinel: not a real sample
+        }
+    }
+}
+
+/// A pair of parked `BatchAssembler`s the step engine rotates between the
+/// prefetch thread and the device thread.  Buffers are handed out by value
+/// (they cross a channel during pipelined execution) and parked back after
+/// each run, so the per-step hot path stays allocation-free across epochs,
+/// refreshes, and evals.
+///
+/// `take` transparently re-creates a buffer when the parked one was lost
+/// to an aborted run or was sized for a different dataset layout, so the
+/// pool can never poison a later run.
+pub struct DoubleBuffer {
+    parked: Vec<BatchAssembler>,
+    batch: usize,
+}
+
+impl DoubleBuffer {
+    pub fn new(data: &Dataset, batch: usize) -> Self {
+        DoubleBuffer {
+            parked: vec![BatchAssembler::new(data, batch), BatchAssembler::new(data, batch)],
+            batch,
+        }
+    }
+
+    /// Borrow one assembler out of the pool (sized for `data`).
+    pub fn take(&mut self, data: &Dataset) -> BatchAssembler {
+        while let Some(buf) = self.parked.pop() {
+            if buf.matches(data) {
+                return buf;
+            }
+        }
+        BatchAssembler::new(data, self.batch)
+    }
+
+    /// Park an assembler back after a run (keeps at most two).
+    pub fn put(&mut self, buf: BatchAssembler) {
+        if self.parked.len() < 2 {
+            self.parked.push(buf);
         }
     }
 }
@@ -97,6 +144,41 @@ mod tests {
         let mut a = BatchAssembler::new(&d, 3);
         a.fill(&d, &[1, 2, 3], Some(&[0.5, 2.0, 1.5]));
         assert_eq!(a.sw, vec![0.5, 2.0, 1.5]);
+    }
+
+    #[test]
+    fn double_buffer_hands_back_same_allocations() {
+        let d = tiny();
+        let mut pool = DoubleBuffer::new(&d, 4);
+        let a = pool.take(&d);
+        let b = pool.take(&d);
+        let (pa, pb) = (a.x.as_ptr(), b.x.as_ptr());
+        pool.put(a);
+        pool.put(b);
+        let c = pool.take(&d);
+        let e = pool.take(&d);
+        let ptrs = [c.x.as_ptr(), e.x.as_ptr()];
+        assert!(ptrs.contains(&pa) && ptrs.contains(&pb)); // no reallocation
+    }
+
+    #[test]
+    fn double_buffer_recreates_lost_or_mismatched() {
+        let d = tiny();
+        let mut pool = DoubleBuffer::new(&d, 4);
+        let a = pool.take(&d);
+        drop(a); // "lost" to an aborted run
+        let _b = pool.take(&d);
+        let c = pool.take(&d); // pool empty: fresh buffer
+        assert!(c.matches(&d));
+        // a differently-shaped dataset forces a rebuild
+        let d2 = gauss_mixture(
+            &GaussMixtureCfg { n_train: 10, n_val: 2, dim: 9, classes: 3, ..Default::default() },
+            2,
+        )
+        .train;
+        let mut pool = DoubleBuffer::new(&d, 4);
+        let f = pool.take(&d2);
+        assert!(f.matches(&d2) && !f.matches(&d));
     }
 
     #[test]

@@ -1,0 +1,25 @@
+//! The device-side contract the step engine drives.
+//!
+//! `ModelExecutor` (runtime layer) is the production backend; tests use a
+//! deterministic host-only mock so the pipelined-vs-serial equivalence can
+//! be verified without PJRT artifacts.
+
+use crate::runtime::BatchStats;
+
+/// One device step-execution endpoint: a full SGD step or a forward-only
+/// stats pass over one assembled batch.  Buffers follow the
+/// `BatchAssembler` layout (row-major x, labels y, per-slot weights sw,
+/// padding slots carry sw = 0).
+pub trait StepBackend {
+    /// One SGD step; returns per-slot loss / correct / confidence.
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats>;
+
+    /// Forward-only stats (refresh, eval, SB candidate pass).
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats>;
+}

@@ -1,0 +1,501 @@
+//! The pipelined step-execution engine: the single owner of the per-step
+//! hot path (gather -> device step -> stat bookkeeping) for every
+//! training-loop mode.
+//!
+//! # Where this sits in the architecture
+//!
+//! The repo is layered (see lib.rs / DESIGN.md):
+//!   * **L1/L2** (`python/`, build time): JAX models + Pallas kernels,
+//!     AOT-lowered to HLO artifacts.
+//!   * **runtime**: the PJRT client executing those artifacts
+//!     (`ModelExecutor` exposes the per-step entry points; the engine
+//!     drives them through the [`StepBackend`] trait).
+//!   * **L3 coordinator** (`coordinator/trainer.rs`): *planning* — builds
+//!     each epoch's `EpochPlan` (selection, LR, sharding) and hands the
+//!     resulting index order to this engine for execution.
+//!
+//! # Overlap model
+//!
+//! KAKURENBO's wall-clock win (paper §5, Fig. 9) requires the host-side
+//! epoch work — sample gather, selection bookkeeping, stat recording — to
+//! stay off the device's critical path.  The engine double-buffers
+//! `BatchAssembler`s and overlaps the *gather of batch k+1* with the
+//! *device execution of batch k*:
+//!
+//! ```text
+//!   prefetch thread:  fill(k+1) | fill(k+2) |   ...
+//!   main thread:      exec(k)+sink(k) | exec(k+1)+sink(k+1) | ...
+//! ```
+//!
+//! A single prefetch thread (std scoped thread, buffers handed over by
+//! value through channels) fills the spare buffer while the main thread
+//! runs the device step and feeds the [`StepSink`].  The gather is a pure
+//! memcpy from the immutable dataset, so the pipelined schedule performs
+//! the *identical* sequence of device calls on *identical* buffer contents
+//! as the serial reference — results are bitwise identical (enforced by
+//! `tests/engine_determinism.rs`).
+//!
+//! Sinks that derive follow-up batches from step results (Selective-
+//! Backprop's accept queue) issue them immediately through
+//! [`StepCtx::step_now`]; those steps are inherently serial but the
+//! candidate forward stream around them keeps prefetching.
+
+pub mod backend;
+pub mod modes;
+
+pub use backend::StepBackend;
+pub use modes::{execute_plan, EpochOutcome, EvalSink, RefreshSink, SbSink, TrainSink};
+
+use crate::data::batch::{BatchAssembler, DoubleBuffer};
+use crate::data::Dataset;
+use crate::runtime::BatchStats;
+
+/// Which device entry point each assembled batch goes through.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepMode {
+    /// Full SGD step (`train_step`) at the given learning rate.
+    Train { lr: f32 },
+    /// Forward-only stats pass (`fwd_stats`).
+    Forward,
+}
+
+fn dispatch(
+    backend: &mut dyn StepBackend,
+    mode: StepMode,
+    buf: &BatchAssembler,
+) -> anyhow::Result<BatchStats> {
+    match mode {
+        StepMode::Train { lr } => backend.train_step(&buf.x, &buf.y, &buf.sw, lr),
+        StepMode::Forward => backend.fwd_stats(&buf.x, &buf.y),
+    }
+}
+
+/// Handed to sinks per batch: lets a sink issue immediate, unpipelined
+/// follow-up steps (SB backprops full batches of accepted samples as soon
+/// as the queue fills).
+pub struct StepCtx<'a> {
+    backend: &'a mut dyn StepBackend,
+    scratch: &'a mut BatchAssembler,
+    data: &'a Dataset,
+}
+
+impl StepCtx<'_> {
+    /// Gather `indices` into the scratch buffer and execute one step right
+    /// now, bypassing the prefetch pipeline.  Ragged batches are padded
+    /// with zero-weight slots exactly like the pipelined path.
+    pub fn step_now(
+        &mut self,
+        indices: &[u32],
+        weights: Option<&[f32]>,
+        mode: StepMode,
+    ) -> anyhow::Result<BatchStats> {
+        self.scratch.fill(self.data, indices, weights);
+        dispatch(self.backend, mode, self.scratch)
+    }
+}
+
+/// Consumes each executed batch's results.  `slots[..real]` are the sample
+/// indices the batch held (padding slots beyond `real` carry `u32::MAX`).
+pub trait StepSink {
+    fn on_batch(
+        &mut self,
+        ctx: &mut StepCtx,
+        slots: &[u32],
+        real: usize,
+        stats: &BatchStats,
+    ) -> anyhow::Result<()>;
+
+    /// Called once after the last batch (SB flushes its partial queue).
+    fn finish(&mut self, _ctx: &mut StepCtx) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// The step-execution driver.  Owns the double-buffered assemblers (reused
+/// across epochs *and* across train/refresh/eval runs) plus a scratch
+/// assembler for sink-issued immediate steps.
+pub struct Engine {
+    buffers: DoubleBuffer,
+    scratch: BatchAssembler,
+    batch: usize,
+    /// Overlap host gather with device execution.  Defaults to on when the
+    /// host has more than one core; serial and overlapped schedules are
+    /// bitwise identical, so this is purely a performance switch.
+    pub overlap: bool,
+}
+
+impl Engine {
+    /// The backend's artifact batch size (slots per step).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn new(data: &Dataset, batch: usize) -> Self {
+        Engine {
+            buffers: DoubleBuffer::new(data, batch),
+            scratch: BatchAssembler::new(data, batch),
+            batch,
+            overlap: crate::util::threadpool::default_threads() > 1,
+        }
+    }
+
+    /// Drive `order` through the backend batch by batch, feeding `sink`.
+    /// `weights` (if any) are per-position gradient weights aligned with
+    /// `order`; the ragged tail is padded with zero-weight slots.
+    pub fn run(
+        &mut self,
+        backend: &mut dyn StepBackend,
+        data: &Dataset,
+        order: &[u32],
+        weights: Option<&[f32]>,
+        mode: StepMode,
+        sink: &mut dyn StepSink,
+    ) -> anyhow::Result<()> {
+        if let Some(w) = weights {
+            anyhow::ensure!(
+                w.len() == order.len(),
+                "weights len {} != order len {}",
+                w.len(),
+                order.len()
+            );
+        }
+        if !self.scratch.matches(data) {
+            self.scratch = BatchAssembler::new(data, self.batch);
+        }
+        let b = self.batch;
+        let chunks: Vec<&[u32]> = order.chunks(b).collect();
+        if self.overlap && chunks.len() > 1 {
+            self.run_overlapped(backend, data, &chunks, weights, mode, sink)
+        } else {
+            self.run_serial(backend, data, &chunks, weights, mode, sink)
+        }
+    }
+
+    fn run_serial(
+        &mut self,
+        backend: &mut dyn StepBackend,
+        data: &Dataset,
+        chunks: &[&[u32]],
+        weights: Option<&[f32]>,
+        mode: StepMode,
+        sink: &mut dyn StepSink,
+    ) -> anyhow::Result<()> {
+        let b = self.batch;
+        // On an error return the buffer is dropped, not parked;
+        // `DoubleBuffer::take` re-creates it lazily on the next run.
+        let mut cur = self.buffers.take(data);
+        for (ci, chunk) in chunks.iter().enumerate() {
+            let w = weights.map(|ws| &ws[ci * b..ci * b + chunk.len()]);
+            cur.fill(data, chunk, w);
+            let stats = dispatch(&mut *backend, mode, &cur)?;
+            let mut ctx =
+                StepCtx { backend: &mut *backend, scratch: &mut self.scratch, data };
+            sink.on_batch(&mut ctx, &cur.slots, cur.real, &stats)?;
+        }
+        let mut ctx = StepCtx { backend, scratch: &mut self.scratch, data };
+        sink.finish(&mut ctx)?;
+        self.buffers.put(cur);
+        Ok(())
+    }
+
+    fn run_overlapped(
+        &mut self,
+        backend: &mut dyn StepBackend,
+        data: &Dataset,
+        chunks: &[&[u32]],
+        weights: Option<&[f32]>,
+        mode: StepMode,
+        sink: &mut dyn StepSink,
+    ) -> anyhow::Result<()> {
+        let b = self.batch;
+        let first = self.buffers.take(data);
+        let spare = self.buffers.take(data);
+        let scratch = &mut self.scratch;
+
+        let result = std::thread::scope(|scope| -> anyhow::Result<Vec<BatchAssembler>> {
+            let (fill_tx, fill_rx) = std::sync::mpsc::channel::<(BatchAssembler, usize)>();
+            let (done_tx, done_rx) = std::sync::mpsc::channel::<BatchAssembler>();
+            scope.spawn(move || {
+                while let Ok((mut buf, ci)) = fill_rx.recv() {
+                    let chunk = chunks[ci];
+                    let w = weights.map(|ws| &ws[ci * b..ci * b + chunk.len()]);
+                    buf.fill(data, chunk, w);
+                    if done_tx.send(buf).is_err() {
+                        break;
+                    }
+                }
+            });
+
+            let mut free = vec![spare];
+            fill_tx
+                .send((first, 0))
+                .map_err(|_| anyhow::anyhow!("prefetch worker unavailable"))?;
+            for ci in 0..chunks.len() {
+                let cur = done_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("prefetch worker died"))?;
+                if ci + 1 < chunks.len() {
+                    let next = free.pop().expect("double-buffer invariant");
+                    fill_tx
+                        .send((next, ci + 1))
+                        .map_err(|_| anyhow::anyhow!("prefetch worker unavailable"))?;
+                }
+                // Device step + sink run while the worker gathers ci+1.
+                let stats = dispatch(&mut *backend, mode, &cur)?;
+                let mut ctx =
+                    StepCtx { backend: &mut *backend, scratch: &mut *scratch, data };
+                sink.on_batch(&mut ctx, &cur.slots, cur.real, &stats)?;
+                free.push(cur);
+            }
+            drop(fill_tx); // worker drains and exits
+            let mut ctx = StepCtx { backend, scratch, data };
+            sink.finish(&mut ctx)?;
+            Ok(free)
+        });
+
+        match result {
+            Ok(bufs) => {
+                for buf in bufs {
+                    self.buffers.put(buf);
+                }
+                Ok(())
+            }
+            // Buffers in flight are dropped; DoubleBuffer::take re-creates
+            // them lazily, so an error here cannot poison later runs.
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+
+    /// Order-sensitive host-only backend: a scalar "parameter" folds in
+    /// every training batch, so any reordering or content corruption in
+    /// the pipeline changes the bit pattern of subsequent outputs.
+    pub struct MockBackend {
+        pub param: f32,
+        pub trace: Vec<u64>,
+    }
+
+    impl MockBackend {
+        pub fn new() -> Self {
+            MockBackend { param: 1.0, trace: vec![] }
+        }
+
+        fn stats(&self, x: &[f32], y: &[i32], sw: Option<&[f32]>, b: usize) -> BatchStats {
+            let dim = x.len() / b;
+            let mut s = BatchStats::default();
+            for slot in 0..b {
+                let xs: f32 = x[slot * dim..(slot + 1) * dim].iter().sum();
+                let w = sw.map_or(1.0, |sw| sw[slot]);
+                let l = (xs * self.param).abs() + y[slot] as f32 * 0.125 + w * 0.25;
+                s.loss.push(l);
+                s.correct.push(if l < 2.0 { 1.0 } else { 0.0 });
+                s.conf.push(1.0 / (1.0 + l));
+            }
+            s
+        }
+    }
+
+    impl StepBackend for MockBackend {
+        fn train_step(
+            &mut self,
+            x: &[f32],
+            y: &[i32],
+            sw: &[f32],
+            lr: f32,
+        ) -> anyhow::Result<BatchStats> {
+            let b = sw.len();
+            let stats = self.stats(x, y, Some(sw), b);
+            for (slot, &w) in sw.iter().enumerate() {
+                self.param += stats.loss[slot] * w * lr * 1e-3;
+            }
+            self.trace.push(self.param.to_bits() as u64);
+            Ok(stats)
+        }
+
+        fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+            let b = y.len();
+            Ok(self.stats(x, y, None, b))
+        }
+    }
+
+    struct Collect {
+        losses: Vec<u32>,
+    }
+
+    impl StepSink for Collect {
+        fn on_batch(
+            &mut self,
+            _ctx: &mut StepCtx,
+            _slots: &[u32],
+            real: usize,
+            stats: &BatchStats,
+        ) -> anyhow::Result<()> {
+            self.losses.extend(stats.loss[..real].iter().map(|l| l.to_bits()));
+            Ok(())
+        }
+    }
+
+    fn tiny() -> crate::data::Dataset {
+        gauss_mixture(
+            &GaussMixtureCfg { n_train: 53, n_val: 4, dim: 6, classes: 3, ..Default::default() },
+            7,
+        )
+        .train
+    }
+
+    fn run_once(overlap: bool, mode: StepMode) -> (Vec<u32>, Vec<u64>, u32) {
+        let d = tiny();
+        let order: Vec<u32> = (0..53u32).rev().collect();
+        let mut eng = Engine::new(&d, 8);
+        eng.overlap = overlap;
+        let mut be = MockBackend::new();
+        let mut sink = Collect { losses: vec![] };
+        eng.run(&mut be, &d, &order, None, mode, &mut sink).unwrap();
+        (sink.losses, be.trace, be.param.to_bits())
+    }
+
+    #[test]
+    fn overlapped_forward_is_bitwise_serial() {
+        assert_eq!(run_once(false, StepMode::Forward), run_once(true, StepMode::Forward));
+    }
+
+    #[test]
+    fn overlapped_train_is_bitwise_serial() {
+        let mode = StepMode::Train { lr: 0.05 };
+        let (ls, ts, ps) = run_once(false, mode);
+        let (lo, to, po) = run_once(true, mode);
+        assert_eq!(ls, lo);
+        assert_eq!(ts, to);
+        assert_eq!(ps, po);
+        assert_eq!(ts.len(), 7); // ceil(53 / 8) train steps
+    }
+
+    #[test]
+    fn ragged_tail_sees_zero_weight_padding() {
+        let d = tiny();
+        let mut eng = Engine::new(&d, 8);
+        eng.overlap = false;
+        let mut be = MockBackend::new();
+        struct Tail {
+            last_real: usize,
+        }
+        impl StepSink for Tail {
+            fn on_batch(
+                &mut self,
+                _ctx: &mut StepCtx,
+                slots: &[u32],
+                real: usize,
+                _stats: &BatchStats,
+            ) -> anyhow::Result<()> {
+                self.last_real = real;
+                assert!(slots[real..].iter().all(|&s| s == u32::MAX));
+                Ok(())
+            }
+        }
+        let order: Vec<u32> = (0..13).collect();
+        let mut sink = Tail { last_real: 0 };
+        eng.run(&mut be, &d, &order, None, StepMode::Forward, &mut sink).unwrap();
+        assert_eq!(sink.last_real, 5); // 13 = 8 + 5
+    }
+
+    #[test]
+    fn weights_align_with_order_chunks() {
+        let d = tiny();
+        let order: Vec<u32> = (0..20).collect();
+        let weights: Vec<f32> = (0..20).map(|i| i as f32 * 0.1).collect();
+        struct WSink {
+            seen: Vec<u32>,
+        }
+        impl StepSink for WSink {
+            fn on_batch(
+                &mut self,
+                _ctx: &mut StepCtx,
+                _slots: &[u32],
+                real: usize,
+                stats: &BatchStats,
+            ) -> anyhow::Result<()> {
+                self.seen.extend(stats.loss[..real].iter().map(|l| l.to_bits()));
+                Ok(())
+            }
+        }
+        let mut runs = vec![];
+        for overlap in [false, true] {
+            let mut eng = Engine::new(&d, 8);
+            eng.overlap = overlap;
+            let mut be = MockBackend::new();
+            let mut sink = WSink { seen: vec![] };
+            eng.run(
+                &mut be,
+                &d,
+                &order,
+                Some(&weights),
+                StepMode::Train { lr: 0.01 },
+                &mut sink,
+            )
+            .unwrap();
+            runs.push(sink.seen);
+        }
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0].len(), 20);
+    }
+
+    #[test]
+    fn weight_length_mismatch_rejected() {
+        let d = tiny();
+        let mut eng = Engine::new(&d, 8);
+        let mut be = MockBackend::new();
+        let mut sink = Collect { losses: vec![] };
+        let order: Vec<u32> = (0..10).collect();
+        let w = vec![1.0f32; 9];
+        assert!(eng
+            .run(&mut be, &d, &order, Some(&w), StepMode::Forward, &mut sink)
+            .is_err());
+    }
+
+    #[test]
+    fn empty_order_is_a_noop() {
+        let d = tiny();
+        let mut eng = Engine::new(&d, 8);
+        let mut be = MockBackend::new();
+        let mut sink = Collect { losses: vec![] };
+        eng.run(&mut be, &d, &[], None, StepMode::Forward, &mut sink).unwrap();
+        assert!(sink.losses.is_empty());
+    }
+
+    #[test]
+    fn buffers_survive_a_failed_run() {
+        struct Failing;
+        impl StepBackend for Failing {
+            fn train_step(
+                &mut self,
+                _x: &[f32],
+                _y: &[i32],
+                _sw: &[f32],
+                _lr: f32,
+            ) -> anyhow::Result<BatchStats> {
+                anyhow::bail!("device lost")
+            }
+            fn fwd_stats(&mut self, _x: &[f32], _y: &[i32]) -> anyhow::Result<BatchStats> {
+                anyhow::bail!("device lost")
+            }
+        }
+        let d = tiny();
+        let order: Vec<u32> = (0..20).collect();
+        for overlap in [false, true] {
+            let mut eng = Engine::new(&d, 8);
+            eng.overlap = overlap;
+            let mut sink = Collect { losses: vec![] };
+            assert!(eng.run(&mut Failing, &d, &order, None, StepMode::Forward, &mut sink).is_err());
+            // engine recovers: a healthy backend still runs afterwards
+            let mut be = MockBackend::new();
+            let mut sink = Collect { losses: vec![] };
+            eng.run(&mut be, &d, &order, None, StepMode::Forward, &mut sink).unwrap();
+            assert_eq!(sink.losses.len(), 20);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! The four thin mode adapters behind the engine's [`StepSink`] interface:
+//!
+//! * [`TrainSink`]   — train-with-weights: record per-sample stats + mean
+//!   loss while the backend takes SGD steps (plain / ISWR / InfoBatch).
+//! * [`RefreshSink`] — forward-stats: hidden-list stat refresh (paper
+//!   step D.1), records without loss aggregation.
+//! * [`SbSink`]      — Selective-Backprop accept-queue: record + CDF^beta
+//!   acceptance on the forward stream, immediate backprop of full accepted
+//!   batches via [`StepCtx::step_now`].
+//! * [`EvalSink`]    — eval-accumulate: top-1 correct + loss sums over the
+//!   validation set.
+//!
+//! [`execute_plan`] is the coordinator-facing entry point: it consumes the
+//! strategy's `BatchMode` and routes the epoch order through the right
+//! sink, so the trainer never matches on execution modes itself.
+
+use super::{Engine, StepBackend, StepCtx, StepMode, StepSink};
+use crate::data::Dataset;
+use crate::runtime::BatchStats;
+use crate::state::SampleState;
+use crate::strategies::sb::SbSelector;
+use crate::strategies::BatchMode;
+use crate::util::rng::Rng;
+
+/// What one epoch's execution produced (fed into `EpochRecord`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochOutcome {
+    pub trained_samples: usize,
+    pub backprop_samples: usize,
+    pub train_loss: f64,
+}
+
+/// Train-with-weights adapter: record stats for every real slot and
+/// accumulate the epoch's mean training loss.
+pub struct TrainSink<'a> {
+    state: &'a mut SampleState,
+    epoch: u32,
+    loss_sum: f64,
+    loss_n: usize,
+}
+
+impl<'a> TrainSink<'a> {
+    pub fn new(state: &'a mut SampleState, epoch: u32) -> Self {
+        TrainSink { state, epoch, loss_sum: 0.0, loss_n: 0 }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.loss_n.max(1) as f64
+    }
+}
+
+impl StepSink for TrainSink<'_> {
+    fn on_batch(
+        &mut self,
+        _ctx: &mut StepCtx,
+        slots: &[u32],
+        real: usize,
+        stats: &BatchStats,
+    ) -> anyhow::Result<()> {
+        for (slot, &sample) in slots[..real].iter().enumerate() {
+            self.state.record(
+                sample as usize,
+                stats.loss[slot],
+                stats.correct[slot] > 0.5,
+                stats.conf[slot],
+                self.epoch,
+            );
+            self.loss_sum += stats.loss[slot] as f64;
+            self.loss_n += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Forward-stats adapter: hidden-list refresh (record only).
+pub struct RefreshSink<'a> {
+    state: &'a mut SampleState,
+    epoch: u32,
+}
+
+impl<'a> RefreshSink<'a> {
+    pub fn new(state: &'a mut SampleState, epoch: u32) -> Self {
+        RefreshSink { state, epoch }
+    }
+}
+
+impl StepSink for RefreshSink<'_> {
+    fn on_batch(
+        &mut self,
+        _ctx: &mut StepCtx,
+        slots: &[u32],
+        real: usize,
+        stats: &BatchStats,
+    ) -> anyhow::Result<()> {
+        for (slot, &sample) in slots[..real].iter().enumerate() {
+            self.state.record(
+                sample as usize,
+                stats.loss[slot],
+                stats.correct[slot] > 0.5,
+                stats.conf[slot],
+                self.epoch,
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Selective-Backprop adapter: the candidate stream arrives as forward
+/// batches; accepted samples queue up and backprop in full batches the
+/// moment the queue fills (and once more, padded, at epoch end).
+pub struct SbSink<'a> {
+    state: &'a mut SampleState,
+    sb: &'a mut SbSelector,
+    rng: &'a mut Rng,
+    queue: &'a mut Vec<u32>,
+    batch: usize,
+    lr: f32,
+    epoch: u32,
+    backprop: usize,
+    loss_sum: f64,
+    loss_n: usize,
+}
+
+impl<'a> SbSink<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        state: &'a mut SampleState,
+        sb: &'a mut SbSelector,
+        rng: &'a mut Rng,
+        queue: &'a mut Vec<u32>,
+        batch: usize,
+        lr: f32,
+        epoch: u32,
+    ) -> Self {
+        queue.clear();
+        SbSink {
+            state,
+            sb,
+            rng,
+            queue,
+            batch,
+            lr,
+            epoch,
+            backprop: 0,
+            loss_sum: 0.0,
+            loss_n: 0,
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.loss_n.max(1) as f64
+    }
+
+    pub fn backprop_samples(&self) -> usize {
+        self.backprop
+    }
+}
+
+impl StepSink for SbSink<'_> {
+    fn on_batch(
+        &mut self,
+        ctx: &mut StepCtx,
+        slots: &[u32],
+        real: usize,
+        stats: &BatchStats,
+    ) -> anyhow::Result<()> {
+        for (slot, &sample) in slots[..real].iter().enumerate() {
+            self.state.record(
+                sample as usize,
+                stats.loss[slot],
+                stats.correct[slot] > 0.5,
+                stats.conf[slot],
+                self.epoch,
+            );
+            self.loss_sum += stats.loss[slot] as f64;
+            self.loss_n += 1;
+            if self.sb.accept(stats.loss[slot], self.rng) {
+                self.queue.push(sample);
+            }
+        }
+        while self.queue.len() >= self.batch {
+            let batch: Vec<u32> = self.queue.drain(..self.batch).collect();
+            ctx.step_now(&batch, None, StepMode::Train { lr: self.lr })?;
+            self.backprop += self.batch;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, ctx: &mut StepCtx) -> anyhow::Result<()> {
+        if !self.queue.is_empty() {
+            let batch: Vec<u32> = self.queue.drain(..).collect();
+            ctx.step_now(&batch, None, StepMode::Train { lr: self.lr })?;
+            self.backprop += batch.len();
+        }
+        Ok(())
+    }
+}
+
+/// Eval-accumulate adapter: validation top-1 accuracy + mean loss.
+#[derive(Default)]
+pub struct EvalSink {
+    correct: f64,
+    loss: f64,
+    n: usize,
+}
+
+impl EvalSink {
+    /// (top-1 accuracy, mean loss).
+    pub fn result(&self) -> (f64, f64) {
+        let n = self.n.max(1) as f64;
+        (self.correct / n, self.loss / n)
+    }
+}
+
+impl StepSink for EvalSink {
+    fn on_batch(
+        &mut self,
+        _ctx: &mut StepCtx,
+        _slots: &[u32],
+        real: usize,
+        stats: &BatchStats,
+    ) -> anyhow::Result<()> {
+        for slot in 0..real {
+            self.correct += stats.correct[slot] as f64;
+            self.loss += stats.loss[slot] as f64;
+            self.n += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Execute one planned epoch order: consumes the strategy's `BatchMode`
+/// and drives the engine with the matching sink.  The coordinator only
+/// plans (selection, sharding, LR); execution-mode dispatch lives here.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_plan(
+    engine: &mut Engine,
+    backend: &mut dyn StepBackend,
+    data: &Dataset,
+    order: &[u32],
+    weights: Option<&[f32]>,
+    batch_mode: BatchMode,
+    lr: f32,
+    epoch: u32,
+    state: &mut SampleState,
+    sb: &mut SbSelector,
+    rng: &mut Rng,
+    sb_queue: &mut Vec<u32>,
+) -> anyhow::Result<EpochOutcome> {
+    match batch_mode {
+        BatchMode::Plain => {
+            let mut sink = TrainSink::new(state, epoch);
+            engine.run(backend, data, order, weights, StepMode::Train { lr }, &mut sink)?;
+            Ok(EpochOutcome {
+                trained_samples: order.len(),
+                backprop_samples: order.len(),
+                train_loss: sink.mean_loss(),
+            })
+        }
+        // beta lives inside the trainer's SbSelector; the plan's copy is
+        // informational (strategy naming / diagnostics).
+        BatchMode::SelectiveBackprop { .. } => {
+            let batch = engine.batch();
+            let mut sink = SbSink::new(state, sb, rng, sb_queue, batch, lr, epoch);
+            engine.run(backend, data, order, None, StepMode::Forward, &mut sink)?;
+            Ok(EpochOutcome {
+                trained_samples: order.len(),
+                backprop_samples: sink.backprop_samples(),
+                train_loss: sink.mean_loss(),
+            })
+        }
+    }
+}

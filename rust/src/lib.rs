@@ -2,9 +2,11 @@
 //! (NeurIPS 2023) — full-system reproduction.
 //!
 //! Three-layer architecture (see DESIGN.md):
-//!   * L3 (this crate): training coordinator — data pipeline, per-sample
-//!     state, the hiding selector + schedules, baselines, distributed
-//!     simulation, metrics, bench harness.
+//!   * L3 (this crate): training coordinator + step-execution engine —
+//!     the coordinator plans epochs (selection, schedules, sharding); the
+//!     `engine` module owns the pipelined per-step hot path (double-
+//!     buffered gather overlapped with device execution); plus per-sample
+//!     state, baselines, distributed simulation, metrics, bench harness.
 //!   * L2/L1 (python/, build time only): JAX models + Pallas kernels,
 //!     AOT-lowered to `artifacts/*.hlo.txt`.
 //!   * runtime: PJRT CPU client executing the AOT artifacts — Python is
@@ -14,6 +16,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod hiding;
 pub mod metrics;
 pub mod runtime;

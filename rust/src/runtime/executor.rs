@@ -287,3 +287,22 @@ impl ModelExecutor {
         Ok(acc.sqrt())
     }
 }
+
+/// The step entry points the execution engine drives.  The executor *is*
+/// the production backend; the engine never sees literals or PJRT types,
+/// only host buffers in / per-slot stats out.
+impl crate::engine::StepBackend for ModelExecutor {
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        ModelExecutor::train_step(self, x, y, sw, lr)
+    }
+
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        ModelExecutor::fwd_stats(self, x, y)
+    }
+}

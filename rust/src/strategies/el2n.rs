@@ -62,6 +62,10 @@ impl Strategy for El2n {
         "el2n".into()
     }
 
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        self.fraction
+    }
+
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
         if ctx.epoch < self.score_epoch {
             return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(

@@ -53,6 +53,10 @@ impl Strategy for Forget {
         "forget".into()
     }
 
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        self.fraction
+    }
+
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
         if ctx.epoch < self.prune_epoch {
             return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(

@@ -165,6 +165,10 @@ impl Strategy for GradMatch {
         "gradmatch".into()
     }
 
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        self.fraction
+    }
+
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
         if ctx.epoch == 0 {
             return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(

@@ -30,6 +30,10 @@ impl Strategy for InfoBatch {
         "infobatch".into()
     }
 
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        self.r
+    }
+
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
         ctx.state.roll_epoch();
         let n = ctx.data.n;

@@ -49,6 +49,10 @@ impl Strategy for Kakurenbo {
         }
     }
 
+    fn fraction_ceiling(&self, epoch: usize) -> f64 {
+        self.schedule.at(epoch)
+    }
+
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
         ctx.state.roll_epoch();
 

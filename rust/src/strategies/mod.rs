@@ -84,6 +84,14 @@ pub trait Strategy: Send {
     fn refresh_hidden_stats(&self) -> bool {
         true
     }
+    /// The epoch's maximum hidden/pruned-fraction ceiling F_e (Fig. 8 /
+    /// EpochRecord diagnostics).  Each strategy reports its own ceiling —
+    /// the coordinator must not re-derive it from config, so new
+    /// strategies can't silently drift.  Strategies that never hide
+    /// (baseline, ISWR, SB) keep the 0.0 default.
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        0.0
+    }
 }
 
 /// Instantiate a strategy from config.
@@ -115,6 +123,71 @@ pub fn build(cfg: &StrategyConfig, total_epochs: usize) -> Box<dyn Strategy> {
         StrategyConfig::El2n { score_epoch, fraction, restart } => {
             Box::new(el2n::El2n::new(*score_epoch, *fraction, *restart))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Components;
+    use crate::hiding::selector::SelectMode;
+
+    /// The per-epoch ceiling must come from the strategy itself and match
+    /// what its own schedule/config produces (the coordinator no longer
+    /// re-derives it from `StrategyConfig`).
+    #[test]
+    fn fraction_ceiling_reported_by_strategy() {
+        let total = 100;
+        let cfgs = [
+            StrategyConfig::Baseline,
+            StrategyConfig::Iswr,
+            StrategyConfig::SelectiveBackprop { beta: 1.0 },
+            StrategyConfig::kakurenbo(0.3),
+            StrategyConfig::RandomHiding { fraction: 0.2 },
+            StrategyConfig::Forget { prune_epoch: 10, fraction: 0.25 },
+            StrategyConfig::El2n { score_epoch: 5, fraction: 0.15, restart: false },
+            StrategyConfig::GradMatch { fraction: 0.3, every_r: 2 },
+            StrategyConfig::InfoBatch { r: 0.5 },
+        ];
+        for cfg in &cfgs {
+            let s = build(cfg, total);
+            let expected = |epoch: usize| -> f64 {
+                match cfg {
+                    StrategyConfig::Kakurenbo { max_fraction, components, .. } => {
+                        let mut sched = crate::hiding::fraction::FractionSchedule::paper_default(
+                            *max_fraction,
+                            total,
+                        );
+                        sched.enabled = components.reduce_fraction;
+                        sched.at(epoch)
+                    }
+                    StrategyConfig::RandomHiding { fraction }
+                    | StrategyConfig::Forget { fraction, .. }
+                    | StrategyConfig::El2n { fraction, .. }
+                    | StrategyConfig::GradMatch { fraction, .. } => *fraction,
+                    StrategyConfig::InfoBatch { r } => *r,
+                    _ => 0.0,
+                }
+            };
+            for epoch in [0, 1, 30, 60, 99] {
+                assert_eq!(
+                    s.fraction_ceiling(epoch),
+                    expected(epoch),
+                    "{} epoch {epoch}",
+                    s.name()
+                );
+            }
+        }
+    }
+
+    /// RF ablation: a kakurenbo variant with reduce_fraction off reports a
+    /// constant ceiling.
+    #[test]
+    fn fraction_ceiling_respects_rf_switch() {
+        let comps = Components::from_bits("v1101").unwrap();
+        let k = kakurenbo::Kakurenbo::new(0.3, 0.7, comps, 0.0, SelectMode::QuickSelect, 100);
+        assert_eq!(k.fraction_ceiling(0), 0.3);
+        assert_eq!(k.fraction_ceiling(99), 0.3);
     }
 }
 

@@ -20,6 +20,10 @@ impl Strategy for RandomHiding {
         "random".into()
     }
 
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        self.fraction
+    }
+
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
         ctx.state.roll_epoch();
         let n = ctx.data.n;

@@ -1,0 +1,508 @@
+//! Engine determinism: the pipelined step-execution engine must produce
+//! *bitwise-identical* results to a serial reference implementing the
+//! pre-engine trainer loops verbatim — for all four execution modes
+//! (plain train, plain train with weights, Selective-Backprop,
+//! hidden-stat refresh, eval).
+//!
+//! The reference loops below are byte-for-byte transcriptions of the old
+//! `Trainer::{execute_plain, execute_sb, refresh_stats, evaluate}` bodies
+//! against a deterministic host-only mock backend, so the comparison
+//! needs no PJRT artifacts and runs everywhere.  A final runtime-guarded
+//! test repeats the check end-to-end through the real executor.
+
+use kakurenbo::data::batch::BatchAssembler;
+use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::data::Dataset;
+use kakurenbo::engine::{execute_plan, Engine, EvalSink, RefreshSink, StepBackend, StepMode};
+use kakurenbo::runtime::BatchStats;
+use kakurenbo::state::SampleState;
+use kakurenbo::strategies::sb::SbSelector;
+use kakurenbo::strategies::BatchMode;
+use kakurenbo::util::rng::Rng;
+
+const B: usize = 8;
+const N: usize = 83; // ragged tail: 83 = 10*8 + 3
+
+/// Deterministic, order-sensitive backend: a scalar parameter folds in
+/// every training slot sequentially (f32 adds do not commute), and every
+/// forward result depends on the parameter — so any reordering, skipped
+/// step, or corrupted buffer in the pipeline changes downstream bits.
+struct MockBackend {
+    param: f32,
+}
+
+impl MockBackend {
+    fn new() -> Self {
+        MockBackend { param: 1.0 }
+    }
+
+    fn stats(&self, x: &[f32], y: &[i32], b: usize) -> BatchStats {
+        let dim = x.len() / b;
+        let mut s = BatchStats::default();
+        for slot in 0..b {
+            let xs: f32 = x[slot * dim..(slot + 1) * dim].iter().sum();
+            let l = (xs * self.param).abs() + y[slot] as f32 * 0.125;
+            s.loss.push(l);
+            s.correct.push(if l < 1.5 { 1.0 } else { 0.0 });
+            s.conf.push(1.0 / (1.0 + l));
+        }
+        s
+    }
+}
+
+impl StepBackend for MockBackend {
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        let b = sw.len();
+        let stats = self.stats(x, y, b);
+        for (slot, &w) in sw.iter().enumerate() {
+            self.param += stats.loss[slot] * w * lr * 1e-3;
+        }
+        Ok(stats)
+    }
+
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        let b = y.len();
+        Ok(self.stats(x, y, b))
+    }
+}
+
+fn dataset() -> Dataset {
+    gauss_mixture(
+        &GaussMixtureCfg { n_train: N, n_val: 32, dim: 5, classes: 4, ..Default::default() },
+        11,
+    )
+    .train
+}
+
+fn order() -> Vec<u32> {
+    let mut rng = Rng::new(3);
+    kakurenbo::sampler::epoch_permutation(N, &mut rng)
+}
+
+/// All recorded f32 state as bit patterns (bitwise comparison).
+fn state_bits(s: &SampleState) -> (Vec<u32>, Vec<bool>, Vec<u32>, Vec<u32>) {
+    (
+        s.loss.iter().map(|l| l.to_bits()).collect(),
+        s.correct.clone(),
+        s.conf.iter().map(|c| c.to_bits()).collect(),
+        s.last_update_epoch.clone(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Serial references: verbatim transcriptions of the pre-engine trainer loops
+// ---------------------------------------------------------------------------
+
+/// Old `Trainer::execute_plain` (single worker, so no sharding branch).
+fn ref_plain(
+    backend: &mut MockBackend,
+    data: &Dataset,
+    order: &[u32],
+    weights: Option<&[f32]>,
+    lr: f32,
+    epoch: u32,
+    state: &mut SampleState,
+) -> f64 {
+    let mut asm = BatchAssembler::new(data, B);
+    let mut loss_sum = 0.0f64;
+    let mut loss_n = 0usize;
+    for (ci, chunk) in order.chunks(B).enumerate() {
+        let w: Option<&[f32]> = weights.map(|ws| &ws[ci * B..ci * B + chunk.len()]);
+        asm.fill(data, chunk, w);
+        let stats = backend.train_step(&asm.x, &asm.y, &asm.sw, lr).unwrap();
+        for (slot, &sample) in chunk.iter().enumerate() {
+            state.record(
+                sample as usize,
+                stats.loss[slot],
+                stats.correct[slot] > 0.5,
+                stats.conf[slot],
+                epoch,
+            );
+            loss_sum += stats.loss[slot] as f64;
+            loss_n += 1;
+        }
+    }
+    loss_sum / loss_n.max(1) as f64
+}
+
+/// Old `Trainer::execute_sb`.
+#[allow(clippy::too_many_arguments)]
+fn ref_sb(
+    backend: &mut MockBackend,
+    data: &Dataset,
+    order: &[u32],
+    lr: f32,
+    epoch: u32,
+    state: &mut SampleState,
+    sb: &mut SbSelector,
+    rng: &mut Rng,
+) -> (f64, usize) {
+    let mut asm = BatchAssembler::new(data, B);
+    let mut queue: Vec<u32> = Vec::new();
+    let mut loss_sum = 0.0f64;
+    let mut loss_n = 0usize;
+    let mut backprop = 0usize;
+    for chunk in order.chunks(B) {
+        asm.fill(data, chunk, None);
+        let stats = backend.fwd_stats(&asm.x, &asm.y).unwrap();
+        for (slot, &sample) in chunk.iter().enumerate() {
+            state.record(
+                sample as usize,
+                stats.loss[slot],
+                stats.correct[slot] > 0.5,
+                stats.conf[slot],
+                epoch,
+            );
+            loss_sum += stats.loss[slot] as f64;
+            loss_n += 1;
+            if sb.accept(stats.loss[slot], rng) {
+                queue.push(sample);
+            }
+        }
+        while queue.len() >= B {
+            let batch: Vec<u32> = queue.drain(..B).collect();
+            asm.fill(data, &batch, None);
+            backend.train_step(&asm.x, &asm.y, &asm.sw, lr).unwrap();
+            backprop += B;
+        }
+    }
+    if !queue.is_empty() {
+        let batch: Vec<u32> = queue.drain(..).collect();
+        asm.fill(data, &batch, None);
+        backend.train_step(&asm.x, &asm.y, &asm.sw, lr).unwrap();
+        backprop += batch.len();
+    }
+    (loss_sum / loss_n.max(1) as f64, backprop)
+}
+
+/// Old `Trainer::refresh_stats`.
+fn ref_refresh(
+    backend: &mut MockBackend,
+    data: &Dataset,
+    indices: &[u32],
+    epoch: u32,
+    state: &mut SampleState,
+) {
+    let mut asm = BatchAssembler::new(data, B);
+    for chunk in indices.chunks(B) {
+        asm.fill(data, chunk, None);
+        let stats = backend.fwd_stats(&asm.x, &asm.y).unwrap();
+        for (slot, &sample) in chunk.iter().enumerate() {
+            state.record(
+                sample as usize,
+                stats.loss[slot],
+                stats.correct[slot] > 0.5,
+                stats.conf[slot],
+                epoch,
+            );
+        }
+    }
+}
+
+/// Old `Trainer::evaluate`.
+fn ref_eval(backend: &mut MockBackend, val: &Dataset) -> (f64, f64) {
+    let mut asm = BatchAssembler::new(val, B);
+    let mut correct = 0.0f64;
+    let mut loss = 0.0f64;
+    let mut n = 0usize;
+    let all: Vec<u32> = (0..val.n as u32).collect();
+    for chunk in all.chunks(B) {
+        asm.fill(val, chunk, None);
+        let stats = backend.fwd_stats(&asm.x, &asm.y).unwrap();
+        for slot in 0..chunk.len() {
+            correct += stats.correct[slot] as f64;
+            loss += stats.loss[slot] as f64;
+            n += 1;
+        }
+    }
+    (correct / n.max(1) as f64, loss / n.max(1) as f64)
+}
+
+fn pipelined_engine(data: &Dataset) -> Engine {
+    let mut eng = Engine::new(data, B);
+    eng.overlap = true; // force the prefetch-thread path even on 1 core
+    eng
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise equivalence, mode by mode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plain_mode_bitwise_identical() {
+    let d = dataset();
+    let order = order();
+
+    let mut ref_be = MockBackend::new();
+    let mut ref_state = SampleState::new(N);
+    let ref_loss = ref_plain(&mut ref_be, &d, &order, None, 0.05, 3, &mut ref_state);
+
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut eng = pipelined_engine(&d);
+    let mut sb = SbSelector::new(1.0, 64);
+    let mut rng = Rng::new(5);
+    let mut queue = Vec::new();
+    let out = execute_plan(
+        &mut eng,
+        &mut be,
+        &d,
+        &order,
+        None,
+        BatchMode::Plain,
+        0.05,
+        3,
+        &mut state,
+        &mut sb,
+        &mut rng,
+        &mut queue,
+    )
+    .unwrap();
+
+    assert_eq!(state_bits(&ref_state), state_bits(&state));
+    assert_eq!(ref_loss.to_bits(), out.train_loss.to_bits());
+    assert_eq!(out.trained_samples, N);
+    assert_eq!(out.backprop_samples, N);
+    assert_eq!(ref_be.param.to_bits(), be.param.to_bits());
+}
+
+#[test]
+fn weighted_plain_mode_bitwise_identical() {
+    let d = dataset();
+    let order = order();
+    let weights: Vec<f32> = (0..N).map(|i| 0.5 + (i % 7) as f32 * 0.25).collect();
+
+    let mut ref_be = MockBackend::new();
+    let mut ref_state = SampleState::new(N);
+    let ref_loss =
+        ref_plain(&mut ref_be, &d, &order, Some(&weights), 0.02, 1, &mut ref_state);
+
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut eng = pipelined_engine(&d);
+    let mut sb = SbSelector::new(1.0, 64);
+    let mut rng = Rng::new(5);
+    let mut queue = Vec::new();
+    let out = execute_plan(
+        &mut eng,
+        &mut be,
+        &d,
+        &order,
+        Some(&weights),
+        BatchMode::Plain,
+        0.02,
+        1,
+        &mut state,
+        &mut sb,
+        &mut rng,
+        &mut queue,
+    )
+    .unwrap();
+
+    assert_eq!(state_bits(&ref_state), state_bits(&state));
+    assert_eq!(ref_loss.to_bits(), out.train_loss.to_bits());
+    assert_eq!(ref_be.param.to_bits(), be.param.to_bits());
+}
+
+#[test]
+fn sb_mode_bitwise_identical() {
+    let d = dataset();
+    let order = order();
+
+    let mut ref_be = MockBackend::new();
+    let mut ref_state = SampleState::new(N);
+    let mut ref_sbsel = SbSelector::new(1.0, 64);
+    let mut ref_rng = Rng::new(17);
+    let (ref_loss, ref_backprop) = ref_sb(
+        &mut ref_be,
+        &d,
+        &order,
+        0.05,
+        2,
+        &mut ref_state,
+        &mut ref_sbsel,
+        &mut ref_rng,
+    );
+    assert!(ref_backprop > 0, "SB reference never backpropped — weak test");
+
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut eng = pipelined_engine(&d);
+    let mut sb = SbSelector::new(1.0, 64);
+    let mut rng = Rng::new(17);
+    let mut queue = Vec::new();
+    let out = execute_plan(
+        &mut eng,
+        &mut be,
+        &d,
+        &order,
+        None,
+        BatchMode::SelectiveBackprop { beta: 1.0 },
+        0.05,
+        2,
+        &mut state,
+        &mut sb,
+        &mut rng,
+        &mut queue,
+    )
+    .unwrap();
+
+    assert_eq!(state_bits(&ref_state), state_bits(&state));
+    assert_eq!(ref_loss.to_bits(), out.train_loss.to_bits());
+    assert_eq!(ref_backprop, out.backprop_samples);
+    assert_eq!(out.trained_samples, N);
+    assert_eq!(ref_be.param.to_bits(), be.param.to_bits());
+    assert!(queue.is_empty(), "finish() must flush the accept queue");
+    // the RNG streams must have advanced identically
+    assert_eq!(ref_rng.next_u64(), rng.next_u64());
+}
+
+#[test]
+fn refresh_mode_bitwise_identical() {
+    let d = dataset();
+    let hidden: Vec<u32> = (0..N as u32).filter(|i| i % 3 == 0).collect();
+
+    let mut ref_be = MockBackend::new();
+    let mut ref_state = SampleState::new(N);
+    ref_refresh(&mut ref_be, &d, &hidden, 4, &mut ref_state);
+
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut eng = pipelined_engine(&d);
+    let mut sink = RefreshSink::new(&mut state, 4);
+    eng.run(&mut be, &d, &hidden, None, StepMode::Forward, &mut sink)
+        .unwrap();
+
+    assert_eq!(state_bits(&ref_state), state_bits(&state));
+}
+
+#[test]
+fn eval_mode_bitwise_identical() {
+    let tv = gauss_mixture(
+        &GaussMixtureCfg { n_train: 16, n_val: 45, dim: 5, classes: 4, ..Default::default() },
+        11,
+    );
+
+    let mut ref_be = MockBackend::new();
+    let (ref_acc, ref_loss) = ref_eval(&mut ref_be, &tv.val);
+
+    let mut be = MockBackend::new();
+    let mut eng = pipelined_engine(&tv.val);
+    let idx: Vec<u32> = (0..tv.val.n as u32).collect();
+    let mut sink = EvalSink::default();
+    eng.run(&mut be, &tv.val, &idx, None, StepMode::Forward, &mut sink)
+        .unwrap();
+    let (acc, loss) = sink.result();
+
+    assert_eq!(ref_acc.to_bits(), acc.to_bits());
+    assert_eq!(ref_loss.to_bits(), loss.to_bits());
+}
+
+/// Multi-epoch chain: state and parameter histories stay bit-identical
+/// when every epoch runs through the pipelined engine vs. the reference.
+#[test]
+fn multi_epoch_chain_stays_identical() {
+    let d = dataset();
+
+    let mut ref_be = MockBackend::new();
+    let mut ref_state = SampleState::new(N);
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut eng = pipelined_engine(&d);
+    let mut sb = SbSelector::new(1.0, 64);
+    let mut rng = Rng::new(5);
+    let mut queue = Vec::new();
+
+    for epoch in 0..4u32 {
+        let mut order_rng = Rng::new(100 + epoch as u64);
+        let order = kakurenbo::sampler::epoch_permutation(N, &mut order_rng);
+        let lr = 0.05 / (1.0 + epoch as f32);
+        ref_plain(&mut ref_be, &d, &order, None, lr, epoch, &mut ref_state);
+        execute_plan(
+            &mut eng,
+            &mut be,
+            &d,
+            &order,
+            None,
+            BatchMode::Plain,
+            lr,
+            epoch,
+            &mut state,
+            &mut sb,
+            &mut rng,
+            &mut queue,
+        )
+        .unwrap();
+        assert_eq!(
+            ref_be.param.to_bits(),
+            be.param.to_bits(),
+            "diverged at epoch {epoch}"
+        );
+    }
+    assert_eq!(state_bits(&ref_state), state_bits(&state));
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end through the real executor (skipped when artifacts are absent)
+// ---------------------------------------------------------------------------
+
+mod end_to_end {
+    use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+    use kakurenbo::coordinator::Trainer;
+    use kakurenbo::metrics::RunResult;
+    use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+
+    fn runtime() -> Option<XlaRuntime> {
+        XlaRuntime::new(&default_artifacts_dir()).ok()
+    }
+
+    fn run(rt: &XlaRuntime, strategy: StrategyConfig, overlap: bool) -> RunResult {
+        let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+        cfg.epochs = 4;
+        if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
+            c.n_train = 512;
+            c.n_val = 128;
+        }
+        cfg.eval_every = 2;
+        cfg.strategy = strategy;
+        let mut t = Trainer::new(rt, cfg).unwrap();
+        t.engine.overlap = overlap;
+        t.run().unwrap()
+    }
+
+    /// The pipelined engine must not change a single bit of any recorded
+    /// epoch stat relative to serial execution, for every batch mode the
+    /// strategies emit.
+    #[test]
+    fn trainer_pipelined_matches_serial() {
+        let Some(rt) = runtime() else { return };
+        for strategy in [
+            StrategyConfig::Baseline,
+            StrategyConfig::kakurenbo(0.3),
+            StrategyConfig::SelectiveBackprop { beta: 1.0 },
+            StrategyConfig::Iswr,
+        ] {
+            let serial = run(&rt, strategy.clone(), false);
+            let piped = run(&rt, strategy.clone(), true);
+            assert_eq!(serial.records.len(), piped.records.len());
+            for (s, p) in serial.records.iter().zip(&piped.records) {
+                let name = strategy.name();
+                let e = s.epoch;
+                assert_eq!(s.train_loss.to_bits(), p.train_loss.to_bits(), "{name} e{e}");
+                assert_eq!(s.val_acc.to_bits(), p.val_acc.to_bits(), "{name} e{e}");
+                assert_eq!(s.val_loss.to_bits(), p.val_loss.to_bits(), "{name} e{e}");
+                assert_eq!(s.hidden, p.hidden, "{name} e{e}");
+                assert_eq!(s.moved_back, p.moved_back, "{name} e{e}");
+                assert_eq!(s.trained_samples, p.trained_samples, "{name} e{e}");
+                assert_eq!(s.backprop_samples, p.backprop_samples, "{name} e{e}");
+                assert_eq!(s.lr.to_bits(), p.lr.to_bits(), "{name} e{e}");
+            }
+        }
+    }
+}
