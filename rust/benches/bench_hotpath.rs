@@ -2,13 +2,16 @@
 //!   * hiding selector: quickselect vs full sort (the §Perf optimization)
 //!   * weighted samplers: alias build+draw vs Fenwick draw/update
 //!   * batch assembly gather
+//!   * worker pool: W ∈ {1, 2, 4} lanes, both schedules (mock backend)
 //!   * executor step latency (train vs fwd) — the PJRT dispatch floor
 //!
 //! Prints ns/op style rows and records them in results/hotpath.json.
 
 use kakurenbo::data::batch::BatchAssembler;
+use kakurenbo::data::shard::shard_order_aligned;
 use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
-use kakurenbo::engine::{Engine, EvalSink, StepMode};
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{Engine, EvalSink, StepMode, WorkerPool};
 use kakurenbo::hiding::selector::{select, SelectMode, SelectorCfg};
 use kakurenbo::report::BenchCtx;
 use kakurenbo::runtime::ModelExecutor;
@@ -101,6 +104,41 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(asm.real);
     });
     row("batch assembly (64x192 gather)", ta, 64, &mut payload);
+
+    // --- worker pool (mock backend, full 8192-sample sweep) -------------------
+    // W gather lanes behind the deterministic reduction: the serial-
+    // equivalent schedule parallelizes only the host gather; the data-
+    // parallel schedule additionally fans the (mock) device work out
+    // across replicas — the W=4 vs W=1 wall-clock ratio tracks the pool's
+    // scaling in the perf trajectory.
+    let preps = ctx.scale(10, 3);
+    let order: Vec<u32> = (0..8192u32).collect();
+    let mut w1_dp = 0.0;
+    for wk in [1usize, 2, 4] {
+        let shards = shard_order_aligned(&order, wk, 64);
+        let mut pool = WorkerPool::new(&data, 64);
+        let t_se = time_it(preps, || {
+            let mut be = MockBackend::new();
+            let mut sink = EvalSink::default();
+            pool.run_serial_equivalent(&mut be, &data, &shards, StepMode::Forward, &mut sink)
+                .unwrap();
+            std::hint::black_box(sink.result());
+        });
+        let t_dp = time_it(preps, || {
+            let mut be = MockBackend::new();
+            let mut sink = EvalSink::default();
+            pool.run_data_parallel(&mut be, &data, &shards, StepMode::Forward, &mut sink)
+                .unwrap();
+            std::hint::black_box(sink.result());
+        });
+        row(&format!("pool serial-equiv fwd sweep W={wk}"), t_se, 8192, &mut payload);
+        row(&format!("pool data-parallel fwd sweep W={wk}"), t_dp, 8192, &mut payload);
+        if wk == 1 {
+            w1_dp = t_dp;
+        } else {
+            println!("  pool data-parallel W={wk}: {:.2}x vs W=1", w1_dp / t_dp);
+        }
+    }
 
     // --- executor step latency ---------------------------------------------------
     let mut exec = ModelExecutor::new(&ctx.rt, "cnn_c32_b64", 1)?;

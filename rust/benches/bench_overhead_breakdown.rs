@@ -1,15 +1,19 @@
 //! §4.2 epoch-time accounting + distributed cost-model projection.
 //!
 //! Reports (a) the measured per-epoch breakdown (select / train / refresh)
-//! for each strategy, and (b) the calibrated cost model's projection of
-//! epoch time across worker counts — reproducing the paper's claims that
-//! KAKURENBO's overheads are amortized at scale while single-GPU runs can
-//! lose (Table 3), and that the speedup cannot reach the hiding rate
-//! because of the hidden-list forward refresh (Fig. 4).
+//! for each strategy, (b) the worker pool's measured scaling and barrier
+//! overhead at W ∈ {1, 2, 4}, and (c) the calibrated cost model's
+//! projection of epoch time across worker counts — reproducing the
+//! paper's claims that KAKURENBO's overheads are amortized at scale while
+//! single-GPU runs can lose (Table 3), and that the speedup cannot reach
+//! the hiding rate because of the hidden-list forward refresh (Fig. 4).
 
 use kakurenbo::config::{presets, StrategyConfig};
 use kakurenbo::coordinator::{CostModel, Trainer};
-use kakurenbo::engine::{EvalSink, StepMode};
+use kakurenbo::data::shard::shard_order_aligned;
+use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{EvalSink, StepMode, WorkerPool};
 use kakurenbo::report::BenchCtx;
 use kakurenbo::util::table::Table;
 use kakurenbo::util::timer::Timer;
@@ -92,6 +96,59 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // --- worker pool: measured scaling + coordination stall (mock) ----------
+    // The pool's two schedules on a host-only backend isolate the
+    // coordination cost from PJRT dispatch.  `stall` is the serial-
+    // equivalent reduction loop's total wait on worker gather lanes —
+    // time the (single) device stream spends starved, the overhead the
+    // paper's bulk-synchronous model charges per step.  (The data-
+    // parallel schedule's lane-0 wait would just re-measure each step's
+    // full compute latency, so it is not reported as overhead.)
+    let pdata = gauss_mixture(
+        &GaussMixtureCfg { n_train: 8192, n_val: 8, dim: 192, classes: 32, ..Default::default() },
+        3,
+    )
+    .train;
+    let order: Vec<u32> = (0..pdata.n as u32).collect();
+    let mut t = Table::new("Worker pool (mock fwd sweep, B=64, 8192 samples)").header(&[
+        "W", "serial-equiv (s)", "gather stall (s)", "data-parallel (s)", "vs W=1",
+    ]);
+    let mut pool_payload = Vec::new();
+    let mut w1_dp = 0.0;
+    for wk in [1usize, 2, 4] {
+        let shards = shard_order_aligned(&order, wk, 64);
+        let mut pool = WorkerPool::new(&pdata, 64);
+        let timer = Timer::start();
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        let pout =
+            pool.run_serial_equivalent(&mut be, &pdata, &shards, StepMode::Forward, &mut sink)?;
+        let se_s = timer.elapsed_s();
+        let stall: f64 = pout.workers.iter().map(|r| r.wait_s).sum();
+        let timer = Timer::start();
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        pool.run_data_parallel(&mut be, &pdata, &shards, StepMode::Forward, &mut sink)?;
+        let dp_s = timer.elapsed_s();
+        if wk == 1 {
+            w1_dp = dp_s;
+        }
+        t.row(vec![
+            wk.to_string(),
+            format!("{se_s:.4}"),
+            format!("{stall:.4}"),
+            format!("{dp_s:.4}"),
+            if wk == 1 { "-".into() } else { format!("{:.2}x", w1_dp / dp_s) },
+        ]);
+        pool_payload.push(kakurenbo::jobj![
+            ("workers", wk),
+            ("serial_equiv_s", se_s),
+            ("gather_stall_s", stall),
+            ("data_parallel_s", dp_s),
+        ]);
+    }
+    t.print();
+
     // --- cost-model projection ----------------------------------------------
     let mut cal_cfg = base.clone();
     cal_cfg.strategy = StrategyConfig::Baseline;
@@ -135,6 +192,10 @@ fn main() -> anyhow::Result<()> {
     payload.push(kakurenbo::jobj![(
         "engine_schedules",
         kakurenbo::util::json::Json::Arr(engine_payload)
+    )]);
+    payload.push(kakurenbo::jobj![(
+        "worker_pool",
+        kakurenbo::util::json::Json::Arr(pool_payload)
     )]);
     ctx.save_json("overhead_breakdown", &kakurenbo::util::json::Json::Arr(payload))?;
     Ok(())

@@ -154,7 +154,12 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub lr: LrConfig,
     pub momentum: f32,
-    /// Virtual data-parallel workers (distributed simulation + cost model).
+    /// Data-parallel worker count.  `> 1` executes plain training passes
+    /// and hidden-stat refreshes through the engine's `WorkerPool` (N
+    /// concurrent pipelined gather lanes behind a deterministic
+    /// bulk-synchronous reduction, bitwise identical to the single-stream
+    /// interleaved run — docs/worker-model.md) and also feeds the
+    /// paper-scale cost-model projection.
     pub workers: usize,
     /// Evaluate on the validation set every k epochs (always on last).
     pub eval_every: usize,

@@ -14,6 +14,8 @@
 use crate::runtime::ModelExecutor;
 use crate::util::timer::Timer;
 
+/// Calibrated per-sample/step cost constants plus the network model used
+/// to project epoch time to `W` data-parallel workers.
 #[derive(Clone, Debug)]
 pub struct CostModel {
     /// Seconds per sample, forward-only (measured).

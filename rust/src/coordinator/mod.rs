@@ -1,5 +1,16 @@
-//! L3 coordination: the training loop, the distributed (virtual-worker)
-//! projection, and the calibrated cost model.
+//! L3 coordination: the planning layer of the training stack.
+//!
+//! The [`Trainer`] *plans* each epoch — strategy selection (hide /
+//! move-back / prune / weights), LR + fraction schedules, worker
+//! sharding, checkpointing, metrics — and hands the resulting index
+//! order to the `engine` layer for execution: single-stream epochs go
+//! through the pipelined `Engine`, multi-worker epochs
+//! (`cfg.workers > 1`) through the `WorkerPool`'s deterministic
+//! bulk-synchronous schedule (docs/worker-model.md).  The [`CostModel`]
+//! projects measured single-host step latencies to the paper's
+//! multi-GPU scale.
+
+#![warn(missing_docs)]
 
 pub mod costmodel;
 pub mod trainer;

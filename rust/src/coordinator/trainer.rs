@@ -8,12 +8,23 @@
 //! learning rate); all per-step execution — batch gather, device steps,
 //! stat recording — routes through the pipelined `engine` module, which
 //! overlaps host-side gather with device execution.
+//!
+//! With `cfg.workers > 1` the plain training pass and the hidden-stat
+//! refresh run through the engine's `WorkerPool`: the epoch order is
+//! sharded batch-aligned across N concurrent gather lanes behind a
+//! bulk-synchronous barrier with a deterministic `(step, worker)`
+//! reduction, bitwise identical to the single-stream interleaved run
+//! (docs/worker-model.md).  Weighted plans (ISWR / InfoBatch) and the SB
+//! candidate stream stay single-stream, matching the paper's W = 1 setup
+//! for those baselines.
 
 use crate::config::{ExperimentConfig, StrategyConfig};
 use crate::coordinator::costmodel::CostModel;
-use crate::data::shard::{global_step_order, shard_order};
+use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
-use crate::engine::{execute_plan, Engine, EvalSink, RefreshSink, StepMode};
+use crate::engine::{
+    execute_plan, execute_sharded_plain, Engine, EvalSink, RefreshSink, StepMode, WorkerPool,
+};
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
 use crate::state::SampleState;
@@ -23,15 +34,26 @@ use crate::util::rng::Rng;
 use crate::util::stats::Histogram;
 use crate::util::timer::Timer;
 
+/// Runs one experiment end to end: plans every epoch (strategy, LR,
+/// sharding) and drives the engine / worker pool through the PJRT
+/// executor, producing per-epoch records.
 pub struct Trainer {
+    /// The full experiment configuration the run was built from.
     pub cfg: ExperimentConfig,
+    /// The PJRT executor holding model parameters as device literals.
     pub exec: ModelExecutor,
+    /// Train + validation datasets (generated once per run).
     pub data: TrainVal,
+    /// Per-sample lagging loss / PA / PC store.
     pub state: SampleState,
+    /// Calibrated paper-scale cost model.
     pub cost: CostModel,
     /// The pipelined step-execution driver (owns the reusable batch
     /// buffers shared by training, refresh, and eval passes).
     pub engine: Engine,
+    /// The multi-worker execution driver used when `cfg.workers > 1`
+    /// (N gather lanes behind a deterministic bulk-synchronous reduction).
+    pub pool: WorkerPool,
     strategy: Box<dyn Strategy>,
     rng: Rng,
     sb: SbSelector,
@@ -46,6 +68,9 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Build a trainer: generate the dataset, compile the variant's
+    /// artifacts, calibrate the cost model, and size the execution
+    /// engine + worker pool.
     pub fn new(rt: &XlaRuntime, cfg: ExperimentConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
         let data = cfg.dataset.generate(cfg.seed);
@@ -81,6 +106,7 @@ impl Trainer {
             _ => 1.0,
         };
         let engine = Engine::new(&data.train, exec.meta.batch);
+        let pool = WorkerPool::new(&data.train, exec.meta.batch);
         let eval_idx: Vec<u32> = (0..data.val.n as u32).collect();
         Ok(Trainer {
             rng: Rng::new(cfg.seed ^ 0x7472_6169),
@@ -94,6 +120,7 @@ impl Trainer {
             state,
             cost,
             engine,
+            pool,
             strategy,
         })
     }
@@ -140,6 +167,8 @@ impl Trainer {
         ))
     }
 
+    /// Run one epoch: plan (strategy selection) -> train (engine / pool)
+    /// -> hidden-stat refresh -> evaluation -> metrics + cost model.
     pub fn run_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochRecord> {
         let mut rec = EpochRecord { epoch, val_acc: f64::NAN, ..Default::default() };
 
@@ -171,34 +200,46 @@ impl Trainer {
         rec.hidden = plan.hidden.len();
         rec.moved_back = plan.moved_back;
 
-        // --- train (through the step engine) -------------------------------
+        // --- train (through the step engine / worker pool) -----------------
         let t = Timer::start();
-        // Distributed fidelity: interleave worker shards into the global
-        // batch order (weighted plans skip this — they are W=1 per paper;
-        // SB consumes its candidate stream unsharded).  Avoid cloning the
-        // epoch order in the common single-worker / unweighted case
-        // (§Perf: saves an O(N) copy per epoch).
-        let sharded: Option<Vec<u32>> = match plan.batch_mode {
+        // Data-parallel execution: shard the epoch batch-aligned across
+        // the worker pool (weighted plans skip this — they are W=1 per
+        // paper; SB consumes its candidate stream unsharded).
+        let outcome = match plan.batch_mode {
             BatchMode::Plain if self.cfg.workers > 1 && plan.weights.is_none() => {
-                Some(global_step_order(&shard_order(&plan.order, self.cfg.workers)))
+                let shards = shard_order_aligned(
+                    &plan.order,
+                    self.cfg.workers,
+                    self.engine.batch(),
+                );
+                let (outcome, pout) = execute_sharded_plain(
+                    &mut self.pool,
+                    &mut self.exec,
+                    &self.data.train,
+                    &shards,
+                    rec.lr as f32,
+                    epoch as u32,
+                    &mut self.state,
+                )?;
+                rec.worker_samples = pout.workers.iter().map(|w| w.samples).collect();
+                rec.time_barrier += pout.workers.iter().map(|w| w.wait_s).sum::<f64>();
+                outcome
             }
-            _ => None,
+            _ => execute_plan(
+                &mut self.engine,
+                &mut self.exec,
+                &self.data.train,
+                &plan.order,
+                plan.weights.as_deref(),
+                plan.batch_mode,
+                rec.lr as f32,
+                epoch as u32,
+                &mut self.state,
+                &mut self.sb,
+                &mut self.rng,
+                &mut self.sb_queue,
+            )?,
         };
-        let order: &[u32] = sharded.as_deref().unwrap_or(&plan.order);
-        let outcome = execute_plan(
-            &mut self.engine,
-            &mut self.exec,
-            &self.data.train,
-            order,
-            plan.weights.as_deref(),
-            plan.batch_mode,
-            rec.lr as f32,
-            epoch as u32,
-            &mut self.state,
-            &mut self.sb,
-            &mut self.rng,
-            &mut self.sb_queue,
-        )?;
         rec.trained_samples = outcome.trained_samples;
         rec.backprop_samples = outcome.backprop_samples;
         rec.train_loss = outcome.train_loss;
@@ -209,7 +250,7 @@ impl Trainer {
         let mut refreshed = 0usize;
         if self.strategy.refresh_hidden_stats() && !plan.hidden.is_empty() {
             refreshed = plan.hidden.len();
-            self.refresh_stats(&plan.hidden, epoch as u32)?;
+            rec.time_barrier += self.refresh_stats(&plan.hidden, epoch as u32)?;
         }
         rec.time_refresh = t.elapsed_s();
         rec.hidden_again = self.state.hidden_again_count();
@@ -259,17 +300,37 @@ impl Trainer {
         Ok(rec)
     }
 
-    /// Forward-only stat refresh over `indices` (hidden list).
-    fn refresh_stats(&mut self, indices: &[u32], epoch: u32) -> anyhow::Result<()> {
+    /// Forward-only stat refresh over `indices` (hidden list), sharded
+    /// across the worker pool when `cfg.workers > 1` and the list spans
+    /// at least one batch per worker — smaller lists stay single-stream,
+    /// since batch-aligned wrap padding would multiply the forward count
+    /// for no gather parallelism.  (Wrap-padding duplicates re-record
+    /// identical values, so the resulting state is unchanged either way.)
+    /// Returns the pool's gather stall (0 single-stream).
+    fn refresh_stats(&mut self, indices: &[u32], epoch: u32) -> anyhow::Result<f64> {
         let mut sink = RefreshSink::new(&mut self.state, epoch);
-        self.engine.run(
-            &mut self.exec,
-            &self.data.train,
-            indices,
-            None,
-            StepMode::Forward,
-            &mut sink,
-        )
+        if self.cfg.workers > 1 && indices.len() >= self.cfg.workers * self.engine.batch() {
+            let shards =
+                shard_order_aligned(indices, self.cfg.workers, self.engine.batch());
+            let pout = self.pool.run_serial_equivalent(
+                &mut self.exec,
+                &self.data.train,
+                &shards,
+                StepMode::Forward,
+                &mut sink,
+            )?;
+            Ok(pout.workers.iter().map(|w| w.wait_s).sum())
+        } else {
+            self.engine.run(
+                &mut self.exec,
+                &self.data.train,
+                indices,
+                None,
+                StepMode::Forward,
+                &mut sink,
+            )?;
+            Ok(0.0)
+        }
     }
 
     /// Validation top-1 accuracy + mean loss.
@@ -286,6 +347,7 @@ impl Trainer {
         Ok(sink.result())
     }
 
+    /// Display name of the configured strategy.
     pub fn strategy_name(&self) -> String {
         self.strategy.name()
     }

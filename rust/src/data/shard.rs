@@ -1,25 +1,109 @@
-//! Worker sharding of an epoch's training order (distributed simulation).
+//! Worker sharding of an epoch's training order (data-parallel execution).
 //!
 //! The paper runs data-parallel training with one MPI rank per GPU (32-1024
-//! workers, Appendix B.1).  Our virtual-worker runtime shards the epoch
-//! order the same way the PyTorch DistributedSampler does — contiguous
-//! equal chunks after the global shuffle, padded by wrap-around so every
-//! worker takes the same number of steps (the allreduce is bulk-synchronous:
-//! ragged shards would deadlock a real job).
+//! workers, Appendix B.1).  Our runtime shards the epoch order the same way
+//! the PyTorch DistributedSampler does — contiguous equal chunks after the
+//! global shuffle, padded by wrap-around so every worker takes the same
+//! number of steps (the allreduce is bulk-synchronous: ragged shards would
+//! deadlock a real job; see docs/worker-model.md).
+//!
+//! Two granularities of padding exist:
+//!
+//! * [`shard_order`] pads shards to equal *sample* counts (the historical
+//!   virtual-worker interleave, granularity 1);
+//! * [`shard_order_aligned`] additionally rounds each shard up to a whole
+//!   number of device batches, so every worker executes the same number of
+//!   *full* steps.  This is what the engine's `WorkerPool` consumes: with
+//!   batch-aligned shards, the pool's bulk-synchronous `(step, worker)`
+//!   execution order is bitwise-identical to a single serial stream over
+//!   [`global_batch_order`].
 
+/// One worker's slice of the epoch order: the sample indices worker
+/// `worker` trains on this epoch, in its local step order.
 #[derive(Clone, Debug)]
 pub struct Shard {
+    /// Worker rank owning this slice (0-based, dense).
     pub worker: usize,
+    /// Sample indices in local execution order (may contain wrap-around
+    /// duplicates from padding).
     pub indices: Vec<u32>,
 }
 
-/// Split `order` into `workers` equal shards (wrap-around padding).
+impl Shard {
+    /// Number of samples in the shard (including wrap-around padding).
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Whether the shard holds no samples (empty epoch).
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Number of bulk-synchronous steps this shard contributes at device
+    /// batch size `batch`.  For [`shard_order_aligned`] shards every step
+    /// is a full batch; for granularity-1 shards the last step may be
+    /// ragged.
+    pub fn steps(&self, batch: usize) -> usize {
+        assert!(batch > 0);
+        self.indices.len().div_ceil(batch)
+    }
+
+    /// The sample indices this worker feeds into global step `s` (empty
+    /// once `s >= self.steps(batch)`).
+    pub fn step_batch(&self, s: usize, batch: usize) -> &[u32] {
+        assert!(batch > 0);
+        let lo = (s * batch).min(self.indices.len());
+        let hi = ((s + 1) * batch).min(self.indices.len());
+        &self.indices[lo..hi]
+    }
+}
+
+/// Split `order` into `workers` equal shards (wrap-around padding),
+/// sample granularity.
+///
+/// Each worker receives a contiguous window of the (already shuffled)
+/// epoch order; windows tile the order end-to-start, so their union always
+/// covers every sample and padding duplicates only appear when
+/// `order.len()` does not divide evenly.
+///
+/// ```
+/// use kakurenbo::data::shard::shard_order;
+/// let order: Vec<u32> = (0..103).collect();
+/// let shards = shard_order(&order, 4);
+/// // equal sizes: ceil(103 / 4) = 26 samples per worker
+/// assert!(shards.iter().all(|s| s.len() == 26));
+/// // contiguous windows: worker 1 starts where worker 0 ends
+/// assert_eq!(shards[1].indices[0], 26);
+/// ```
 pub fn shard_order(order: &[u32], workers: usize) -> Vec<Shard> {
+    shard_order_aligned(order, workers, 1)
+}
+
+/// Split `order` into `workers` equal shards, each padded (wrap-around) to
+/// a whole number of `batch`-sized steps.
+///
+/// Every worker ends up with exactly `ceil(ceil(n / W) / batch)` full
+/// device batches, so a bulk-synchronous step loop across workers lines up
+/// with no ragged tails — the invariant the engine's `WorkerPool` barrier
+/// relies on (docs/worker-model.md).
+///
+/// ```
+/// use kakurenbo::data::shard::shard_order_aligned;
+/// let order: Vec<u32> = (0..10).collect();
+/// let shards = shard_order_aligned(&order, 2, 4);
+/// // ceil(10/2) = 5, rounded up to a multiple of 4 => 8 per worker
+/// assert!(shards.iter().all(|s| s.len() == 8 && s.steps(4) == 2));
+/// // wrap-around padding: worker 1's window continues past the end
+/// assert_eq!(shards[1].indices, vec![8, 9, 0, 1, 2, 3, 4, 5]);
+/// ```
+pub fn shard_order_aligned(order: &[u32], workers: usize, batch: usize) -> Vec<Shard> {
     assert!(workers > 0);
+    assert!(batch > 0);
     if order.is_empty() {
         return (0..workers).map(|w| Shard { worker: w, indices: vec![] }).collect();
     }
-    let per = order.len().div_ceil(workers);
+    let per = order.len().div_ceil(workers).div_ceil(batch) * batch;
     (0..workers)
         .map(|w| {
             let mut indices = Vec::with_capacity(per);
@@ -31,18 +115,48 @@ pub fn shard_order(order: &[u32], workers: usize) -> Vec<Shard> {
         .collect()
 }
 
-/// Interleave shards back into the global step order: step s consumes
-/// shard[w].indices[s] across workers — this is the order the *global
-/// batch* (W x b samples) is assembled in by the coordinator.
+/// Interleave shards back into the global step order at sample
+/// granularity: step s consumes `shard[w].indices[s]` across workers.
+///
+/// This is the historical virtual-worker stream (one sample per worker
+/// per step); the batch-granular equivalent the worker pool executes is
+/// [`global_batch_order`].
+///
+/// ```
+/// use kakurenbo::data::shard::{global_step_order, shard_order};
+/// let order: Vec<u32> = (0..8).collect();
+/// let shards = shard_order(&order, 2);
+/// // worker 0 holds 0..4, worker 1 holds 4..8; steps interleave:
+/// assert_eq!(global_step_order(&shards), vec![0, 4, 1, 5, 2, 6, 3, 7]);
+/// ```
 pub fn global_step_order(shards: &[Shard]) -> Vec<u32> {
+    global_batch_order(shards, 1)
+}
+
+/// Interleave shards into the global *batch* order: global step s emits
+/// worker 0's s-th batch, then worker 1's, and so on.
+///
+/// For batch-aligned shards this flat stream, chunked by `batch`, performs
+/// exactly the device calls of the worker pool's bulk-synchronous
+/// schedule, in its deterministic `(step, worker)` reduction order — the
+/// serial reference the pool is tested against.
+///
+/// ```
+/// use kakurenbo::data::shard::{global_batch_order, shard_order_aligned};
+/// let order: Vec<u32> = (0..8).collect();
+/// let shards = shard_order_aligned(&order, 2, 2);
+/// // step 0: worker0 [0,1], worker1 [4,5]; step 1: [2,3], [6,7]
+/// assert_eq!(global_batch_order(&shards, 2), vec![0, 1, 4, 5, 2, 3, 6, 7]);
+/// ```
+pub fn global_batch_order(shards: &[Shard], batch: usize) -> Vec<u32> {
     if shards.is_empty() {
         return vec![];
     }
-    let steps = shards[0].indices.len();
-    let mut out = Vec::with_capacity(steps * shards.len());
+    let steps = shards[0].steps(batch);
+    let mut out = Vec::with_capacity(shards.iter().map(Shard::len).sum());
     for s in 0..steps {
         for shard in shards {
-            out.push(shard.indices[s]);
+            out.extend_from_slice(shard.step_batch(s, batch));
         }
     }
     out
@@ -88,6 +202,68 @@ mod tests {
         let shards = shard_order(&[], 3);
         assert_eq!(shards.len(), 3);
         assert!(global_step_order(&shards).is_empty());
+        let shards = shard_order_aligned(&[], 3, 8);
+        assert!(shards.iter().all(|s| s.is_empty() && s.steps(8) == 0));
+        assert!(global_batch_order(&shards, 8).is_empty());
+    }
+
+    #[test]
+    fn aligned_shards_take_whole_steps() {
+        // n = 83, W = 3, b = 8: per = ceil(83/3) = 28 -> aligned 32
+        let order: Vec<u32> = (0..83).collect();
+        let shards = shard_order_aligned(&order, 3, 8);
+        for s in &shards {
+            assert_eq!(s.len(), 32);
+            assert_eq!(s.len() % 8, 0);
+            assert_eq!(s.steps(8), 4);
+        }
+        // union still covers every sample
+        let mut seen = vec![false; 83];
+        for s in &shards {
+            for &i in &s.indices {
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn aligned_windows_tile_the_order() {
+        // windows start at w*per mod n and are contiguous end-to-start,
+        // so coverage holds even when per > n / W
+        let order: Vec<u32> = (0..10).collect();
+        let shards = shard_order_aligned(&order, 4, 8);
+        assert!(shards.iter().all(|s| s.len() == 8));
+        let mut seen = vec![false; 10];
+        for s in &shards {
+            for &i in &s.indices {
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn step_batch_slices() {
+        let order: Vec<u32> = (0..20).collect();
+        let shards = shard_order_aligned(&order, 2, 4);
+        // per = ceil(10/4)*4 = 12: worker 1 wraps past the end
+        let s1 = &shards[1];
+        assert_eq!(s1.steps(4), 3);
+        assert_eq!(s1.step_batch(0, 4), &[12, 13, 14, 15]);
+        assert_eq!(s1.step_batch(2, 4), &[0, 1, 2, 3]);
+        assert!(s1.step_batch(3, 4).is_empty());
+    }
+
+    #[test]
+    fn batch_order_chunks_match_pool_schedule() {
+        let order: Vec<u32> = (0..16).collect();
+        let shards = shard_order_aligned(&order, 2, 4);
+        let flat = global_batch_order(&shards, 4);
+        // chunk k of the flat stream is worker (k % 2)'s batch (k / 2)
+        for (k, chunk) in flat.chunks(4).enumerate() {
+            assert_eq!(chunk, shards[k % 2].step_batch(k / 2, 4));
+        }
     }
 }
 

@@ -142,7 +142,7 @@ impl Default for FractalCfg {
     }
 }
 
-/// Sinusoidal class signatures: x[d] = Σ_k a_ck sin(f_ck d + φ_ck) + noise.
+/// Sinusoidal class signatures: `x[d] = Σ_k a_ck sin(f_ck d + φ_ck) + noise`.
 /// A deliberately different geometry from the Gaussian mixture so that a
 /// trunk pretrained here transfers (rather than trivially matching) the
 /// downstream task — mirroring Fractal-3K → CIFAR in the paper.

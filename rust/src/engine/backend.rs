@@ -1,8 +1,15 @@
-//! The device-side contract the step engine drives.
+//! The device-side contracts the step engine drives.
 //!
-//! `ModelExecutor` (runtime layer) is the production backend; tests use a
-//! deterministic host-only mock so the pipelined-vs-serial equivalence can
-//! be verified without PJRT artifacts.
+//! [`StepBackend`] is the per-step execution surface: `ModelExecutor`
+//! (runtime layer) is the production backend; tests and benches use the
+//! deterministic host-only [`crate::engine::testbed::MockBackend`] so the
+//! pipelined-vs-serial and pool-vs-stream equivalences can be verified
+//! without PJRT artifacts.
+//!
+//! [`DataParallel`] extends it with replica management (replicate /
+//! export / import parameter state) for the worker pool's true
+//! data-parallel mode, where each worker steps its own replica and the
+//! pool averages parameters at the bulk-synchronous step barrier.
 
 use crate::runtime::BatchStats;
 
@@ -22,4 +29,89 @@ pub trait StepBackend {
 
     /// Forward-only stats (refresh, eval, SB candidate pass).
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats>;
+}
+
+/// A backend whose model state can be replicated across data-parallel
+/// workers and merged back by parameter averaging.
+///
+/// The contract the worker pool relies on:
+///
+/// * [`DataParallel::replicate`] produces a backend that is
+///   *bitwise-identical* in behaviour to `self` (same parameters, same
+///   optimizer state), so W freshly replicated workers running forward
+///   passes produce exactly the stats a single stream would.
+/// * [`DataParallel::export_state`] / [`DataParallel::import_state`]
+///   round-trip the full mutable state exactly (f32 bit patterns are
+///   preserved), so the pool's fixed worker-order averaging fold is
+///   deterministic run to run.
+pub trait DataParallel: StepBackend {
+    /// Build an independent replica with identical state.
+    fn replicate(&self) -> anyhow::Result<Self>
+    where
+        Self: Sized;
+
+    /// Snapshot the full mutable model state (parameters + optimizer
+    /// state) as host tensors, in a stable leaf order.
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>>;
+
+    /// Restore state previously produced by [`DataParallel::export_state`]
+    /// (or an elementwise average of several such snapshots).
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()>;
+}
+
+/// Accumulate `other` into `acc` elementwise (one fold step of the pool's
+/// fixed worker-order parameter reduction).
+pub fn accumulate_state(acc: &mut [Vec<f32>], other: &[Vec<f32>]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        acc.len() == other.len(),
+        "state leaf count mismatch: {} vs {}",
+        acc.len(),
+        other.len()
+    );
+    for (a, o) in acc.iter_mut().zip(other) {
+        anyhow::ensure!(a.len() == o.len(), "state leaf shape mismatch");
+        for (x, y) in a.iter_mut().zip(o) {
+            *x += y;
+        }
+    }
+    Ok(())
+}
+
+/// Finish the parameter average: divide every accumulated element by the
+/// worker count.  Division (not multiplication by a reciprocal) keeps the
+/// W = 1 path exact and powers of two bitwise-lossless.
+pub fn finish_average(acc: &mut [Vec<f32>], workers: usize) {
+    let w = workers as f32;
+    for leaf in acc.iter_mut() {
+        for v in leaf.iter_mut() {
+            *v /= w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_of_identical_states_is_identity_for_pow2() {
+        let state = vec![vec![0.1f32, -2.5, 3.75], vec![1.0e-7]];
+        for w in [1usize, 2, 4] {
+            let mut acc = state.clone();
+            for _ in 1..w {
+                accumulate_state(&mut acc, &state).unwrap();
+            }
+            finish_average(&mut acc, w);
+            let got: Vec<u32> = acc.iter().flatten().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = state.iter().flatten().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "w={w}");
+        }
+    }
+
+    #[test]
+    fn mismatched_shapes_rejected() {
+        let mut a = vec![vec![1.0f32; 3]];
+        assert!(accumulate_state(&mut a, &[vec![1.0f32; 2]]).is_err());
+        assert!(accumulate_state(&mut a, &[vec![1.0f32; 3], vec![0.0]]).is_err());
+    }
 }

@@ -4,7 +4,7 @@
 //!
 //! # Where this sits in the architecture
 //!
-//! The repo is layered (see lib.rs / DESIGN.md):
+//! The repo is layered (see README.md / docs/worker-model.md):
 //!   * **L1/L2** (`python/`, build time): JAX models + Pallas kernels,
 //!     AOT-lowered to HLO artifacts.
 //!   * **runtime**: the PJRT client executing those artifacts
@@ -39,12 +39,30 @@
 //! Backprop's accept queue) issue them immediately through
 //! [`StepCtx::step_now`]; those steps are inherently serial but the
 //! candidate forward stream around them keeps prefetching.
+//!
+//! # Scaling out: the worker pool
+//!
+//! Multi-worker execution lives in [`pool`]: `cfg.workers > 1` shards the
+//! epoch order ([`crate::data::shard::shard_order_aligned`]) and executes
+//! it through [`WorkerPool`] — N of these double-buffered gather lanes
+//! running concurrently behind one bulk-synchronous step barrier with a
+//! deterministic `(step, worker)` reduction.  The default schedule is
+//! bitwise identical to the single-stream interleaved run (the same
+//! determinism contract as the overlap switch above); see
+//! docs/worker-model.md for the full execution model.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod modes;
+pub mod pool;
+pub mod testbed;
 
-pub use backend::StepBackend;
-pub use modes::{execute_plan, EpochOutcome, EvalSink, RefreshSink, SbSink, TrainSink};
+pub use backend::{DataParallel, StepBackend};
+pub use modes::{
+    execute_plan, execute_sharded_plain, EpochOutcome, EvalSink, RefreshSink, SbSink, TrainSink,
+};
+pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
 
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::Dataset;
@@ -54,7 +72,10 @@ use crate::runtime::BatchStats;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum StepMode {
     /// Full SGD step (`train_step`) at the given learning rate.
-    Train { lr: f32 },
+    Train {
+        /// Learning rate applied by the device step.
+        lr: f32,
+    },
     /// Forward-only stats pass (`fwd_stats`).
     Forward,
 }
@@ -97,6 +118,8 @@ impl StepCtx<'_> {
 /// Consumes each executed batch's results.  `slots[..real]` are the sample
 /// indices the batch held (padding slots beyond `real` carry `u32::MAX`).
 pub trait StepSink {
+    /// Consume one executed batch's stats (called once per device step, in
+    /// execution order).
     fn on_batch(
         &mut self,
         ctx: &mut StepCtx,
@@ -130,6 +153,7 @@ impl Engine {
         self.batch
     }
 
+    /// An engine sized for `data`'s sample layout at device batch `batch`.
     pub fn new(data: &Dataset, batch: usize) -> Self {
         Engine {
             buffers: DoubleBuffer::new(data, batch),
@@ -269,59 +293,9 @@ impl Engine {
 
 #[cfg(test)]
 mod tests {
+    use super::testbed::MockBackend;
     use super::*;
     use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
-
-    /// Order-sensitive host-only backend: a scalar "parameter" folds in
-    /// every training batch, so any reordering or content corruption in
-    /// the pipeline changes the bit pattern of subsequent outputs.
-    pub struct MockBackend {
-        pub param: f32,
-        pub trace: Vec<u64>,
-    }
-
-    impl MockBackend {
-        pub fn new() -> Self {
-            MockBackend { param: 1.0, trace: vec![] }
-        }
-
-        fn stats(&self, x: &[f32], y: &[i32], sw: Option<&[f32]>, b: usize) -> BatchStats {
-            let dim = x.len() / b;
-            let mut s = BatchStats::default();
-            for slot in 0..b {
-                let xs: f32 = x[slot * dim..(slot + 1) * dim].iter().sum();
-                let w = sw.map_or(1.0, |sw| sw[slot]);
-                let l = (xs * self.param).abs() + y[slot] as f32 * 0.125 + w * 0.25;
-                s.loss.push(l);
-                s.correct.push(if l < 2.0 { 1.0 } else { 0.0 });
-                s.conf.push(1.0 / (1.0 + l));
-            }
-            s
-        }
-    }
-
-    impl StepBackend for MockBackend {
-        fn train_step(
-            &mut self,
-            x: &[f32],
-            y: &[i32],
-            sw: &[f32],
-            lr: f32,
-        ) -> anyhow::Result<BatchStats> {
-            let b = sw.len();
-            let stats = self.stats(x, y, Some(sw), b);
-            for (slot, &w) in sw.iter().enumerate() {
-                self.param += stats.loss[slot] * w * lr * 1e-3;
-            }
-            self.trace.push(self.param.to_bits() as u64);
-            Ok(stats)
-        }
-
-        fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
-            let b = y.len();
-            Ok(self.stats(x, y, None, b))
-        }
-    }
 
     struct Collect {
         losses: Vec<u32>,

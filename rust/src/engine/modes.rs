@@ -14,7 +14,9 @@
 //! strategy's `BatchMode` and routes the epoch order through the right
 //! sink, so the trainer never matches on execution modes itself.
 
+use super::pool::{PoolOutcome, WorkerPool};
 use super::{Engine, StepBackend, StepCtx, StepMode, StepSink};
+use crate::data::shard::Shard;
 use crate::data::Dataset;
 use crate::runtime::BatchStats;
 use crate::state::SampleState;
@@ -25,8 +27,12 @@ use crate::util::rng::Rng;
 /// What one epoch's execution produced (fed into `EpochRecord`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EpochOutcome {
+    /// Samples that went through a training-path forward pass.
     pub trained_samples: usize,
+    /// Samples whose gradients were actually applied (differs from
+    /// `trained_samples` for Selective-Backprop).
     pub backprop_samples: usize,
+    /// Mean training loss over the epoch's training passes.
     pub train_loss: f64,
 }
 
@@ -40,10 +46,12 @@ pub struct TrainSink<'a> {
 }
 
 impl<'a> TrainSink<'a> {
+    /// A sink recording into `state`, stamping updates with `epoch`.
     pub fn new(state: &'a mut SampleState, epoch: u32) -> Self {
         TrainSink { state, epoch, loss_sum: 0.0, loss_n: 0 }
     }
 
+    /// Mean loss over every real slot consumed so far.
     pub fn mean_loss(&self) -> f64 {
         self.loss_sum / self.loss_n.max(1) as f64
     }
@@ -79,6 +87,7 @@ pub struct RefreshSink<'a> {
 }
 
 impl<'a> RefreshSink<'a> {
+    /// A sink recording refreshed stats into `state` at `epoch`.
     pub fn new(state: &'a mut SampleState, epoch: u32) -> Self {
         RefreshSink { state, epoch }
     }
@@ -122,6 +131,8 @@ pub struct SbSink<'a> {
 }
 
 impl<'a> SbSink<'a> {
+    /// An accept-queue sink over the trainer's persistent `queue`,
+    /// backpropagating accepted samples in `batch`-sized steps at `lr`.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         state: &'a mut SampleState,
@@ -147,10 +158,12 @@ impl<'a> SbSink<'a> {
         }
     }
 
+    /// Mean loss over the candidate forward stream.
     pub fn mean_loss(&self) -> f64 {
         self.loss_sum / self.loss_n.max(1) as f64
     }
 
+    /// Samples whose gradients were applied via the accept queue.
     pub fn backprop_samples(&self) -> usize {
         self.backprop
     }
@@ -270,4 +283,33 @@ pub fn execute_plan(
             })
         }
     }
+}
+
+/// Execute one planned epoch's plain (unweighted) training pass through
+/// the worker pool: worker `w` trains `shards[w]` behind the pool's
+/// bulk-synchronous barrier and deterministic `(step, worker)` reduction.
+///
+/// The serial-equivalent schedule makes this bitwise identical to
+/// [`execute_plan`] with `BatchMode::Plain` over
+/// [`crate::data::shard::global_batch_order`] — enforced by
+/// `tests/worker_pool_determinism.rs`.  Returns the epoch outcome plus the
+/// pool's per-worker accounting for the metrics roll-up.
+pub fn execute_sharded_plain(
+    pool: &mut WorkerPool,
+    backend: &mut dyn StepBackend,
+    data: &Dataset,
+    shards: &[Shard],
+    lr: f32,
+    epoch: u32,
+    state: &mut SampleState,
+) -> anyhow::Result<(EpochOutcome, PoolOutcome)> {
+    let mut sink = TrainSink::new(state, epoch);
+    let pout =
+        pool.run_serial_equivalent(backend, data, shards, StepMode::Train { lr }, &mut sink)?;
+    let outcome = EpochOutcome {
+        trained_samples: pout.samples,
+        backprop_samples: pout.samples,
+        train_loss: sink.mean_loss(),
+    };
+    Ok((outcome, pout))
 }

@@ -1,0 +1,642 @@
+//! The data-parallel worker pool: N pipelined gather lanes behind one
+//! deterministic, bulk-synchronous reduction.
+//!
+//! # Execution model
+//!
+//! The coordinator shards each epoch's order with
+//! [`crate::data::shard::shard_order_aligned`], so every worker owns the
+//! same number of full device batches (ragged shards are rejected: the
+//! step barrier is bulk-synchronous and a short lane would deadlock a real
+//! allreduce — see docs/worker-model.md).  Each worker owns its own
+//! double-buffered pipelined driver over its [`Shard`]: a gather lane
+//! (one prefetch thread + two parked [`BatchAssembler`]s handed over by
+//! value through channels, exactly the engine's overlap scheme) that
+//! keeps filling batch `s+1` while batch `s` executes.
+//!
+//! Two schedules consume the lanes:
+//!
+//! * [`WorkerPool::run_serial_equivalent`] — the default and the
+//!   determinism contract.  All device steps execute on the *primary*
+//!   backend, in fixed `(step, worker)` order; only the host-side gather
+//!   fans out.  The result is **bitwise identical** to a single serial
+//!   stream over [`crate::data::shard::global_batch_order`] — N workers
+//!   are an execution detail, not a semantics change.
+//! * [`WorkerPool::run_data_parallel`] — true synchronous data-parallel
+//!   SGD.  Every worker steps its own [`DataParallel`] replica; at each
+//!   step barrier the pool folds the workers' [`BatchStats`] into the
+//!   sink in fixed worker order and (for train steps) averages the
+//!   replica parameters with the same fixed-order fold, so results are
+//!   deterministic run to run.  Forward-only passes are additionally
+//!   bitwise identical to the serial-equivalent schedule (parameters
+//!   never change); train passes follow global-batch SGD semantics and
+//!   are *not* serial-equivalent (documented in docs/worker-model.md).
+//!
+//! # Determinism contract
+//!
+//! Enforced by `tests/worker_pool_determinism.rs` and the
+//! `pool_reduction_matches_serial_interleaved_fold` property test
+//! (`tests/property_invariants.rs`): for any (order length, worker
+//! count, batch size), the serial-equivalent pool run produces
+//! bit-for-bit the stats, sink state, and backend state of the
+//! single-stream interleaved run *for that worker count*.  Changing the
+//! worker count itself changes the sharding (wrap padding and batch
+//! composition), exactly as adding ranks does in a real distributed
+//! sampler — the contract is "threads are invisible", not "W is
+//! invisible".
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+use super::backend::{accumulate_state, finish_average, DataParallel};
+use super::{dispatch, StepBackend, StepCtx, StepMode, StepSink};
+use crate::data::batch::{BatchAssembler, DoubleBuffer};
+use crate::data::shard::Shard;
+use crate::data::Dataset;
+use crate::runtime::BatchStats;
+use crate::util::timer::Timer;
+
+/// Per-worker execution accounting for one pool run.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    /// Worker rank (matches `Shard::worker`).
+    pub worker: usize,
+    /// Device steps executed for this worker's shard.
+    pub steps: usize,
+    /// Real (non-padding) samples executed for this worker.
+    pub samples: usize,
+    /// Seconds the reduction loop spent blocked on this worker's lane.
+    /// In the serial-equivalent schedule this is gather starvation on the
+    /// device's critical path.  In the data-parallel schedule the
+    /// reduction loop has no work of its own, so lane 0's wait absorbs
+    /// each step's full gather+compute latency and later lanes measure
+    /// only the skew behind lane 0 — use the serial-equivalent figure
+    /// when quoting coordination overhead.
+    pub wait_s: f64,
+}
+
+/// What one pool run executed (rolled up into `EpochRecord`).
+#[derive(Clone, Debug, Default)]
+pub struct PoolOutcome {
+    /// Bulk-synchronous global steps taken (each executes one batch per
+    /// worker).
+    pub steps: usize,
+    /// Total real samples executed across workers.
+    pub samples: usize,
+    /// Per-worker accounting, indexed by worker rank.
+    pub workers: Vec<WorkerReport>,
+}
+
+/// Messages a data-parallel worker lane sends to the reduction loop.
+enum LaneMsg {
+    /// One executed step: its stats plus the slot map of the batch.
+    Step { stats: BatchStats, slots: Vec<u32>, real: usize },
+    /// The lane's backend failed; the run aborts.
+    Fail(String),
+}
+
+/// The multi-worker execution driver.  Owns the per-worker parked batch
+/// buffers (reused across epochs and across train/refresh runs) plus a
+/// scratch assembler for sink-issued immediate steps.
+pub struct WorkerPool {
+    batch: usize,
+    /// Per-worker parked assembler pairs (lane w uses `buffers[w]`).
+    buffers: Vec<DoubleBuffer>,
+    scratch: BatchAssembler,
+}
+
+impl WorkerPool {
+    /// A pool sized for `data`'s sample layout at device batch `batch`.
+    /// Lanes allocate lazily on first use, so construction is cheap for
+    /// single-worker configs.
+    pub fn new(data: &Dataset, batch: usize) -> Self {
+        WorkerPool { batch, buffers: Vec::new(), scratch: BatchAssembler::new(data, batch) }
+    }
+
+    /// The device batch size each lane assembles.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Validate shards, size the lane buffer pools, and compute the step
+    /// count.  Returns `(steps, outcome skeleton)`.
+    fn prepare(
+        &mut self,
+        data: &Dataset,
+        shards: &[Shard],
+    ) -> anyhow::Result<(usize, PoolOutcome)> {
+        anyhow::ensure!(!shards.is_empty(), "worker pool needs at least one shard");
+        let len = shards[0].len();
+        anyhow::ensure!(
+            shards.iter().all(|s| s.len() == len),
+            "ragged shards: every worker must take the same number of steps \
+             (the step barrier is bulk-synchronous; see docs/worker-model.md)"
+        );
+        while self.buffers.len() < shards.len() {
+            self.buffers.push(DoubleBuffer::new(data, self.batch));
+        }
+        if !self.scratch.matches(data) {
+            self.scratch = BatchAssembler::new(data, self.batch);
+        }
+        let steps = len.div_ceil(self.batch);
+        let workers = (0..shards.len())
+            .map(|w| WorkerReport { worker: w, ..Default::default() })
+            .collect();
+        Ok((steps, PoolOutcome { steps, samples: 0, workers }))
+    }
+
+    /// Take the initial assemblers for each lane (two per worker, fewer
+    /// when the run is shorter).
+    fn take_lanes(
+        &mut self,
+        data: &Dataset,
+        workers: usize,
+        steps: usize,
+    ) -> Vec<Vec<BatchAssembler>> {
+        let mut lanes = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let mut lane = Vec::with_capacity(steps.min(2));
+            for _ in 0..steps.min(2) {
+                lane.push(self.buffers[w].take(data));
+            }
+            lanes.push(lane);
+        }
+        lanes
+    }
+
+    /// Execute `shards` through the **serial-equivalent** schedule: worker
+    /// gather lanes fill batches concurrently, while every device step
+    /// runs on `backend` in fixed `(step, worker)` order.  Bitwise
+    /// identical to driving the engine over
+    /// [`crate::data::shard::global_batch_order`] on a single stream.
+    pub fn run_serial_equivalent(
+        &mut self,
+        backend: &mut dyn StepBackend,
+        data: &Dataset,
+        shards: &[Shard],
+        mode: StepMode,
+        sink: &mut dyn StepSink,
+    ) -> anyhow::Result<PoolOutcome> {
+        let (steps, mut outcome) = self.prepare(data, shards)?;
+        let w_count = shards.len();
+        let bs = self.batch;
+        if steps == 0 {
+            let mut ctx = StepCtx { backend, scratch: &mut self.scratch, data };
+            sink.finish(&mut ctx)?;
+            return Ok(outcome);
+        }
+        let lanes = self.take_lanes(data, w_count, steps);
+        let scratch = &mut self.scratch;
+
+        let parked = std::thread::scope(
+            |scope| -> anyhow::Result<Vec<(usize, BatchAssembler)>> {
+                let mut done_rx = Vec::with_capacity(w_count);
+                let mut back_tx = Vec::with_capacity(w_count);
+                for (shard, initial) in shards.iter().zip(lanes) {
+                    let (d_tx, d_rx) = sync_channel::<BatchAssembler>(1);
+                    let (b_tx, b_rx) = channel::<BatchAssembler>();
+                    spawn_filler(scope, shard, data, bs, steps, initial, b_rx, d_tx);
+                    done_rx.push(d_rx);
+                    back_tx.push(b_tx);
+                }
+
+                let mut parked = Vec::with_capacity(w_count * steps.min(2));
+                for s in 0..steps {
+                    for w in 0..w_count {
+                        let t = Timer::start();
+                        let buf = done_rx[w]
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("worker {w} gather lane died"))?;
+                        outcome.workers[w].wait_s += t.elapsed_s();
+                        let stats = dispatch(&mut *backend, mode, &buf)?;
+                        let mut ctx =
+                            StepCtx { backend: &mut *backend, scratch: &mut *scratch, data };
+                        sink.on_batch(&mut ctx, &buf.slots, buf.real, &stats)?;
+                        outcome.samples += buf.real;
+                        outcome.workers[w].samples += buf.real;
+                        outcome.workers[w].steps += 1;
+                        if s + 2 < steps {
+                            let _ = back_tx[w].send(buf);
+                        } else {
+                            parked.push((w, buf));
+                        }
+                    }
+                }
+                drop(back_tx);
+                let mut ctx = StepCtx { backend, scratch, data };
+                sink.finish(&mut ctx)?;
+                Ok(parked)
+            },
+        )?;
+        for (w, buf) in parked {
+            self.buffers[w].put(buf);
+        }
+        Ok(outcome)
+    }
+
+    /// Execute `shards` through the **data-parallel** schedule: worker `w`
+    /// steps its own replica of `primary` over its shard; at each step
+    /// barrier the stats fold into `sink` in fixed worker order and (for
+    /// [`StepMode::Train`]) replica parameters are averaged with the same
+    /// fixed-order fold, after which `primary` receives the final averaged
+    /// state.  Deterministic run to run; bitwise serial-equivalent for
+    /// forward-only modes.
+    pub fn run_data_parallel<B: DataParallel + Send>(
+        &mut self,
+        primary: &mut B,
+        data: &Dataset,
+        shards: &[Shard],
+        mode: StepMode,
+        sink: &mut dyn StepSink,
+    ) -> anyhow::Result<PoolOutcome> {
+        let (steps, mut outcome) = self.prepare(data, shards)?;
+        let w_count = shards.len();
+        let bs = self.batch;
+        if steps == 0 {
+            let mut ctx = StepCtx { backend: primary, scratch: &mut self.scratch, data };
+            sink.finish(&mut ctx)?;
+            return Ok(outcome);
+        }
+        let averaging = matches!(mode, StepMode::Train { .. });
+        let mut replicas: Vec<B> = (0..w_count)
+            .map(|_| primary.replicate())
+            .collect::<anyhow::Result<_>>()?;
+        let lanes = self.take_lanes(data, w_count, steps);
+        let scratch = &mut self.scratch;
+
+        let parked = std::thread::scope(
+            |scope| -> anyhow::Result<Vec<(usize, BatchAssembler)>> {
+                let mut stat_rx = Vec::with_capacity(w_count);
+                let mut state_rx = Vec::with_capacity(w_count);
+                let mut sync_tx = Vec::with_capacity(w_count);
+                let (park_tx, park_rx) = channel::<(usize, BatchAssembler)>();
+                for ((w, (shard, initial)), replica) in
+                    shards.iter().zip(lanes).enumerate().zip(replicas.iter_mut())
+                {
+                    let (d_tx, d_rx) = sync_channel::<BatchAssembler>(1);
+                    let (b_tx, b_rx) = channel::<BatchAssembler>();
+                    spawn_filler(scope, shard, data, bs, steps, initial, b_rx, d_tx);
+
+                    let (st_tx, st_rx) = sync_channel::<LaneMsg>(1);
+                    let (sx_tx, sx_rx) = channel::<Vec<Vec<f32>>>();
+                    let (av_tx, av_rx) = channel::<Arc<Vec<Vec<f32>>>>();
+                    stat_rx.push(st_rx);
+                    state_rx.push(sx_rx);
+                    sync_tx.push(av_tx);
+                    let park = park_tx.clone();
+                    scope.spawn(move || {
+                        for s in 0..steps {
+                            let buf = match d_rx.recv() {
+                                Ok(b) => b,
+                                Err(_) => return,
+                            };
+                            let result = dispatch(&mut *replica, mode, &buf);
+                            let (slots, real) = (buf.slots.clone(), buf.real);
+                            // recycle the buffer before the barrier so the
+                            // gather lane keeps running through the wait
+                            if s + 2 < steps {
+                                let _ = b_tx.send(buf);
+                            } else {
+                                let _ = park.send((w, buf));
+                            }
+                            let stats = match result {
+                                Ok(stats) => stats,
+                                Err(e) => {
+                                    let _ = st_tx.send(LaneMsg::Fail(e.to_string()));
+                                    return;
+                                }
+                            };
+                            if st_tx.send(LaneMsg::Step { stats, slots, real }).is_err() {
+                                return;
+                            }
+                            if averaging {
+                                let state = match replica.export_state() {
+                                    Ok(st) => st,
+                                    Err(_) => return,
+                                };
+                                if sx_tx.send(state).is_err() {
+                                    return;
+                                }
+                                let avg = match av_rx.recv() {
+                                    Ok(a) => a,
+                                    Err(_) => return,
+                                };
+                                if replica.import_state(&avg).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    });
+                }
+                drop(park_tx);
+
+                let mut last_avg: Option<Arc<Vec<Vec<f32>>>> = None;
+                for _s in 0..steps {
+                    for w in 0..w_count {
+                        let t = Timer::start();
+                        let msg = stat_rx[w]
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("worker {w} lane died"))?;
+                        outcome.workers[w].wait_s += t.elapsed_s();
+                        match msg {
+                            LaneMsg::Step { stats, slots, real } => {
+                                let mut ctx = StepCtx {
+                                    backend: &mut *primary,
+                                    scratch: &mut *scratch,
+                                    data,
+                                };
+                                sink.on_batch(&mut ctx, &slots, real, &stats)?;
+                                outcome.samples += real;
+                                outcome.workers[w].samples += real;
+                                outcome.workers[w].steps += 1;
+                            }
+                            LaneMsg::Fail(e) => {
+                                anyhow::bail!("worker {w} step failed: {e}")
+                            }
+                        }
+                    }
+                    if averaging {
+                        // fixed worker-order fold: w0 + w1 + ... then / W
+                        let mut acc = state_rx[0]
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("worker 0 state lane died"))?;
+                        for rx in state_rx.iter().skip(1) {
+                            let st = rx
+                                .recv()
+                                .map_err(|_| anyhow::anyhow!("worker state lane died"))?;
+                            accumulate_state(&mut acc, &st)?;
+                        }
+                        finish_average(&mut acc, w_count);
+                        let avg = Arc::new(acc);
+                        for tx in &sync_tx {
+                            let _ = tx.send(avg.clone());
+                        }
+                        last_avg = Some(avg);
+                    }
+                }
+
+                let mut parked = Vec::with_capacity(w_count * steps.min(2));
+                for _ in 0..w_count * steps.min(2) {
+                    let pair = park_rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("worker lane died before parking"))?;
+                    parked.push(pair);
+                }
+                if let Some(avg) = last_avg {
+                    primary.import_state(&avg)?;
+                }
+                let mut ctx = StepCtx { backend: primary, scratch, data };
+                sink.finish(&mut ctx)?;
+                Ok(parked)
+            },
+        )?;
+        for (w, buf) in parked {
+            self.buffers[w].put(buf);
+        }
+        Ok(outcome)
+    }
+}
+
+/// Spawn one worker's gather lane: fills its shard's batches in step
+/// order, double-buffered (two assemblers circulating by value through
+/// the `back_rx` / `out_tx` channel pair).
+#[allow(clippy::too_many_arguments)]
+fn spawn_filler<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    shard: &'env Shard,
+    data: &'env Dataset,
+    batch: usize,
+    steps: usize,
+    mut initial: Vec<BatchAssembler>,
+    back_rx: Receiver<BatchAssembler>,
+    out_tx: SyncSender<BatchAssembler>,
+) {
+    scope.spawn(move || {
+        for s in 0..steps {
+            let mut buf = match initial.pop() {
+                Some(b) => b,
+                None => match back_rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => return,
+                },
+            };
+            buf.fill(data, shard.step_batch(s, batch), None);
+            if out_tx.send(buf).is_err() {
+                return;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::{global_batch_order, shard_order_aligned};
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+    use crate::engine::testbed::MockBackend;
+    use crate::engine::{Engine, EvalSink};
+
+    const B: usize = 8;
+
+    fn tiny(n: usize) -> Dataset {
+        gauss_mixture(
+            &GaussMixtureCfg { n_train: n, n_val: 4, dim: 6, classes: 3, ..Default::default() },
+            7,
+        )
+        .train
+    }
+
+    fn eval_serial_equiv(n: usize, w: usize, mode: StepMode) -> (f64, f64, u32) {
+        let d = tiny(n);
+        let order: Vec<u32> = (0..n as u32).rev().collect();
+        let shards = shard_order_aligned(&order, w, B);
+        let mut pool = WorkerPool::new(&d, B);
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        pool.run_serial_equivalent(&mut be, &d, &shards, mode, &mut sink).unwrap();
+        let (acc, loss) = sink.result();
+        (acc, loss, be.param.to_bits())
+    }
+
+    #[test]
+    fn pool_matches_engine_over_interleaved_stream() {
+        for w in [1usize, 2, 3, 4] {
+            let d = tiny(53);
+            let order: Vec<u32> = (0..53u32).rev().collect();
+            let shards = shard_order_aligned(&order, w, B);
+
+            let mut eng = Engine::new(&d, B);
+            eng.overlap = true;
+            let mut ref_be = MockBackend::new();
+            let mut ref_sink = EvalSink::default();
+            let flat = global_batch_order(&shards, B);
+            eng.run(&mut ref_be, &d, &flat, None, StepMode::Train { lr: 0.05 }, &mut ref_sink)
+                .unwrap();
+
+            let mut pool = WorkerPool::new(&d, B);
+            let mut be = MockBackend::new();
+            let mut sink = EvalSink::default();
+            let mode = StepMode::Train { lr: 0.05 };
+            let out = pool.run_serial_equivalent(&mut be, &d, &shards, mode, &mut sink).unwrap();
+
+            assert_eq!(ref_be.param.to_bits(), be.param.to_bits(), "w={w}");
+            assert_eq!(ref_be.trace, be.trace, "w={w}");
+            let (ra, rl) = ref_sink.result();
+            let (pa, pl) = sink.result();
+            assert_eq!(ra.to_bits(), pa.to_bits(), "w={w}");
+            assert_eq!(rl.to_bits(), pl.to_bits(), "w={w}");
+            assert_eq!(out.samples, flat.len(), "w={w}");
+            assert_eq!(out.steps * w, out.workers.iter().map(|r| r.steps).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn pool_runs_are_reproducible() {
+        let a = eval_serial_equiv(53, 4, StepMode::Train { lr: 0.03 });
+        let b = eval_serial_equiv(53, 4, StepMode::Train { lr: 0.03 });
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    }
+
+    #[test]
+    fn empty_and_tiny_epochs_do_not_panic() {
+        for w in [1usize, 4] {
+            for mode in [StepMode::Forward, StepMode::Train { lr: 0.01 }] {
+                // empty epoch (heavy hiding can empty the order entirely)
+                let d = tiny(16);
+                let shards = shard_order_aligned(&[], w, B);
+                let mut pool = WorkerPool::new(&d, B);
+                let mut be = MockBackend::new();
+                let mut sink = EvalSink::default();
+                let out = pool
+                    .run_serial_equivalent(&mut be, &d, &shards, mode, &mut sink)
+                    .unwrap();
+                assert_eq!(out.samples, 0);
+                // fewer samples than workers: wrap-padding fills every lane
+                let order: Vec<u32> = (0..3).collect();
+                let shards = shard_order_aligned(&order, w, B);
+                let mut sink = EvalSink::default();
+                let out = pool
+                    .run_serial_equivalent(&mut be, &d, &shards, mode, &mut sink)
+                    .unwrap();
+                assert_eq!(out.samples, w * B);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_shards_rejected() {
+        let d = tiny(16);
+        let shards = vec![
+            Shard { worker: 0, indices: vec![0, 1, 2] },
+            Shard { worker: 1, indices: vec![3, 4] },
+        ];
+        let mut pool = WorkerPool::new(&d, B);
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        assert!(pool
+            .run_serial_equivalent(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+            .is_err());
+        assert!(pool
+            .run_data_parallel(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+            .is_err());
+    }
+
+    #[test]
+    fn pool_recovers_after_failed_run() {
+        struct Failing;
+        impl StepBackend for Failing {
+            fn train_step(
+                &mut self,
+                _x: &[f32],
+                _y: &[i32],
+                _sw: &[f32],
+                _lr: f32,
+            ) -> anyhow::Result<BatchStats> {
+                anyhow::bail!("device lost")
+            }
+            fn fwd_stats(&mut self, _x: &[f32], _y: &[i32]) -> anyhow::Result<BatchStats> {
+                anyhow::bail!("device lost")
+            }
+        }
+        let d = tiny(40);
+        let order: Vec<u32> = (0..32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mut pool = WorkerPool::new(&d, B);
+        let mut sink = EvalSink::default();
+        assert!(pool
+            .run_serial_equivalent(&mut Failing, &d, &shards, StepMode::Forward, &mut sink)
+            .is_err());
+        // a healthy backend still runs afterwards (buffers re-created)
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        let out = pool
+            .run_serial_equivalent(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+            .unwrap();
+        assert_eq!(out.samples, 32);
+    }
+
+    #[test]
+    fn data_parallel_forward_matches_serial_equivalent() {
+        for w in [1usize, 2, 4] {
+            let d = tiny(53);
+            let order: Vec<u32> = (0..53u32).collect();
+            let shards = shard_order_aligned(&order, w, B);
+            let mut pool = WorkerPool::new(&d, B);
+
+            let mut be_a = MockBackend::new();
+            let mut sink_a = EvalSink::default();
+            pool.run_serial_equivalent(&mut be_a, &d, &shards, StepMode::Forward, &mut sink_a)
+                .unwrap();
+            let mut be_b = MockBackend::new();
+            let mut sink_b = EvalSink::default();
+            pool.run_data_parallel(&mut be_b, &d, &shards, StepMode::Forward, &mut sink_b)
+                .unwrap();
+
+            let (aa, al) = sink_a.result();
+            let (ba, bl) = sink_b.result();
+            assert_eq!(aa.to_bits(), ba.to_bits(), "w={w}");
+            assert_eq!(al.to_bits(), bl.to_bits(), "w={w}");
+        }
+    }
+
+    #[test]
+    fn data_parallel_train_identical_shards_average_to_single_lane() {
+        // Both workers see the same shard, so every replica applies the
+        // same update; the W=2 average of identical parameters is exact,
+        // and the run must match the single-lane result bitwise.
+        let d = tiny(32);
+        let half: Vec<u32> = (0..16).collect();
+        let doubled: Vec<u32> = half.iter().chain(half.iter()).copied().collect();
+        let shards2 = shard_order_aligned(&doubled, 2, B);
+        assert_eq!(shards2[0].indices, shards2[1].indices);
+        let shards1 = shard_order_aligned(&half, 1, B);
+
+        let mut pool = WorkerPool::new(&d, B);
+        let mut be2 = MockBackend::new();
+        let mut sink = EvalSink::default();
+        pool.run_data_parallel(&mut be2, &d, &shards2, StepMode::Train { lr: 0.05 }, &mut sink)
+            .unwrap();
+        let mut be1 = MockBackend::new();
+        let mut sink = EvalSink::default();
+        pool.run_data_parallel(&mut be1, &d, &shards1, StepMode::Train { lr: 0.05 }, &mut sink)
+            .unwrap();
+        assert_eq!(be1.param.to_bits(), be2.param.to_bits());
+    }
+
+    #[test]
+    fn data_parallel_train_is_deterministic() {
+        let run = || {
+            let d = tiny(53);
+            let order: Vec<u32> = (0..53u32).collect();
+            let shards = shard_order_aligned(&order, 4, B);
+            let mut pool = WorkerPool::new(&d, B);
+            let mut be = MockBackend::new();
+            let mut sink = EvalSink::default();
+            pool.run_data_parallel(&mut be, &d, &shards, StepMode::Train { lr: 0.02 }, &mut sink)
+                .unwrap();
+            let (_, loss) = sink.result();
+            (be.param.to_bits(), loss.to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,107 @@
+//! Deterministic host-only backend for tests and benches.
+//!
+//! [`MockBackend`] stands in for the PJRT executor wherever the engine's
+//! scheduling guarantees must be verified without HLO artifacts: a scalar
+//! "parameter" folds in every training slot *sequentially* (f32 adds do
+//! not commute), and every forward result depends on that parameter — so
+//! any reordering, skipped step, or corrupted buffer anywhere in the
+//! pipelined engine or the worker pool changes the bit pattern of
+//! subsequent outputs.  It also implements [`DataParallel`], making it the
+//! reference backend for the pool's parameter-averaging mode.
+
+use super::backend::{DataParallel, StepBackend};
+use crate::runtime::BatchStats;
+
+/// Order-sensitive scalar-parameter backend (see module docs).
+#[derive(Clone, Debug)]
+pub struct MockBackend {
+    /// The scalar model parameter every batch folds into.
+    pub param: f32,
+    /// Bit pattern of `param` after each executed train step, in order.
+    pub trace: Vec<u64>,
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        MockBackend::new()
+    }
+}
+
+impl MockBackend {
+    /// A fresh backend with `param = 1.0` and an empty trace.
+    pub fn new() -> Self {
+        MockBackend { param: 1.0, trace: vec![] }
+    }
+
+    fn stats(&self, x: &[f32], y: &[i32], sw: Option<&[f32]>, b: usize) -> BatchStats {
+        let dim = x.len() / b;
+        let mut s = BatchStats::default();
+        for slot in 0..b {
+            let xs: f32 = x[slot * dim..(slot + 1) * dim].iter().sum();
+            let w = sw.map_or(1.0, |sw| sw[slot]);
+            let l = (xs * self.param).abs() + y[slot] as f32 * 0.125 + w * 0.25;
+            s.loss.push(l);
+            s.correct.push(if l < 2.0 { 1.0 } else { 0.0 });
+            s.conf.push(1.0 / (1.0 + l));
+        }
+        s
+    }
+}
+
+impl StepBackend for MockBackend {
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        let b = sw.len();
+        let stats = self.stats(x, y, Some(sw), b);
+        for (slot, &w) in sw.iter().enumerate() {
+            self.param += stats.loss[slot] * w * lr * 1e-3;
+        }
+        self.trace.push(self.param.to_bits() as u64);
+        Ok(stats)
+    }
+
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        let b = y.len();
+        Ok(self.stats(x, y, None, b))
+    }
+}
+
+impl DataParallel for MockBackend {
+    fn replicate(&self) -> anyhow::Result<Self> {
+        Ok(self.clone())
+    }
+
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(vec![vec![self.param]])
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.len() == 1 && state[0].len() == 1,
+            "MockBackend state is one scalar leaf"
+        );
+        self.param = state[0][0];
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_roundtrip_is_exact() {
+        let mut a = MockBackend::new();
+        a.param = 0.123456789;
+        let mut b = a.replicate().unwrap();
+        assert_eq!(a.param.to_bits(), b.param.to_bits());
+        b.import_state(&a.export_state().unwrap()).unwrap();
+        assert_eq!(a.param.to_bits(), b.param.to_bits());
+        assert!(b.import_state(&[vec![1.0, 2.0]]).is_err());
+    }
+}

@@ -1,12 +1,14 @@
 //! KAKURENBO: Adaptively Hiding Samples in Deep Neural Network Training
 //! (NeurIPS 2023) — full-system reproduction.
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see README.md + docs/worker-model.md):
 //!   * L3 (this crate): training coordinator + step-execution engine —
 //!     the coordinator plans epochs (selection, schedules, sharding); the
 //!     `engine` module owns the pipelined per-step hot path (double-
-//!     buffered gather overlapped with device execution); plus per-sample
-//!     state, baselines, distributed simulation, metrics, bench harness.
+//!     buffered gather overlapped with device execution) and the
+//!     data-parallel worker pool (N gather lanes behind a deterministic
+//!     bulk-synchronous reduction); plus per-sample state, baselines,
+//!     metrics, bench harness.
 //!   * L2/L1 (python/, build time only): JAX models + Pallas kernels,
 //!     AOT-lowered to `artifacts/*.hlo.txt`.
 //!   * runtime: PJRT CPU client executing the AOT artifacts — Python is

@@ -1,13 +1,16 @@
 //! `kakurenbo` — the launcher.
 //!
 //! Subcommands:
-//!   train     --preset <name> --strategy <name> [overrides]   one training run
-//!   compare   --preset <name> [--strategies a,b,c]            strategy comparison table
-//!   presets                                                   list presets
-//!   variants                                                  list artifact variants
 //!
-//! Overrides (any subset): --epochs --seed --workers --base_lr --momentum
-//!   --max_fraction --tau --drop_top --variant --eval_every --detailed_metrics
+//! ```text
+//! train     --preset <name> --strategy <name> [overrides]   one training run
+//! compare   --preset <name> [--strategies a,b,c]            strategy comparison table
+//! presets                                                   list presets
+//! variants                                                  list artifact variants
+//! ```
+//!
+//! Overrides (any subset): `--epochs --seed --workers --base_lr --momentum
+//! --max_fraction --tau --drop_top --variant --eval_every --detailed_metrics`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -185,4 +188,9 @@ Strategies: baseline kakurenbo kakurenbo-vXXXX (ablation bits HE/MB/RF/LR)
 Overrides:  --epochs --seed --workers --base_lr --warmup_epochs --momentum
             --max_fraction --tau --drop_top --variant --eval_every
 Flags:      --verbose --quiet --out <dir>
+
+--workers N executes data-parallel: the epoch order is sharded across N
+pooled worker lanes behind a deterministic bulk-synchronous reduction,
+bitwise identical to the serial single-stream simulation of the same N
+(see docs/worker-model.md).
 ";

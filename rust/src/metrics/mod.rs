@@ -40,6 +40,12 @@ pub struct EpochRecord {
     pub time_select: f64,
     pub time_refresh: f64,
     pub time_eval: f64,
+    /// Seconds the worker pool's reduction loop spent blocked on gather
+    /// lanes / the step barrier (0 for single-stream epochs).
+    pub time_barrier: f64,
+    /// Per-worker executed sample counts when the epoch ran through the
+    /// worker pool (empty for single-stream epochs).
+    pub worker_samples: Vec<usize>,
     /// Modeled epoch seconds at paper scale (cost model, W workers).
     pub modeled_time: f64,
     /// Per-class hidden counts (only when detailed_metrics).
@@ -69,9 +75,16 @@ impl EpochRecord {
             ("time_select", self.time_select),
             ("time_refresh", self.time_refresh),
             ("time_eval", self.time_eval),
+            ("time_barrier", self.time_barrier),
             ("modeled_time", self.modeled_time),
         ];
         if let Json::Obj(m) = &mut o {
+            if !self.worker_samples.is_empty() {
+                m.insert(
+                    "worker_samples".into(),
+                    Json::from(self.worker_samples.clone()),
+                );
+            }
             if !self.hidden_per_class.is_empty() {
                 m.insert(
                     "hidden_per_class".into(),
@@ -167,7 +180,7 @@ impl RunResult {
         ]
     }
 
-    /// Write the run result under results/<file>.json.
+    /// Write the run result under `results/<file>.json`.
     pub fn save(&self, dir: &Path, file: &str) -> anyhow::Result<()> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{file}.json"));

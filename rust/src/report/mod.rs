@@ -65,7 +65,7 @@ impl BenchCtx {
         }
     }
 
-    /// Persist a set of run results under results/<exp>.json.
+    /// Persist a set of run results under `results/<exp>.json`.
     pub fn save_runs(&self, exp: &str, runs: &[RunResult]) -> anyhow::Result<()> {
         let j = Json::Arr(runs.iter().map(|r| r.to_json()).collect());
         let path = self.out_dir.join(format!("{exp}.json"));

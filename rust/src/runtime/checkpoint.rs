@@ -2,8 +2,8 @@
 //! files plus a JSON index — inspectable from Python (`np.load`) and
 //! stable across runs.
 //!
-//! Layout:   <dir>/checkpoint.json      (variant, epoch, param index)
-//!           <dir>/p000_fc1_w.npy ...   (one array per parameter leaf)
+//! Layout: `<dir>/checkpoint.json` (variant, epoch, param index) and
+//! `<dir>/p000_fc1_w.npy ...` (one array per parameter leaf).
 
 use std::path::Path;
 

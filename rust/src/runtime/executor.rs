@@ -244,6 +244,65 @@ impl ModelExecutor {
         })
     }
 
+    /// Build an independent replica for a data-parallel worker: the
+    /// AOT-compiled executables are shared (`Arc`), while parameter and
+    /// momentum device literals are deep-copied through an exact f32 host
+    /// round-trip — the replica starts bitwise-identical to `self` and
+    /// evolves independently.
+    pub fn replicate(&self) -> anyhow::Result<Self> {
+        let copy_all = |lits: &[xla::Literal]| -> anyhow::Result<Vec<xla::Literal>> {
+            lits.iter()
+                .zip(&self.meta.params)
+                .map(|(l, m)| {
+                    let host = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    lit_f32(&host, &m.shape)
+                })
+                .collect()
+        };
+        Ok(ModelExecutor {
+            meta: self.meta.clone(),
+            train_exe: Arc::clone(&self.train_exe),
+            fwd_exe: Arc::clone(&self.fwd_exe),
+            embed_exe: self.embed_exe.clone(),
+            params: copy_all(&self.params)?,
+            vel: copy_all(&self.vel)?,
+            momentum: self.momentum,
+            steps: self.steps,
+        })
+    }
+
+    /// Snapshot the full mutable state (parameters then momentum, in
+    /// manifest leaf order) as host tensors.
+    pub fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(2 * self.params.len());
+        for l in self.params.iter().chain(&self.vel) {
+            out.push(l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Restore state previously produced by [`ModelExecutor::export_state`]
+    /// (or an elementwise average of several such snapshots).
+    pub fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
+        let n = self.meta.params.len();
+        anyhow::ensure!(
+            state.len() == 2 * n,
+            "state has {} leaves, executor expects {}",
+            state.len(),
+            2 * n
+        );
+        for (i, m) in self.meta.params.iter().enumerate() {
+            anyhow::ensure!(
+                state[i].len() == m.numel() && state[n + i].len() == m.numel(),
+                "state leaf {i} shape mismatch for {}",
+                m.name
+            );
+            self.params[i] = lit_f32(&state[i], &m.shape)?;
+            self.vel[i] = lit_f32(&state[n + i], &m.shape)?;
+        }
+        Ok(())
+    }
+
     /// Export parameters by name (transfer learning / checkpoints).
     pub fn export_params(&self) -> anyhow::Result<Vec<(String, Vec<f32>)>> {
         self.meta
@@ -304,5 +363,23 @@ impl crate::engine::StepBackend for ModelExecutor {
 
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
         ModelExecutor::fwd_stats(self, x, y)
+    }
+}
+
+/// Replica management for the worker pool's data-parallel mode: replicas
+/// share the compiled executables and deep-copy the mutable literals; the
+/// export/import round-trip preserves f32 bit patterns exactly, so the
+/// pool's fixed worker-order averaging fold is deterministic.
+impl crate::engine::DataParallel for ModelExecutor {
+    fn replicate(&self) -> anyhow::Result<Self> {
+        ModelExecutor::replicate(self)
+    }
+
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        ModelExecutor::export_state(self)
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
+        ModelExecutor::import_state(self, state)
     }
 }

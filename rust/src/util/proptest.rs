@@ -50,7 +50,7 @@ pub fn check<G: Gen>(name: &str, seed: u64, cases: usize, gen_: &G, prop: impl F
 // Common generators
 // ---------------------------------------------------------------------------
 
-/// Vec<f32> of length in [min_len, max_len], values in [lo, hi].
+/// `Vec<f32>` of length in `[min_len, max_len]`, values in `[lo, hi]`.
 pub struct VecF32 {
     pub min_len: usize,
     pub max_len: usize,

@@ -37,7 +37,7 @@ where
     });
 }
 
-/// Parallel map over `0..n` producing a Vec<T>, preserving order.
+/// Parallel map over `0..n` producing a `Vec<T>`, preserving order.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,

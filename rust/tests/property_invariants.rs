@@ -1,8 +1,11 @@
 //! Property-based tests (mini-proptest harness, util::proptest) over the
 //! coordinator's invariants: hiding selector, schedules, samplers,
-//! sharding, DropTop, and the LR rule.
+//! sharding, the worker pool's deterministic reduction, DropTop, and the
+//! LR rule.
 
-use kakurenbo::data::shard::{global_step_order, shard_order};
+use kakurenbo::data::shard::{
+    global_batch_order, global_step_order, shard_order, shard_order_aligned,
+};
 use kakurenbo::hiding::droptop::drop_top;
 use kakurenbo::hiding::fraction::FractionSchedule;
 use kakurenbo::hiding::lr::adjusted_lr;
@@ -202,6 +205,113 @@ fn shard_union_covers_order() {
             // global order has w*sz entries
             if global_step_order(&shards).len() != w * sz {
                 return Err("global order size".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn aligned_shards_take_equal_whole_steps_and_cover() {
+    check(
+        "shard-aligned",
+        19,
+        150,
+        &Pair(USize { lo: 0, hi: 600 }, Pair(USize { lo: 1, hi: 9 }, USize { lo: 1, hi: 17 })),
+        |&(n, (w, b))| {
+            let order: Vec<u32> = (0..n as u32).rev().collect();
+            let shards = shard_order_aligned(&order, w, b);
+            if shards.len() != w {
+                return Err("wrong worker count".into());
+            }
+            let len = shards[0].len();
+            if !shards.iter().all(|s| s.len() == len) {
+                return Err("ragged shards".into());
+            }
+            if len % b != 0 {
+                return Err(format!("shard len {len} not a multiple of batch {b}"));
+            }
+            if n > 0 {
+                // every worker takes the same number of *full* steps
+                let steps = shards[0].steps(b);
+                if !shards.iter().all(|s| s.steps(b) == steps) {
+                    return Err("unequal step counts".into());
+                }
+                // union covers every sample (wrap padding only duplicates)
+                let mut seen = vec![false; n];
+                for s in &shards {
+                    for &i in &s.indices {
+                        seen[i as usize] = true;
+                    }
+                }
+                if !seen.iter().all(|&x| x) {
+                    return Err("missing samples".into());
+                }
+                if global_batch_order(&shards, b).len() != w * len {
+                    return Err("global batch order size".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The worker pool's fixed `(step, worker)` reduction must fold stats,
+/// sink state, and backend state exactly like the serial interleaved
+/// stream — for any (order length, worker count, batch size).
+#[test]
+fn pool_reduction_matches_serial_interleaved_fold() {
+    use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+    use kakurenbo::engine::testbed::MockBackend;
+    use kakurenbo::engine::{Engine, StepMode, TrainSink, WorkerPool};
+
+    let data = gauss_mixture(
+        &GaussMixtureCfg { n_train: 160, n_val: 4, dim: 4, classes: 3, ..Default::default() },
+        23,
+    )
+    .train;
+    check(
+        "pool-serial-fold",
+        41,
+        40,
+        &Pair(USize { lo: 0, hi: 160 }, Pair(USize { lo: 1, hi: 5 }, USize { lo: 1, hi: 12 })),
+        |&(n, (w, b))| {
+            let order: Vec<u32> = (0..n as u32).collect();
+            let shards = shard_order_aligned(&order, w, b);
+            let flat = global_batch_order(&shards, b);
+
+            let mut ref_be = MockBackend::new();
+            let mut ref_state = SampleState::new(160);
+            let mut eng = Engine::new(&data, b);
+            eng.overlap = true;
+            let mut sink = TrainSink::new(&mut ref_state, 1);
+            eng.run(&mut ref_be, &data, &flat, None, StepMode::Train { lr: 0.02 }, &mut sink)
+                .map_err(|e| e.to_string())?;
+            let ref_loss = sink.mean_loss();
+
+            let mut be = MockBackend::new();
+            let mut state = SampleState::new(160);
+            let mut pool = WorkerPool::new(&data, b);
+            let mut sink = TrainSink::new(&mut state, 1);
+            let mode = StepMode::Train { lr: 0.02 };
+            pool.run_serial_equivalent(&mut be, &data, &shards, mode, &mut sink)
+                .map_err(|e| e.to_string())?;
+            let pool_loss = sink.mean_loss();
+
+            if ref_be.param.to_bits() != be.param.to_bits() {
+                return Err(format!("param diverged (n={n} w={w} b={b})"));
+            }
+            if ref_be.trace != be.trace {
+                return Err(format!("trace diverged (n={n} w={w} b={b})"));
+            }
+            if ref_loss.to_bits() != pool_loss.to_bits() {
+                return Err(format!("loss diverged (n={n} w={w} b={b})"));
+            }
+            let bits = |s: &SampleState| -> Vec<u32> {
+                s.loss.iter().map(|l| l.to_bits()).collect()
+            };
+            if bits(&ref_state) != bits(&state) {
+                return Err(format!("state diverged (n={n} w={w} b={b})"));
             }
             Ok(())
         },

@@ -1,0 +1,341 @@
+//! Worker-pool determinism: an N-worker pool run must produce *bitwise
+//! identical* epoch records to the single-stream interleaved run — the
+//! contract that makes `--workers` a pure execution knob.
+//!
+//! The reference for W workers is the pipelined engine driven over
+//! `global_batch_order(shard_order_aligned(order, W, B), B)`: the exact
+//! device-call sequence the pre-pool trainer performed when simulating W
+//! virtual workers on one stream.  The pool must reproduce every recorded
+//! bit — per-sample state, epoch mean loss, and the backend's parameter
+//! trace — for the train pass and the hidden-stat refresh, across epochs.
+//!
+//! The data-parallel (parameter-averaging) schedule is additionally
+//! checked for bitwise forward equivalence and run-to-run train
+//! determinism.  A final runtime-guarded test repeats the reproducibility
+//! check end-to-end through the real PJRT executor.
+
+use kakurenbo::data::shard::{global_batch_order, shard_order_aligned};
+use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::data::Dataset;
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{
+    execute_plan, execute_sharded_plain, Engine, RefreshSink, StepMode, WorkerPool,
+};
+use kakurenbo::state::SampleState;
+use kakurenbo::strategies::sb::SbSelector;
+use kakurenbo::strategies::BatchMode;
+use kakurenbo::util::rng::Rng;
+
+const B: usize = 8;
+const N: usize = 83; // not divisible by W*B: exercises wrap-around padding
+
+fn dataset() -> Dataset {
+    gauss_mixture(
+        &GaussMixtureCfg { n_train: N, n_val: 16, dim: 5, classes: 4, ..Default::default() },
+        11,
+    )
+    .train
+}
+
+fn order(seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    kakurenbo::sampler::epoch_permutation(N, &mut rng)
+}
+
+/// All recorded f32 state as bit patterns (bitwise comparison).
+fn state_bits(s: &SampleState) -> (Vec<u32>, Vec<bool>, Vec<u32>, Vec<u32>) {
+    (
+        s.loss.iter().map(|l| l.to_bits()).collect(),
+        s.correct.clone(),
+        s.conf.iter().map(|c| c.to_bits()).collect(),
+        s.last_update_epoch.clone(),
+    )
+}
+
+/// Reference: the single-stream interleaved run for W workers — the
+/// pipelined engine over the batch-granular interleave of the shards.
+fn reference_train(
+    w: usize,
+    epoch_orders: &[Vec<u32>],
+) -> ((Vec<u32>, Vec<bool>, Vec<u32>, Vec<u32>), Vec<u64>, u32, Vec<u64>) {
+    let d = dataset();
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut eng = Engine::new(&d, B);
+    eng.overlap = true;
+    let mut sb = SbSelector::new(1.0, 64);
+    let mut rng = Rng::new(5);
+    let mut queue = Vec::new();
+    let mut losses = Vec::new();
+    for (e, order) in epoch_orders.iter().enumerate() {
+        let shards = shard_order_aligned(order, w, B);
+        let flat = global_batch_order(&shards, B);
+        let out = execute_plan(
+            &mut eng,
+            &mut be,
+            &d,
+            &flat,
+            None,
+            BatchMode::Plain,
+            0.05 / (1.0 + e as f32),
+            e as u32,
+            &mut state,
+            &mut sb,
+            &mut rng,
+            &mut queue,
+        )
+        .unwrap();
+        losses.push(out.train_loss.to_bits());
+    }
+    (state_bits(&state), be.trace.clone(), be.param.to_bits(), losses)
+}
+
+/// The W-worker pool run over the same epochs.
+fn pool_train(
+    w: usize,
+    epoch_orders: &[Vec<u32>],
+) -> ((Vec<u32>, Vec<bool>, Vec<u32>, Vec<u32>), Vec<u64>, u32, Vec<u64>) {
+    let d = dataset();
+    let mut be = MockBackend::new();
+    let mut state = SampleState::new(N);
+    let mut pool = WorkerPool::new(&d, B);
+    let mut losses = Vec::new();
+    for (e, order) in epoch_orders.iter().enumerate() {
+        let shards = shard_order_aligned(order, w, B);
+        let (out, pout) = execute_sharded_plain(
+            &mut pool,
+            &mut be,
+            &d,
+            &shards,
+            0.05 / (1.0 + e as f32),
+            e as u32,
+            &mut state,
+        )
+        .unwrap();
+        assert_eq!(pout.workers.len(), w);
+        assert_eq!(
+            pout.workers.iter().map(|r| r.samples).sum::<usize>(),
+            out.trained_samples
+        );
+        losses.push(out.train_loss.to_bits());
+    }
+    (state_bits(&state), be.trace.clone(), be.param.to_bits(), losses)
+}
+
+/// The acceptance contract: a W-worker pool run produces bitwise-identical
+/// epoch records (per-sample state, mean loss, parameter trajectory) to
+/// the interleaved single-stream run, across a multi-epoch chain.
+#[test]
+fn pool_train_bitwise_matches_interleaved_stream() {
+    let epoch_orders: Vec<Vec<u32>> = (0..3).map(|e| order(100 + e)).collect();
+    for w in [1usize, 2, 4] {
+        let reference = reference_train(w, &epoch_orders);
+        let pooled = pool_train(w, &epoch_orders);
+        assert_eq!(reference.0, pooled.0, "state diverged at W={w}");
+        assert_eq!(reference.1, pooled.1, "param trace diverged at W={w}");
+        assert_eq!(reference.2, pooled.2, "final param diverged at W={w}");
+        assert_eq!(reference.3, pooled.3, "epoch losses diverged at W={w}");
+    }
+}
+
+/// Odd worker counts exercise shards whose wrap padding overlaps several
+/// windows; the contract is worker-count agnostic.
+#[test]
+fn pool_train_matches_for_odd_worker_counts() {
+    let epoch_orders = vec![order(7)];
+    for w in [3usize, 5] {
+        assert_eq!(reference_train(w, &epoch_orders), pool_train(w, &epoch_orders));
+    }
+}
+
+/// Forward-only refresh: the pool's sharded hidden-list refresh records
+/// exactly the bits of the single-stream refresh over the interleave.
+#[test]
+fn pool_refresh_bitwise_matches_interleaved_stream() {
+    let d = dataset();
+    let hidden: Vec<u32> = (0..N as u32).filter(|i| i % 3 == 0).collect();
+    for w in [2usize, 4] {
+        let shards = shard_order_aligned(&hidden, w, B);
+
+        let mut ref_be = MockBackend::new();
+        let mut ref_state = SampleState::new(N);
+        let mut eng = Engine::new(&d, B);
+        eng.overlap = true;
+        let flat = global_batch_order(&shards, B);
+        let mut sink = RefreshSink::new(&mut ref_state, 4);
+        eng.run(&mut ref_be, &d, &flat, None, StepMode::Forward, &mut sink).unwrap();
+
+        let mut be = MockBackend::new();
+        let mut state = SampleState::new(N);
+        let mut pool = WorkerPool::new(&d, B);
+        let mut sink = RefreshSink::new(&mut state, 4);
+        pool.run_serial_equivalent(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+            .unwrap();
+
+        assert_eq!(state_bits(&ref_state), state_bits(&state), "W={w}");
+    }
+}
+
+/// Wrap-padding duplicates in a sharded refresh re-record identical
+/// values: the resulting state equals the unsharded refresh bit for bit.
+#[test]
+fn sharded_refresh_padding_is_semantically_invisible() {
+    let d = dataset();
+    let hidden: Vec<u32> = (0..N as u32).filter(|i| i % 2 == 0).collect();
+
+    let mut be = MockBackend::new();
+    let mut plain = SampleState::new(N);
+    let mut eng = Engine::new(&d, B);
+    let mut sink = RefreshSink::new(&mut plain, 2);
+    eng.run(&mut be, &d, &hidden, None, StepMode::Forward, &mut sink).unwrap();
+
+    let mut be = MockBackend::new();
+    let mut sharded = SampleState::new(N);
+    let mut pool = WorkerPool::new(&d, B);
+    let shards = shard_order_aligned(&hidden, 4, B);
+    let mut sink = RefreshSink::new(&mut sharded, 2);
+    pool.run_serial_equivalent(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+        .unwrap();
+
+    assert_eq!(state_bits(&plain), state_bits(&sharded));
+}
+
+/// Heavy hiding fractions can shrink an epoch below the worker count (or
+/// empty it entirely); the pool must not panic or deadlock.
+#[test]
+fn tiny_and_empty_epochs_survive_the_pool() {
+    let d = dataset();
+    for w in [2usize, 4] {
+        let mut pool = WorkerPool::new(&d, B);
+        for order_len in [0usize, 1, 3, 7] {
+            let order: Vec<u32> = (0..order_len as u32).collect();
+            let shards = shard_order_aligned(&order, w, B);
+            let mut be = MockBackend::new();
+            let mut state = SampleState::new(N);
+            let (out, pout) = execute_sharded_plain(
+                &mut pool, &mut be, &d, &shards, 0.01, 0, &mut state,
+            )
+            .unwrap();
+            if order_len == 0 {
+                assert_eq!(out.trained_samples, 0);
+            } else {
+                assert_eq!(out.trained_samples, w * B); // wrap-padded
+            }
+            assert_eq!(pout.workers.len(), w);
+        }
+    }
+}
+
+/// The data-parallel (replica) schedule is bitwise serial-equivalent for
+/// forward passes and deterministic run-to-run for train passes.
+#[test]
+fn data_parallel_schedule_contracts() {
+    let d = dataset();
+    let idx: Vec<u32> = (0..N as u32).collect();
+    for w in [2usize, 4] {
+        let shards = shard_order_aligned(&idx, w, B);
+        let mut pool = WorkerPool::new(&d, B);
+
+        // forward: replicas hold identical parameters => bitwise equal
+        let mut be_a = MockBackend::new();
+        let mut st_a = SampleState::new(N);
+        let mut sink = RefreshSink::new(&mut st_a, 1);
+        pool.run_serial_equivalent(&mut be_a, &d, &shards, StepMode::Forward, &mut sink)
+            .unwrap();
+        let mut be_b = MockBackend::new();
+        let mut st_b = SampleState::new(N);
+        let mut sink = RefreshSink::new(&mut st_b, 1);
+        pool.run_data_parallel(&mut be_b, &d, &shards, StepMode::Forward, &mut sink)
+            .unwrap();
+        assert_eq!(state_bits(&st_a), state_bits(&st_b), "W={w}");
+
+        // train: global-batch SGD semantics, deterministic run to run
+        let run = || {
+            let mut be = MockBackend::new();
+            let mut st = SampleState::new(N);
+            let mut pool = WorkerPool::new(&d, B);
+            let mut sink = kakurenbo::engine::TrainSink::new(&mut st, 0);
+            pool.run_data_parallel(&mut be, &d, &shards, StepMode::Train { lr: 0.03 }, &mut sink)
+                .unwrap();
+            (state_bits(&st), be.param.to_bits())
+        };
+        assert_eq!(run(), run(), "W={w}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end through the real executor (skipped when artifacts are absent)
+// ---------------------------------------------------------------------------
+
+mod end_to_end {
+    use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+    use kakurenbo::coordinator::Trainer;
+    use kakurenbo::engine::DataParallel;
+    use kakurenbo::metrics::RunResult;
+    use kakurenbo::runtime::{default_artifacts_dir, ModelExecutor, XlaRuntime};
+
+    fn runtime() -> Option<XlaRuntime> {
+        XlaRuntime::new(&default_artifacts_dir()).ok()
+    }
+
+    fn run(rt: &XlaRuntime, workers: usize) -> RunResult {
+        let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+        cfg.epochs = 3;
+        cfg.workers = workers;
+        if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
+            c.n_train = 512;
+            c.n_val = 128;
+        }
+        cfg.strategy = StrategyConfig::kakurenbo(0.3);
+        Trainer::new(rt, cfg).unwrap().run().unwrap()
+    }
+
+    /// Pooled execution through the PJRT executor is reproducible bit for
+    /// bit: thread scheduling must never leak into recorded stats.
+    #[test]
+    fn pooled_trainer_is_reproducible() {
+        let Some(rt) = runtime() else { return };
+        for workers in [2usize, 4] {
+            let a = run(&rt, workers);
+            let b = run(&rt, workers);
+            assert_eq!(a.records.len(), b.records.len());
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+                assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits());
+                assert_eq!(x.hidden, y.hidden);
+                assert_eq!(x.trained_samples, y.trained_samples);
+                assert_eq!(x.worker_samples, y.worker_samples);
+            }
+        }
+    }
+
+    /// Replication and the export/import round-trip preserve every
+    /// parameter bit (the pool's replica contract).
+    #[test]
+    fn executor_replication_is_exact() {
+        let Some(rt) = runtime() else { return };
+        let mut exec = ModelExecutor::new(&rt, "cnn_c32_b64", 3).unwrap();
+        let b = exec.meta.batch;
+        let x = vec![0.2f32; b * exec.meta.sample_dim()];
+        let y = vec![1i32; b * exec.meta.label_len()];
+        let sw = vec![1.0f32; b];
+        exec.train_step(&x, &y, &sw, 0.05).unwrap(); // move off the init point
+        let replica = DataParallel::replicate(&exec).unwrap();
+        let a = exec.export_state().unwrap();
+        let bb = replica.export_state().unwrap();
+        assert_eq!(a.len(), bb.len());
+        for (la, lb) in a.iter().zip(&bb) {
+            let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+            let bbits: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bbits);
+        }
+        // import back and verify the forward pass is bit-identical
+        let mut other = ModelExecutor::new(&rt, "cnn_c32_b64", 999).unwrap();
+        other.import_state(&a).unwrap();
+        let s1 = exec.fwd_stats(&x, &y).unwrap();
+        let s2 = other.fwd_stats(&x, &y).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&s1.loss), bits(&s2.loss));
+        assert_eq!(bits(&s1.conf), bits(&s2.conf));
+    }
+}
