@@ -103,6 +103,49 @@ pub enum StrategyConfig {
     El2n { score_epoch: usize, fraction: f64, restart: bool },
 }
 
+/// Which worker-pool schedule multi-worker (`--workers N`) training uses.
+///
+/// See docs/worker-model.md ("The two schedules") for the full trade-off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DpMode {
+    /// Deterministic serial-equivalent schedule (default): all device
+    /// steps run on the primary backend in fixed `(step, worker)` order;
+    /// only the host gather fans out.  Results are bitwise identical to
+    /// the single-stream interleaved run, so every recorded number is
+    /// independent of thread scheduling.
+    #[default]
+    SerialEquivalent,
+    /// True synchronous-SGD parameter averaging: each worker trains its
+    /// own backend replica and parameters are averaged in fixed worker
+    /// order at every step barrier (global batch = `W × B`).  This is the
+    /// paper's distributed algorithm — deterministic run to run, but a
+    /// different (global-batch) trajectory than the serial schedule.
+    Average,
+}
+
+impl DpMode {
+    /// Parse the `--dp` CLI value.
+    pub fn parse(value: &str) -> anyhow::Result<Self> {
+        match value {
+            "serial-equivalent" | "serial_equivalent" | "serial" => {
+                Ok(DpMode::SerialEquivalent)
+            }
+            "average" | "avg" => Ok(DpMode::Average),
+            other => anyhow::bail!(
+                "unknown --dp mode {other:?}; expected \"serial-equivalent\" or \"average\""
+            ),
+        }
+    }
+
+    /// Canonical CLI spelling (logs / result JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DpMode::SerialEquivalent => "serial-equivalent",
+            DpMode::Average => "average",
+        }
+    }
+}
+
 impl StrategyConfig {
     pub fn kakurenbo(max_fraction: f64) -> Self {
         StrategyConfig::Kakurenbo {
@@ -131,6 +174,22 @@ impl StrategyConfig {
             StrategyConfig::El2n { .. } => "el2n".into(),
         }
     }
+
+    /// Whether the strategy's training pass is incompatible with the
+    /// parameter-averaging schedule (`--dp average`): weighted plans
+    /// (ISWR / InfoBatch / GradMatch) tie per-position gradient weights to
+    /// the unsharded order, and Selective-Backprop's accept queue derives
+    /// follow-up batches from step results — both are single-stream by
+    /// construction (the paper also runs these baselines at W = 1).
+    pub fn single_stream_only(&self) -> bool {
+        matches!(
+            self,
+            StrategyConfig::Iswr
+                | StrategyConfig::InfoBatch { .. }
+                | StrategyConfig::GradMatch { .. }
+                | StrategyConfig::SelectiveBackprop { .. }
+        )
+    }
 }
 
 impl PartialEq for Components {
@@ -157,10 +216,16 @@ pub struct ExperimentConfig {
     /// Data-parallel worker count.  `> 1` executes plain training passes
     /// and hidden-stat refreshes through the engine's `WorkerPool` (N
     /// concurrent pipelined gather lanes behind a deterministic
-    /// bulk-synchronous reduction, bitwise identical to the single-stream
-    /// interleaved run — docs/worker-model.md) and also feeds the
-    /// paper-scale cost-model projection.
+    /// bulk-synchronous reduction — docs/worker-model.md) and also feeds
+    /// the paper-scale cost-model projection.  The schedule the training
+    /// pass uses is picked by [`ExperimentConfig::dp`].
     pub workers: usize,
+    /// Worker-pool schedule for multi-worker training passes: the bitwise
+    /// serial-equivalent default, or true parameter-averaging synchronous
+    /// SGD (`--dp average`).  Ignored when `workers == 1`... except that
+    /// `validate` rejects `Average` there outright, since a 1-replica
+    /// average is the serial schedule wearing a costume.
+    pub dp: DpMode,
     /// Evaluate on the validation set every k epochs (always on last).
     pub eval_every: usize,
     pub artifacts_dir: PathBuf,
@@ -190,6 +255,7 @@ impl ExperimentConfig {
             },
             momentum: 0.9,
             workers: 1,
+            dp: DpMode::SerialEquivalent,
             eval_every: 1,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             detailed_metrics: false,
@@ -203,6 +269,22 @@ impl ExperimentConfig {
         anyhow::ensure!(self.epochs > 0, "epochs must be positive");
         anyhow::ensure!(self.workers > 0, "workers must be positive");
         anyhow::ensure!((0.0..=1.0).contains(&(self.momentum as f64)), "momentum");
+        if self.dp == DpMode::Average {
+            anyhow::ensure!(
+                self.workers > 1,
+                "--dp average requires --workers > 1: parameter averaging \
+                 across a single replica is just the serial-equivalent \
+                 schedule (drop --dp, or raise --workers)"
+            );
+            anyhow::ensure!(
+                !self.strategy.single_stream_only(),
+                "--dp average is incompatible with strategy {:?}: weighted \
+                 plans (iswr, infobatch, gradmatch) and selective-backprop \
+                 are single-stream by construction (see docs/worker-model.md); \
+                 use the default --dp serial-equivalent",
+                self.strategy.name()
+            );
+        }
         if let StrategyConfig::Kakurenbo { max_fraction, tau, .. } = &self.strategy {
             anyhow::ensure!((0.0..1.0).contains(max_fraction), "max_fraction");
             anyhow::ensure!((0.0..=1.0).contains(&(*tau as f64)), "tau");
@@ -220,6 +302,7 @@ impl ExperimentConfig {
             "epochs" => self.epochs = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "workers" => self.workers = value.parse()?,
+            "dp" => self.dp = DpMode::parse(value)?,
             "eval_every" => self.eval_every = value.parse()?,
             "base_lr" => self.lr.base_lr = value.parse()?,
             "warmup_epochs" => self.lr.warmup_epochs = value.parse()?,
@@ -261,6 +344,7 @@ impl ExperimentConfig {
             ("epochs", self.epochs),
             ("seed", self.seed as usize),
             ("workers", self.workers),
+            ("dp", self.dp.name()),
             ("base_lr", self.lr.base_lr),
             ("momentum", self.momentum),
         ]
@@ -316,5 +400,83 @@ mod tests {
         c.epochs = 10;
         c.strategy = StrategyConfig::Forget { prune_epoch: 20, fraction: 0.3 };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dp_mode_parses_and_rejects() {
+        assert_eq!(DpMode::parse("average").unwrap(), DpMode::Average);
+        assert_eq!(DpMode::parse("avg").unwrap(), DpMode::Average);
+        assert_eq!(
+            DpMode::parse("serial-equivalent").unwrap(),
+            DpMode::SerialEquivalent
+        );
+        assert_eq!(DpMode::parse("serial").unwrap(), DpMode::SerialEquivalent);
+        let err = DpMode::parse("turbo").unwrap_err().to_string();
+        assert!(err.contains("--dp"), "{err}");
+        assert_eq!(DpMode::default(), DpMode::SerialEquivalent);
+    }
+
+    fn base_cfg(strategy: StrategyConfig) -> ExperimentConfig {
+        ExperimentConfig::new(
+            "t",
+            "cnn_c32_b64",
+            DatasetConfig::ImagenetProxy(Default::default()),
+            strategy,
+        )
+    }
+
+    #[test]
+    fn dp_average_requires_multiple_workers() {
+        let mut c = base_cfg(StrategyConfig::kakurenbo(0.3));
+        c.dp = DpMode::Average;
+        c.workers = 1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--workers > 1"), "{err}");
+        c.workers = 4;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn dp_average_rejects_single_stream_strategies() {
+        for strategy in [
+            StrategyConfig::Iswr,
+            StrategyConfig::InfoBatch { r: 0.5 },
+            StrategyConfig::GradMatch { fraction: 0.3, every_r: 3 },
+            StrategyConfig::SelectiveBackprop { beta: 1.0 },
+        ] {
+            let mut c = base_cfg(strategy.clone());
+            c.workers = 4;
+            c.dp = DpMode::Average;
+            let err = c.validate().unwrap_err().to_string();
+            assert!(
+                err.contains("single-stream") && err.contains(&strategy.name()),
+                "{}: {err}",
+                strategy.name()
+            );
+            // the same strategy is fine on the serial-equivalent schedule
+            c.dp = DpMode::SerialEquivalent;
+            assert!(c.validate().is_ok());
+        }
+        // plain strategies pass under averaging
+        for strategy in [
+            StrategyConfig::Baseline,
+            StrategyConfig::kakurenbo(0.3),
+            StrategyConfig::RandomHiding { fraction: 0.2 },
+            StrategyConfig::Forget { prune_epoch: 5, fraction: 0.3 },
+            StrategyConfig::El2n { score_epoch: 4, fraction: 0.2, restart: false },
+        ] {
+            let mut c = base_cfg(strategy);
+            c.workers = 2;
+            c.dp = DpMode::Average;
+            assert!(c.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn dp_override_applies() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        c.apply_override("dp", "average").unwrap();
+        assert_eq!(c.dp, DpMode::Average);
+        assert!(c.apply_override("dp", "nonsense").is_err());
     }
 }

@@ -72,6 +72,15 @@ impl CostModel {
         })
     }
 
+    /// Paper-scale projection of the `--dp average` schedule's averaging
+    /// overhead: one parameter allreduce per sync (the host-side fold the
+    /// pool performs maps to a ring allreduce of the same volume on the
+    /// paper's testbed).  Returns modeled seconds for `syncs` reductions
+    /// at `workers` ranks.
+    pub fn sync_overhead(&self, syncs: usize, workers: usize) -> f64 {
+        syncs as f64 * self.allreduce(workers)
+    }
+
     /// Ring allreduce time for this model's gradients across W workers.
     pub fn allreduce(&self, workers: usize) -> f64 {
         if workers <= 1 {
@@ -148,6 +157,15 @@ mod tests {
         assert!(t64 < t8);
         // speedup degrades vs ideal due to allreduce
         assert!(t64 > t1 / 80.0);
+    }
+
+    #[test]
+    fn sync_overhead_scales_with_syncs_and_workers() {
+        let m = CostModel::default();
+        assert_eq!(m.sync_overhead(0, 8), 0.0);
+        assert_eq!(m.sync_overhead(10, 1), 0.0); // W=1 never allreduces
+        assert!(m.sync_overhead(10, 8) > m.sync_overhead(5, 8));
+        assert!(m.sync_overhead(10, 64) > m.sync_overhead(10, 8));
     }
 
     #[test]

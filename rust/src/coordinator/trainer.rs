@@ -13,17 +13,25 @@
 //! refresh run through the engine's `WorkerPool`: the epoch order is
 //! sharded batch-aligned across N concurrent gather lanes behind a
 //! bulk-synchronous barrier with a deterministic `(step, worker)`
-//! reduction, bitwise identical to the single-stream interleaved run
-//! (docs/worker-model.md).  Weighted plans (ISWR / InfoBatch) and the SB
-//! candidate stream stay single-stream, matching the paper's W = 1 setup
-//! for those baselines.
+//! reduction.  `cfg.dp` picks the training schedule: the default
+//! serial-equivalent schedule is bitwise identical to the single-stream
+//! interleaved run; `--dp average` trains per-worker replicas of the real
+//! executor and averages parameters at every step barrier — true
+//! synchronous SGD (docs/worker-model.md).  The hidden-stat refresh is
+//! forward-only, so it always uses the serial-equivalent schedule (both
+//! schedules produce identical bits there; serial-equivalent skips the
+//! state export).  Weighted plans (ISWR / InfoBatch / GradMatch) and the
+//! SB candidate stream stay single-stream, matching the paper's W = 1
+//! setup for those baselines — `--dp average` with such a strategy is
+//! rejected at config validation.
 
-use crate::config::{ExperimentConfig, StrategyConfig};
+use crate::config::{DpMode, ExperimentConfig, StrategyConfig};
 use crate::coordinator::costmodel::CostModel;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    execute_plan, execute_sharded_plain, Engine, EvalSink, RefreshSink, StepMode, WorkerPool,
+    execute_plan, execute_sharded_average, execute_sharded_plain, Engine, EvalSink, RefreshSink,
+    StepMode, WorkerPool,
 };
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
@@ -204,7 +212,10 @@ impl Trainer {
         let t = Timer::start();
         // Data-parallel execution: shard the epoch batch-aligned across
         // the worker pool (weighted plans skip this — they are W=1 per
-        // paper; SB consumes its candidate stream unsharded).
+        // paper; SB consumes its candidate stream unsharded).  `--dp`
+        // picks the pool schedule: the bitwise serial-equivalent default,
+        // or true parameter-averaging synchronous SGD on per-worker
+        // replicas of the executor.
         let outcome = match plan.batch_mode {
             BatchMode::Plain if self.cfg.workers > 1 && plan.weights.is_none() => {
                 let shards = shard_order_aligned(
@@ -212,17 +223,32 @@ impl Trainer {
                     self.cfg.workers,
                     self.engine.batch(),
                 );
-                let (outcome, pout) = execute_sharded_plain(
-                    &mut self.pool,
-                    &mut self.exec,
-                    &self.data.train,
-                    &shards,
-                    rec.lr as f32,
-                    epoch as u32,
-                    &mut self.state,
-                )?;
+                let (outcome, pout) = match self.cfg.dp {
+                    DpMode::SerialEquivalent => execute_sharded_plain(
+                        &mut self.pool,
+                        &mut self.exec,
+                        &self.data.train,
+                        &shards,
+                        rec.lr as f32,
+                        epoch as u32,
+                        &mut self.state,
+                    )?,
+                    DpMode::Average => execute_sharded_average(
+                        &mut self.pool,
+                        &mut self.exec,
+                        &self.data.train,
+                        &shards,
+                        rec.lr as f32,
+                        epoch as u32,
+                        &mut self.state,
+                    )?,
+                };
                 rec.worker_samples = pout.workers.iter().map(|w| w.samples).collect();
                 rec.time_barrier += pout.workers.iter().map(|w| w.wait_s).sum::<f64>();
+                rec.dp_syncs = pout.sync_steps;
+                rec.time_average = pout.time_average;
+                rec.modeled_sync =
+                    self.cost.sync_overhead(pout.sync_steps, self.cfg.workers);
                 outcome
             }
             _ => execute_plan(

@@ -6,10 +6,23 @@
 //! pipelined-vs-serial and pool-vs-stream equivalences can be verified
 //! without PJRT artifacts.
 //!
-//! [`DataParallel`] extends it with replica management (replicate /
-//! export / import parameter state) for the worker pool's true
-//! data-parallel mode, where each worker steps its own replica and the
-//! pool averages parameters at the bulk-synchronous step barrier.
+//! [`DataParallel`] extends it with replica management for the worker
+//! pool's true data-parallel mode, where each worker steps its own replica
+//! and the pool averages parameters at the bulk-synchronous step barrier.
+//!
+//! # Why replicas are *built* on their lane thread
+//!
+//! The production backend owns PJRT state (device literals, a client
+//! handle) that is not [`Send`] — it can never cross a thread boundary,
+//! so the pool cannot construct replicas up front and move them into
+//! worker threads.  Instead [`DataParallel::replica_builder`] returns a
+//! [`ReplicaBuilder`]: a `Send` *constructor* carrying only host-side
+//! data (artifact paths, exported parameter tensors).  The pool ships the
+//! builder into a lane thread, which invokes it there; the resulting
+//! replica — non-`Send` device state and all — is owned by that thread
+//! for its whole life and communicates exclusively through `Send` host
+//! values ([`crate::data::batch::BatchAssembler`] buffers in,
+//! [`crate::runtime::BatchStats`] + exported state out).
 
 use crate::runtime::BatchStats;
 
@@ -31,32 +44,66 @@ pub trait StepBackend {
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats>;
 }
 
+/// Host-side snapshot round-trip of a backend's full mutable model state
+/// (parameters + optimizer state) as plain `f32` tensors.
+///
+/// The contract the worker pool's averaging reduction relies on:
+/// [`StateExchange::export_state`] followed by
+/// [`StateExchange::import_state`] preserves every f32 bit pattern
+/// exactly, so replication and the fixed worker-order averaging fold are
+/// deterministic run to run.
+pub trait StateExchange {
+    /// Snapshot the full mutable model state (parameters + optimizer
+    /// state) as host tensors, in a stable leaf order.
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>>;
+
+    /// Restore state previously produced by [`StateExchange::export_state`]
+    /// (or an elementwise average of several such snapshots).
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()>;
+}
+
+/// A worker-local backend replica: steps batches and round-trips its
+/// state, entirely on the lane thread that built it.  Blanket-implemented
+/// for every `StepBackend + StateExchange` type.
+pub trait ReplicaBackend: StepBackend + StateExchange {}
+
+impl<T: StepBackend + StateExchange> ReplicaBackend for T {}
+
+/// A `Send` constructor for a worker-local replica.
+///
+/// Invoked once, on the lane thread that will own the replica; the
+/// returned backend starts bitwise-identical (same parameters, same
+/// optimizer state) to the primary backend the builder was derived from.
+/// The builder itself carries only `Send` host data, so the replica's
+/// non-`Send` device state never crosses a thread boundary.
+pub type ReplicaBuilder = Box<dyn FnOnce() -> anyhow::Result<Box<dyn ReplicaBackend>> + Send>;
+
 /// A backend whose model state can be replicated across data-parallel
 /// workers and merged back by parameter averaging.
 ///
 /// The contract the worker pool relies on:
 ///
-/// * [`DataParallel::replicate`] produces a backend that is
-///   *bitwise-identical* in behaviour to `self` (same parameters, same
-///   optimizer state), so W freshly replicated workers running forward
-///   passes produce exactly the stats a single stream would.
-/// * [`DataParallel::export_state`] / [`DataParallel::import_state`]
-///   round-trip the full mutable state exactly (f32 bit patterns are
-///   preserved), so the pool's fixed worker-order averaging fold is
-///   deterministic run to run.
-pub trait DataParallel: StepBackend {
-    /// Build an independent replica with identical state.
-    fn replicate(&self) -> anyhow::Result<Self>
-    where
-        Self: Sized;
+/// * [`DataParallel::replica_builder`] yields a constructor whose replica
+///   is *bitwise-identical* in behaviour to `self` at builder-creation
+///   time, so W freshly built workers running forward passes produce
+///   exactly the stats a single stream would.
+/// * The [`StateExchange`] round-trip preserves f32 bit patterns exactly,
+///   so the pool's fixed worker-order averaging fold is deterministic run
+///   to run.
+pub trait DataParallel: StepBackend + StateExchange {
+    /// A `Send` constructor that builds an independent replica with state
+    /// identical to `self`'s current state, on whatever thread invokes it.
+    fn replica_builder(&self) -> anyhow::Result<ReplicaBuilder>;
 
-    /// Snapshot the full mutable model state (parameters + optimizer
-    /// state) as host tensors, in a stable leaf order.
-    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>>;
-
-    /// Restore state previously produced by [`DataParallel::export_state`]
-    /// (or an elementwise average of several such snapshots).
-    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()>;
+    /// Cache key for replica reuse: the worker pool keeps its persistent
+    /// replica lanes only while this key (and the worker count) is
+    /// unchanged, so replicas built for one backend are never fed another
+    /// backend's state.  Implementations should fold in whatever
+    /// identifies the replica's *construction* (model variant, artifact
+    /// source) — not its mutable state, which is re-synced every run.
+    fn replica_cache_key(&self) -> String {
+        "default".into()
+    }
 }
 
 /// Accumulate `other` into `acc` elementwise (one fold step of the pool's
@@ -113,5 +160,21 @@ mod tests {
         let mut a = vec![vec![1.0f32; 3]];
         assert!(accumulate_state(&mut a, &[vec![1.0f32; 2]]).is_err());
         assert!(accumulate_state(&mut a, &[vec![1.0f32; 3], vec![0.0]]).is_err());
+    }
+
+    #[test]
+    fn builders_cross_threads_and_replicas_match() {
+        use crate::engine::testbed::MockBackend;
+        let mut primary = MockBackend::new();
+        primary.param = 0.6180339;
+        let builder = primary.replica_builder().unwrap();
+        let bits = std::thread::spawn(move || {
+            let replica = builder().unwrap();
+            let state = replica.export_state().unwrap();
+            state[0][0].to_bits()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(bits, primary.param.to_bits());
     }
 }

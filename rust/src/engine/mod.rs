@@ -58,9 +58,10 @@ pub mod modes;
 pub mod pool;
 pub mod testbed;
 
-pub use backend::{DataParallel, StepBackend};
+pub use backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
 pub use modes::{
-    execute_plan, execute_sharded_plain, EpochOutcome, EvalSink, RefreshSink, SbSink, TrainSink,
+    execute_plan, execute_sharded_average, execute_sharded_plain, EpochOutcome, EvalSink,
+    RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
 

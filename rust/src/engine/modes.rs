@@ -14,6 +14,7 @@
 //! strategy's `BatchMode` and routes the epoch order through the right
 //! sink, so the trainer never matches on execution modes itself.
 
+use super::backend::DataParallel;
 use super::pool::{PoolOutcome, WorkerPool};
 use super::{Engine, StepBackend, StepCtx, StepMode, StepSink};
 use crate::data::shard::Shard;
@@ -306,6 +307,36 @@ pub fn execute_sharded_plain(
     let mut sink = TrainSink::new(state, epoch);
     let pout =
         pool.run_serial_equivalent(backend, data, shards, StepMode::Train { lr }, &mut sink)?;
+    let outcome = EpochOutcome {
+        trained_samples: pout.samples,
+        backprop_samples: pout.samples,
+        train_loss: sink.mean_loss(),
+    };
+    Ok((outcome, pout))
+}
+
+/// Execute one planned epoch's plain (unweighted) training pass through
+/// the worker pool's **data-parallel** schedule (`--dp average`): worker
+/// `w` trains its own replica of `backend` over `shards[w]`, and replica
+/// parameters are averaged in fixed worker order at every step barrier —
+/// true synchronous SGD with a global batch of `W × B` samples.
+///
+/// Deterministic run to run (same fixed-order reduction as the
+/// serial-equivalent schedule) but *not* bitwise serial-equivalent for
+/// train passes: all `W` batches of a step see the same pre-step
+/// parameters, where the serial schedule updates between them.  See
+/// docs/worker-model.md for when to pick which schedule.
+pub fn execute_sharded_average<B: DataParallel>(
+    pool: &mut WorkerPool,
+    backend: &mut B,
+    data: &Dataset,
+    shards: &[Shard],
+    lr: f32,
+    epoch: u32,
+    state: &mut SampleState,
+) -> anyhow::Result<(EpochOutcome, PoolOutcome)> {
+    let mut sink = TrainSink::new(state, epoch);
+    let pout = pool.run_data_parallel(backend, data, shards, StepMode::Train { lr }, &mut sink)?;
     let outcome = EpochOutcome {
         trained_samples: pout.samples,
         backprop_samples: pout.samples,

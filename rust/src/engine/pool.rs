@@ -22,14 +22,28 @@
 //!   stream over [`crate::data::shard::global_batch_order`] — N workers
 //!   are an execution detail, not a semantics change.
 //! * [`WorkerPool::run_data_parallel`] — true synchronous data-parallel
-//!   SGD.  Every worker steps its own [`DataParallel`] replica; at each
-//!   step barrier the pool folds the workers' [`BatchStats`] into the
-//!   sink in fixed worker order and (for train steps) averages the
-//!   replica parameters with the same fixed-order fold, so results are
-//!   deterministic run to run.  Forward-only passes are additionally
-//!   bitwise identical to the serial-equivalent schedule (parameters
-//!   never change); train passes follow global-batch SGD semantics and
-//!   are *not* serial-equivalent (documented in docs/worker-model.md).
+//!   SGD.  Every worker steps its own replica on a persistent *replica
+//!   lane* thread; at each step barrier the pool folds the workers'
+//!   [`BatchStats`] into the sink in fixed worker order and (for train
+//!   steps) averages the replica parameters with the same fixed-order
+//!   fold, so results are deterministic run to run.  Forward-only passes
+//!   are additionally bitwise identical to the serial-equivalent schedule
+//!   (parameters never change); train passes follow global-batch SGD
+//!   semantics and are *not* serial-equivalent (documented in
+//!   docs/worker-model.md).
+//!
+//! # Replica lanes and the `Send` boundary
+//!
+//! The production backend's device state is not `Send`, so replicas can
+//! never be constructed on one thread and moved to another.  Instead the
+//! pool ships a [`ReplicaBuilder`] (a `Send` constructor carrying only
+//! host data) into each lane thread, which *builds* its replica locally
+//! and owns it for the lane's whole life.  Lane threads are persistent —
+//! spawned on the first [`WorkerPool::run_data_parallel`] call and reused
+//! across epochs — so a PJRT replica's per-thread client and compiled
+//! executables are paid once per training run, not once per epoch.  Every
+//! run starts by broadcasting the primary's exported state, so replicas
+//! are bitwise-synchronized regardless of what earlier runs left behind.
 //!
 //! # Determinism contract
 //!
@@ -44,10 +58,10 @@
 //! sampler — the contract is "threads are invisible", not "W is
 //! invisible".
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 
-use super::backend::{accumulate_state, finish_average, DataParallel};
+use super::backend::{accumulate_state, finish_average, DataParallel, ReplicaBuilder, StateExchange};
 use super::{dispatch, StepBackend, StepCtx, StepMode, StepSink};
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::shard::Shard;
@@ -82,26 +96,168 @@ pub struct PoolOutcome {
     pub steps: usize,
     /// Total real samples executed across workers.
     pub samples: usize,
+    /// Parameter-averaging reductions performed (data-parallel train
+    /// schedule only; one per global step there, 0 otherwise).
+    pub sync_steps: usize,
+    /// Seconds spent finalizing and broadcasting the averaged state
+    /// across the syncs above (the host-side allreduce cost).
+    pub time_average: f64,
     /// Per-worker accounting, indexed by worker rank.
     pub workers: Vec<WorkerReport>,
 }
 
-/// Messages a data-parallel worker lane sends to the reduction loop.
-enum LaneMsg {
-    /// One executed step: its stats plus the slot map of the batch.
-    Step { stats: BatchStats, slots: Vec<u32>, real: usize },
-    /// The lane's backend failed; the run aborts.
+/// A state snapshot shared between the reduction loop and every lane
+/// (the primary's state at run start, or a barrier's averaged state).
+type SharedState = Arc<Vec<Vec<f32>>>;
+
+/// Commands the reduction loop sends a persistent replica lane.
+enum LaneCmd {
+    /// Replace the replica's full state with this snapshot (the averaged
+    /// parameters at a step barrier, or the primary's state at run start).
+    Sync(SharedState),
+    /// Execute one step on an assembled batch; reply with
+    /// [`LaneReply::Step`], exporting the post-step state when `export`.
+    Step {
+        buf: BatchAssembler,
+        mode: StepMode,
+        export: bool,
+    },
+}
+
+/// Replies a replica lane sends back to the reduction loop.
+enum LaneReply {
+    /// The replica finished building; the lane accepts commands.
+    Ready,
+    /// One executed step: the recycled batch buffer, its stats, and (when
+    /// requested) the replica's post-step state snapshot.
+    Step {
+        buf: BatchAssembler,
+        stats: BatchStats,
+        state: Option<Vec<Vec<f32>>>,
+    },
+    /// The lane's replica failed; the run aborts and the lane exits.
     Fail(String),
 }
 
+/// A persistent worker thread owning one data-parallel replica.
+///
+/// The replica is *built on* this thread (via a [`ReplicaBuilder`]) and
+/// never leaves it; all communication crosses the channel pair as `Send`
+/// host values.  Dropping the lane closes the command channel, which
+/// shuts the thread down; `Drop` joins it.
+struct ReplicaLane {
+    cmd_tx: Option<Sender<LaneCmd>>,
+    reply_rx: Receiver<LaneReply>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReplicaLane {
+    /// Spawn the lane thread; the replica builds asynchronously and the
+    /// lane reports [`LaneReply::Ready`] (or `Fail`) as its first reply.
+    fn spawn(worker: usize, build: ReplicaBuilder) -> anyhow::Result<Self> {
+        let (cmd_tx, cmd_rx) = channel::<LaneCmd>();
+        let (reply_tx, reply_rx) = channel::<LaneReply>();
+        let handle = std::thread::Builder::new()
+            .name(format!("dp-replica-{worker}"))
+            .spawn(move || lane_main(build, cmd_rx, reply_tx))?;
+        Ok(ReplicaLane { cmd_tx: Some(cmd_tx), reply_rx, handle: Some(handle) })
+    }
+
+    fn send(&self, cmd: LaneCmd) -> anyhow::Result<()> {
+        self.cmd_tx
+            .as_ref()
+            .expect("lane alive until drop")
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("replica lane died"))
+    }
+
+    fn recv(&self) -> anyhow::Result<LaneReply> {
+        self.reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("replica lane died"))
+    }
+}
+
+impl Drop for ReplicaLane {
+    fn drop(&mut self) {
+        drop(self.cmd_tx.take()); // disconnect: lane_main's recv loop exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lane thread body: build the replica locally, then serve commands until
+/// the pool drops the command channel.
+fn lane_main(build: ReplicaBuilder, cmd_rx: Receiver<LaneCmd>, reply_tx: Sender<LaneReply>) {
+    let mut replica = match build() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = reply_tx.send(LaneReply::Fail(format!("replica build: {e}")));
+            return;
+        }
+    };
+    if reply_tx.send(LaneReply::Ready).is_err() {
+        return;
+    }
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            LaneCmd::Sync(state) => {
+                if let Err(e) = replica.import_state(&state) {
+                    let _ = reply_tx.send(LaneReply::Fail(format!("state import: {e}")));
+                    return;
+                }
+            }
+            LaneCmd::Step { buf, mode, export } => {
+                let result = match mode {
+                    StepMode::Train { lr } => {
+                        replica.train_step(&buf.x, &buf.y, &buf.sw, lr)
+                    }
+                    StepMode::Forward => replica.fwd_stats(&buf.x, &buf.y),
+                };
+                let stats = match result {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = reply_tx.send(LaneReply::Fail(e.to_string()));
+                        return;
+                    }
+                };
+                let state = if export {
+                    match replica.export_state() {
+                        Ok(s) => Some(s),
+                        Err(e) => {
+                            let _ = reply_tx.send(LaneReply::Fail(format!("state export: {e}")));
+                            return;
+                        }
+                    }
+                } else {
+                    None
+                };
+                if reply_tx.send(LaneReply::Step { buf, stats, state }).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
 /// The multi-worker execution driver.  Owns the per-worker parked batch
-/// buffers (reused across epochs and across train/refresh runs) plus a
-/// scratch assembler for sink-issued immediate steps.
+/// buffers (reused across epochs and across train/refresh runs), a
+/// scratch assembler for sink-issued immediate steps, and the persistent
+/// data-parallel replica lanes.
 pub struct WorkerPool {
     batch: usize,
     /// Per-worker parked assembler pairs (lane w uses `buffers[w]`).
     buffers: Vec<DoubleBuffer>,
     scratch: BatchAssembler,
+    /// Persistent replica lanes for the data-parallel schedule (spawned
+    /// on first use, reused across runs; cleared after a failed run so
+    /// the next run rebuilds from a clean slate).
+    lanes: Vec<ReplicaLane>,
+    /// Which backend the lanes' replicas were built for
+    /// ([`DataParallel::replica_cache_key`]); a different key respawns
+    /// them, so one backend's replicas never receive another's state.
+    lanes_key: String,
 }
 
 impl WorkerPool {
@@ -109,7 +265,13 @@ impl WorkerPool {
     /// Lanes allocate lazily on first use, so construction is cheap for
     /// single-worker configs.
     pub fn new(data: &Dataset, batch: usize) -> Self {
-        WorkerPool { batch, buffers: Vec::new(), scratch: BatchAssembler::new(data, batch) }
+        WorkerPool {
+            batch,
+            buffers: Vec::new(),
+            scratch: BatchAssembler::new(data, batch),
+            lanes: Vec::new(),
+            lanes_key: String::new(),
+        }
     }
 
     /// The device batch size each lane assembles.
@@ -141,7 +303,7 @@ impl WorkerPool {
         let workers = (0..shards.len())
             .map(|w| WorkerReport { worker: w, ..Default::default() })
             .collect();
-        Ok((steps, PoolOutcome { steps, samples: 0, workers }))
+        Ok((steps, PoolOutcome { steps, workers, ..Default::default() }))
     }
 
     /// Take the initial assemblers for each lane (two per worker, fewer
@@ -161,6 +323,48 @@ impl WorkerPool {
             lanes.push(lane);
         }
         lanes
+    }
+
+    /// Spawn (or respawn, if the worker count or the primary backend
+    /// changed) the persistent replica lanes and wait for every replica
+    /// to finish building.
+    fn ensure_lanes<B: DataParallel>(
+        &mut self,
+        primary: &B,
+        workers: usize,
+    ) -> anyhow::Result<()> {
+        let key = primary.replica_cache_key();
+        if self.lanes.len() == workers && self.lanes_key == key {
+            return Ok(());
+        }
+        self.lanes.clear();
+        self.lanes_key = key;
+        for w in 0..workers {
+            self.lanes.push(ReplicaLane::spawn(w, primary.replica_builder()?)?);
+        }
+        let mut failed = None;
+        for (w, lane) in self.lanes.iter().enumerate() {
+            match lane.recv() {
+                Ok(LaneReply::Ready) => {}
+                Ok(LaneReply::Fail(e)) => {
+                    failed = Some(format!("worker {w}: {e}"));
+                    break;
+                }
+                Ok(LaneReply::Step { .. }) => {
+                    failed = Some(format!("worker {w}: unexpected step reply"));
+                    break;
+                }
+                Err(e) => {
+                    failed = Some(format!("worker {w}: {e}"));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failed {
+            self.lanes.clear();
+            anyhow::bail!("replica lane spawn failed: {e}");
+        }
+        Ok(())
     }
 
     /// Execute `shards` through the **serial-equivalent** schedule: worker
@@ -234,13 +438,61 @@ impl WorkerPool {
     }
 
     /// Execute `shards` through the **data-parallel** schedule: worker `w`
-    /// steps its own replica of `primary` over its shard; at each step
+    /// steps its own replica of `primary` (built and owned by a persistent
+    /// lane thread — see the module docs) over its shard; at each step
     /// barrier the stats fold into `sink` in fixed worker order and (for
     /// [`StepMode::Train`]) replica parameters are averaged with the same
     /// fixed-order fold, after which `primary` receives the final averaged
     /// state.  Deterministic run to run; bitwise serial-equivalent for
     /// forward-only modes.
-    pub fn run_data_parallel<B: DataParallel + Send>(
+    ///
+    /// The averaging invariant: the reduction folds in fixed
+    /// `(step, worker)` order, so the result is a pure function of the
+    /// inputs — *independent of lane completion timing* across runs:
+    ///
+    /// ```
+    /// use kakurenbo::data::shard::shard_order_aligned;
+    /// use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+    /// use kakurenbo::engine::testbed::MockBackend;
+    /// use kakurenbo::engine::{EvalSink, StepMode, WorkerPool};
+    ///
+    /// let d = gauss_mixture(
+    ///     &GaussMixtureCfg { n_train: 48, n_val: 4, dim: 6, classes: 3, ..Default::default() },
+    ///     7,
+    /// )
+    /// .train;
+    /// let order: Vec<u32> = (0..48).collect();
+    /// let shards = shard_order_aligned(&order, 4, 8);
+    /// let run = || {
+    ///     let mut pool = WorkerPool::new(&d, 8);
+    ///     let mut be = MockBackend::new();
+    ///     let mut sink = EvalSink::default();
+    ///     pool.run_data_parallel(&mut be, &d, &shards, StepMode::Train { lr: 0.05 }, &mut sink)
+    ///         .unwrap();
+    ///     (be.param.to_bits(), sink.result().1.to_bits())
+    /// };
+    /// // four lanes race; the fixed-order reduction makes the averaged
+    /// // parameters and the folded loss bit-for-bit reproducible anyway
+    /// assert_eq!(run(), run());
+    /// ```
+    pub fn run_data_parallel<B: DataParallel>(
+        &mut self,
+        primary: &mut B,
+        data: &Dataset,
+        shards: &[Shard],
+        mode: StepMode,
+        sink: &mut dyn StepSink,
+    ) -> anyhow::Result<PoolOutcome> {
+        let out = self.run_data_parallel_inner(primary, data, shards, mode, sink);
+        if out.is_err() {
+            // an aborted run can leave lanes with out-of-phase commands in
+            // flight; rebuild them rather than risk a desynced barrier
+            self.lanes.clear();
+        }
+        out
+    }
+
+    fn run_data_parallel_inner<B: DataParallel>(
         &mut self,
         primary: &mut B,
         data: &Dataset,
@@ -257,141 +509,114 @@ impl WorkerPool {
             return Ok(outcome);
         }
         let averaging = matches!(mode, StepMode::Train { .. });
-        let mut replicas: Vec<B> = (0..w_count)
-            .map(|_| primary.replicate())
-            .collect::<anyhow::Result<_>>()?;
-        let lanes = self.take_lanes(data, w_count, steps);
-        let scratch = &mut self.scratch;
+        self.ensure_lanes(primary, w_count)?;
+        // Re-synchronize every replica with the primary's current state:
+        // lanes persist across runs, so whatever an earlier run (or an
+        // earlier epoch's averaging) left behind is overwritten up front.
+        let init = Arc::new(primary.export_state()?);
+        for lane in &self.lanes {
+            lane.send(LaneCmd::Sync(init.clone()))?;
+        }
 
-        let parked = std::thread::scope(
-            |scope| -> anyhow::Result<Vec<(usize, BatchAssembler)>> {
-                let mut stat_rx = Vec::with_capacity(w_count);
-                let mut state_rx = Vec::with_capacity(w_count);
-                let mut sync_tx = Vec::with_capacity(w_count);
-                let (park_tx, park_rx) = channel::<(usize, BatchAssembler)>();
-                for ((w, (shard, initial)), replica) in
-                    shards.iter().zip(lanes).enumerate().zip(replicas.iter_mut())
-                {
+        let gather_bufs = self.take_lanes(data, w_count, steps);
+        let scratch = &mut self.scratch;
+        let rep_lanes = &self.lanes;
+
+        type Parked = Vec<(usize, BatchAssembler)>;
+        let (parked, last_avg) = std::thread::scope(
+            |scope| -> anyhow::Result<(Parked, Option<SharedState>)> {
+                let mut done_rx = Vec::with_capacity(w_count);
+                let mut back_tx = Vec::with_capacity(w_count);
+                for (shard, initial) in shards.iter().zip(gather_bufs) {
                     let (d_tx, d_rx) = sync_channel::<BatchAssembler>(1);
                     let (b_tx, b_rx) = channel::<BatchAssembler>();
                     spawn_filler(scope, shard, data, bs, steps, initial, b_rx, d_tx);
-
-                    let (st_tx, st_rx) = sync_channel::<LaneMsg>(1);
-                    let (sx_tx, sx_rx) = channel::<Vec<Vec<f32>>>();
-                    let (av_tx, av_rx) = channel::<Arc<Vec<Vec<f32>>>>();
-                    stat_rx.push(st_rx);
-                    state_rx.push(sx_rx);
-                    sync_tx.push(av_tx);
-                    let park = park_tx.clone();
-                    scope.spawn(move || {
-                        for s in 0..steps {
-                            let buf = match d_rx.recv() {
-                                Ok(b) => b,
-                                Err(_) => return,
-                            };
-                            let result = dispatch(&mut *replica, mode, &buf);
-                            let (slots, real) = (buf.slots.clone(), buf.real);
-                            // recycle the buffer before the barrier so the
-                            // gather lane keeps running through the wait
-                            if s + 2 < steps {
-                                let _ = b_tx.send(buf);
-                            } else {
-                                let _ = park.send((w, buf));
-                            }
-                            let stats = match result {
-                                Ok(stats) => stats,
-                                Err(e) => {
-                                    let _ = st_tx.send(LaneMsg::Fail(e.to_string()));
-                                    return;
-                                }
-                            };
-                            if st_tx.send(LaneMsg::Step { stats, slots, real }).is_err() {
-                                return;
-                            }
-                            if averaging {
-                                let state = match replica.export_state() {
-                                    Ok(st) => st,
-                                    Err(_) => return,
-                                };
-                                if sx_tx.send(state).is_err() {
-                                    return;
-                                }
-                                let avg = match av_rx.recv() {
-                                    Ok(a) => a,
-                                    Err(_) => return,
-                                };
-                                if replica.import_state(&avg).is_err() {
-                                    return;
-                                }
-                            }
-                        }
-                    });
+                    done_rx.push(d_rx);
+                    back_tx.push(b_tx);
                 }
-                drop(park_tx);
 
-                let mut last_avg: Option<Arc<Vec<Vec<f32>>>> = None;
-                for _s in 0..steps {
+                let mut parked: Parked = Vec::with_capacity(w_count * steps.min(2));
+                let mut last_avg: Option<SharedState> = None;
+                for s in 0..steps {
+                    // Fan out: forward each worker's gathered batch to its
+                    // replica lane; all lanes compute concurrently.
+                    for (w, rx) in done_rx.iter().enumerate() {
+                        let buf = rx
+                            .recv()
+                            .map_err(|_| anyhow::anyhow!("worker {w} gather lane died"))?;
+                        rep_lanes[w].send(LaneCmd::Step { buf, mode, export: averaging })?;
+                    }
+                    // Fixed (step, worker) reduction: fold stats (and, when
+                    // averaging, states) in worker order regardless of
+                    // which lane finished first.
+                    let mut acc: Option<Vec<Vec<f32>>> = None;
                     for w in 0..w_count {
                         let t = Timer::start();
-                        let msg = stat_rx[w]
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("worker {w} lane died"))?;
+                        let reply = rep_lanes[w].recv()?;
                         outcome.workers[w].wait_s += t.elapsed_s();
-                        match msg {
-                            LaneMsg::Step { stats, slots, real } => {
+                        match reply {
+                            LaneReply::Step { buf, stats, state } => {
                                 let mut ctx = StepCtx {
                                     backend: &mut *primary,
                                     scratch: &mut *scratch,
                                     data,
                                 };
-                                sink.on_batch(&mut ctx, &slots, real, &stats)?;
-                                outcome.samples += real;
-                                outcome.workers[w].samples += real;
+                                sink.on_batch(&mut ctx, &buf.slots, buf.real, &stats)?;
+                                outcome.samples += buf.real;
+                                outcome.workers[w].samples += buf.real;
                                 outcome.workers[w].steps += 1;
+                                if s + 2 < steps {
+                                    let _ = back_tx[w].send(buf);
+                                } else {
+                                    parked.push((w, buf));
+                                }
+                                if averaging {
+                                    let st = state.ok_or_else(|| {
+                                        anyhow::anyhow!("worker {w} reply missing state")
+                                    })?;
+                                    // fixed fold: w0 + w1 + ... then / W
+                                    acc = Some(match acc.take() {
+                                        None => st,
+                                        Some(mut a) => {
+                                            accumulate_state(&mut a, &st)?;
+                                            a
+                                        }
+                                    });
+                                }
                             }
-                            LaneMsg::Fail(e) => {
+                            LaneReply::Fail(e) => {
                                 anyhow::bail!("worker {w} step failed: {e}")
+                            }
+                            LaneReply::Ready => {
+                                anyhow::bail!("worker {w}: unexpected ready reply")
                             }
                         }
                     }
                     if averaging {
-                        // fixed worker-order fold: w0 + w1 + ... then / W
-                        let mut acc = state_rx[0]
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("worker 0 state lane died"))?;
-                        for rx in state_rx.iter().skip(1) {
-                            let st = rx
-                                .recv()
-                                .map_err(|_| anyhow::anyhow!("worker state lane died"))?;
-                            accumulate_state(&mut acc, &st)?;
+                        let t = Timer::start();
+                        let mut avg = acc.expect("averaging step folded no state");
+                        finish_average(&mut avg, w_count);
+                        let avg = Arc::new(avg);
+                        for lane in rep_lanes {
+                            lane.send(LaneCmd::Sync(avg.clone()))?;
                         }
-                        finish_average(&mut acc, w_count);
-                        let avg = Arc::new(acc);
-                        for tx in &sync_tx {
-                            let _ = tx.send(avg.clone());
-                        }
+                        outcome.sync_steps += 1;
+                        outcome.time_average += t.elapsed_s();
                         last_avg = Some(avg);
                     }
                 }
-
-                let mut parked = Vec::with_capacity(w_count * steps.min(2));
-                for _ in 0..w_count * steps.min(2) {
-                    let pair = park_rx
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("worker lane died before parking"))?;
-                    parked.push(pair);
-                }
-                if let Some(avg) = last_avg {
-                    primary.import_state(&avg)?;
-                }
-                let mut ctx = StepCtx { backend: primary, scratch, data };
-                sink.finish(&mut ctx)?;
-                Ok(parked)
+                drop(back_tx);
+                Ok((parked, last_avg))
             },
         )?;
         for (w, buf) in parked {
             self.buffers[w].put(buf);
         }
+        if let Some(avg) = last_avg {
+            primary.import_state(&avg)?;
+        }
+        let mut ctx = StepCtx { backend: primary, scratch: &mut self.scratch, data };
+        sink.finish(&mut ctx)?;
         Ok(outcome)
     }
 }
@@ -575,6 +800,59 @@ mod tests {
         assert_eq!(out.samples, 32);
     }
 
+    /// A replica whose steps fail must abort the data-parallel run with an
+    /// error (not hang the barrier), and the pool must recover: lanes are
+    /// respawned and a healthy run succeeds afterwards.
+    #[test]
+    fn data_parallel_recovers_after_failed_run() {
+        #[derive(Clone)]
+        struct FailingDp;
+        impl StepBackend for FailingDp {
+            fn train_step(
+                &mut self,
+                _x: &[f32],
+                _y: &[i32],
+                _sw: &[f32],
+                _lr: f32,
+            ) -> anyhow::Result<BatchStats> {
+                anyhow::bail!("device lost")
+            }
+            fn fwd_stats(&mut self, _x: &[f32], _y: &[i32]) -> anyhow::Result<BatchStats> {
+                anyhow::bail!("device lost")
+            }
+        }
+        impl crate::engine::StateExchange for FailingDp {
+            fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0]])
+            }
+            fn import_state(&mut self, _state: &[Vec<f32>]) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        impl DataParallel for FailingDp {
+            fn replica_builder(&self) -> anyhow::Result<ReplicaBuilder> {
+                Ok(Box::new(move || {
+                    Ok(Box::new(FailingDp) as Box<dyn crate::engine::ReplicaBackend>)
+                }))
+            }
+        }
+        let d = tiny(40);
+        let order: Vec<u32> = (0..32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mut pool = WorkerPool::new(&d, B);
+        let mut sink = EvalSink::default();
+        assert!(pool
+            .run_data_parallel(&mut FailingDp, &d, &shards, StepMode::Forward, &mut sink)
+            .is_err());
+        // lanes were cleared; a healthy backend respawns them and runs
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        let out = pool
+            .run_data_parallel(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+            .unwrap();
+        assert_eq!(out.samples, 32);
+    }
+
     #[test]
     fn data_parallel_forward_matches_serial_equivalent() {
         for w in [1usize, 2, 4] {
@@ -616,9 +894,11 @@ mod tests {
         let mut sink = EvalSink::default();
         pool.run_data_parallel(&mut be2, &d, &shards2, StepMode::Train { lr: 0.05 }, &mut sink)
             .unwrap();
+        let mut pool1 = WorkerPool::new(&d, B);
         let mut be1 = MockBackend::new();
         let mut sink = EvalSink::default();
-        pool.run_data_parallel(&mut be1, &d, &shards1, StepMode::Train { lr: 0.05 }, &mut sink)
+        pool1
+            .run_data_parallel(&mut be1, &d, &shards1, StepMode::Train { lr: 0.05 }, &mut sink)
             .unwrap();
         assert_eq!(be1.param.to_bits(), be2.param.to_bits());
     }
@@ -638,5 +918,55 @@ mod tests {
             (be.param.to_bits(), loss.to_bits())
         };
         assert_eq!(run(), run());
+    }
+
+    /// Lanes persist across runs: a second run through the same pool must
+    /// re-sync replicas to the primary's *current* state, not continue
+    /// from whatever the previous run's averaging left behind.
+    #[test]
+    fn persistent_lanes_resync_between_runs() {
+        let d = tiny(32);
+        let order: Vec<u32> = (0..32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mode = StepMode::Train { lr: 0.04 };
+
+        // reference: two fresh pools, primary state carried across
+        let mut be_ref = MockBackend::new();
+        for _ in 0..2 {
+            let mut pool = WorkerPool::new(&d, B);
+            let mut sink = EvalSink::default();
+            pool.run_data_parallel(&mut be_ref, &d, &shards, mode, &mut sink).unwrap();
+        }
+        // same two epochs through one pool (lanes reused)
+        let mut be = MockBackend::new();
+        let mut pool = WorkerPool::new(&d, B);
+        for _ in 0..2 {
+            let mut sink = EvalSink::default();
+            pool.run_data_parallel(&mut be, &d, &shards, mode, &mut sink).unwrap();
+        }
+        assert_eq!(be_ref.param.to_bits(), be.param.to_bits());
+    }
+
+    /// The averaging schedule reports its reduction accounting.
+    #[test]
+    fn averaging_outcome_accounting() {
+        let d = tiny(48);
+        let order: Vec<u32> = (0..48).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mut pool = WorkerPool::new(&d, B);
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        let out = pool
+            .run_data_parallel(&mut be, &d, &shards, StepMode::Train { lr: 0.01 }, &mut sink)
+            .unwrap();
+        assert_eq!(out.sync_steps, out.steps);
+        assert!(out.time_average >= 0.0);
+        // forward passes never average
+        let mut sink = EvalSink::default();
+        let out = pool
+            .run_data_parallel(&mut be, &d, &shards, StepMode::Forward, &mut sink)
+            .unwrap();
+        assert_eq!(out.sync_steps, 0);
+        assert_eq!(out.time_average, 0.0);
     }
 }

@@ -9,7 +9,7 @@
 //! subsequent outputs.  It also implements [`DataParallel`], making it the
 //! reference backend for the pool's parameter-averaging mode.
 
-use super::backend::{DataParallel, StepBackend};
+use super::backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
 use crate::runtime::BatchStats;
 
 /// Order-sensitive scalar-parameter backend (see module docs).
@@ -71,11 +71,7 @@ impl StepBackend for MockBackend {
     }
 }
 
-impl DataParallel for MockBackend {
-    fn replicate(&self) -> anyhow::Result<Self> {
-        Ok(self.clone())
-    }
-
+impl StateExchange for MockBackend {
     fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
         Ok(vec![vec![self.param]])
     }
@@ -90,6 +86,15 @@ impl DataParallel for MockBackend {
     }
 }
 
+impl DataParallel for MockBackend {
+    /// Replication is a host-side clone: the builder captures a copy of
+    /// the backend (trivially `Send`) and hands it to the lane thread.
+    fn replica_builder(&self) -> anyhow::Result<ReplicaBuilder> {
+        let replica = self.clone();
+        Ok(Box::new(move || Ok(Box::new(replica) as Box<dyn ReplicaBackend>)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,10 +103,13 @@ mod tests {
     fn state_roundtrip_is_exact() {
         let mut a = MockBackend::new();
         a.param = 0.123456789;
-        let mut b = a.replicate().unwrap();
-        assert_eq!(a.param.to_bits(), b.param.to_bits());
+        let mut b = (a.replica_builder().unwrap())().unwrap();
+        assert_eq!(a.export_state().unwrap(), b.export_state().unwrap());
         b.import_state(&a.export_state().unwrap()).unwrap();
-        assert_eq!(a.param.to_bits(), b.param.to_bits());
+        assert_eq!(
+            a.param.to_bits(),
+            b.export_state().unwrap()[0][0].to_bits()
+        );
         assert!(b.import_state(&[vec![1.0, 2.0]]).is_err());
     }
 }

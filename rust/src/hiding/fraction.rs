@@ -5,6 +5,7 @@
 //! most samples have similar near-zero loss and hiding a fixed fraction
 //! would cut samples that still matter (Appendix C.1, Fig. 5).
 
+/// The maximum-hidden-fraction step schedule F_e (RF component).
 #[derive(Clone, Debug)]
 pub struct FractionSchedule {
     /// Initial maximum hidden fraction F (e.g. 0.3).
@@ -34,6 +35,7 @@ impl FractionSchedule {
         }
     }
 
+    /// A flat schedule: F_e = `max_fraction` for every epoch (RF off).
     pub fn constant(max_fraction: f64) -> Self {
         FractionSchedule {
             max_fraction,
@@ -57,6 +59,7 @@ impl FractionSchedule {
         self.max_fraction * alpha
     }
 
+    /// Check ranges and milestone monotonicity.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             (0.0..1.0).contains(&self.max_fraction),

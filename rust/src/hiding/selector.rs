@@ -9,6 +9,7 @@
 use crate::state::SampleState;
 use crate::util::stats::{argselect_smallest, argsort_by_f32};
 
+/// Which candidate-selection algorithm picks the F·N lowest-loss samples.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SelectMode {
     /// O(N) quickselect partition (default; measured faster — see §Perf).
@@ -17,12 +18,14 @@ pub enum SelectMode {
     FullSort,
 }
 
+/// Hide/move-back selector configuration (HE + MB, paper §3.1).
 #[derive(Clone, Copy, Debug)]
 pub struct SelectorCfg {
     /// Prediction-confidence threshold τ for the move-back rule.
     pub tau: f32,
     /// Enable MB (move-back).  Disabled in ablation v1x0x.
     pub move_back: bool,
+    /// Candidate selection algorithm.
     pub mode: SelectMode,
 }
 
@@ -32,6 +35,7 @@ impl Default for SelectorCfg {
     }
 }
 
+/// One epoch's hide/train split, plus move-back accounting.
 #[derive(Clone, Debug, Default)]
 pub struct Selection {
     /// Samples to hide this epoch.

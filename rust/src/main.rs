@@ -9,8 +9,9 @@
 //! variants                                                  list artifact variants
 //! ```
 //!
-//! Overrides (any subset): `--epochs --seed --workers --base_lr --momentum
-//! --max_fraction --tau --drop_top --variant --eval_every --detailed_metrics`
+//! Overrides (any subset): `--epochs --seed --workers --dp --base_lr
+//! --momentum --max_fraction --tau --drop_top --variant --eval_every
+//! --detailed_metrics`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -20,7 +21,7 @@ use kakurenbo::util::logging::{set_level, Level};
 use kakurenbo::util::table::{diff_pct, pct, speedup_pct, Table};
 
 const OVERRIDE_KEYS: &[&str] = &[
-    "epochs", "seed", "workers", "base_lr", "warmup_epochs", "momentum",
+    "epochs", "seed", "workers", "dp", "base_lr", "warmup_epochs", "momentum",
     "max_fraction", "tau", "drop_top", "variant", "eval_every", "detailed_metrics",
     "checkpoint_every", "checkpoint_dir", "resume",
 ];
@@ -185,12 +186,18 @@ USAGE:
 
 Strategies: baseline kakurenbo kakurenbo-vXXXX (ablation bits HE/MB/RF/LR)
             iswr sb forget gradmatch random infobatch el2n
-Overrides:  --epochs --seed --workers --base_lr --warmup_epochs --momentum
-            --max_fraction --tau --drop_top --variant --eval_every
+            (catalog with citations + flags: docs/strategies.md)
+Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
+            --momentum --max_fraction --tau --drop_top --variant
+            --eval_every
 Flags:      --verbose --quiet --out <dir>
 
 --workers N executes data-parallel: the epoch order is sharded across N
-pooled worker lanes behind a deterministic bulk-synchronous reduction,
-bitwise identical to the serial single-stream simulation of the same N
-(see docs/worker-model.md).
+pooled worker lanes behind a deterministic bulk-synchronous reduction.
+--dp picks the schedule (docs/worker-model.md):
+  serial-equivalent  (default) bitwise identical to the serial
+                     single-stream simulation of the same N
+  average            true synchronous SGD: per-worker executor replicas,
+                     parameters averaged at every step barrier; needs
+                     --workers > 1 and a non-weighted, non-SB strategy
 ";

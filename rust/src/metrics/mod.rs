@@ -43,6 +43,15 @@ pub struct EpochRecord {
     /// Seconds the worker pool's reduction loop spent blocked on gather
     /// lanes / the step barrier (0 for single-stream epochs).
     pub time_barrier: f64,
+    /// Parameter-averaging reductions performed this epoch (only when the
+    /// `--dp average` schedule trained the epoch; 0 otherwise).
+    pub dp_syncs: usize,
+    /// Measured seconds finalizing + broadcasting the averaged parameters
+    /// across those reductions (the host-side allreduce cost).
+    pub time_average: f64,
+    /// Modeled paper-scale allreduce seconds for the same reductions
+    /// (cost-model projection of the averaging overhead at W workers).
+    pub modeled_sync: f64,
     /// Per-worker executed sample counts when the epoch ran through the
     /// worker pool (empty for single-stream epochs).
     pub worker_samples: Vec<usize>,
@@ -76,6 +85,9 @@ impl EpochRecord {
             ("time_refresh", self.time_refresh),
             ("time_eval", self.time_eval),
             ("time_barrier", self.time_barrier),
+            ("dp_syncs", self.dp_syncs),
+            ("time_average", self.time_average),
+            ("modeled_sync", self.modeled_sync),
             ("modeled_time", self.modeled_time),
         ];
         if let Json::Obj(m) = &mut o {

@@ -6,30 +6,44 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::{parse_file, Json};
 
+/// One parameter leaf's metadata (name, shape, init rule).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamMeta {
+    /// Leaf name as exported by the compiler (checkpoint key).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
     /// Std-dev for normal init; 0.0 means zeros (biases).
     pub init_std: f64,
 }
 
 impl ParamMeta {
+    /// Total element count of the leaf.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One compiled model variant: shapes, parameter leaves, artifact files.
 #[derive(Clone, Debug)]
 pub struct VariantMeta {
+    /// Manifest key, e.g. "cnn_c32_b64".
     pub name: String,
+    /// Model family ("mlp", "cnn", ...; drives bench groupings).
     pub family: String,
+    /// Device batch size the artifacts were lowered at.
     pub batch: usize,
+    /// Per-sample input shape (flattened by [`VariantMeta::sample_dim`]).
     pub input_shape: Vec<usize>,
+    /// Per-sample label shape (1 for classification).
     pub label_shape: Vec<usize>,
+    /// Number of output classes.
     pub classes: usize,
+    /// Penultimate-feature width of `fwd_embed` (0 when absent).
     pub embed_dim: usize,
+    /// Total parameter count across leaves (validated on load).
     pub param_count: usize,
+    /// Parameter leaves in execution order.
     pub params: Vec<ParamMeta>,
     /// kind ("train_step" | "fwd_stats" | "fwd_embed") -> file name.
     pub artifacts: BTreeMap<String, String>,
@@ -92,10 +106,15 @@ impl VariantMeta {
     }
 }
 
+/// The loaded artifacts manifest: every compiled variant plus the
+/// directory the HLO files live in.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Directory holding manifest.json and the *.hlo.txt artifacts.
     pub dir: PathBuf,
+    /// Compiler fingerprint (Python-side config hash, diagnostics).
     pub fingerprint: String,
+    /// Variant name -> metadata.
     pub models: BTreeMap<String, VariantMeta>,
 }
 
@@ -126,6 +145,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a variant by manifest key.
     pub fn variant(&self, name: &str) -> anyhow::Result<&VariantMeta> {
         self.models.get(name).ok_or_else(|| {
             anyhow::anyhow!(
@@ -135,6 +155,7 @@ impl Manifest {
         })
     }
 
+    /// Absolute path of one of a variant's artifact files.
     pub fn artifact_path(&self, meta: &VariantMeta, kind: &str) -> anyhow::Result<PathBuf> {
         let f = meta
             .artifacts

@@ -12,8 +12,14 @@ use std::sync::{Arc, Mutex};
 
 use crate::runtime::artifact::Manifest;
 
+/// The PJRT CPU client plus the loaded artifacts manifest and the
+/// per-path executable cache.  One runtime per thread: the client and
+/// its executables are not `Send` — data-parallel replica lanes each
+/// construct their own (see `engine::DataParallel`).
 pub struct XlaRuntime {
+    /// The PJRT CPU client executing compiled artifacts.
     pub client: xla::PjRtClient,
+    /// The artifacts manifest this runtime compiles from.
     pub manifest: Manifest,
     cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
     /// Per-variant calibrated cost models (calibration is noisy on a busy
@@ -22,6 +28,8 @@ pub struct XlaRuntime {
 }
 
 impl XlaRuntime {
+    /// Load the manifest at `artifacts_dir` and stand up a PJRT CPU
+    /// client; artifacts compile lazily (and cached) on first use.
     pub fn new(artifacts_dir: &Path) -> anyhow::Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()

@@ -11,6 +11,7 @@
 //! steps; the per-step host traffic is the batch upload plus the 3 stat
 //! vectors (exactly what KAKURENBO's selector consumes).
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::runtime::artifact::VariantMeta;
@@ -21,13 +22,18 @@ use crate::util::rng::Rng;
 /// loss and prediction info").
 #[derive(Clone, Debug, Default)]
 pub struct BatchStats {
+    /// Per-slot training loss.
     pub loss: Vec<f32>,
+    /// Per-slot correctness indicator (1.0 = top-1 correct).
     pub correct: Vec<f32>,
+    /// Per-slot prediction confidence (softmax probability of the label).
     pub conf: Vec<f32>,
 }
 
+/// Forward-pass output with embeddings (GradMatch / EL2N selection).
 #[derive(Clone, Debug, Default)]
 pub struct EmbedStats {
+    /// The standard per-slot loss / correct / confidence stats.
     pub stats: BatchStats,
     /// [B, embed_dim] row-major penultimate features.
     pub emb: Vec<f32>,
@@ -35,8 +41,15 @@ pub struct EmbedStats {
     pub probs: Vec<f32>,
 }
 
+/// Owns one model variant's parameters + momentum as PJRT device literals
+/// and runs the AOT-compiled train/eval steps (the production
+/// `StepBackend`; see the module docs for the calling convention).
 pub struct ModelExecutor {
+    /// The artifact variant this executor runs (shapes, batch, leaves).
     pub meta: VariantMeta,
+    /// Artifacts directory the executor was compiled from — a replica
+    /// builder re-opens it to construct a runtime on its own lane thread.
+    artifacts_dir: PathBuf,
     train_exe: Arc<xla::PjRtLoadedExecutable>,
     fwd_exe: Arc<xla::PjRtLoadedExecutable>,
     embed_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
@@ -64,6 +77,8 @@ fn lit_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
 }
 
 impl ModelExecutor {
+    /// Compile (cached) the variant's artifacts on `rt` and seed the
+    /// parameters; see [`ModelExecutor::reset_params`] for the init rule.
     pub fn new(rt: &XlaRuntime, variant: &str, seed: u64) -> anyhow::Result<Self> {
         let meta = rt.manifest.variant(variant)?.clone();
         let train_exe = rt.compile_kind(variant, "train_step")?;
@@ -75,6 +90,7 @@ impl ModelExecutor {
         };
         let mut ex = ModelExecutor {
             meta,
+            artifacts_dir: rt.manifest.dir.clone(),
             train_exe,
             fwd_exe,
             embed_exe,
@@ -244,33 +260,6 @@ impl ModelExecutor {
         })
     }
 
-    /// Build an independent replica for a data-parallel worker: the
-    /// AOT-compiled executables are shared (`Arc`), while parameter and
-    /// momentum device literals are deep-copied through an exact f32 host
-    /// round-trip — the replica starts bitwise-identical to `self` and
-    /// evolves independently.
-    pub fn replicate(&self) -> anyhow::Result<Self> {
-        let copy_all = |lits: &[xla::Literal]| -> anyhow::Result<Vec<xla::Literal>> {
-            lits.iter()
-                .zip(&self.meta.params)
-                .map(|(l, m)| {
-                    let host = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-                    lit_f32(&host, &m.shape)
-                })
-                .collect()
-        };
-        Ok(ModelExecutor {
-            meta: self.meta.clone(),
-            train_exe: Arc::clone(&self.train_exe),
-            fwd_exe: Arc::clone(&self.fwd_exe),
-            embed_exe: self.embed_exe.clone(),
-            params: copy_all(&self.params)?,
-            vel: copy_all(&self.vel)?,
-            momentum: self.momentum,
-            steps: self.steps,
-        })
-    }
-
     /// Snapshot the full mutable state (parameters then momentum, in
     /// manifest leaf order) as host tensors.
     pub fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
@@ -366,20 +355,51 @@ impl crate::engine::StepBackend for ModelExecutor {
     }
 }
 
-/// Replica management for the worker pool's data-parallel mode: replicas
-/// share the compiled executables and deep-copy the mutable literals; the
-/// export/import round-trip preserves f32 bit patterns exactly, so the
-/// pool's fixed worker-order averaging fold is deterministic.
-impl crate::engine::DataParallel for ModelExecutor {
-    fn replicate(&self) -> anyhow::Result<Self> {
-        ModelExecutor::replicate(self)
-    }
-
+/// The export/import round-trip preserves f32 bit patterns exactly
+/// (host `Vec<f32>` ↔ device literal is a lossless copy), so the pool's
+/// fixed worker-order averaging fold is deterministic.
+impl crate::engine::StateExchange for ModelExecutor {
     fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
         ModelExecutor::export_state(self)
     }
 
     fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
         ModelExecutor::import_state(self, state)
+    }
+}
+
+/// Replica management for the worker pool's data-parallel mode.
+///
+/// A `ModelExecutor` is **not** `Send` — parameters live as PJRT device
+/// literals — so a replica can never be constructed here and moved to a
+/// worker thread.  The builder instead carries only `Send` host data (the
+/// artifacts directory, the variant name, and an exported state snapshot)
+/// and *rebuilds* the executor on the lane thread that invokes it: its
+/// own PJRT client, its own compiled executables, its own literals.  The
+/// replica starts bitwise-identical to `self` at builder-creation time
+/// (the export/import round-trip is exact), and the worker pool keeps
+/// lane threads alive across epochs so this per-thread setup cost is paid
+/// once per training run.
+impl crate::engine::DataParallel for ModelExecutor {
+    fn replica_builder(&self) -> anyhow::Result<crate::engine::ReplicaBuilder> {
+        let artifacts_dir = self.artifacts_dir.clone();
+        let variant = self.meta.name.clone();
+        let momentum = self.momentum;
+        let steps = self.steps;
+        let state = self.export_state()?;
+        Ok(Box::new(move || {
+            let rt = XlaRuntime::new(&artifacts_dir)?;
+            let mut ex = ModelExecutor::new(&rt, &variant, 0)?;
+            ex.momentum = momentum;
+            ex.steps = steps;
+            ex.import_state(&state)?;
+            Ok(Box::new(ex) as Box<dyn crate::engine::ReplicaBackend>)
+        }))
+    }
+
+    /// Lanes are reusable only for the same variant compiled from the
+    /// same artifacts; any other executor respawns them.
+    fn replica_cache_key(&self) -> String {
+        format!("{}:{}", self.artifacts_dir.display(), self.meta.name)
     }
 }

@@ -4,6 +4,8 @@
 use super::{EpochPlan, PlanCtx, Strategy};
 use crate::sampler::epoch_permutation;
 
+/// The paper's "Baseline": a fresh full permutation every epoch, nothing
+/// hidden, weights 1.0.
 pub struct Baseline;
 
 impl Strategy for Baseline {

@@ -11,6 +11,8 @@ use super::{EpochPlan, PlanCtx, Strategy};
 use crate::data::batch::BatchAssembler;
 use crate::sampler::shuffled;
 
+/// EL2N: score early by error-vector norm, prune the lowest-scoring
+/// fraction permanently (optional restart; see module docs).
 pub struct El2n {
     /// Epoch at which scores are computed and pruning happens.
     pub score_epoch: usize,
@@ -22,6 +24,8 @@ pub struct El2n {
 }
 
 impl El2n {
+    /// Score at `score_epoch` (min 1), prune `fraction`, optionally
+    /// restart from scratch.
     pub fn new(score_epoch: usize, fraction: f64, restart: bool) -> Self {
         El2n { score_epoch: score_epoch.max(1), fraction, restart, kept: None }
     }

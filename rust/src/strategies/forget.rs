@@ -13,13 +13,18 @@
 use super::{EpochPlan, PlanCtx, Strategy};
 use crate::sampler::shuffled;
 
+/// Online forgetting-event pruning: full-data prologue, one permanent
+/// prune of the least-forgettable fraction, restart from scratch.
 pub struct Forget {
+    /// Epoch at which forgetting counts are read and pruning happens.
     pub prune_epoch: usize,
+    /// Fraction of the dataset to prune (least forgettable first).
     pub fraction: f64,
     kept: Option<Vec<u32>>,
 }
 
 impl Forget {
+    /// Prune `fraction` of the dataset at `prune_epoch`, then restart.
     pub fn new(prune_epoch: usize, fraction: f64) -> Self {
         Forget { prune_epoch, fraction, kept: None }
     }

@@ -17,6 +17,8 @@ use super::{EpochPlan, PlanCtx, Strategy};
 use crate::data::batch::BatchAssembler;
 use crate::sampler::shuffled;
 
+/// GradMatch: every R epochs, per-class OMP picks a weighted subset whose
+/// gradient sum matches the full-data gradient (see module docs).
 pub struct GradMatch {
     /// Fraction of the dataset to *remove* (subset size = (1-F)·N).
     pub fraction: f64,
@@ -26,6 +28,7 @@ pub struct GradMatch {
 }
 
 impl GradMatch {
+    /// Remove `fraction` of the data, re-selecting every `every_r` epochs.
     pub fn new(fraction: f64, every_r: usize) -> Self {
         GradMatch { fraction, every_r: every_r.max(1), subset: None }
     }

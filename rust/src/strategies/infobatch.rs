@@ -12,6 +12,8 @@
 use super::{EpochPlan, PlanCtx, Strategy};
 use crate::sampler::shuffled;
 
+/// InfoBatch: unbiased dynamic pruning with 1/(1-r) gradient rescaling
+/// and a final annealing window (see module docs).
 pub struct InfoBatch {
     /// Prune probability r for below-mean-loss samples.
     pub r: f64,
@@ -20,6 +22,7 @@ pub struct InfoBatch {
 }
 
 impl InfoBatch {
+    /// Prune below-mean samples with probability `r` (anneal 12.5%).
     pub fn new(r: f64) -> Self {
         InfoBatch { r, anneal: 0.125 }
     }

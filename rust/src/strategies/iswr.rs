@@ -12,6 +12,8 @@
 use super::{EpochPlan, PlanCtx, Strategy};
 use crate::sampler::alias::AliasTable;
 
+/// Importance Sampling With Replacement: N loss-proportional draws per
+/// epoch with 1/(N·p_i) bias-correction weights (see module docs).
 #[derive(Default)]
 pub struct Iswr {
     /// Clamp for the importance weights (stability; [11] uses smoothing).
@@ -23,6 +25,7 @@ pub struct Iswr {
 }
 
 impl Iswr {
+    /// The paper-comparison configuration (clamp 8.0, mix 0.7).
     pub fn new() -> Self {
         Iswr { max_weight: 8.0, uniform_mix: 0.7 }
     }

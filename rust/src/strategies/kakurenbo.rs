@@ -12,18 +12,27 @@ use crate::hiding::lr::lr_scale;
 use crate::hiding::selector::{select, SelectMode, SelectorCfg};
 use crate::sampler::shuffled;
 
+/// KAKURENBO (paper §3): hide the lowest-loss confidently-predicted
+/// fraction each epoch, move back uncertain candidates, decay the ceiling,
+/// and compensate the learning rate.
 pub struct Kakurenbo {
+    /// Initial maximum hidden fraction F (the RF schedule decays it).
     pub max_fraction: f64,
+    /// Prediction-confidence threshold τ for the move-back rule (§3.1).
     pub tau: f32,
+    /// HE/MB/RF/LR component switches (Table 6 ablation grid).
     pub components: Components,
     /// Fraction of highest-loss samples to cut per epoch (Appendix D;
     /// 0.0 disables DropTop).
     pub drop_top: f64,
+    /// Candidate selection algorithm (quickselect vs full sort).
     pub select_mode: SelectMode,
     schedule: FractionSchedule,
 }
 
 impl Kakurenbo {
+    /// Build the strategy with the paper-default fraction schedule over
+    /// `total_epochs`, honoring the component switches.
     pub fn new(
         max_fraction: f64,
         tau: f32,

@@ -1,6 +1,12 @@
 //! Training strategies: KAKURENBO and every baseline the paper compares
 //! against (Table 2/3).  Each strategy turns per-sample state into an
 //! `EpochPlan` that the coordinator executes.
+//!
+//! The full catalog — citations, scoring rules, fraction-ceiling
+//! behaviour, and the config flags driving each strategy — lives in
+//! docs/strategies.md.
+
+#![warn(missing_docs)]
 
 pub mod baseline;
 pub mod el2n;
@@ -46,10 +52,13 @@ pub struct EpochPlan {
     pub moved_back: usize,
     /// Re-initialize model parameters before this epoch (FORGET restart).
     pub reset_params: bool,
+    /// How the engine consumes `order` (plain train vs SB select-train).
     pub batch_mode: BatchMode,
 }
 
 impl EpochPlan {
+    /// A plain full-train plan over `order`: no weights, no hiding, no LR
+    /// scaling — the shape every strategy starts from.
     pub fn plain(order: Vec<u32>) -> Self {
         EpochPlan {
             order,
@@ -67,16 +76,27 @@ impl EpochPlan {
 /// Context handed to `plan_epoch`.  `exec` is available for strategies
 /// that need an extra model pass to select (GradMatch's embedding pass).
 pub struct PlanCtx<'a> {
+    /// Current epoch index (0-based).
     pub epoch: usize,
+    /// Total epochs the run is configured for (schedules need the span).
     pub total_epochs: usize,
+    /// The training dataset being planned over.
     pub data: &'a Dataset,
+    /// Per-sample lagging loss / prediction store (read and updated).
     pub state: &'a mut SampleState,
+    /// The trainer's persistent RNG stream (shuffles, acceptance draws).
     pub rng: &'a mut Rng,
+    /// The executor, for strategies that run an extra selection pass
+    /// (GradMatch / EL2N `fwd_embed`); `None` in executor-free tests.
     pub exec: Option<&'a mut ModelExecutor>,
 }
 
+/// One per-epoch planning policy: turns per-sample state into the epoch's
+/// [`EpochPlan`] (train order, hidden list, weights, LR scale).
 pub trait Strategy: Send {
+    /// Display name (config naming, logs, result JSON).
     fn name(&self) -> String;
+    /// Plan one epoch: selection, ordering, weights, LR scaling.
     fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan>;
     /// Whether the coordinator should refresh hidden-list stats at epoch
     /// end (paper step D.1).  ISWR instead needs *all* stats fresh, which

@@ -5,11 +5,14 @@
 
 use super::{EpochPlan, PlanCtx, Strategy};
 
+/// Hide a uniformly random fraction each epoch (the "Random" control).
 pub struct RandomHiding {
+    /// Fraction of the dataset hidden every epoch.
     pub fraction: f64,
 }
 
 impl RandomHiding {
+    /// Hide a random `fraction` of samples each epoch.
     pub fn new(fraction: f64) -> Self {
         RandomHiding { fraction }
     }

@@ -15,6 +15,7 @@ use crate::util::rng::Rng;
 
 /// Rolling loss history + acceptance rule, shared with the coordinator.
 pub struct SbSelector {
+    /// Selectivity exponent: accept with probability CDF(loss)^beta.
     pub beta: f64,
     history: Vec<f32>,
     cap: usize,
@@ -22,10 +23,12 @@ pub struct SbSelector {
 }
 
 impl SbSelector {
+    /// A selector with exponent `beta` over a `cap`-entry loss reservoir.
     pub fn new(beta: f64, cap: usize) -> Self {
         SbSelector { beta, history: Vec::with_capacity(cap), cap, cursor: 0 }
     }
 
+    /// Push a loss into the rolling history (overwrites oldest at cap).
     pub fn record(&mut self, loss: f32) {
         if self.history.len() < self.cap {
             self.history.push(loss);
@@ -64,12 +67,19 @@ impl SbSelector {
     }
 }
 
+/// The Selective-Backprop strategy: emits full-epoch candidate orders
+/// with `BatchMode::SelectiveBackprop`; the engine's SB sink performs the
+/// fwd-select-train loop.
 pub struct SelectiveBackprop {
+    /// Selectivity exponent (1.0 cuts ~50% of backprops, paper setting).
     pub beta: f64,
+    /// The acceptance selector (informational copy; the trainer owns the
+    /// live one that the SB sink consults).
     pub selector: SbSelector,
 }
 
 impl SelectiveBackprop {
+    /// Strategy with selectivity exponent `beta`.
     pub fn new(beta: f64) -> Self {
         SelectiveBackprop { beta, selector: SbSelector::new(beta, 4096) }
     }

@@ -1,0 +1,81 @@
+//! CLI-level config validation: the `--dp` knob must be rejected with a
+//! clear error for configurations the data-parallel schedule cannot
+//! honor, through the same parse → override → validate pipeline the
+//! launcher runs (no runtime or artifacts required).
+
+use kakurenbo::cli::Args;
+use kakurenbo::config::{presets, DpMode, ExperimentConfig, StrategyConfig};
+
+/// The launcher's flag pipeline (main.rs `build_config`) distilled: parse
+/// argv, apply the generic overrides, validate.
+fn build_from_argv(argv: &[&str]) -> anyhow::Result<ExperimentConfig> {
+    let args = Args::parse(argv.iter().map(|s| s.to_string()))?;
+    let mut cfg = presets::by_name(args.flag_or("preset", "imagenet_resnet50"))?;
+    if let Some(strategy) = args.flag("strategy") {
+        cfg.strategy = match strategy {
+            "baseline" => StrategyConfig::Baseline,
+            "kakurenbo" => StrategyConfig::kakurenbo(0.3),
+            "iswr" => StrategyConfig::Iswr,
+            "sb" => StrategyConfig::SelectiveBackprop { beta: 1.0 },
+            "infobatch" => StrategyConfig::InfoBatch { r: 0.3 },
+            "gradmatch" => StrategyConfig::GradMatch { fraction: 0.3, every_r: 3 },
+            other => anyhow::bail!("unknown strategy {other}"),
+        };
+    }
+    for key in ["epochs", "seed", "workers", "dp"] {
+        if let Some(v) = args.flag(key) {
+            cfg.apply_override(key, v)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[test]
+fn dp_average_with_single_worker_rejected_with_clear_error() {
+    let err = build_from_argv(&["train", "--workers", "1", "--dp", "average"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--dp average"), "unhelpful error: {err}");
+    assert!(err.contains("--workers > 1"), "unhelpful error: {err}");
+}
+
+#[test]
+fn dp_average_with_weighted_or_sb_strategy_rejected_with_clear_error() {
+    for strategy in ["iswr", "infobatch", "gradmatch", "sb"] {
+        let err = build_from_argv(&[
+            "train", "--workers", "4", "--dp", "average", "--strategy", strategy,
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--dp average"), "{strategy}: {err}");
+        assert!(err.contains("single-stream"), "{strategy}: {err}");
+    }
+}
+
+#[test]
+fn dp_average_accepted_for_plain_strategies_with_workers() {
+    for strategy in ["baseline", "kakurenbo"] {
+        let cfg = build_from_argv(&[
+            "train", "--workers", "4", "--dp", "average", "--strategy", strategy,
+        ])
+        .unwrap();
+        assert_eq!(cfg.dp, DpMode::Average);
+        assert_eq!(cfg.workers, 4);
+    }
+}
+
+#[test]
+fn unknown_dp_value_rejected_at_parse() {
+    let err = build_from_argv(&["train", "--workers", "2", "--dp", "turbo"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--dp"), "{err}");
+    assert!(err.contains("serial-equivalent") && err.contains("average"), "{err}");
+}
+
+#[test]
+fn default_dp_is_serial_equivalent() {
+    let cfg = build_from_argv(&["train", "--workers", "4"]).unwrap();
+    assert_eq!(cfg.dp, DpMode::SerialEquivalent);
+}

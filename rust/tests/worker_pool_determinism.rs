@@ -268,20 +268,23 @@ fn data_parallel_schedule_contracts() {
 // ---------------------------------------------------------------------------
 
 mod end_to_end {
-    use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+    use kakurenbo::config::{presets, DatasetConfig, DpMode, StrategyConfig};
     use kakurenbo::coordinator::Trainer;
-    use kakurenbo::engine::DataParallel;
+    use kakurenbo::data::shard::shard_order_aligned;
+    use kakurenbo::engine::{DataParallel, StateExchange, StepMode, TrainSink, WorkerPool};
     use kakurenbo::metrics::RunResult;
     use kakurenbo::runtime::{default_artifacts_dir, ModelExecutor, XlaRuntime};
+    use kakurenbo::state::SampleState;
 
     fn runtime() -> Option<XlaRuntime> {
         XlaRuntime::new(&default_artifacts_dir()).ok()
     }
 
-    fn run(rt: &XlaRuntime, workers: usize) -> RunResult {
+    fn run(rt: &XlaRuntime, workers: usize, dp: DpMode) -> RunResult {
         let mut cfg = presets::by_name("cifar100_wrn").unwrap();
         cfg.epochs = 3;
         cfg.workers = workers;
+        cfg.dp = dp;
         if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
             c.n_train = 512;
             c.n_val = 128;
@@ -296,8 +299,8 @@ mod end_to_end {
     fn pooled_trainer_is_reproducible() {
         let Some(rt) = runtime() else { return };
         for workers in [2usize, 4] {
-            let a = run(&rt, workers);
-            let b = run(&rt, workers);
+            let a = run(&rt, workers, DpMode::SerialEquivalent);
+            let b = run(&rt, workers, DpMode::SerialEquivalent);
             assert_eq!(a.records.len(), b.records.len());
             for (x, y) in a.records.iter().zip(&b.records) {
                 assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
@@ -309,8 +312,119 @@ mod end_to_end {
         }
     }
 
-    /// Replication and the export/import round-trip preserve every
-    /// parameter bit (the pool's replica contract).
+    /// `--workers N --dp average` trains end-to-end through the real
+    /// `ModelExecutor` path (per-lane PJRT replicas, no mock carve-out)
+    /// and is bitwise reproducible across repeated runs at fixed seed/N.
+    #[test]
+    fn dp_average_trainer_is_reproducible() {
+        let Some(rt) = runtime() else { return };
+        for workers in [2usize, 4] {
+            let a = run(&rt, workers, DpMode::Average);
+            let b = run(&rt, workers, DpMode::Average);
+            assert_eq!(a.records.len(), b.records.len());
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+                assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits());
+                assert_eq!(x.hidden, y.hidden);
+                assert_eq!(x.trained_samples, y.trained_samples);
+                assert_eq!(x.worker_samples, y.worker_samples);
+                assert_eq!(x.dp_syncs, y.dp_syncs);
+            }
+            // the averaging schedule actually averaged: one sync per
+            // global step of every trained epoch
+            assert!(a.records.iter().all(|r| r.dp_syncs > 0));
+        }
+    }
+
+    /// The averaging determinism contract on the real executor: when both
+    /// workers see identical batches, per-step gradients are identical,
+    /// so the W=2 average must match the single-replica run bit for bit.
+    #[test]
+    fn dp_average_identical_shards_match_single_replica() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+        let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset else { unreachable!() };
+        c.n_train = 256;
+        c.n_val = 16;
+        let data = cfg.dataset.generate(11);
+        let b = 64;
+
+        let half: Vec<u32> = (0..128).collect();
+        let doubled: Vec<u32> = half.iter().chain(half.iter()).copied().collect();
+        let shards2 = shard_order_aligned(&doubled, 2, b);
+        assert_eq!(shards2[0].indices, shards2[1].indices);
+        let shards1 = shard_order_aligned(&half, 1, b);
+
+        let run = |shards: &[kakurenbo::data::shard::Shard]| {
+            let mut exec = ModelExecutor::new(&rt, "mlp_c100_b64", 5).unwrap();
+            let mut pool = WorkerPool::new(&data.train, b);
+            let mut state = SampleState::new(data.train.n);
+            let mut sink = TrainSink::new(&mut state, 0);
+            pool.run_data_parallel(
+                &mut exec,
+                &data.train,
+                shards,
+                StepMode::Train { lr: 0.05 },
+                &mut sink,
+            )
+            .unwrap();
+            exec.export_state()
+                .unwrap()
+                .iter()
+                .flatten()
+                .map(|v| v.to_bits())
+                .collect::<Vec<u32>>()
+        };
+        assert_eq!(run(&shards2), run(&shards1));
+    }
+
+    /// Averaged parameters round-trip through the checkpoint layer: a
+    /// save/load cycle after a `--dp average` pass restores every bit.
+    #[test]
+    fn dp_average_checkpoint_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+        let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset else { unreachable!() };
+        c.n_train = 256;
+        c.n_val = 16;
+        let data = cfg.dataset.generate(13);
+        let b = 64;
+        let order: Vec<u32> = (0..256).collect();
+        let shards = shard_order_aligned(&order, 2, b);
+
+        let mut exec = ModelExecutor::new(&rt, "mlp_c100_b64", 7).unwrap();
+        let mut pool = WorkerPool::new(&data.train, b);
+        let mut state = SampleState::new(data.train.n);
+        let mut sink = TrainSink::new(&mut state, 0);
+        pool.run_data_parallel(
+            &mut exec,
+            &data.train,
+            &shards,
+            StepMode::Train { lr: 0.05 },
+            &mut sink,
+        )
+        .unwrap();
+
+        let dir =
+            std::env::temp_dir().join(format!("kakurenbo_dp_ckpt_{}", std::process::id()));
+        kakurenbo::runtime::checkpoint::save(&exec, &dir, 0).unwrap();
+        let mut restored = ModelExecutor::new(&rt, "mlp_c100_b64", 999).unwrap();
+        let epoch = kakurenbo::runtime::checkpoint::load(&mut restored, &dir).unwrap();
+        assert_eq!(epoch, 0);
+        let pa = exec.export_params().unwrap();
+        let pb = restored.export_params().unwrap();
+        for ((n1, d1), (n2, d2)) in pa.iter().zip(&pb) {
+            assert_eq!(n1, n2);
+            let ba: Vec<u32> = d1.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = d2.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb, "leaf {n1} diverged through the checkpoint");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Replication (via the `Send` replica builder) and the export/import
+    /// round-trip preserve every parameter bit (the pool's replica
+    /// contract) — including across a real thread boundary.
     #[test]
     fn executor_replication_is_exact() {
         let Some(rt) = runtime() else { return };
@@ -320,9 +434,16 @@ mod end_to_end {
         let y = vec![1i32; b * exec.meta.label_len()];
         let sw = vec![1.0f32; b];
         exec.train_step(&x, &y, &sw, 0.05).unwrap(); // move off the init point
-        let replica = DataParallel::replicate(&exec).unwrap();
         let a = exec.export_state().unwrap();
-        let bb = replica.export_state().unwrap();
+
+        // builder crosses a thread; the replica is built *on* that thread
+        let builder = exec.replica_builder().unwrap();
+        let bb = std::thread::spawn(move || {
+            let replica = builder().unwrap();
+            replica.export_state().unwrap()
+        })
+        .join()
+        .unwrap();
         assert_eq!(a.len(), bb.len());
         for (la, lb) in a.iter().zip(&bb) {
             let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
