@@ -1,12 +1,14 @@
 //! §4.2 epoch-time accounting + distributed cost-model projection.
 //!
 //! Reports (a) the measured per-epoch breakdown (select / train / refresh)
-//! for each strategy, (b) the worker pool's measured scaling and barrier
-//! overhead at W ∈ {1, 2, 4}, and (c) the calibrated cost model's
-//! projection of epoch time across worker counts — reproducing the
-//! paper's claims that KAKURENBO's overheads are amortized at scale while
-//! single-GPU runs can lose (Table 3), and that the speedup cannot reach
-//! the hiding rate because of the hidden-list forward refresh (Fig. 4).
+//! for each strategy, (b) the service lane's removal of eval time from the
+//! epoch critical path (`--service-lane on` vs `off`), (c) the worker
+//! pool's measured scaling and barrier overhead at W ∈ {1, 2, 4}, and
+//! (d) the calibrated cost model's projection of epoch time across worker
+//! counts — reproducing the paper's claims that KAKURENBO's overheads are
+//! amortized at scale while single-GPU runs can lose (Table 3), and that
+//! the speedup cannot reach the hiding rate because of the hidden-list
+//! forward refresh (Fig. 4).
 
 use kakurenbo::config::{presets, StrategyConfig};
 use kakurenbo::coordinator::{CostModel, Trainer};
@@ -54,6 +56,50 @@ fn main() -> anyhow::Result<()> {
             format!("{rf:.4}"),
             format!("{tot:.4}"),
             format!("{:+.1}%", (tot / base_total - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+
+    // --- service lane: eval on vs off the epoch critical path ---------------
+    // With `--service-lane on` the Eval phase's critical-path cost shrinks
+    // to a snapshot export + submit; the forward passes themselves run on
+    // the background replica (`time_service`) overlapped with the next
+    // epoch's training.  Results are bitwise identical either way
+    // (tests/service_lane_determinism.rs), so this row is pure schedule.
+    let mut t = Table::new("Eval placement (KAKURENBO, s/epoch)").header(&[
+        "service lane", "eval critical path", "lane async", "epoch incl. eval",
+    ]);
+    let mut service_payload = Vec::new();
+    for on in [false, true] {
+        let mut cfg = base.clone();
+        cfg.strategy = StrategyConfig::kakurenbo(0.3);
+        cfg.eval_every = 1;
+        cfg.service_lane = on;
+        cfg.name = format!("overhead/service_{}", if on { "on" } else { "off" });
+        let r = kakurenbo::coordinator::run_experiment(&ctx.rt, cfg)?;
+        let n = r.records.len() as f64;
+        let ev: f64 = r.records.iter().map(|x| x.time_eval).sum::<f64>() / n;
+        let lane: f64 = r.records.iter().map(|x| x.time_service).sum::<f64>() / n;
+        // time_total deliberately excludes eval (paper epoch timing), so
+        // the wall-clock column must add the eval/checkpoint phases back
+        // in — that's where the two modes actually differ.
+        let wall: f64 = r
+            .records
+            .iter()
+            .map(|x| x.time_total + x.time_eval + x.time_checkpoint)
+            .sum::<f64>()
+            / n;
+        t.row(vec![
+            if on { "on" } else { "off" }.to_string(),
+            format!("{ev:.4}"),
+            format!("{lane:.4}"),
+            format!("{wall:.4}"),
+        ]);
+        service_payload.push(kakurenbo::jobj![
+            ("service_lane", on),
+            ("eval_critical_s", ev),
+            ("lane_async_s", lane),
+            ("epoch_wall_s", wall),
         ]);
     }
     t.print();
@@ -196,6 +242,10 @@ fn main() -> anyhow::Result<()> {
     payload.push(kakurenbo::jobj![(
         "worker_pool",
         kakurenbo::util::json::Json::Arr(pool_payload)
+    )]);
+    payload.push(kakurenbo::jobj![(
+        "service_lane",
+        kakurenbo::util::json::Json::Arr(service_payload)
     )]);
     ctx.save_json("overhead_breakdown", &kakurenbo::util::json::Json::Arr(payload))?;
     Ok(())

@@ -146,6 +146,18 @@ impl DpMode {
     }
 }
 
+/// Parse the `--service-lane` CLI value (`on`/`off`, with the usual
+/// boolean spellings accepted).
+pub fn parse_service_lane(value: &str) -> anyhow::Result<bool> {
+    match value {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => anyhow::bail!(
+            "unknown --service-lane value {other:?}; expected \"on\" or \"off\""
+        ),
+    }
+}
+
 impl StrategyConfig {
     pub fn kakurenbo(max_fraction: f64) -> Self {
         StrategyConfig::Kakurenbo {
@@ -228,6 +240,14 @@ pub struct ExperimentConfig {
     pub dp: DpMode,
     /// Evaluate on the validation set every k epochs (always on last).
     pub eval_every: usize,
+    /// Run validation eval + checkpoint serialization on the async
+    /// service lane (`--service-lane on`): both consume an exact exported
+    /// parameter snapshot on a persistent background replica while the
+    /// executor trains the next epoch, and results fold back into the
+    /// epoch records in fixed epoch order.  Off (the default) keeps
+    /// today's serial behavior.  Async eval is bitwise identical to sync
+    /// eval (docs/worker-model.md, "The async service lane").
+    pub service_lane: bool,
     pub artifacts_dir: PathBuf,
     /// Collect per-class hidden counts / loss histograms (Figs. 5-8).
     pub detailed_metrics: bool,
@@ -257,6 +277,7 @@ impl ExperimentConfig {
             workers: 1,
             dp: DpMode::SerialEquivalent,
             eval_every: 1,
+            service_lane: false,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             detailed_metrics: false,
             checkpoint_every: 0,
@@ -304,6 +325,9 @@ impl ExperimentConfig {
             "workers" => self.workers = value.parse()?,
             "dp" => self.dp = DpMode::parse(value)?,
             "eval_every" => self.eval_every = value.parse()?,
+            "service_lane" | "service-lane" => {
+                self.service_lane = parse_service_lane(value)?
+            }
             "base_lr" => self.lr.base_lr = value.parse()?,
             "warmup_epochs" => self.lr.warmup_epochs = value.parse()?,
             "momentum" => self.momentum = value.parse()?,
@@ -345,6 +369,7 @@ impl ExperimentConfig {
             ("seed", self.seed as usize),
             ("workers", self.workers),
             ("dp", self.dp.name()),
+            ("service_lane", self.service_lane),
             ("base_lr", self.lr.base_lr),
             ("momentum", self.momentum),
         ]
@@ -478,5 +503,31 @@ mod tests {
         c.apply_override("dp", "average").unwrap();
         assert_eq!(c.dp, DpMode::Average);
         assert!(c.apply_override("dp", "nonsense").is_err());
+    }
+
+    #[test]
+    fn service_lane_parses_and_rejects() {
+        assert!(parse_service_lane("on").unwrap());
+        assert!(parse_service_lane("true").unwrap());
+        assert!(!parse_service_lane("off").unwrap());
+        assert!(!parse_service_lane("false").unwrap());
+        let err = parse_service_lane("sideways").unwrap_err().to_string();
+        assert!(err.contains("--service-lane"), "{err}");
+    }
+
+    #[test]
+    fn service_lane_override_applies_both_spellings() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        assert!(!c.service_lane, "default must stay off (serial behavior)");
+        c.apply_override("service_lane", "on").unwrap();
+        assert!(c.service_lane);
+        c.apply_override("service-lane", "off").unwrap();
+        assert!(!c.service_lane);
+        assert!(c.apply_override("service_lane", "maybe").is_err());
+        // both paths validate
+        for on in [false, true] {
+            c.service_lane = on;
+            assert!(c.validate().is_ok());
+        }
     }
 }

@@ -1,0 +1,366 @@
+//! The staged epoch pipeline: one epoch decomposed into named phases.
+//!
+//! `Trainer::run_epoch` used to be a monolithic serial function; the
+//! pipeline makes the stages explicit —
+//!
+//! ```text
+//!   Plan -> Train -> Refresh -> Eval -> Checkpoint -> Metrics
+//! ```
+//!
+//! — times each one, and owns the epoch's state-snapshot cache so the
+//! `Eval` and `Checkpoint` phases share a single
+//! [`crate::engine::StateExchange::export_state`] export when both are
+//! due.  The trainer shrinks to orchestration: it loops epochs, delegates
+//! each one here, and folds async service-lane results back into records.
+//!
+//! # The async lanes
+//!
+//! With `cfg.service_lane` on, `Eval` and `Checkpoint` do not execute on
+//! the critical path at all: each exports (or reuses) the epoch's exact
+//! parameter snapshot and enqueues the job on the engine's
+//! [`crate::engine::ServiceLane`], which runs it on a persistent
+//! background replica while the primary executor trains the next epoch.
+//! Results fold back into the epoch's record at the next barrier —
+//! after each `Trainer::run` loop iteration, and a final blocking drain
+//! before the run returns — in fixed epoch order (the lane is a single
+//! FIFO worker, so completion order *is* submission order).  Because the
+//! lane evaluates an exact snapshot with the identical accumulation
+//! order, async eval is bitwise identical to sync eval
+//! (`tests/service_lane_determinism.rs`).
+
+use std::sync::Arc;
+
+use crate::config::{DpMode, StrategyConfig};
+use crate::coordinator::trainer::Trainer;
+use crate::data::shard::shard_order_aligned;
+use crate::engine::{
+    execute_plan, execute_sharded_average, execute_sharded_plain, StateSnapshot,
+};
+use crate::metrics::EpochRecord;
+use crate::strategies::{BatchMode, EpochPlan, PlanCtx};
+use crate::util::stats::Histogram;
+use crate::util::timer::Timer;
+
+/// The named stages one epoch passes through, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Strategy selection: hide / move-back / weights / LR scaling.
+    Plan,
+    /// The training pass (engine or worker pool).
+    Train,
+    /// Hidden-list stat refresh (paper step D.1).
+    Refresh,
+    /// Validation eval — sync, or snapshot + submit when the service lane
+    /// is on.
+    Eval,
+    /// Checkpoint serialization — sync, or snapshot + submit when the
+    /// service lane is on (trainer-side resume state is always written
+    /// synchronously; it is small and must match the epoch boundary).
+    Checkpoint,
+    /// Detailed metrics + cost-model projection roll-up.
+    Metrics,
+}
+
+impl Phase {
+    /// Display name (logs, phase tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Plan => "plan",
+            Phase::Train => "train",
+            Phase::Refresh => "refresh",
+            Phase::Eval => "eval",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Metrics => "metrics",
+        }
+    }
+}
+
+/// One epoch's per-phase wall-clock accounting, in execution order.
+/// The canonical per-phase numbers live in `EpochRecord`'s `time_*`
+/// fields (mirrored by [`EpochPipeline`]'s phase closer); this ledger
+/// only feeds the debug-level phase table.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct PhaseTimings {
+    spans: Vec<(Phase, f64)>,
+}
+
+impl PhaseTimings {
+    fn push(&mut self, phase: Phase, secs: f64) {
+        self.spans.push((phase, secs));
+    }
+
+    fn render(&self) -> String {
+        self.spans
+            .iter()
+            .map(|(p, s)| format!("{} {:.4}s", p.name(), s))
+            .collect::<Vec<_>>()
+            .join("  ")
+    }
+}
+
+/// Drives one epoch through the staged pipeline (see the module docs).
+pub struct EpochPipeline {
+    epoch: usize,
+    /// The epoch's exported state snapshot, shared by the Eval and
+    /// Checkpoint phases so two async jobs cost one export.
+    snapshot: Option<StateSnapshot>,
+    timings: PhaseTimings,
+}
+
+impl EpochPipeline {
+    /// Run epoch `epoch` of `trainer` through every phase; returns the
+    /// epoch's record (val fields pending when the service lane is on —
+    /// the trainer folds them in at the next barrier).
+    pub fn run(trainer: &mut Trainer, epoch: usize) -> anyhow::Result<EpochRecord> {
+        let mut pipe = EpochPipeline { epoch, snapshot: None, timings: PhaseTimings::default() };
+        let mut rec = EpochRecord { epoch, val_acc: f64::NAN, ..Default::default() };
+
+        let t = Timer::start();
+        let plan = pipe.plan(trainer, &mut rec)?;
+        pipe.close(Phase::Plan, t, &mut rec);
+
+        let t = Timer::start();
+        pipe.train(trainer, &plan, &mut rec)?;
+        pipe.close(Phase::Train, t, &mut rec);
+
+        let t = Timer::start();
+        let refreshed = pipe.refresh(trainer, &plan, &mut rec)?;
+        pipe.close(Phase::Refresh, t, &mut rec);
+
+        let t = Timer::start();
+        pipe.eval(trainer, &mut rec)?;
+        pipe.close(Phase::Eval, t, &mut rec);
+
+        let t = Timer::start();
+        pipe.checkpoint(trainer)?;
+        pipe.close(Phase::Checkpoint, t, &mut rec);
+
+        let t = Timer::start();
+        pipe.metrics(trainer, refreshed, &mut rec)?;
+        pipe.close(Phase::Metrics, t, &mut rec);
+
+        if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+            crate::debug!("epoch {epoch} phases: {}", pipe.timings.render());
+        }
+        Ok(rec)
+    }
+
+    /// Close a phase: record its span and mirror it into the epoch
+    /// record's per-component timing fields.
+    fn close(&mut self, phase: Phase, t: Timer, rec: &mut EpochRecord) {
+        let secs = t.elapsed_s();
+        self.timings.push(phase, secs);
+        match phase {
+            Phase::Plan => rec.time_select = secs,
+            Phase::Train => rec.time_train = secs,
+            Phase::Refresh => rec.time_refresh = secs,
+            Phase::Eval => rec.time_eval = secs,
+            Phase::Checkpoint => rec.time_checkpoint = secs,
+            Phase::Metrics => {}
+        }
+    }
+
+    /// The epoch's exported full-state snapshot (params + momentum),
+    /// exported at most once per epoch.
+    fn snapshot(&mut self, t: &Trainer) -> anyhow::Result<StateSnapshot> {
+        if let Some(s) = &self.snapshot {
+            return Ok(s.clone());
+        }
+        let snap: StateSnapshot = Arc::new(t.exec.export_state()?);
+        self.snapshot = Some(snap.clone());
+        Ok(snap)
+    }
+
+    // --- Plan: strategy selection + LR -----------------------------------
+    fn plan(&mut self, t: &mut Trainer, rec: &mut EpochRecord) -> anyhow::Result<EpochPlan> {
+        let epoch = self.epoch;
+        let plan = {
+            let mut ctx = PlanCtx {
+                epoch,
+                total_epochs: t.cfg.epochs,
+                data: &t.data.train,
+                state: &mut t.state,
+                rng: &mut t.rng,
+                exec: Some(&mut t.exec),
+            };
+            t.strategy.plan_epoch(&mut ctx)?
+        };
+        if plan.reset_params {
+            t.exec.reset_params(t.cfg.seed)?;
+            t.schedule_offset = epoch;
+        }
+        rec.base_lr = t.cfg.lr.at(epoch - t.schedule_offset);
+        rec.lr = rec.base_lr * plan.lr_scale;
+        rec.fraction_ceiling = t.strategy.fraction_ceiling(epoch);
+        rec.max_hidden = plan.max_hidden;
+        rec.hidden = plan.hidden.len();
+        rec.moved_back = plan.moved_back;
+        Ok(plan)
+    }
+
+    // --- Train: through the step engine / worker pool ---------------------
+    // Data-parallel execution: shard the epoch batch-aligned across the
+    // worker pool (weighted plans skip this — they are W=1 per paper; SB
+    // consumes its candidate stream unsharded).  `--dp` picks the pool
+    // schedule: the bitwise serial-equivalent default, or true
+    // parameter-averaging synchronous SGD on per-worker replicas.
+    fn train(
+        &mut self,
+        t: &mut Trainer,
+        plan: &EpochPlan,
+        rec: &mut EpochRecord,
+    ) -> anyhow::Result<()> {
+        let epoch = self.epoch;
+        let outcome = match plan.batch_mode {
+            BatchMode::Plain if t.cfg.workers > 1 && plan.weights.is_none() => {
+                let shards =
+                    shard_order_aligned(&plan.order, t.cfg.workers, t.engine.batch());
+                let (outcome, pout) = match t.cfg.dp {
+                    DpMode::SerialEquivalent => execute_sharded_plain(
+                        &mut t.pool,
+                        &mut t.exec,
+                        &t.data.train,
+                        &shards,
+                        rec.lr as f32,
+                        epoch as u32,
+                        &mut t.state,
+                    )?,
+                    DpMode::Average => execute_sharded_average(
+                        &mut t.pool,
+                        &mut t.exec,
+                        &t.data.train,
+                        &shards,
+                        rec.lr as f32,
+                        epoch as u32,
+                        &mut t.state,
+                    )?,
+                };
+                rec.worker_samples = pout.workers.iter().map(|w| w.samples).collect();
+                rec.time_barrier += pout.workers.iter().map(|w| w.wait_s).sum::<f64>();
+                rec.dp_syncs = pout.sync_steps;
+                rec.time_average = pout.time_average;
+                rec.modeled_sync = t.cost.sync_overhead(pout.sync_steps, t.cfg.workers);
+                outcome
+            }
+            _ => execute_plan(
+                &mut t.engine,
+                &mut t.exec,
+                &t.data.train,
+                &plan.order,
+                plan.weights.as_deref(),
+                plan.batch_mode,
+                rec.lr as f32,
+                epoch as u32,
+                &mut t.state,
+                &mut t.sb,
+                &mut t.rng,
+                &mut t.sb_queue,
+            )?,
+        };
+        rec.trained_samples = outcome.trained_samples;
+        rec.backprop_samples = outcome.backprop_samples;
+        rec.train_loss = outcome.train_loss;
+        Ok(())
+    }
+
+    // --- Refresh: hidden-list stat refresh (paper step D.1) ---------------
+    fn refresh(
+        &mut self,
+        t: &mut Trainer,
+        plan: &EpochPlan,
+        rec: &mut EpochRecord,
+    ) -> anyhow::Result<usize> {
+        let mut refreshed = 0usize;
+        if t.strategy.refresh_hidden_stats() && !plan.hidden.is_empty() {
+            refreshed = plan.hidden.len();
+            // the refresh pass's gather stall gets its own bucket — it is
+            // not train-barrier time
+            rec.time_refresh_stall += t.refresh_stats(&plan.hidden, self.epoch as u32)?;
+        }
+        rec.hidden_again = t.state.hidden_again_count();
+        Ok(refreshed)
+    }
+
+    // --- Eval: sync forward pass, or snapshot + async submit --------------
+    fn eval(&mut self, t: &mut Trainer, rec: &mut EpochRecord) -> anyhow::Result<()> {
+        let epoch = self.epoch;
+        let eval_due =
+            epoch % t.cfg.eval_every.max(1) == 0 || epoch + 1 == t.cfg.epochs;
+        if !eval_due {
+            return Ok(());
+        }
+        if t.cfg.service_lane {
+            let snap = self.snapshot(t)?;
+            t.ensure_service()?;
+            let lane = t.service.as_mut().expect("ensure_service populated the lane");
+            lane.submit_eval(epoch, snap)?;
+            // rec.val_acc stays NaN-pending; the trainer folds the lane's
+            // result in at the next barrier (bitwise identical to the
+            // sync value below)
+        } else {
+            let (acc, loss) = t.evaluate()?;
+            rec.val_acc = acc;
+            rec.val_loss = loss;
+        }
+        Ok(())
+    }
+
+    // --- Checkpoint: sync serialization, or snapshot + async submit -------
+    fn checkpoint(&mut self, t: &mut Trainer) -> anyhow::Result<()> {
+        let epoch = self.epoch;
+        let due = t.cfg.checkpoint_every > 0
+            && (epoch % t.cfg.checkpoint_every == 0 || epoch + 1 == t.cfg.epochs);
+        if !due {
+            return Ok(());
+        }
+        let Some(dir) = t.cfg.checkpoint_dir.clone() else { return Ok(()) };
+        if t.cfg.service_lane {
+            let snap = self.snapshot(t)?;
+            t.ensure_service()?;
+            let lane = t.service.as_mut().expect("ensure_service populated the lane");
+            lane.submit_checkpoint(epoch, snap)?;
+        } else {
+            crate::runtime::checkpoint::save(&t.exec, &dir, epoch)?;
+        }
+        // The coordinator-side resume state (per-sample stats, RNG stream,
+        // schedule offset) is small, host-only, and must match this exact
+        // epoch boundary — always written synchronously, stamped with the
+        // epoch so resume can detect a crash-torn directory.
+        super::resume::save(&dir, epoch, &t.state, &t.rng, t.schedule_offset)?;
+        Ok(())
+    }
+
+    // --- Metrics: detailed diagnostics + cost-model projection ------------
+    fn metrics(
+        &mut self,
+        t: &mut Trainer,
+        refreshed: usize,
+        rec: &mut EpochRecord,
+    ) -> anyhow::Result<()> {
+        if t.cfg.detailed_metrics {
+            rec.hidden_per_class = t.state.hidden_per_class(&t.data.train);
+            let finite: Vec<f32> =
+                t.state.loss.iter().copied().filter(|l| l.is_finite()).collect();
+            if !finite.is_empty() {
+                let hi = crate::util::stats::percentile(&finite, 99.5).max(0.1);
+                rec.loss_hist = Some(Histogram::of(&finite, 0.0, hi, 40));
+            }
+        }
+
+        // Training time excludes eval (the paper's epoch timing measures
+        // the training pipeline; top-1 curves are checkpoint evals).
+        rec.time_total = rec.time_select + rec.time_train + rec.time_refresh;
+
+        let select_n = match &t.cfg.strategy {
+            StrategyConfig::Baseline => 0,
+            _ => t.data.train.n,
+        };
+        rec.modeled_time = t.cost.epoch_time(
+            rec.backprop_samples,
+            refreshed + rec.trained_samples.saturating_sub(rec.backprop_samples),
+            select_n,
+            t.cfg.workers,
+        );
+        Ok(())
+    }
+}

@@ -2,20 +2,27 @@
 //!
 //! The [`Trainer`] *plans* each epoch — strategy selection (hide /
 //! move-back / prune / weights), LR + fraction schedules, worker
-//! sharding, checkpointing, metrics — and hands the resulting index
-//! order to the `engine` layer for execution: single-stream epochs go
-//! through the pipelined `Engine`, multi-worker epochs
-//! (`cfg.workers > 1`) through the `WorkerPool`'s deterministic
-//! bulk-synchronous schedule (docs/worker-model.md).  The [`CostModel`]
+//! sharding, checkpointing, metrics — and drives it through the staged
+//! [`EpochPipeline`] (`Plan -> Train -> Refresh -> Eval -> Checkpoint ->
+//! Metrics`, each phase timed).  Execution belongs to the `engine`
+//! layer: single-stream epochs go through the pipelined `Engine`,
+//! multi-worker epochs (`cfg.workers > 1`) through the `WorkerPool`'s
+//! deterministic bulk-synchronous schedule, and — with `--service-lane
+//! on` — eval and checkpointing leave the critical path entirely via the
+//! engine's `ServiceLane` (docs/worker-model.md).  The [`CostModel`]
 //! projects measured single-host step latencies to the paper's
-//! multi-GPU scale.
+//! multi-GPU scale; [`resume`] persists the coordinator-side state that
+//! makes `--resume` bit-exact.
 
 #![warn(missing_docs)]
 
 pub mod costmodel;
+pub mod epoch;
+pub mod resume;
 pub mod trainer;
 
 pub use costmodel::CostModel;
+pub use epoch::{EpochPipeline, Phase};
 pub use trainer::Trainer;
 
 use crate::config::ExperimentConfig;

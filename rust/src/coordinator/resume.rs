@@ -1,0 +1,286 @@
+//! Exact-resume trainer state: the coordinator-side mutable state that
+//! must ride along with the model checkpoint for a resumed run to replay
+//! the uninterrupted run bit for bit.
+//!
+//! The model checkpoint (`runtime/checkpoint.rs`) restores parameters and
+//! momentum, but the *planning* layer is stateful too: per-sample lagging
+//! loss / PA / PC drive the hiding selector, the trainer's RNG stream
+//! positions every shuffle, and `schedule_offset` anchors the LR schedule
+//! after a FORGET restart.  This module persists all three next to the
+//! checkpoint (`trainer_state.json` + `state_*.npy`) and restores them on
+//! `--resume`, so epoch `k+1` of a resumed run plans from exactly the
+//! state epoch `k+1` of the uninterrupted run would have seen — pinned by
+//! `rust/tests/checkpoint_resume.rs`.
+//!
+//! Scope: exact resume covers strategies whose planning is a pure
+//! function of `(epoch, SampleState, rng)` — baseline, KAKURENBO (all
+//! component grids), random hiding, FORGET, EL2N, InfoBatch.
+//! Selective-Backprop keeps per-run selector history (its loss CDF) that
+//! is not persisted; an SB resume is well-defined but re-warms that
+//! history.  Legacy checkpoints without a trainer-state file still load:
+//! [`load`] returns `None` and the trainer falls back to params-only
+//! resume (fresh stats, fresh RNG), exactly the pre-existing behavior.
+
+use std::path::Path;
+
+use crate::state::SampleState;
+use crate::util::fsutil::{gc_files, write_atomic};
+use crate::util::json::{parse_file, Json};
+use crate::util::npy;
+use crate::util::rng::Rng;
+
+const STATE_FILE: &str = "trainer_state.json";
+
+/// The per-sample array stems, in the fixed order [`save`] writes and
+/// [`load`] reads them.
+const STEMS: [&str; 9] = [
+    "loss",
+    "conf",
+    "correct",
+    "hidden",
+    "hidden_prev",
+    "ever_correct",
+    "forget_events",
+    "last_update",
+    "hide_count",
+];
+
+/// Payload file name for one array stem at one epoch generation.  The
+/// epoch suffix means a save never overwrites the files the current
+/// `trainer_state.json` points at — the same crash-safety scheme as
+/// `runtime/checkpoint.rs`.
+fn state_file(stem: &str, epoch: usize) -> String {
+    format!("state_{stem}.e{epoch}.npy")
+}
+
+/// Whether a directory entry is a trainer-state payload file (any
+/// generation) — the set the post-save sweep may touch.  Disjoint from
+/// the model checkpoint's `p###_`/`v###_` leaf files, so the two writers
+/// (trainer thread, service lane) never sweep each other's files.
+fn is_state_file(name: &str) -> bool {
+    name.starts_with("state_") && name.ends_with(".npy")
+}
+
+fn bools_to_f32(v: &[bool]) -> Vec<f32> {
+    v.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+}
+
+fn u32s_to_f32(v: &[u32]) -> Vec<f32> {
+    // epochs and per-sample counters stay far below 2^24, where f32 is
+    // exact over the integers
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// Persist the trainer-side state next to the model checkpoint in `dir`,
+/// stamped with the checkpoint's `epoch` so [`load`] can detect a
+/// mixed-epoch directory (e.g. a crash between the async model write and
+/// this synchronous one).  Crash-safe: payload files are epoch-suffixed,
+/// the manifest is replaced atomically after they are all on disk, and
+/// the superseded generation is swept last.
+pub fn save(
+    dir: &Path,
+    epoch: usize,
+    state: &SampleState,
+    rng: &Rng,
+    schedule_offset: usize,
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let n = state.n;
+    let correct = bools_to_f32(&state.correct);
+    let hidden = bools_to_f32(&state.hidden);
+    let hidden_prev = bools_to_f32(&state.hidden_prev);
+    let ever_correct = bools_to_f32(&state.ever_correct);
+    let forget_events = u32s_to_f32(&state.forget_events);
+    let last_update = u32s_to_f32(&state.last_update_epoch);
+    let hide_count = u32s_to_f32(&state.hide_count);
+    let arrays: [&[f32]; 9] = [
+        &state.loss,
+        &state.conf,
+        &correct,
+        &hidden,
+        &hidden_prev,
+        &ever_correct,
+        &forget_events,
+        &last_update,
+        &hide_count,
+    ];
+    let mut keep = Vec::with_capacity(STEMS.len());
+    for (stem, data) in STEMS.iter().zip(arrays) {
+        let fname = state_file(stem, epoch);
+        npy::write_f32(&dir.join(&fname), data, &[n])?;
+        keep.push(fname);
+    }
+    // RNG words as hex strings: u64 state does not survive a JSON f64
+    let rng_hex: Vec<Json> =
+        rng.state().iter().map(|w| Json::Str(format!("{w:016x}"))).collect();
+    let manifest = crate::jobj![
+        ("n", n),
+        ("epoch", epoch),
+        ("schedule_offset", schedule_offset),
+        ("rng", Json::Arr(rng_hex)),
+    ];
+    // payloads reach stable storage before the manifest points at them
+    for f in &keep {
+        crate::util::fsutil::sync_file(&dir.join(f))?;
+    }
+    write_atomic(&dir.join(STATE_FILE), &manifest.to_pretty())?;
+    gc_files(dir, &keep, is_state_file);
+    Ok(())
+}
+
+/// Restore the trainer-side state saved by [`save`].  Returns
+/// `Some(schedule_offset)` when a trainer-state snapshot was found,
+/// matches the model checkpoint's `expected_epoch`, and was restored;
+/// `None` for legacy (params-only) checkpoint directories *or* when the
+/// epoch stamps disagree — a crash between the model write and the
+/// trainer-state write leaves a mixed-epoch directory, and restoring
+/// mismatched planner state would silently diverge from the
+/// uninterrupted run while claiming bit-exactness.
+pub fn load(
+    dir: &Path,
+    expected_epoch: usize,
+    state: &mut SampleState,
+    rng: &mut Rng,
+) -> anyhow::Result<Option<usize>> {
+    let path = dir.join(STATE_FILE);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let m = parse_file(&path)?;
+    match m.get("epoch").and_then(|e| e.as_usize()) {
+        Some(epoch) if epoch == expected_epoch => {}
+        stamped => {
+            crate::warn_!(
+                "trainer state in {dir:?} is stamped {stamped:?} but the model \
+                 checkpoint is epoch {expected_epoch}; falling back to \
+                 params-only resume"
+            );
+            return Ok(None);
+        }
+    }
+    let n = m.req("n")?.as_usize().unwrap_or(0);
+    anyhow::ensure!(
+        n == state.n,
+        "trainer state is for {n} samples, this run has {}",
+        state.n
+    );
+    let read = |stem: &str| -> anyhow::Result<Vec<f32>> {
+        let name = state_file(stem, expected_epoch);
+        let (data, _shape) = npy::read_f32(&dir.join(&name))?;
+        anyhow::ensure!(data.len() == n, "{name}: {} values for {n} samples", data.len());
+        Ok(data)
+    };
+    let to_bools = |v: Vec<f32>| -> Vec<bool> { v.into_iter().map(|x| x != 0.0).collect() };
+    let to_u32s = |v: Vec<f32>| -> Vec<u32> { v.into_iter().map(|x| x as u32).collect() };
+    state.loss = read("loss")?;
+    state.conf = read("conf")?;
+    state.correct = to_bools(read("correct")?);
+    state.hidden = to_bools(read("hidden")?);
+    state.hidden_prev = to_bools(read("hidden_prev")?);
+    state.ever_correct = to_bools(read("ever_correct")?);
+    state.forget_events = to_u32s(read("forget_events")?);
+    state.last_update_epoch = to_u32s(read("last_update")?);
+    state.hide_count = to_u32s(read("hide_count")?);
+    state.rebuild_counters();
+
+    let words = m.req("rng")?.as_arr().unwrap_or(&[]);
+    anyhow::ensure!(words.len() == 4, "rng state must hold 4 words");
+    let mut s = [0u64; 4];
+    for (slot, j) in s.iter_mut().zip(words) {
+        let hex = j.as_str().ok_or_else(|| anyhow::anyhow!("rng word not a string"))?;
+        *slot = u64::from_str_radix(hex, 16)
+            .map_err(|e| anyhow::anyhow!("rng word {hex:?}: {e}"))?;
+    }
+    *rng = Rng::from_state(s);
+    Ok(Some(m.req("schedule_offset")?.as_usize().unwrap_or(0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("kakurenbo_resume_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_restores_state_rng_and_offset() {
+        let dir = tmp("rt");
+        let mut s = SampleState::new(10);
+        for i in 0..10 {
+            s.record(i, i as f32 * 0.5, i % 2 == 0, 0.1 * i as f32, 3);
+        }
+        s.roll_epoch();
+        s.set_hidden(&[1, 4, 7]);
+        let mut rng = Rng::new(42);
+        for _ in 0..23 {
+            rng.next_u64();
+        }
+        save(&dir, 7, &s, &rng, 5).unwrap();
+
+        let mut s2 = SampleState::new(10);
+        let mut rng2 = Rng::new(0);
+        let off = load(&dir, 7, &mut s2, &mut rng2).unwrap();
+        assert_eq!(off, Some(5));
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&s.loss), bits(&s2.loss));
+        assert_eq!(bits(&s.conf), bits(&s2.conf));
+        assert_eq!(s.correct, s2.correct);
+        assert_eq!(s.hidden, s2.hidden);
+        assert_eq!(s.hidden_prev, s2.hidden_prev);
+        assert_eq!(s.ever_correct, s2.ever_correct);
+        assert_eq!(s.forget_events, s2.forget_events);
+        assert_eq!(s.last_update_epoch, s2.last_update_epoch);
+        assert_eq!(s.hide_count, s2.hide_count);
+        assert_eq!(s2.hidden_count(), 3);
+        // the restored RNG continues the original stream bit-exactly
+        let mut orig = rng;
+        for _ in 0..50 {
+            assert_eq!(orig.next_u64(), rng2.next_u64());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_state_file_is_legacy_none() {
+        let dir = tmp("legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = SampleState::new(4);
+        let mut rng = Rng::new(1);
+        assert_eq!(load(&dir, 0, &mut s, &mut rng).unwrap(), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A crash between the model-checkpoint write and the trainer-state
+    /// write leaves the two stamped with different epochs; resume must
+    /// fall back to params-only instead of restoring mismatched state.
+    #[test]
+    fn mixed_epoch_directory_falls_back_to_params_only() {
+        let dir = tmp("mixed");
+        let mut s = SampleState::new(5);
+        s.set_hidden(&[1]);
+        save(&dir, 4, &s, &Rng::new(3), 2).unwrap();
+        let mut restored = SampleState::new(5);
+        let mut rng = Rng::new(0);
+        let before = rng.state();
+        assert_eq!(load(&dir, 2, &mut restored, &mut rng).unwrap(), None);
+        // nothing was restored on the mismatch path
+        assert_eq!(restored.hidden_count(), 0);
+        assert_eq!(rng.state(), before);
+        // the matching epoch still restores
+        assert_eq!(load(&dir, 4, &mut restored, &mut rng).unwrap(), Some(2));
+        assert_eq!(restored.hidden_count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sample_count_mismatch_rejected() {
+        let dir = tmp("mismatch");
+        let s = SampleState::new(6);
+        save(&dir, 0, &s, &Rng::new(2), 0).unwrap();
+        let mut other = SampleState::new(7);
+        let mut rng = Rng::new(2);
+        assert!(load(&dir, 0, &mut other, &mut rng).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

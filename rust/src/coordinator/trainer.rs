@@ -5,42 +5,46 @@
 //! This is the L3 "request path": after construction no Python and no
 //! compilation happens — only artifact execution and host-side
 //! coordination.  The coordinator *plans* (strategy selection, sharding,
-//! learning rate); all per-step execution — batch gather, device steps,
-//! stat recording — routes through the pipelined `engine` module, which
-//! overlaps host-side gather with device execution.
+//! learning rate); each epoch executes through the staged
+//! [`EpochPipeline`] (`coordinator/epoch.rs`):
 //!
-//! With `cfg.workers > 1` the plain training pass and the hidden-stat
-//! refresh run through the engine's `WorkerPool`: the epoch order is
-//! sharded batch-aligned across N concurrent gather lanes behind a
-//! bulk-synchronous barrier with a deterministic `(step, worker)`
-//! reduction.  `cfg.dp` picks the training schedule: the default
-//! serial-equivalent schedule is bitwise identical to the single-stream
-//! interleaved run; `--dp average` trains per-worker replicas of the real
-//! executor and averages parameters at every step barrier — true
-//! synchronous SGD (docs/worker-model.md).  The hidden-stat refresh is
-//! forward-only, so it always uses the serial-equivalent schedule (both
-//! schedules produce identical bits there; serial-equivalent skips the
-//! state export).  Weighted plans (ISWR / InfoBatch / GradMatch) and the
+//! ```text
+//!   Plan -> Train -> Refresh -> Eval -> Checkpoint -> Metrics
+//! ```
+//!
+//! All per-step execution — batch gather, device steps, stat recording —
+//! routes through the pipelined `engine` module, which overlaps host-side
+//! gather with device execution.  With `cfg.workers > 1` the plain
+//! training pass and the hidden-stat refresh run through the engine's
+//! `WorkerPool` behind a deterministic bulk-synchronous reduction, and
+//! `cfg.dp` picks the schedule (serial-equivalent vs `--dp average`
+//! parameter averaging — docs/worker-model.md).  Weighted plans and the
 //! SB candidate stream stay single-stream, matching the paper's W = 1
-//! setup for those baselines — `--dp average` with such a strategy is
-//! rejected at config validation.
+//! setup for those baselines.
+//!
+//! With `cfg.service_lane` on, the Eval and Checkpoint phases leave the
+//! critical path entirely: they export an exact parameter snapshot and
+//! enqueue the job on a persistent background [`ServiceLane`] (its own
+//! replica of the executor, built on its own thread), whose results this
+//! trainer folds back into the epoch records at the next barrier in
+//! fixed epoch order.  Async eval is bitwise identical to sync eval
+//! (`tests/service_lane_determinism.rs`).
 
-use crate::config::{DpMode, ExperimentConfig, StrategyConfig};
+use crate::config::{ExperimentConfig, StrategyConfig};
 use crate::coordinator::costmodel::CostModel;
+use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    execute_plan, execute_sharded_average, execute_sharded_plain, Engine, EvalSink, RefreshSink,
-    StepMode, WorkerPool,
+    CheckpointWriter, Engine, EvalSink, RefreshSink, ServiceEvent, ServiceLane, StepMode,
+    WorkerPool,
 };
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
 use crate::state::SampleState;
 use crate::strategies::sb::SbSelector;
-use crate::strategies::{BatchMode, PlanCtx, Strategy};
+use crate::strategies::Strategy;
 use crate::util::rng::Rng;
-use crate::util::stats::Histogram;
-use crate::util::timer::Timer;
 
 /// Runs one experiment end to end: plans every epoch (strategy, LR,
 /// sharding) and drives the engine / worker pool through the PJRT
@@ -62,17 +66,20 @@ pub struct Trainer {
     /// The multi-worker execution driver used when `cfg.workers > 1`
     /// (N gather lanes behind a deterministic bulk-synchronous reduction).
     pub pool: WorkerPool,
-    strategy: Box<dyn Strategy>,
-    rng: Rng,
-    sb: SbSelector,
+    /// The async eval/checkpoint lane (spawned lazily on first use when
+    /// `cfg.service_lane`; `None` otherwise).
+    pub(crate) service: Option<ServiceLane>,
+    pub(crate) strategy: Box<dyn Strategy>,
+    pub(crate) rng: Rng,
+    pub(crate) sb: SbSelector,
     /// Pending SB-selected samples waiting to fill a training batch.
-    sb_queue: Vec<u32>,
+    pub(crate) sb_queue: Vec<u32>,
     /// Cached 0..val.n index list (reused across evals).
     eval_idx: Vec<u32>,
     /// Epoch at which training last (re)started — FORGET resets the LR
     /// schedule when it restarts from scratch (paper §4: "training then
     /// restarts from epoch 0").
-    schedule_offset: usize,
+    pub(crate) schedule_offset: usize,
 }
 
 impl Trainer {
@@ -122,6 +129,7 @@ impl Trainer {
             sb_queue: Vec::new(),
             eval_idx,
             schedule_offset: 0,
+            service: None,
             cfg,
             exec,
             data,
@@ -140,19 +148,33 @@ impl Trainer {
             let dir = self.cfg.checkpoint_dir.clone().ok_or_else(|| {
                 anyhow::anyhow!("resume requested without checkpoint_dir")
             })?;
-            start_epoch = crate::runtime::checkpoint::load(&mut self.exec, &dir)? + 1;
-            crate::info!("resumed from {dir:?} at epoch {start_epoch}");
-        }
-        let mut records = Vec::with_capacity(self.cfg.epochs);
-        for epoch in start_epoch..self.cfg.epochs {
-            let rec = self.run_epoch(epoch)?;
-            if self.cfg.checkpoint_every > 0
-                && (epoch % self.cfg.checkpoint_every == 0 || epoch + 1 == self.cfg.epochs)
-            {
-                if let Some(dir) = &self.cfg.checkpoint_dir {
-                    crate::runtime::checkpoint::save(&self.exec, dir, epoch)?;
+            let ckpt_epoch = crate::runtime::checkpoint::load(&mut self.exec, &dir)?;
+            start_epoch = ckpt_epoch + 1;
+            // exact resume when the trainer-side state rode along with the
+            // checkpoint *and* carries the same epoch stamp; legacy or
+            // crash-torn directories fall back to params-only (fresh
+            // stats + fresh RNG — see coordinator/resume.rs)
+            match super::resume::load(&dir, ckpt_epoch, &mut self.state, &mut self.rng)? {
+                Some(offset) => {
+                    self.schedule_offset = offset;
+                    crate::info!("resumed from {dir:?} at epoch {start_epoch} (exact)");
+                }
+                None => {
+                    crate::info!("resumed from {dir:?} at epoch {start_epoch} (params only)");
                 }
             }
+        }
+        // Spawn the service lane before the epoch loop: the one-time
+        // replica build (its own PJRT client + compiled executables) is
+        // paid here, outside every epoch's timed phases, instead of
+        // landing on the first Eval phase's critical path — and build
+        // failures surface before any training happens.
+        if self.cfg.service_lane {
+            self.ensure_service()?;
+        }
+        let mut records = Vec::with_capacity(self.cfg.epochs.saturating_sub(start_epoch));
+        for epoch in start_epoch..self.cfg.epochs {
+            let rec = self.run_epoch(epoch)?;
             if crate::util::logging::enabled(crate::util::logging::Level::Info) {
                 crate::info!(
                     "[{}] epoch {:>3}  loss {:.4}  acc {}  hidden {:>5} (mb {:>4})  lr {:.4}  {:.2}s",
@@ -167,7 +189,13 @@ impl Trainer {
                 );
             }
             records.push(rec);
+            // barrier: fold any service-lane results that have completed
+            // (always in fixed epoch order — the lane is a FIFO worker)
+            self.fold_service(&mut records, start_epoch, false)?;
         }
+        // final barrier: every outstanding async eval/checkpoint completes
+        // before the run result is assembled
+        self.fold_service(&mut records, start_epoch, true)?;
         Ok(RunResult::from_records(
             &self.cfg.name,
             &self.strategy.name(),
@@ -175,155 +203,64 @@ impl Trainer {
         ))
     }
 
-    /// Run one epoch: plan (strategy selection) -> train (engine / pool)
-    /// -> hidden-stat refresh -> evaluation -> metrics + cost model.
+    /// Run one epoch through the staged pipeline
+    /// (`Plan -> Train -> Refresh -> Eval -> Checkpoint -> Metrics`).
     pub fn run_epoch(&mut self, epoch: usize) -> anyhow::Result<EpochRecord> {
-        let mut rec = EpochRecord { epoch, val_acc: f64::NAN, ..Default::default() };
+        EpochPipeline::run(self, epoch)
+    }
 
-        // --- plan (selection) -------------------------------------------
-        let t = Timer::start();
-        let plan = {
-            let mut ctx = PlanCtx {
-                epoch,
-                total_epochs: self.cfg.epochs,
-                data: &self.data.train,
-                state: &mut self.state,
-                rng: &mut self.rng,
-                exec: Some(&mut self.exec),
-            };
-            self.strategy.plan_epoch(&mut ctx)?
-        };
-        rec.time_select = t.elapsed_s();
-
-        if plan.reset_params {
-            self.exec.reset_params(self.cfg.seed)?;
-            self.schedule_offset = epoch;
+    /// Spawn the service lane if `cfg.service_lane` asked for one and it
+    /// is not up yet.  The lane gets its own replica of the executor
+    /// (built on the lane thread via the `ReplicaBuilder` contract), a
+    /// clone of the validation set, and — when checkpointing is
+    /// configured — a writer that serializes snapshots through
+    /// `runtime/checkpoint.rs`.
+    pub(crate) fn ensure_service(&mut self) -> anyhow::Result<()> {
+        if self.service.is_some() {
+            return Ok(());
         }
+        let builder = crate::engine::DataParallel::replica_builder(&self.exec)?;
+        let writer = self.cfg.checkpoint_dir.clone().map(|dir| {
+            let meta = self.exec.meta.clone();
+            Box::new(move |state: &[Vec<f32>], epoch: usize| {
+                crate::runtime::checkpoint::save_state(&meta, state, &dir, epoch)
+            }) as CheckpointWriter
+        });
+        self.service = Some(ServiceLane::spawn(
+            builder,
+            self.data.val.clone(),
+            self.engine.batch(),
+            writer,
+        )?);
+        Ok(())
+    }
 
-        // --- learning rate -----------------------------------------------
-        rec.base_lr = self.cfg.lr.at(epoch - self.schedule_offset);
-        rec.lr = rec.base_lr * plan.lr_scale;
-        rec.fraction_ceiling = self.strategy.fraction_ceiling(epoch);
-        rec.max_hidden = plan.max_hidden;
-        rec.hidden = plan.hidden.len();
-        rec.moved_back = plan.moved_back;
-
-        // --- train (through the step engine / worker pool) -----------------
-        let t = Timer::start();
-        // Data-parallel execution: shard the epoch batch-aligned across
-        // the worker pool (weighted plans skip this — they are W=1 per
-        // paper; SB consumes its candidate stream unsharded).  `--dp`
-        // picks the pool schedule: the bitwise serial-equivalent default,
-        // or true parameter-averaging synchronous SGD on per-worker
-        // replicas of the executor.
-        let outcome = match plan.batch_mode {
-            BatchMode::Plain if self.cfg.workers > 1 && plan.weights.is_none() => {
-                let shards = shard_order_aligned(
-                    &plan.order,
-                    self.cfg.workers,
-                    self.engine.batch(),
-                );
-                let (outcome, pout) = match self.cfg.dp {
-                    DpMode::SerialEquivalent => execute_sharded_plain(
-                        &mut self.pool,
-                        &mut self.exec,
-                        &self.data.train,
-                        &shards,
-                        rec.lr as f32,
-                        epoch as u32,
-                        &mut self.state,
-                    )?,
-                    DpMode::Average => execute_sharded_average(
-                        &mut self.pool,
-                        &mut self.exec,
-                        &self.data.train,
-                        &shards,
-                        rec.lr as f32,
-                        epoch as u32,
-                        &mut self.state,
-                    )?,
-                };
-                rec.worker_samples = pout.workers.iter().map(|w| w.samples).collect();
-                rec.time_barrier += pout.workers.iter().map(|w| w.wait_s).sum::<f64>();
-                rec.dp_syncs = pout.sync_steps;
-                rec.time_average = pout.time_average;
-                rec.modeled_sync =
-                    self.cost.sync_overhead(pout.sync_steps, self.cfg.workers);
-                outcome
-            }
-            _ => execute_plan(
-                &mut self.engine,
-                &mut self.exec,
-                &self.data.train,
-                &plan.order,
-                plan.weights.as_deref(),
-                plan.batch_mode,
-                rec.lr as f32,
-                epoch as u32,
-                &mut self.state,
-                &mut self.sb,
-                &mut self.rng,
-                &mut self.sb_queue,
-            )?,
-        };
-        rec.trained_samples = outcome.trained_samples;
-        rec.backprop_samples = outcome.backprop_samples;
-        rec.train_loss = outcome.train_loss;
-        rec.time_train = t.elapsed_s();
-
-        // --- hidden-list stat refresh (paper step D.1) ---------------------
-        let t = Timer::start();
-        let mut refreshed = 0usize;
-        if self.strategy.refresh_hidden_stats() && !plan.hidden.is_empty() {
-            refreshed = plan.hidden.len();
-            rec.time_barrier += self.refresh_stats(&plan.hidden, epoch as u32)?;
-        }
-        rec.time_refresh = t.elapsed_s();
-        rec.hidden_again = self.state.hidden_again_count();
-
-        // --- evaluation ----------------------------------------------------
-        let eval_due =
-            epoch % self.cfg.eval_every.max(1) == 0 || epoch + 1 == self.cfg.epochs;
-        if eval_due {
-            let t = Timer::start();
-            let (acc, loss) = self.evaluate()?;
-            rec.val_acc = acc;
-            rec.val_loss = loss;
-            rec.time_eval = t.elapsed_s();
-        }
-
-        // --- detailed metrics (Figs. 5-8) ----------------------------------
-        if self.cfg.detailed_metrics {
-            rec.hidden_per_class = self.state.hidden_per_class(&self.data.train);
-            let finite: Vec<f32> = self
-                .state
-                .loss
-                .iter()
-                .copied()
-                .filter(|l| l.is_finite())
-                .collect();
-            if !finite.is_empty() {
-                let hi = crate::util::stats::percentile(&finite, 99.5).max(0.1);
-                rec.loss_hist = Some(Histogram::of(&finite, 0.0, hi, 40));
+    /// Fold completed service-lane events into their epochs' records.
+    /// `block` waits for every outstanding job (the end-of-run barrier);
+    /// otherwise only already-completed events fold.
+    fn fold_service(
+        &mut self,
+        records: &mut [EpochRecord],
+        start_epoch: usize,
+        block: bool,
+    ) -> anyhow::Result<()> {
+        let Some(lane) = self.service.as_mut() else { return Ok(()) };
+        let events = if block { lane.drain()? } else { lane.try_events()? };
+        for ev in events {
+            let idx = ev.epoch() - start_epoch;
+            anyhow::ensure!(idx < records.len(), "service event for unknown epoch");
+            let rec = &mut records[idx];
+            rec.time_service += ev.secs();
+            if let ServiceEvent::Eval { epoch, acc, loss, .. } = ev {
+                rec.val_acc = acc;
+                rec.val_loss = loss;
+                // the per-epoch log line printed before this result came
+                // back; surface the folded accuracy so async runs keep
+                // live accuracy monitoring
+                crate::info!("[service] epoch {epoch:>3}  acc {acc:.4}  val loss {loss:.4}");
             }
         }
-
-        // Training time excludes eval (the paper's epoch timing measures
-        // the training pipeline; top-1 curves are checkpoint evals).
-        rec.time_total = rec.time_select + rec.time_train + rec.time_refresh;
-
-        // --- cost model: paper-scale projection -----------------------------
-        let select_n = match &self.cfg.strategy {
-            StrategyConfig::Baseline => 0,
-            _ => self.data.train.n,
-        };
-        rec.modeled_time = self.cost.epoch_time(
-            rec.backprop_samples,
-            refreshed + rec.trained_samples.saturating_sub(rec.backprop_samples),
-            select_n,
-            self.cfg.workers,
-        );
-        Ok(rec)
+        Ok(())
     }
 
     /// Forward-only stat refresh over `indices` (hidden list), sharded
@@ -333,7 +270,7 @@ impl Trainer {
     /// for no gather parallelism.  (Wrap-padding duplicates re-record
     /// identical values, so the resulting state is unchanged either way.)
     /// Returns the pool's gather stall (0 single-stream).
-    fn refresh_stats(&mut self, indices: &[u32], epoch: u32) -> anyhow::Result<f64> {
+    pub(crate) fn refresh_stats(&mut self, indices: &[u32], epoch: u32) -> anyhow::Result<f64> {
         let mut sink = RefreshSink::new(&mut self.state, epoch);
         if self.cfg.workers > 1 && indices.len() >= self.cfg.workers * self.engine.batch() {
             let shards =
@@ -359,7 +296,8 @@ impl Trainer {
         }
     }
 
-    /// Validation top-1 accuracy + mean loss.
+    /// Validation top-1 accuracy + mean loss (synchronous path; the async
+    /// service lane computes the bitwise-identical result off-path).
     pub fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
         let mut sink = EvalSink::default();
         self.engine.run(

@@ -50,12 +50,23 @@
 //! bitwise identical to the single-stream interleaved run (the same
 //! determinism contract as the overlap switch above); see
 //! docs/worker-model.md for the full execution model.
+//!
+//! # Off the critical path: the service lane
+//!
+//! [`service`] hosts the [`ServiceLane`]: a persistent background thread
+//! (built on the same [`ReplicaBuilder`] contract as the pool's replica
+//! lanes) that runs validation evals and checkpoint serialization against
+//! exported parameter snapshots while the primary executor trains the
+//! next epoch.  Async eval is bitwise identical to sync eval (the lane
+//! evaluates an exact snapshot with the identical accumulation order) —
+//! enforced by `tests/service_lane_determinism.rs`.
 
 #![warn(missing_docs)]
 
 pub mod backend;
 pub mod modes;
 pub mod pool;
+pub mod service;
 pub mod testbed;
 
 pub use backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
@@ -64,6 +75,7 @@ pub use modes::{
     RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
+pub use service::{CheckpointWriter, ServiceEvent, ServiceLane, StateSnapshot};
 
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::Dataset;

@@ -219,6 +219,19 @@ pub struct EvalSink {
 }
 
 impl EvalSink {
+    /// Fold one executed batch's real slots into the running sums.  This
+    /// single accumulation path is shared by the engine's step loop
+    /// (via [`StepSink::on_batch`]) and the async service lane's eval
+    /// (`engine/service.rs`), so the async-bitwise-equals-sync contract
+    /// holds structurally instead of by two hand-synchronized loops.
+    pub fn accumulate(&mut self, real: usize, stats: &BatchStats) {
+        for slot in 0..real {
+            self.correct += stats.correct[slot] as f64;
+            self.loss += stats.loss[slot] as f64;
+            self.n += 1;
+        }
+    }
+
     /// (top-1 accuracy, mean loss).
     pub fn result(&self) -> (f64, f64) {
         let n = self.n.max(1) as f64;
@@ -234,11 +247,7 @@ impl StepSink for EvalSink {
         real: usize,
         stats: &BatchStats,
     ) -> anyhow::Result<()> {
-        for slot in 0..real {
-            self.correct += stats.correct[slot] as f64;
-            self.loss += stats.loss[slot] as f64;
-            self.n += 1;
-        }
+        self.accumulate(real, stats);
         Ok(())
     }
 }

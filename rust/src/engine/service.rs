@@ -1,0 +1,424 @@
+//! The async service lane: validation eval + checkpoint serialization off
+//! the training critical path.
+//!
+//! # Why a lane, not a thread pool
+//!
+//! Both jobs the lane runs consume only an *immutable* exported parameter
+//! snapshot ([`crate::engine::StateExchange::export_state`]), so nothing
+//! about them has to block the next epoch: the primary executor can start
+//! training epoch `e+1` the moment epoch `e`'s state is exported.  But the
+//! production backend's device state is not `Send` (PJRT literals, a
+//! client handle), so the lane cannot borrow the primary executor.  It
+//! instead follows the exact replica contract the worker pool's replica
+//! lanes established in the data-parallel path (`engine/pool.rs`):
+//! a `Send` [`ReplicaBuilder`] is shipped into one persistent
+//! background thread, which *builds* its own replica there (own PJRT
+//! client, own compiled executables) and owns it for the lane's whole
+//! life.  Snapshots cross the channel as `Send` host tensors.
+//!
+//! # Determinism contract
+//!
+//! The lane evaluates an **exact** snapshot: the export/import round-trip
+//! preserves every f32 bit pattern, the replica runs the same compiled
+//! artifacts, and the lane walks the validation set in the same batch
+//! order with the same [`BatchAssembler`] fill and the same accumulation
+//! order as the synchronous [`crate::engine::EvalSink`] path.  Async eval
+//! is therefore bitwise identical to sync eval — enforced by
+//! `rust/tests/service_lane_determinism.rs`.  Because the lane is a single
+//! FIFO worker, completed events always come back in submission order
+//! (fixed epoch order), which is what lets the coordinator fold results
+//! into epoch records deterministically.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use super::backend::{ReplicaBackend, ReplicaBuilder};
+use super::modes::EvalSink;
+use crate::data::batch::BatchAssembler;
+use crate::data::Dataset;
+use crate::util::timer::Timer;
+
+/// An immutable full-state snapshot (params + optimizer state, the
+/// [`crate::engine::StateExchange::export_state`] layout) shared between
+/// the coordinator and the service lane without copying.
+pub type StateSnapshot = Arc<Vec<Vec<f32>>>;
+
+/// A `Send` closure that serializes one state snapshot as a checkpoint for
+/// the given epoch.  The coordinator constructs it from the runtime's
+/// checkpoint writer plus the executor's parameter metadata, so the engine
+/// layer never depends on runtime types.
+pub type CheckpointWriter = Box<dyn Fn(&[Vec<f32>], usize) -> anyhow::Result<()> + Send>;
+
+/// Jobs the coordinator submits to the lane.
+enum ServiceCmd {
+    /// Run a full validation forward pass on the snapshot.
+    Eval { epoch: usize, state: StateSnapshot },
+    /// Serialize the snapshot through the configured [`CheckpointWriter`].
+    Checkpoint { epoch: usize, state: StateSnapshot },
+}
+
+/// One completed service-lane job, returned in submission order.
+#[derive(Clone, Debug)]
+pub enum ServiceEvent {
+    /// Validation eval finished for `epoch`.
+    Eval {
+        /// The epoch whose snapshot was evaluated.
+        epoch: usize,
+        /// Validation top-1 accuracy (bitwise identical to sync eval).
+        acc: f64,
+        /// Mean validation loss (bitwise identical to sync eval).
+        loss: f64,
+        /// Seconds the lane spent on the job (off the critical path).
+        secs: f64,
+    },
+    /// Checkpoint serialization finished for `epoch`.
+    Checkpoint {
+        /// The epoch whose snapshot was serialized.
+        epoch: usize,
+        /// Seconds the lane spent on the job (off the critical path).
+        secs: f64,
+    },
+}
+
+impl ServiceEvent {
+    /// The epoch the job belonged to.
+    pub fn epoch(&self) -> usize {
+        match self {
+            ServiceEvent::Eval { epoch, .. } | ServiceEvent::Checkpoint { epoch, .. } => *epoch,
+        }
+    }
+
+    /// Lane seconds the job consumed.
+    pub fn secs(&self) -> f64 {
+        match self {
+            ServiceEvent::Eval { secs, .. } | ServiceEvent::Checkpoint { secs, .. } => *secs,
+        }
+    }
+}
+
+enum ServiceReply {
+    /// The replica finished building; the lane accepts jobs.
+    Ready,
+    /// One completed job.
+    Done(ServiceEvent),
+    /// The lane's replica or a job failed; the lane exits.
+    Fail(String),
+}
+
+/// A persistent background thread running validation evals and checkpoint
+/// serialization against exported state snapshots, while the primary
+/// executor trains the next epoch.
+///
+/// Dropping the lane closes the command channel; the thread drains any
+/// in-flight jobs and exits, and `Drop` joins it.
+pub struct ServiceLane {
+    cmd_tx: Option<Sender<ServiceCmd>>,
+    reply_rx: Receiver<ServiceReply>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pending: usize,
+}
+
+impl ServiceLane {
+    /// Spawn the lane: the replica builds on the lane thread (blocking
+    /// this call until it is ready, so spawn failures surface here and
+    /// every later submit is cheap).  `val` is the validation set the lane
+    /// evaluates; `batch` the device batch size; `checkpoint` the optional
+    /// snapshot serializer (checkpoint jobs fail without one).
+    pub fn spawn(
+        build: ReplicaBuilder,
+        val: Dataset,
+        batch: usize,
+        checkpoint: Option<CheckpointWriter>,
+    ) -> anyhow::Result<Self> {
+        let (cmd_tx, cmd_rx) = channel::<ServiceCmd>();
+        let (reply_tx, reply_rx) = channel::<ServiceReply>();
+        let handle = std::thread::Builder::new()
+            .name("service-lane".into())
+            .spawn(move || service_main(build, val, batch, checkpoint, cmd_rx, reply_tx))?;
+        let lane = ServiceLane { cmd_tx: Some(cmd_tx), reply_rx, handle: Some(handle), pending: 0 };
+        match lane.reply_rx.recv() {
+            Ok(ServiceReply::Ready) => Ok(lane),
+            Ok(ServiceReply::Fail(e)) => anyhow::bail!("service lane spawn failed: {e}"),
+            Ok(ServiceReply::Done(_)) => anyhow::bail!("service lane: job reply before ready"),
+            Err(_) => anyhow::bail!("service lane died during spawn"),
+        }
+    }
+
+    fn submit(&mut self, cmd: ServiceCmd) -> anyhow::Result<()> {
+        self.cmd_tx
+            .as_ref()
+            .expect("lane alive until drop")
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("service lane died"))?;
+        self.pending += 1;
+        Ok(())
+    }
+
+    /// Queue a validation eval of `state` for `epoch` (returns
+    /// immediately; the result arrives as a [`ServiceEvent::Eval`]).
+    pub fn submit_eval(&mut self, epoch: usize, state: StateSnapshot) -> anyhow::Result<()> {
+        self.submit(ServiceCmd::Eval { epoch, state })
+    }
+
+    /// Queue checkpoint serialization of `state` for `epoch`.
+    pub fn submit_checkpoint(&mut self, epoch: usize, state: StateSnapshot) -> anyhow::Result<()> {
+        self.submit(ServiceCmd::Checkpoint { epoch, state })
+    }
+
+    /// Jobs submitted but not yet folded back.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Non-blocking: collect every job that has completed so far, in
+    /// submission (fixed epoch) order.
+    pub fn try_events(&mut self) -> anyhow::Result<Vec<ServiceEvent>> {
+        let mut out = Vec::new();
+        loop {
+            match self.reply_rx.try_recv() {
+                Ok(ServiceReply::Done(ev)) => {
+                    self.pending -= 1;
+                    out.push(ev);
+                }
+                Ok(ServiceReply::Fail(e)) => anyhow::bail!("service lane job failed: {e}"),
+                Ok(ServiceReply::Ready) => anyhow::bail!("service lane: duplicate ready"),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    anyhow::ensure!(
+                        self.pending == 0,
+                        "service lane died with {} jobs in flight",
+                        self.pending
+                    );
+                    break;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Blocking: wait for every submitted job to complete; returns all
+    /// events (including already-completed ones) in submission order.
+    pub fn drain(&mut self) -> anyhow::Result<Vec<ServiceEvent>> {
+        let mut out = self.try_events()?;
+        while self.pending > 0 {
+            match self.reply_rx.recv() {
+                Ok(ServiceReply::Done(ev)) => {
+                    self.pending -= 1;
+                    out.push(ev);
+                }
+                Ok(ServiceReply::Fail(e)) => anyhow::bail!("service lane job failed: {e}"),
+                Ok(ServiceReply::Ready) => anyhow::bail!("service lane: duplicate ready"),
+                Err(_) => anyhow::bail!(
+                    "service lane died with {} jobs in flight",
+                    self.pending
+                ),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for ServiceLane {
+    fn drop(&mut self) {
+        drop(self.cmd_tx.take()); // disconnect: service_main's recv loop exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lane thread body: build the replica locally, then serve jobs until the
+/// coordinator drops the command channel.
+fn service_main(
+    build: ReplicaBuilder,
+    val: Dataset,
+    batch: usize,
+    checkpoint: Option<CheckpointWriter>,
+    cmd_rx: Receiver<ServiceCmd>,
+    reply_tx: Sender<ServiceReply>,
+) {
+    let mut replica = match build() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = reply_tx.send(ServiceReply::Fail(format!("replica build: {e}")));
+            return;
+        }
+    };
+    let mut asm = BatchAssembler::new(&val, batch);
+    let eval_idx: Vec<u32> = (0..val.n as u32).collect();
+    if reply_tx.send(ServiceReply::Ready).is_err() {
+        return;
+    }
+    while let Ok(cmd) = cmd_rx.recv() {
+        let result = match cmd {
+            ServiceCmd::Eval { epoch, state } => {
+                run_eval(replica.as_mut(), &val, &eval_idx, &mut asm, epoch, &state)
+            }
+            ServiceCmd::Checkpoint { epoch, state } => {
+                let t = Timer::start();
+                match &checkpoint {
+                    Some(w) => w(&state, epoch)
+                        .map(|()| ServiceEvent::Checkpoint { epoch, secs: t.elapsed_s() }),
+                    None => Err(anyhow::anyhow!(
+                        "checkpoint submitted but no writer configured"
+                    )),
+                }
+            }
+        };
+        let reply = match result {
+            Ok(ev) => ServiceReply::Done(ev),
+            Err(e) => {
+                let _ = reply_tx.send(ServiceReply::Fail(e.to_string()));
+                return;
+            }
+        };
+        if reply_tx.send(reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// One full validation pass on the replica: import the snapshot, then walk
+/// the validation order in batch chunks through the *same*
+/// [`EvalSink::accumulate`] fold the synchronous engine path uses, so the
+/// result is bitwise identical to sync eval by construction.
+fn run_eval(
+    replica: &mut dyn ReplicaBackend,
+    val: &Dataset,
+    eval_idx: &[u32],
+    asm: &mut BatchAssembler,
+    epoch: usize,
+    state: &StateSnapshot,
+) -> anyhow::Result<ServiceEvent> {
+    let t = Timer::start();
+    replica.import_state(state)?;
+    let mut sink = EvalSink::default();
+    for chunk in eval_idx.chunks(asm.batch) {
+        asm.fill(val, chunk, None);
+        let stats = replica.fwd_stats(&asm.x, &asm.y)?;
+        sink.accumulate(asm.real, &stats);
+    }
+    let (acc, loss) = sink.result();
+    Ok(ServiceEvent::Eval { epoch, acc, loss, secs: t.elapsed_s() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+    use crate::engine::testbed::MockBackend;
+    use crate::engine::DataParallel;
+
+    const B: usize = 8;
+
+    fn tiny_val(n: usize) -> Dataset {
+        gauss_mixture(
+            &GaussMixtureCfg { n_train: 8, n_val: n, dim: 6, classes: 3, ..Default::default() },
+            7,
+        )
+        .val
+    }
+
+    fn snapshot(param: f32) -> StateSnapshot {
+        Arc::new(vec![vec![param]])
+    }
+
+    #[test]
+    fn events_come_back_in_submission_order() {
+        let be = MockBackend::new();
+        let mut lane =
+            ServiceLane::spawn(be.replica_builder().unwrap(), tiny_val(21), B, None).unwrap();
+        for epoch in 0..5 {
+            lane.submit_eval(epoch, snapshot(1.0 + epoch as f32 * 0.25)).unwrap();
+        }
+        assert_eq!(lane.pending(), 5);
+        let events = lane.drain().unwrap();
+        assert_eq!(lane.pending(), 0);
+        let epochs: Vec<usize> = events.iter().map(|e| e.epoch()).collect();
+        assert_eq!(epochs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn eval_uses_the_submitted_snapshot_not_the_spawn_state() {
+        let be = MockBackend::new();
+        let val = tiny_val(13);
+        let mut lane =
+            ServiceLane::spawn(be.replica_builder().unwrap(), val.clone(), B, None).unwrap();
+        // same snapshot twice => bitwise-identical results
+        lane.submit_eval(0, snapshot(0.5)).unwrap();
+        lane.submit_eval(1, snapshot(0.5)).unwrap();
+        // a different snapshot => different forward stats
+        lane.submit_eval(2, snapshot(2.5)).unwrap();
+        let events = lane.drain().unwrap();
+        let losses: Vec<f64> = events
+            .iter()
+            .map(|e| match e {
+                ServiceEvent::Eval { loss, .. } => *loss,
+                other => panic!("unexpected event {other:?}"),
+            })
+            .collect();
+        assert_eq!(losses[0].to_bits(), losses[1].to_bits());
+        assert_ne!(losses[0].to_bits(), losses[2].to_bits());
+    }
+
+    #[test]
+    fn checkpoint_jobs_call_the_writer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = Arc::new(AtomicUsize::new(0));
+        let seen = calls.clone();
+        let writer: CheckpointWriter = Box::new(move |state, epoch| {
+            anyhow::ensure!(state.len() == 1 && epoch == 3, "wrong job payload");
+            seen.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        let be = MockBackend::new();
+        let mut lane =
+            ServiceLane::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
+                .unwrap();
+        lane.submit_checkpoint(3, snapshot(1.0)).unwrap();
+        let events = lane.drain().unwrap();
+        assert!(matches!(events[0], ServiceEvent::Checkpoint { epoch: 3, .. }));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn checkpoint_without_writer_is_an_error() {
+        let be = MockBackend::new();
+        let mut lane =
+            ServiceLane::spawn(be.replica_builder().unwrap(), tiny_val(9), B, None).unwrap();
+        lane.submit_checkpoint(0, snapshot(1.0)).unwrap();
+        assert!(lane.drain().is_err());
+    }
+
+    #[test]
+    fn failed_builder_surfaces_at_spawn() {
+        let build: ReplicaBuilder = Box::new(|| anyhow::bail!("no artifacts"));
+        assert!(ServiceLane::spawn(build, tiny_val(9), B, None).is_err());
+    }
+
+    #[test]
+    fn empty_validation_set_is_a_noop_eval() {
+        let empty = Dataset {
+            name: "empty".into(),
+            n: 0,
+            sample_dim: 6,
+            label_len: 1,
+            classes: 3,
+            x: vec![],
+            y: vec![],
+            noisy: vec![],
+        };
+        let be = MockBackend::new();
+        let mut lane =
+            ServiceLane::spawn(be.replica_builder().unwrap(), empty, B, None).unwrap();
+        lane.submit_eval(0, snapshot(1.0)).unwrap();
+        let events = lane.drain().unwrap();
+        match &events[0] {
+            ServiceEvent::Eval { acc, loss, .. } => {
+                assert_eq!(*acc, 0.0);
+                assert_eq!(*loss, 0.0);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+}

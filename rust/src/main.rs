@@ -11,7 +11,8 @@
 //!
 //! Overrides (any subset): `--epochs --seed --workers --dp --base_lr
 //! --momentum --max_fraction --tau --drop_top --variant --eval_every
-//! --detailed_metrics`
+//! --detailed_metrics --service-lane --checkpoint_every --checkpoint_dir
+//! --resume`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -23,7 +24,7 @@ use kakurenbo::util::table::{diff_pct, pct, speedup_pct, Table};
 const OVERRIDE_KEYS: &[&str] = &[
     "epochs", "seed", "workers", "dp", "base_lr", "warmup_epochs", "momentum",
     "max_fraction", "tau", "drop_top", "variant", "eval_every", "detailed_metrics",
-    "checkpoint_every", "checkpoint_dir", "resume",
+    "checkpoint_every", "checkpoint_dir", "resume", "service-lane", "service_lane",
 ];
 
 fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
@@ -189,7 +190,8 @@ Strategies: baseline kakurenbo kakurenbo-vXXXX (ablation bits HE/MB/RF/LR)
             (catalog with citations + flags: docs/strategies.md)
 Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
             --momentum --max_fraction --tau --drop_top --variant
-            --eval_every
+            --eval_every --service-lane --checkpoint_every
+            --checkpoint_dir --resume
 Flags:      --verbose --quiet --out <dir>
 
 --workers N executes data-parallel: the epoch order is sharded across N
@@ -200,4 +202,12 @@ pooled worker lanes behind a deterministic bulk-synchronous reduction.
   average            true synchronous SGD: per-worker executor replicas,
                      parameters averaged at every step barrier; needs
                      --workers > 1 and a non-weighted, non-SB strategy
+
+--service-lane {on,off} moves validation eval + checkpoint serialization
+onto a persistent background lane (its own executor replica) that works
+on exact parameter snapshots while training continues; results fold back
+in fixed epoch order and are bitwise identical to the serial path
+(default: off).  --checkpoint_every K + --checkpoint_dir D write full
+checkpoints (params + momentum + trainer state); --resume continues a
+run from D bit-exactly.
 ";

@@ -41,8 +41,21 @@ pub struct EpochRecord {
     pub time_refresh: f64,
     pub time_eval: f64,
     /// Seconds the worker pool's reduction loop spent blocked on gather
-    /// lanes / the step barrier (0 for single-stream epochs).
+    /// lanes / the step barrier during the *training* pass (0 for
+    /// single-stream epochs).
     pub time_barrier: f64,
+    /// Seconds the hidden-refresh pass spent blocked on gather lanes (its
+    /// own stall, no longer conflated into `time_barrier`; 0 when the
+    /// refresh ran single-stream).
+    pub time_refresh_stall: f64,
+    /// Seconds the checkpoint phase spent on the critical path (snapshot
+    /// export + submit when the service lane is on; full serialization
+    /// when off; 0 on epochs without a checkpoint).
+    pub time_checkpoint: f64,
+    /// Seconds the async service lane spent on this epoch's jobs (eval
+    /// forward passes, checkpoint serialization) — work overlapped with
+    /// the next epoch's training, *not* part of `time_total`.
+    pub time_service: f64,
     /// Parameter-averaging reductions performed this epoch (only when the
     /// `--dp average` schedule trained the epoch; 0 otherwise).
     pub dp_syncs: usize,
@@ -85,6 +98,9 @@ impl EpochRecord {
             ("time_refresh", self.time_refresh),
             ("time_eval", self.time_eval),
             ("time_barrier", self.time_barrier),
+            ("time_refresh_stall", self.time_refresh_stall),
+            ("time_checkpoint", self.time_checkpoint),
+            ("time_service", self.time_service),
             ("dp_syncs", self.dp_syncs),
             ("time_average", self.time_average),
             ("modeled_sync", self.modeled_sync),

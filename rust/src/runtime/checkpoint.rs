@@ -1,38 +1,128 @@
-//! Checkpointing: save/restore model parameters as a directory of `.npy`
-//! files plus a JSON index — inspectable from Python (`np.load`) and
-//! stable across runs.
+//! Checkpointing: save/restore the executor's full mutable model state
+//! (parameters **and** SGD momentum) as a directory of `.npy` files plus
+//! a JSON index — inspectable from Python (`np.load`) and stable across
+//! runs.
 //!
-//! Layout: `<dir>/checkpoint.json` (variant, epoch, param index) and
-//! `<dir>/p000_fc1_w.npy ...` (one array per parameter leaf).
+//! Layout: `<dir>/checkpoint.json` (variant, epoch, leaf index) and one
+//! array per leaf per generation: `p000_fc1_w.e7.npy` (parameter) +
+//! `v000_fc1_w.e7.npy` (momentum), where `.e7` is the epoch the save
+//! belongs to.  Momentum is part of the checkpoint so a resumed run
+//! continues the optimizer trajectory bit-exactly (see
+//! `coordinator/resume.rs` for the coordinator-side state that rides
+//! along).
+//!
+//! # Crash safety
+//!
+//! A save never overwrites the files the current `checkpoint.json`
+//! points at: payload files carry the epoch in their name, the index is
+//! replaced atomically (temp + rename, [`crate::util::fsutil`]) only
+//! after every payload file is on disk, and the superseded generation is
+//! garbage-collected last.  A crash at any point leaves a directory
+//! whose index references a complete, single-epoch set — there is no
+//! window in which `--resume` can read mixed-epoch parameters.  This
+//! matters doubly with the async service lane, where the model write for
+//! epoch `e` can still be in flight while the trainer runs epoch `e+1`.
+//!
+//! Legacy params-only checkpoints (no `vel` entries) still load:
+//! parameters restore by name, momentum keeps its current
+//! (zero-initialized) values.
+//!
+//! [`save_state`] serializes an exported snapshot without touching the
+//! executor — the entry point the async service lane uses to write a
+//! checkpoint for epoch `e` while the executor trains epoch `e+1`.
 
 use std::path::Path;
 
+use crate::runtime::artifact::VariantMeta;
 use crate::runtime::executor::ModelExecutor;
+use crate::util::fsutil::{gc_files, write_atomic};
 use crate::util::json::{parse_file, Json};
 use crate::util::npy;
 
-/// Save the executor's parameters at `dir` (created if needed).
+/// Save the executor's full state at `dir` (created if needed).
 pub fn save(exec: &ModelExecutor, dir: &Path, epoch: usize) -> anyhow::Result<()> {
+    let state = exec.export_state()?;
+    save_state(&exec.meta, &state, dir, epoch)
+}
+
+/// Whether a directory entry is a checkpoint leaf payload file
+/// (`p###_*.npy` / `v###_*.npy`, any generation) — the set the
+/// post-save garbage sweep is allowed to touch.
+fn is_leaf_file(name: &str) -> bool {
+    let b = name.as_bytes();
+    b.len() > 4
+        && (b[0] == b'p' || b[0] == b'v')
+        && b[1].is_ascii_digit()
+        && b[2].is_ascii_digit()
+        && b[3].is_ascii_digit()
+        && name.ends_with(".npy")
+}
+
+/// Serialize a full exported state snapshot (params then momentum, in
+/// manifest leaf order — the `StateExchange::export_state` layout) as a
+/// checkpoint at `dir`, without touching the executor.  Byte-identical to
+/// [`save`] on the executor the snapshot was exported from, and
+/// crash-safe (see the module docs).
+pub fn save_state(
+    meta: &VariantMeta,
+    state: &[Vec<f32>],
+    dir: &Path,
+    epoch: usize,
+) -> anyhow::Result<()> {
+    let n = meta.params.len();
+    anyhow::ensure!(
+        state.len() == 2 * n,
+        "state has {} leaves, variant {} expects {}",
+        state.len(),
+        meta.name,
+        2 * n
+    );
     std::fs::create_dir_all(dir)?;
-    let params = exec.export_params()?;
     let mut index = Vec::new();
-    for (i, ((name, data), meta)) in params.iter().zip(&exec.meta.params).enumerate() {
-        let fname = format!("p{:03}_{}.npy", i, name.replace('/', "_"));
-        npy::write_f32(&dir.join(&fname), data, &meta.shape)?;
-        index.push(crate::jobj![("name", name.as_str()), ("file", fname.as_str())]);
+    let mut keep = Vec::with_capacity(2 * n);
+    for (i, m) in meta.params.iter().enumerate() {
+        anyhow::ensure!(
+            state[i].len() == m.numel() && state[n + i].len() == m.numel(),
+            "state leaf {i} shape mismatch for {}",
+            m.name
+        );
+        let stem = m.name.replace('/', "_");
+        let fname = format!("p{i:03}_{stem}.e{epoch}.npy");
+        let vname = format!("v{i:03}_{stem}.e{epoch}.npy");
+        npy::write_f32(&dir.join(&fname), &state[i], &m.shape)?;
+        npy::write_f32(&dir.join(&vname), &state[n + i], &m.shape)?;
+        index.push(crate::jobj![
+            ("name", m.name.as_str()),
+            ("file", fname.as_str()),
+            ("vel", vname.as_str()),
+        ]);
+        keep.push(fname);
+        keep.push(vname);
     }
     let manifest = crate::jobj![
-        ("variant", exec.meta.name.as_str()),
+        ("variant", meta.name.as_str()),
         ("epoch", epoch),
-        ("param_count", exec.meta.param_count),
+        ("param_count", meta.param_count),
         ("params", Json::Arr(index)),
     ];
-    std::fs::write(dir.join("checkpoint.json"), manifest.to_pretty())?;
+    // payloads must be on stable storage before the manifest references
+    // them (a journaled rename can otherwise hit disk first)
+    for f in &keep {
+        crate::util::fsutil::sync_file(&dir.join(f))?;
+    }
+    // atomic pointer flip: readers see the old complete index or this one
+    write_atomic(&dir.join("checkpoint.json"), &manifest.to_pretty())?;
+    // sweep the superseded generation (best effort; stale files that a
+    // crashed sweep leaves behind are never referenced by the index)
+    gc_files(dir, &keep, is_leaf_file);
     Ok(())
 }
 
 /// Load a checkpoint into the executor.  The checkpoint's variant must
-/// match (same parameter names/shapes).  Returns the saved epoch.
+/// match (same parameter names/shapes).  Full checkpoints (with momentum)
+/// restore the complete optimizer state; legacy params-only checkpoints
+/// restore the weights by name and leave momentum untouched.  Returns the
+/// saved epoch.
 pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
     let m = parse_file(&dir.join("checkpoint.json"))?;
     let variant = m.req("variant")?.as_str().unwrap_or_default();
@@ -41,19 +131,49 @@ pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
         "checkpoint is for variant {variant:?}, executor is {:?}",
         exec.meta.name
     );
-    let mut source = Vec::new();
-    for p in m.req("params")?.as_arr().unwrap_or(&[]) {
-        let name = p.req("name")?.as_str().unwrap_or_default().to_string();
-        let file = p.req("file")?.as_str().unwrap_or_default();
-        let (data, _shape) = npy::read_f32(&dir.join(file))?;
-        source.push((name, data));
+    let entries = m.req("params")?.as_arr().unwrap_or(&[]);
+    let full = !entries.is_empty() && entries.iter().all(|p| p.get("vel").is_some());
+    if full {
+        // positional restore — so the leaf names must line up with the
+        // executor's manifest order, or same-sized leaves could land in
+        // the wrong slots
+        anyhow::ensure!(
+            entries.len() == exec.meta.params.len(),
+            "checkpoint has {} leaves, executor expects {}",
+            entries.len(),
+            exec.meta.params.len()
+        );
+        let mut params = Vec::with_capacity(entries.len());
+        let mut vels = Vec::with_capacity(entries.len());
+        for (p, leaf) in entries.iter().zip(&exec.meta.params) {
+            let name = p.req("name")?.as_str().unwrap_or_default();
+            anyhow::ensure!(
+                name == leaf.name,
+                "checkpoint leaf {name:?} does not match executor leaf {:?}",
+                leaf.name
+            );
+            let file = p.req("file")?.as_str().unwrap_or_default();
+            params.push(npy::read_f32(&dir.join(file))?.0);
+            let vfile = p.req("vel")?.as_str().unwrap_or_default();
+            vels.push(npy::read_f32(&dir.join(vfile))?.0);
+        }
+        params.extend(vels); // the export_state layout: params then momentum
+        exec.import_state(&params)?;
+    } else {
+        let mut source = Vec::new();
+        for p in entries {
+            let name = p.req("name")?.as_str().unwrap_or_default().to_string();
+            let file = p.req("file")?.as_str().unwrap_or_default();
+            let (data, _shape) = npy::read_f32(&dir.join(file))?;
+            source.push((name, data));
+        }
+        let imported = exec.import_params(&source)?;
+        anyhow::ensure!(
+            imported == exec.meta.params.len(),
+            "checkpoint restored only {imported}/{} leaves",
+            exec.meta.params.len()
+        );
     }
-    let imported = exec.import_params(&source)?;
-    anyhow::ensure!(
-        imported == exec.meta.params.len(),
-        "checkpoint restored only {imported}/{} leaves",
-        exec.meta.params.len()
-    );
     Ok(m.req("epoch")?.as_usize().unwrap_or(0))
 }
 
@@ -63,11 +183,22 @@ mod tests {
     use crate::runtime::{default_artifacts_dir, XlaRuntime};
 
     #[test]
+    fn leaf_file_pattern() {
+        assert!(is_leaf_file("p000_fc1_w.e7.npy"));
+        assert!(is_leaf_file("v012_conv_b.npy"));
+        assert!(!is_leaf_file("state_loss.e7.npy"));
+        assert!(!is_leaf_file("checkpoint.json"));
+        assert!(!is_leaf_file("px00_fc1_w.npy"));
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
         let dir = std::env::temp_dir().join(format!("kakurenbo_ckpt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
         let mut a = ModelExecutor::new(&rt, "mlp_c10_b64", 11).unwrap();
-        // perturb params so we're not just checking the seeded init
+        // perturb params *and* momentum so we're not just checking the
+        // seeded init
         let x = vec![0.3f32; 64 * 64];
         let y = vec![1i32; 64];
         let sw = vec![1.0f32; 64];
@@ -77,15 +208,77 @@ mod tests {
         let mut b = ModelExecutor::new(&rt, "mlp_c10_b64", 999).unwrap();
         let epoch = load(&mut b, &dir).unwrap();
         assert_eq!(epoch, 7);
-        let pa = a.export_params().unwrap();
-        let pb = b.export_params().unwrap();
-        for ((n1, d1), (n2, d2)) in pa.iter().zip(&pb) {
-            assert_eq!(n1, n2);
-            assert_eq!(d1, d2);
+        // the full state (params + momentum) round-trips bit-exactly
+        let sa = a.export_state().unwrap();
+        let sb = b.export_state().unwrap();
+        assert_eq!(sa.len(), sb.len());
+        for (la, lb) in sa.iter().zip(&sb) {
+            let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb);
         }
+        // a later save into the same dir sweeps the old generation
+        a.train_step(&x, &y, &sw, 0.1).unwrap();
+        save(&a, &dir, 9).unwrap();
+        let stale: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.unwrap().file_name().into_string().ok())
+            .filter(|n| is_leaf_file(n) && n.contains(".e7."))
+            .collect();
+        assert!(stale.is_empty(), "old generation not swept: {stale:?}");
+        assert_eq!(load(&mut b, &dir).unwrap(), 9);
         // wrong variant rejected
         let mut c = ModelExecutor::new(&rt, "mlp_c100_b64", 1).unwrap();
         assert!(load(&mut c, &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_state_matches_save() {
+        let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
+        let base = std::env::temp_dir()
+            .join(format!("kakurenbo_ckpt_state_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        let (da, db) = (base.join("a"), base.join("b"));
+        let mut a = ModelExecutor::new(&rt, "mlp_c10_b64", 5).unwrap();
+        let x = vec![0.2f32; 64 * 64];
+        let y = vec![2i32; 64];
+        let sw = vec![1.0f32; 64];
+        a.train_step(&x, &y, &sw, 0.05).unwrap();
+        save(&a, &da, 3).unwrap();
+        let snap = a.export_state().unwrap();
+        save_state(&a.meta, &snap, &db, 3).unwrap();
+        // every file the two checkpoints wrote is byte-identical
+        for entry in std::fs::read_dir(&da).unwrap() {
+            let name = entry.unwrap().file_name();
+            let fa = std::fs::read(da.join(&name)).unwrap();
+            let fb = std::fs::read(db.join(&name)).unwrap();
+            assert_eq!(fa, fb, "{name:?} differs");
+        }
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn reordered_index_names_rejected() {
+        let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
+        let dir = std::env::temp_dir()
+            .join(format!("kakurenbo_ckpt_names_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let a = ModelExecutor::new(&rt, "mlp_c10_b64", 2).unwrap();
+        save(&a, &dir, 1).unwrap();
+        // swap two index entries: positional load must refuse the
+        // name mismatch instead of loading leaves into wrong slots
+        let path = dir.join("checkpoint.json");
+        let mut m = parse_file(&path).unwrap();
+        if let Json::Obj(obj) = &mut m {
+            if let Some(Json::Arr(entries)) = obj.get_mut("params") {
+                entries.swap(0, 1);
+            }
+        }
+        std::fs::write(&path, m.to_pretty()).unwrap();
+        let mut b = ModelExecutor::new(&rt, "mlp_c10_b64", 3).unwrap();
+        let err = load(&mut b, &dir).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

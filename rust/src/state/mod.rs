@@ -33,6 +33,13 @@ pub struct SampleState {
     pub last_update_epoch: Vec<u32>,
     /// How many times the sample has been hidden over the run (Figs. 6/7).
     pub hide_count: Vec<u32>,
+    /// Running count of `hidden` bits, maintained incrementally by
+    /// `set_hidden`/`roll_epoch` so the per-epoch metrics roll-up is O(1)
+    /// instead of a full-N scan (the scans survive as debug assertions).
+    hidden_now: usize,
+    /// Running count of samples hidden both this epoch and the previous
+    /// one (Fig. 8), maintained like `hidden_now`.
+    hidden_again_now: usize,
 }
 
 impl SampleState {
@@ -51,6 +58,8 @@ impl SampleState {
             ever_correct: vec![false; n],
             last_update_epoch: vec![0; n],
             hide_count: vec![0; n],
+            hidden_now: 0,
+            hidden_again_now: 0,
         }
     }
 
@@ -75,27 +84,60 @@ impl SampleState {
     pub fn roll_epoch(&mut self) {
         std::mem::swap(&mut self.hidden, &mut self.hidden_prev);
         self.hidden.iter_mut().for_each(|h| *h = false);
+        self.hidden_now = 0;
+        self.hidden_again_now = 0;
     }
 
     /// Mark the hidden set for this epoch (after selection).
     pub fn set_hidden(&mut self, hidden_indices: &[u32]) {
         for &i in hidden_indices {
-            self.hidden[i as usize] = true;
-            self.hide_count[i as usize] += 1;
+            let i = i as usize;
+            if !self.hidden[i] {
+                self.hidden[i] = true;
+                self.hidden_now += 1;
+                if self.hidden_prev[i] {
+                    self.hidden_again_now += 1;
+                }
+            }
+            self.hide_count[i] += 1;
         }
+        debug_assert_eq!(self.hidden_now, self.hidden.iter().filter(|&&h| h).count());
     }
 
+    /// How many samples are hidden this epoch — O(1), incrementally
+    /// maintained (the debug build cross-checks against the full scan).
     pub fn hidden_count(&self) -> usize {
-        self.hidden.iter().filter(|&&h| h).count()
+        debug_assert_eq!(
+            self.hidden_now,
+            self.hidden.iter().filter(|&&h| h).count()
+        );
+        self.hidden_now
     }
 
-    /// Samples hidden both this epoch and the previous one (Fig. 8).
+    /// Samples hidden both this epoch and the previous one (Fig. 8) —
+    /// O(1), incrementally maintained like [`SampleState::hidden_count`].
     pub fn hidden_again_count(&self) -> usize {
-        self.hidden
+        debug_assert_eq!(
+            self.hidden_again_now,
+            self.hidden
+                .iter()
+                .zip(&self.hidden_prev)
+                .filter(|(&a, &b)| a && b)
+                .count()
+        );
+        self.hidden_again_now
+    }
+
+    /// Recompute the incremental counters from the bit vectors — used
+    /// after a checkpoint restore writes the vectors wholesale.
+    pub fn rebuild_counters(&mut self) {
+        self.hidden_now = self.hidden.iter().filter(|&&h| h).count();
+        self.hidden_again_now = self
+            .hidden
             .iter()
             .zip(&self.hidden_prev)
             .filter(|(&a, &b)| a && b)
-            .count()
+            .count();
     }
 
     /// Per-class hidden counts (Figs. 6/7).
@@ -165,6 +207,30 @@ mod tests {
         assert!(s.high_confidence_correct(0, 0.7));
         s.record(0, 0.1, false, 0.99, 2);
         assert!(!s.high_confidence_correct(0, 0.7));
+    }
+
+    #[test]
+    fn incremental_counters_track_scans() {
+        let mut s = SampleState::new(8);
+        s.set_hidden(&[0, 2, 4]);
+        assert_eq!(s.hidden_count(), 3);
+        assert_eq!(s.hidden_again_count(), 0);
+        s.roll_epoch();
+        s.set_hidden(&[2, 4, 6]);
+        assert_eq!(s.hidden_count(), 3);
+        assert_eq!(s.hidden_again_count(), 2); // 2 and 4 repeat
+        // duplicate marks neither double-count the hidden totals ...
+        s.set_hidden(&[2]);
+        assert_eq!(s.hidden_count(), 3);
+        assert_eq!(s.hidden_again_count(), 2);
+        // ... but still bump the per-sample hide tally, as before
+        assert_eq!(s.hide_count[2], 3);
+        // wholesale vector writes rebuild the counters
+        s.hidden = vec![true; 8];
+        s.hidden_prev = vec![false; 8];
+        s.rebuild_counters();
+        assert_eq!(s.hidden_count(), 8);
+        assert_eq!(s.hidden_again_count(), 0);
     }
 
     #[test]

@@ -1,0 +1,89 @@
+//! Filesystem helpers for crash-safe persistence.
+//!
+//! Checkpoint and resume manifests are the *pointer* to a set of payload
+//! files; writing them through [`write_atomic`] (temp file + rename, the
+//! POSIX atomic-replace idiom) means a reader either sees the complete
+//! old manifest or the complete new one, never a torn write.  Payload
+//! files get epoch-suffixed names so a new save never overwrites the set
+//! the current manifest points at; [`gc_files`] sweeps the superseded
+//! generation once the new manifest is durable.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write `contents` to `path` atomically **and durably**: the bytes land
+/// in a `.tmp` sibling, are fsynced to stable storage, and the file is
+/// renamed over the destination — so even across power loss a reader
+/// sees either the complete old file or the complete new one, never a
+/// prefix or a rename pointing at unwritten blocks.
+pub fn write_atomic(path: &Path, contents: &str) -> anyhow::Result<()> {
+    let file = path
+        .file_name()
+        .and_then(|f| f.to_str())
+        .ok_or_else(|| anyhow::anyhow!("write_atomic: bad path {path:?}"))?;
+    let tmp = path.with_file_name(format!("{file}.tmp"));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(contents.as_bytes())?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Flush an already-written payload file to stable storage (fsync).
+/// Called on every payload before the manifest flip, so a durable
+/// manifest never references data still sitting in the page cache.
+pub fn sync_file(path: &Path) -> anyhow::Result<()> {
+    std::fs::File::open(path)?.sync_all()?;
+    Ok(())
+}
+
+/// Best-effort sweep of superseded payload files: removes every entry of
+/// `dir` for which `matches` returns true that is not named in `keep`.
+/// Errors are swallowed — garbage from a failed sweep is harmless (the
+/// manifest never references it), a failed save is not.
+pub fn gc_files(dir: &Path, keep: &[String], matches: impl Fn(&str) -> bool) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if matches(name) && !keep.iter().any(|k| k == name) {
+            let _ = std::fs::remove_file(e.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("kakurenbo_fsutil_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = tmp("atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        write_atomic(&path, "old").unwrap();
+        write_atomic(&path, "new").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "new");
+        assert!(!dir.join("manifest.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_removes_only_matching_unkept_files() {
+        let dir = tmp("gc");
+        std::fs::create_dir_all(&dir).unwrap();
+        for f in ["a.e1.npy", "a.e2.npy", "other.txt"] {
+            std::fs::write(dir.join(f), "x").unwrap();
+        }
+        gc_files(&dir, &["a.e2.npy".to_string()], |n| n.ends_with(".npy"));
+        assert!(!dir.join("a.e1.npy").exists());
+        assert!(dir.join("a.e2.npy").exists());
+        assert!(dir.join("other.txt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

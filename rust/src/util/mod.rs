@@ -2,6 +2,7 @@
 //! in as dependencies, implemented in-tree (see DESIGN.md §4).
 
 pub mod csv;
+pub mod fsutil;
 pub mod json;
 pub mod logging;
 pub mod npy;

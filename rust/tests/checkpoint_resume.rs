@@ -1,0 +1,150 @@
+//! The exact-resume contract: a run interrupted at a checkpoint and
+//! resumed with `--resume` must replay the uninterrupted run's tail **bit
+//! for bit** — same loss curves, same hidden sets, same final parameters.
+//!
+//! This holds because a checkpoint now captures *everything* the next
+//! epoch's planning and training read: model parameters + SGD momentum
+//! (`runtime/checkpoint.rs`), and the coordinator-side per-sample stats,
+//! RNG stream, and schedule offset (`coordinator/resume.rs`).
+//!
+//! All tests are skipped (not failed) when the PJRT artifacts are absent.
+
+use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+use kakurenbo::coordinator::Trainer;
+use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn runtime() -> Option<XlaRuntime> {
+    XlaRuntime::new(&default_artifacts_dir()).ok()
+}
+
+fn small_cfg() -> kakurenbo::config::ExperimentConfig {
+    let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+    cfg.epochs = 6;
+    if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
+        c.n_train = 512;
+        c.n_val = 128;
+    }
+    cfg.eval_every = 1;
+    cfg
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("kakurenbo_resume_{name}_{}", std::process::id()))
+}
+
+fn assert_records_bitwise_eq(
+    a: &[kakurenbo::metrics::EpochRecord],
+    b: &[kakurenbo::metrics::EpochRecord],
+) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.epoch, y.epoch);
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.val_loss.to_bits(), y.val_loss.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.base_lr.to_bits(), y.base_lr.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.hidden, y.hidden, "epoch {}", x.epoch);
+        assert_eq!(x.hidden_again, y.hidden_again, "epoch {}", x.epoch);
+        assert_eq!(x.max_hidden, y.max_hidden, "epoch {}", x.epoch);
+        assert_eq!(x.moved_back, y.moved_back, "epoch {}", x.epoch);
+        assert_eq!(x.trained_samples, y.trained_samples, "epoch {}", x.epoch);
+        assert_eq!(x.backprop_samples, y.backprop_samples, "epoch {}", x.epoch);
+    }
+}
+
+fn assert_params_bitwise_eq(a: &Trainer, b: &Trainer) {
+    let pa = a.exec.export_params().unwrap();
+    let pb = b.exec.export_params().unwrap();
+    assert_eq!(pa.len(), pb.len());
+    for ((na, da), (nb, db)) in pa.iter().zip(&pb) {
+        assert_eq!(na, nb);
+        let ba: Vec<u32> = da.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = db.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb, "param {na} differs");
+    }
+}
+
+/// Train k epochs with `checkpoint_every`, resume with `--resume`, and
+/// the resumed run's records are bitwise identical to the uninterrupted
+/// run's tail (KAKURENBO: the hiding selector, RNG shuffles, and LR
+/// compensation all replay exactly).
+#[test]
+fn resumed_kakurenbo_run_matches_uninterrupted_tail() {
+    let Some(rt) = runtime() else { return };
+    let dir = tmp_dir("kaku");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut cfg = small_cfg();
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+
+    // the uninterrupted reference run (no checkpointing, same seed)
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.checkpoint_every = 0;
+    ref_cfg.checkpoint_dir = None;
+    let mut full = Trainer::new(&rt, ref_cfg).unwrap();
+    let full_result = full.run().unwrap();
+
+    // the "interrupted" run: epochs 0..3 only (the pipeline's checkpoint
+    // phase writes at epoch 0 and 2), then the process "dies"
+    {
+        let mut t = Trainer::new(&rt, cfg.clone()).unwrap();
+        for epoch in 0..3 {
+            t.run_epoch(epoch).unwrap();
+        }
+    }
+
+    // resume: picks up at epoch 3 from the epoch-2 checkpoint
+    cfg.resume = true;
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    let resumed_result = resumed.run().unwrap();
+
+    assert_eq!(resumed_result.records.first().unwrap().epoch, 3);
+    assert_records_bitwise_eq(&resumed_result.records, &full_result.records[3..]);
+    assert_params_bitwise_eq(&resumed, &full);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same contract for the baseline strategy (pure-shuffle planning), and
+/// through the async service lane: checkpoints written off the critical
+/// path must resume just as exactly.
+#[test]
+fn resumed_baseline_run_matches_tail_via_service_lane() {
+    let Some(rt) = runtime() else { return };
+    let dir = tmp_dir("base_svc");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut cfg = small_cfg();
+    cfg.strategy = StrategyConfig::Baseline;
+    cfg.checkpoint_every = 3;
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.service_lane = true;
+
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.checkpoint_every = 0;
+    ref_cfg.checkpoint_dir = None;
+    ref_cfg.service_lane = false;
+    let mut full = Trainer::new(&rt, ref_cfg).unwrap();
+    let full_result = full.run().unwrap();
+
+    // interrupted after epoch 3 (checkpoints at epochs 0 and 3); the
+    // trainer drops here, which drains the lane's in-flight writes
+    {
+        let mut t = Trainer::new(&rt, cfg.clone()).unwrap();
+        for epoch in 0..4 {
+            t.run_epoch(epoch).unwrap();
+        }
+    }
+
+    cfg.resume = true;
+    cfg.service_lane = false; // resume through the sync path
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    let resumed_result = resumed.run().unwrap();
+
+    assert_eq!(resumed_result.records.first().unwrap().epoch, 4);
+    assert_records_bitwise_eq(&resumed_result.records, &full_result.records[4..]);
+    assert_params_bitwise_eq(&resumed, &full);
+    std::fs::remove_dir_all(&dir).ok();
+}

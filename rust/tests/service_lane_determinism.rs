@@ -1,0 +1,227 @@
+//! The service-lane determinism contract: evaluation (and checkpointing)
+//! moved onto the async background lane must be **bitwise identical** to
+//! the synchronous path — the lane consumes an exact exported snapshot,
+//! so going async can change *when* the numbers are computed but never
+//! *what* they are.
+//!
+//! Two layers of coverage:
+//!   * engine-level (mock backend, always runs): lane eval vs the
+//!     engine's `EvalSink` path on the same state;
+//!   * trainer-level (PJRT, skipped without artifacts): full runs with
+//!     `--service-lane on` vs `off` must produce bitwise-identical
+//!     records (loss curves, val accuracy, hidden counts), final
+//!     parameters, and byte-identical checkpoints.
+
+use std::sync::Arc;
+
+use kakurenbo::config::{presets, DatasetConfig, StrategyConfig};
+use kakurenbo::coordinator::Trainer;
+use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{
+    DataParallel, Engine, EvalSink, ServiceEvent, ServiceLane, StateExchange, StepMode,
+};
+use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+
+const B: usize = 8;
+
+/// Engine-level: the lane's eval of an exported snapshot is bitwise
+/// identical to the engine's synchronous eval of the same backend state.
+#[test]
+fn async_eval_matches_sync_eval_bitwise() {
+    let tv = gauss_mixture(
+        &GaussMixtureCfg { n_train: 64, n_val: 37, dim: 6, classes: 3, ..Default::default() },
+        11,
+    );
+    // move the backend off its init so the test is not vacuous
+    let mut primary = MockBackend::new();
+    let mut eng = Engine::new(&tv.train, B);
+    let order: Vec<u32> = (0..64).collect();
+    let mut sink = EvalSink::default();
+    eng.run(&mut primary, &tv.train, &order, None, StepMode::Train { lr: 0.05 }, &mut sink)
+        .unwrap();
+
+    // sync: engine + EvalSink over the validation order
+    let val_order: Vec<u32> = (0..tv.val.n as u32).collect();
+    let mut sync_sink = EvalSink::default();
+    let mut eval_eng = Engine::new(&tv.val, B);
+    eval_eng
+        .run(&mut primary, &tv.val, &val_order, None, StepMode::Forward, &mut sync_sink)
+        .unwrap();
+    let (sync_acc, sync_loss) = sync_sink.result();
+
+    // async: the lane's replica evaluates the exported snapshot
+    let mut lane = ServiceLane::spawn(
+        primary.replica_builder().unwrap(),
+        tv.val.clone(),
+        B,
+        None,
+    )
+    .unwrap();
+    let snap = Arc::new(primary.export_state().unwrap());
+    lane.submit_eval(9, snap).unwrap();
+    let events = lane.drain().unwrap();
+    assert_eq!(events.len(), 1);
+    match &events[0] {
+        ServiceEvent::Eval { epoch, acc, loss, .. } => {
+            assert_eq!(*epoch, 9);
+            assert_eq!(acc.to_bits(), sync_acc.to_bits());
+            assert_eq!(loss.to_bits(), sync_loss.to_bits());
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+/// Engine-level: a stale snapshot evaluates the *snapshot*, not whatever
+/// the primary has trained to since — the lane must be time-shifted, not
+/// state-shifted.
+#[test]
+fn lane_evaluates_the_snapshot_not_the_live_backend() {
+    let tv = gauss_mixture(
+        &GaussMixtureCfg { n_train: 48, n_val: 19, dim: 6, classes: 3, ..Default::default() },
+        3,
+    );
+    let mut primary = MockBackend::new();
+    let snap_before = Arc::new(primary.export_state().unwrap());
+    let (ref_acc, ref_loss) = {
+        let val_order: Vec<u32> = (0..tv.val.n as u32).collect();
+        let mut sink = EvalSink::default();
+        let mut eng = Engine::new(&tv.val, B);
+        eng.run(&mut primary, &tv.val, &val_order, None, StepMode::Forward, &mut sink)
+            .unwrap();
+        sink.result()
+    };
+    // train the primary onward; the snapshot must be unaffected
+    let order: Vec<u32> = (0..48).collect();
+    let mut eng = Engine::new(&tv.train, B);
+    let mut sink = EvalSink::default();
+    eng.run(&mut primary, &tv.train, &order, None, StepMode::Train { lr: 0.1 }, &mut sink)
+        .unwrap();
+
+    let mut lane = ServiceLane::spawn(
+        primary.replica_builder().unwrap(),
+        tv.val.clone(),
+        B,
+        None,
+    )
+    .unwrap();
+    lane.submit_eval(0, snap_before).unwrap();
+    let events = lane.drain().unwrap();
+    match &events[0] {
+        ServiceEvent::Eval { acc, loss, .. } => {
+            assert_eq!(acc.to_bits(), ref_acc.to_bits());
+            assert_eq!(loss.to_bits(), ref_loss.to_bits());
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+// --- trainer-level (PJRT; skipped when artifacts are absent) -------------
+
+fn runtime() -> Option<XlaRuntime> {
+    XlaRuntime::new(&default_artifacts_dir()).ok()
+}
+
+fn small_cfg() -> kakurenbo::config::ExperimentConfig {
+    let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+    cfg.epochs = 5;
+    if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
+        c.n_train = 512;
+        c.n_val = 192;
+    }
+    cfg.eval_every = 1;
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    cfg
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("kakurenbo_svc_{name}_{}", std::process::id()))
+}
+
+/// With `--service-lane on`, the per-epoch RunResult (loss curves, val
+/// accuracy, hidden counts) is bitwise identical to `off`, the final
+/// parameters match bit for bit, and the checkpoints written by the two
+/// paths are byte-identical.
+#[test]
+fn service_lane_run_is_bitwise_identical_to_sync_run() {
+    let Some(rt) = runtime() else { return };
+    let dir_off = tmp_dir("off");
+    let dir_on = tmp_dir("on");
+    std::fs::remove_dir_all(&dir_off).ok();
+    std::fs::remove_dir_all(&dir_on).ok();
+
+    let run = |on: bool| {
+        let mut cfg = small_cfg();
+        cfg.service_lane = on;
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_dir = Some(if on { dir_on.clone() } else { dir_off.clone() });
+        let mut t = Trainer::new(&rt, cfg).unwrap();
+        let result = t.run().unwrap();
+        let params = t.exec.export_params().unwrap();
+        (result, params)
+    };
+    let (r_off, p_off) = run(false);
+    let (r_on, p_on) = run(true);
+
+    assert_eq!(r_off.records.len(), r_on.records.len());
+    for (a, b) in r_off.records.iter().zip(&r_on.records) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.hidden, b.hidden, "epoch {}", a.epoch);
+        assert_eq!(a.hidden_again, b.hidden_again, "epoch {}", a.epoch);
+        assert_eq!(a.moved_back, b.moved_back, "epoch {}", a.epoch);
+        assert_eq!(a.trained_samples, b.trained_samples, "epoch {}", a.epoch);
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "epoch {}", a.epoch);
+    }
+    assert_eq!(r_off.final_acc.to_bits(), r_on.final_acc.to_bits());
+    assert_eq!(r_off.best_acc.to_bits(), r_on.best_acc.to_bits());
+    // async epochs report the lane's off-path seconds
+    assert!(r_on.records.iter().any(|r| r.time_service > 0.0));
+
+    // final parameters bit for bit
+    assert_eq!(p_off.len(), p_on.len());
+    for ((na, da), (nb, db)) in p_off.iter().zip(&p_on) {
+        assert_eq!(na, nb);
+        let ba: Vec<u32> = da.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = db.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb, "param {na} differs");
+    }
+
+    // checkpoints byte-identical (the lane serialized an exact snapshot)
+    let mut names: Vec<_> = std::fs::read_dir(&dir_off)
+        .unwrap()
+        .map(|e| e.unwrap().file_name())
+        .collect();
+    names.sort();
+    assert!(!names.is_empty());
+    for name in names {
+        let a = std::fs::read(dir_off.join(&name)).unwrap();
+        let b = std::fs::read(dir_on.join(&name)).unwrap();
+        assert_eq!(a, b, "checkpoint file {name:?} differs");
+    }
+    std::fs::remove_dir_all(&dir_off).ok();
+    std::fs::remove_dir_all(&dir_on).ok();
+}
+
+/// The service lane composes with the worker pool's data-parallel
+/// schedule: `--workers 2 --dp average --service-lane on` reproduces the
+/// sync run's records bitwise.
+#[test]
+fn service_lane_composes_with_dp_average() {
+    let Some(rt) = runtime() else { return };
+    let run = |on: bool| {
+        let mut cfg = small_cfg();
+        cfg.workers = 2;
+        cfg.dp = kakurenbo::config::DpMode::Average;
+        cfg.service_lane = on;
+        Trainer::new(&rt, cfg).unwrap().run().unwrap()
+    };
+    let r_off = run(false);
+    let r_on = run(true);
+    for (a, b) in r_off.records.iter().zip(&r_on.records) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.val_acc.to_bits(), b.val_acc.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.hidden, b.hidden, "epoch {}", a.epoch);
+    }
+}
