@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     up.name = "transfer/upstream".into();
     let mut up_tr = Trainer::new(&rt, up)?;
     let up_run = up_tr.run()?;
-    let trunk = up_tr.exec.export_params()?;
+    let trunk = up_tr.exec.export_named_params()?;
     println!(
         "upstream: final loss {:.3}, time {:.1}s",
         up_run.records.last().unwrap().train_loss,
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let mut ft_cfg = mk_cfg()?;
     ft_cfg.name = "transfer/finetune".into();
     let mut ft = Trainer::new(&rt, ft_cfg)?;
-    let imported = ft.exec.import_params(&trunk)?;
+    let imported = ft.exec.import_named_params(&trunk)?;
     println!("imported {imported} trunk leaves (head re-initialized: class count differs)");
     let finetuned = ft.run()?;
 

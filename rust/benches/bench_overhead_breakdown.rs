@@ -1,21 +1,23 @@
 //! §4.2 epoch-time accounting + distributed cost-model projection.
 //!
 //! Reports (a) the measured per-epoch breakdown (select / train / refresh)
-//! for each strategy, (b) the service lane's removal of eval time from the
-//! epoch critical path (`--service-lane on` vs `off`), (c) the worker
-//! pool's measured scaling and barrier overhead at W ∈ {1, 2, 4}, and
-//! (d) the calibrated cost model's projection of epoch time across worker
-//! counts — reproducing the paper's claims that KAKURENBO's overheads are
-//! amortized at scale while single-GPU runs can lose (Table 3), and that
-//! the speedup cannot reach the hiding rate because of the hidden-list
-//! forward refresh (Fig. 4).
+//! for each strategy, (b) the service lanes' removal of eval time from the
+//! epoch critical path (`--service-lane on` vs `off`), (c) the snapshot
+//! export tiers — the params-only tier eval-only epochs ride vs the full
+//! (params + momentum) tier checkpoints need (docs/snapshots.md), (d) the
+//! worker pool's measured scaling and barrier overhead at W ∈ {1, 2, 4},
+//! and (e) the calibrated cost model's projection of epoch time across
+//! worker counts — reproducing the paper's claims that KAKURENBO's
+//! overheads are amortized at scale while single-GPU runs can lose
+//! (Table 3), and that the speedup cannot reach the hiding rate because
+//! of the hidden-list forward refresh (Fig. 4).
 
 use kakurenbo::config::{presets, StrategyConfig};
 use kakurenbo::coordinator::{CostModel, Trainer};
 use kakurenbo::data::shard::shard_order_aligned;
 use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
 use kakurenbo::engine::testbed::MockBackend;
-use kakurenbo::engine::{EvalSink, StepMode, WorkerPool};
+use kakurenbo::engine::{EvalSink, SnapshotTier, StateExchange, StepMode, WorkerPool};
 use kakurenbo::report::BenchCtx;
 use kakurenbo::util::table::Table;
 use kakurenbo::util::timer::Timer;
@@ -100,6 +102,53 @@ fn main() -> anyhow::Result<()> {
             ("eval_critical_s", ev),
             ("lane_async_s", lane),
             ("epoch_wall_s", wall),
+        ]);
+    }
+    t.print();
+
+    // --- snapshot export tiers: what one critical-path export costs ---------
+    // The service lanes hide the eval/checkpoint *work*, but the snapshot
+    // export itself stays on the critical path.  The typed tiers
+    // (docs/snapshots.md) make eval-only epochs pay the params tier —
+    // half the leaves, and measurably less device→host traffic, than the
+    // full (params + momentum) tier a checkpoint epoch needs.
+    let mut xcfg = base.clone();
+    xcfg.strategy = StrategyConfig::Baseline;
+    xcfg.name = "overhead/export".into();
+    let xtr = Trainer::new(&ctx.rt, xcfg)?;
+    let reps = 20usize;
+    let mut t = Table::new("Snapshot export tier (critical-path cost per export)")
+        .header(&["tier", "leaves", "elems", "time (s)", "vs full"]);
+    let mut full_s = 0.0;
+    let mut export_payload = Vec::new();
+    for tier in [SnapshotTier::Full, SnapshotTier::Params] {
+        // one warm-up export outside the timer, which also reports the
+        // tier's leaf/element footprint
+        let snap = xtr.exec.export_snapshot(tier)?;
+        let timer = Timer::start();
+        for _ in 0..reps {
+            std::hint::black_box(xtr.exec.export_snapshot(tier)?);
+        }
+        let secs = timer.elapsed_s() / reps as f64;
+        if tier == SnapshotTier::Full {
+            full_s = secs;
+        }
+        t.row(vec![
+            tier.name().to_string(),
+            snap.leaves().to_string(),
+            snap.elems().to_string(),
+            format!("{secs:.6}"),
+            if tier == SnapshotTier::Full {
+                "-".into()
+            } else {
+                format!("{:+.1}%", (secs / full_s - 1.0) * 100.0)
+            },
+        ]);
+        export_payload.push(kakurenbo::jobj![
+            ("tier", tier.name()),
+            ("leaves", snap.leaves()),
+            ("elems", snap.elems()),
+            ("export_s", secs),
         ]);
     }
     t.print();
@@ -246,6 +295,10 @@ fn main() -> anyhow::Result<()> {
     payload.push(kakurenbo::jobj![(
         "service_lane",
         kakurenbo::util::json::Json::Arr(service_payload)
+    )]);
+    payload.push(kakurenbo::jobj![(
+        "export_tiers",
+        kakurenbo::util::json::Json::Arr(export_payload)
     )]);
     ctx.save_json("overhead_breakdown", &kakurenbo::util::json::Json::Arr(payload))?;
     Ok(())

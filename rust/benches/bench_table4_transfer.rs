@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         }
         let mut up = Trainer::new(&ctx.rt, cfg)?;
         let up_run = up.run()?;
-        let trunk = up.exec.export_params()?;
+        let trunk = up.exec.export_named_params()?;
 
         // Downstream: two class-count proxies, baseline fine-tuning.
         let mut down = Vec::new();
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
             dcfg.name = format!("down_{dname}/{label}");
             let mut ft = Trainer::new(&ctx.rt, dcfg)?;
             // Import the pretrained trunk (head shapes differ -> re-init).
-            let imported = ft.exec.import_params(&trunk)?;
+            let imported = ft.exec.import_named_params(&trunk)?;
             assert!(imported >= 4, "trunk transfer failed: {imported} leaves");
             let run = ft.run()?;
             down.push((dname.to_string(), run.best_acc));

@@ -3,10 +3,14 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed command line: subcommand, positionals, and `--key` flags.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// The leading subcommand ("" when the first arg was a flag).
     pub command: String,
+    /// Non-flag arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs (bare `--flag` maps to "true").
     pub flags: BTreeMap<String, String>,
 }
 
@@ -44,18 +48,23 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn parse_env() -> anyhow::Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The raw value of `--key`, if present.
     pub fn flag(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// The value of `--key`, or `default` when absent.
     pub fn flag_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.flag(key).unwrap_or(default)
     }
 
+    /// Parse `--key`'s value as `T` (`Ok(None)` when absent, `Err` with
+    /// the flag name on a parse failure).
     pub fn flag_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -69,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Whether `--key` was given a truthy value (or stood bare).
     pub fn bool_flag(&self, key: &str) -> bool {
         matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
     }

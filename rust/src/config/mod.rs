@@ -1,6 +1,7 @@
 //! Experiment configuration: typed configs, JSON loading, CLI overrides,
 //! and presets mirroring the paper's Appendix B hyper-parameter tables.
 
+/// Named experiment presets mirroring the paper's workloads.
 pub mod presets;
 
 use std::path::PathBuf;
@@ -15,13 +16,18 @@ use crate::util::json::Json;
 /// Which synthetic proxy dataset to train on (DESIGN.md §3).
 #[derive(Clone, Debug)]
 pub enum DatasetConfig {
+    /// Gaussian-mixture classification (the CIFAR-scale proxy).
     GaussMixture(GaussMixtureCfg),
+    /// Hard/easy split with per-band noise (the ImageNet proxy).
     ImagenetProxy(ImagenetProxyCfg),
+    /// Channel-heavy segmentation-style proxy (the DeepCAM workload).
     DeepcamProxy(DeepcamProxyCfg),
+    /// Fractal-boundary classes (the FractalDB transfer source).
     Fractal(FractalCfg),
 }
 
 impl DatasetConfig {
+    /// Generate the train + validation split deterministically in `seed`.
     pub fn generate(&self, seed: u64) -> TrainVal {
         match self {
             DatasetConfig::GaussMixture(c) => crate::data::synth::gauss_mixture(c, seed),
@@ -31,6 +37,7 @@ impl DatasetConfig {
         }
     }
 
+    /// Short dataset-family name (logs / result JSON).
     pub fn kind(&self) -> &'static str {
         match self {
             DatasetConfig::GaussMixture(_) => "gauss_mixture",
@@ -44,13 +51,18 @@ impl DatasetConfig {
 /// KAKURENBO component switches (Table 6 ablation: HE/MB/RF/LR).
 #[derive(Clone, Copy, Debug)]
 pub struct Components {
+    /// HE: hide the highest-loss fraction each epoch.
     pub hide: bool,
+    /// MB: move back samples whose prediction flipped to correct.
     pub move_back: bool,
+    /// RF: reduce the hidden fraction when the loss spread narrows.
     pub reduce_fraction: bool,
+    /// LR: scale the learning rate by the visible-set fraction.
     pub adjust_lr: bool,
 }
 
 impl Components {
+    /// All four components on — the paper's full KAKURENBO (v1111).
     pub const ALL: Components = Components {
         hide: true,
         move_back: true,
@@ -66,6 +78,8 @@ impl Components {
         Ok(Components { hide: b(0), move_back: b(1), reduce_fraction: b(2), adjust_lr: b(3) })
     }
 
+    /// Render the paper's vXXXX naming (inverse of
+    /// [`Components::from_bits`]).
     pub fn label(&self) -> String {
         format!(
             "v{}{}{}{}",
@@ -74,33 +88,66 @@ impl Components {
     }
 }
 
+/// Which sample-selection strategy the run trains with (the catalog in
+/// docs/strategies.md).
 #[derive(Clone, Debug)]
 pub enum StrategyConfig {
     /// Uniform sampling without replacement (paper "Baseline").
     Baseline,
     /// KAKURENBO (§3) with component switches and optional DropTop (App. D).
     Kakurenbo {
+        /// Maximum fraction of the dataset hidden per epoch (paper F).
         max_fraction: f64,
+        /// Confidence threshold for the move-back test (paper τ).
         tau: f32,
+        /// HE/MB/RF/LR component switches (Table 6 ablation).
         components: Components,
+        /// DropTop: additionally drop this top-loss fraction (App. D).
         drop_top: f64,
+        /// Exact-threshold selection algorithm (sort vs quickselect).
         select_mode: SelectMode,
     },
     /// Importance Sampling With Replacement [11].
     Iswr,
     /// Selective-Backprop [17].
-    SelectiveBackprop { beta: f64 },
+    SelectiveBackprop {
+        /// CDF sharpening exponent: accept probability is CDF^beta.
+        beta: f64,
+    },
     /// Online FORGET pruning [13]: train `prune_epoch` epochs, prune the
     /// least-forgettable fraction, restart.
-    Forget { prune_epoch: usize, fraction: f64 },
+    Forget {
+        /// Epoch at which pruning (and the restart) happens.
+        prune_epoch: usize,
+        /// Fraction of the dataset pruned at the restart.
+        fraction: f64,
+    },
     /// GradMatch [18] (simplified per-class last-layer OMP, every R epochs).
-    GradMatch { fraction: f64, every_r: usize },
+    GradMatch {
+        /// Coreset fraction kept per selection round.
+        fraction: f64,
+        /// Re-select the coreset every R epochs.
+        every_r: usize,
+    },
     /// Random hiding baseline (Table 9 / GradMatch paper).
-    RandomHiding { fraction: f64 },
+    RandomHiding {
+        /// Fraction hidden uniformly at random each epoch.
+        fraction: f64,
+    },
     /// InfoBatch [28] extension: unbiased dynamic pruning with rescaling.
-    InfoBatch { r: f64 },
+    InfoBatch {
+        /// Pruning probability applied to the below-mean-loss half.
+        r: f64,
+    },
     /// EL2N [15] extension: early error-norm scoring + permanent pruning.
-    El2n { score_epoch: usize, fraction: f64, restart: bool },
+    El2n {
+        /// Epoch at which EL2N scores are computed.
+        score_epoch: usize,
+        /// Fraction of the dataset pruned after scoring.
+        fraction: f64,
+        /// Whether training restarts from scratch after the prune.
+        restart: bool,
+    },
 }
 
 /// Which worker-pool schedule multi-worker (`--workers N`) training uses.
@@ -159,6 +206,7 @@ pub fn parse_service_lane(value: &str) -> anyhow::Result<bool> {
 }
 
 impl StrategyConfig {
+    /// Full KAKURENBO (all components, paper defaults) at `max_fraction`.
     pub fn kakurenbo(max_fraction: f64) -> Self {
         StrategyConfig::Kakurenbo {
             max_fraction,
@@ -169,6 +217,7 @@ impl StrategyConfig {
         }
     }
 
+    /// Display name (logs, result JSON, bench tables).
     pub fn name(&self) -> String {
         match self {
             StrategyConfig::Baseline => "baseline".into(),
@@ -216,14 +265,22 @@ impl PartialEq for Components {
 /// A complete experiment: model variant + dataset + strategy + schedules.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Experiment display name (results are filed under it).
     pub name: String,
     /// Artifact variant (manifest key), e.g. "cnn_c32_b64".
     pub variant: String,
+    /// Which proxy dataset to generate and train on.
     pub dataset: DatasetConfig,
+    /// The sample-selection strategy (docs/strategies.md).
     pub strategy: StrategyConfig,
+    /// Total training epochs.
     pub epochs: usize,
+    /// Master seed: dataset generation, parameter init, and the
+    /// coordinator RNG stream all derive from it.
     pub seed: u64,
+    /// Learning-rate schedule (base LR, decay, warmup).
     pub lr: LrConfig,
+    /// SGD momentum coefficient.
     pub momentum: f32,
     /// Data-parallel worker count.  `> 1` executes plain training passes
     /// and hidden-stat refreshes through the engine's `WorkerPool` (N
@@ -246,8 +303,9 @@ pub struct ExperimentConfig {
     /// executor trains the next epoch, and results fold back into the
     /// epoch records in fixed epoch order.  Off (the default) keeps
     /// today's serial behavior.  Async eval is bitwise identical to sync
-    /// eval (docs/worker-model.md, "The async service lane").
+    /// eval (docs/snapshots.md).
     pub service_lane: bool,
+    /// Directory holding the AOT-compiled HLO artifacts.
     pub artifacts_dir: PathBuf,
     /// Collect per-class hidden counts / loss histograms (Figs. 5-8).
     pub detailed_metrics: bool,
@@ -260,6 +318,8 @@ pub struct ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// A config with the repo-wide defaults (30 epochs, seed 42, step LR
+    /// with 2 warmup epochs, single worker, service lane off).
     pub fn new(name: &str, variant: &str, dataset: DatasetConfig, strategy: StrategyConfig) -> Self {
         ExperimentConfig {
             name: name.to_string(),
@@ -286,6 +346,8 @@ impl ExperimentConfig {
         }
     }
 
+    /// Reject inconsistent configs up front (bad ranges, `--dp average`
+    /// with one worker or a single-stream strategy, ...).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.epochs > 0, "epochs must be positive");
         anyhow::ensure!(self.workers > 0, "workers must be positive");

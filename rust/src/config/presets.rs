@@ -178,6 +178,7 @@ pub fn by_name(name: &str) -> anyhow::Result<ExperimentConfig> {
     })
 }
 
+/// Every preset name [`by_name`] accepts (sweeps, `--help` listings).
 pub const ALL: &[&str] = &[
     "cifar100_wrn",
     "imagenet_resnet50",

@@ -7,25 +7,31 @@
 //!   Plan -> Train -> Refresh -> Eval -> Checkpoint -> Metrics
 //! ```
 //!
-//! — times each one, and owns the epoch's state-snapshot cache so the
-//! `Eval` and `Checkpoint` phases share a single
-//! [`crate::engine::StateExchange::export_state`] export when both are
-//! due.  The trainer shrinks to orchestration: it loops epochs, delegates
-//! each one here, and folds async service-lane results back into records.
+//! — times each one, and owns the epoch's typed snapshot cache
+//! ([`crate::engine::Snapshot`]): each async phase requests the
+//! [`crate::engine::SnapshotTier`] it needs — `Eval` the cheap
+//! params-only tier, `Checkpoint` the full tier — and the cache exports
+//! **exactly once per epoch**, at the highest tier any phase of the
+//! epoch will ask for, so an epoch that both evals and checkpoints
+//! shares one full export while an eval-only epoch pays only the halved
+//! params export (see docs/snapshots.md).  The trainer shrinks to
+//! orchestration: it loops epochs, delegates each one here, and folds
+//! async service-lane results back into records.
 //!
 //! # The async lanes
 //!
 //! With `cfg.service_lane` on, `Eval` and `Checkpoint` do not execute on
 //! the critical path at all: each exports (or reuses) the epoch's exact
-//! parameter snapshot and enqueues the job on the engine's
-//! [`crate::engine::ServiceLane`], which runs it on a persistent
-//! background replica while the primary executor trains the next epoch.
-//! Results fold back into the epoch's record at the next barrier —
-//! after each `Trainer::run` loop iteration, and a final blocking drain
-//! before the run returns — in fixed epoch order (the lane is a single
-//! FIFO worker, so completion order *is* submission order).  Because the
-//! lane evaluates an exact snapshot with the identical accumulation
-//! order, async eval is bitwise identical to sync eval
+//! snapshot and enqueues the job on the engine's split
+//! [`crate::engine::ServiceLanes`] — evals on the eval lane's replica,
+//! checkpoint serialization on the independent checkpoint lane — while
+//! the primary executor trains the next epoch.  Results fold back into
+//! the epoch's record at the next barrier — after each `Trainer::run`
+//! loop iteration, and a final blocking drain before the run returns —
+//! merged in `(epoch, eval-before-checkpoint)` order and keyed by epoch,
+//! so fold-in is deterministic whichever lane finishes first.  Because
+//! the eval lane evaluates an exact snapshot with the identical
+//! accumulation order, async eval is bitwise identical to sync eval
 //! (`tests/service_lane_determinism.rs`).
 
 use std::sync::Arc;
@@ -34,7 +40,8 @@ use crate::config::{DpMode, StrategyConfig};
 use crate::coordinator::trainer::Trainer;
 use crate::data::shard::shard_order_aligned;
 use crate::engine::{
-    execute_plan, execute_sharded_average, execute_sharded_plain, StateSnapshot,
+    execute_plan, execute_sharded_average, execute_sharded_plain, SharedSnapshot, SnapshotTier,
+    StateExchange,
 };
 use crate::metrics::EpochRecord;
 use crate::strategies::{BatchMode, EpochPlan, PlanCtx};
@@ -101,9 +108,13 @@ impl PhaseTimings {
 /// Drives one epoch through the staged pipeline (see the module docs).
 pub struct EpochPipeline {
     epoch: usize,
-    /// The epoch's exported state snapshot, shared by the Eval and
+    /// The epoch's exported typed snapshot, shared by the Eval and
     /// Checkpoint phases so two async jobs cost one export.
-    snapshot: Option<StateSnapshot>,
+    snapshot: Option<SharedSnapshot>,
+    /// Whether any phase of this epoch will need the full tier (an async
+    /// checkpoint is due) — decided up front so the first `snapshot()`
+    /// call exports at the right tier and later phases reuse it.
+    full_needed: bool,
     timings: PhaseTimings,
 }
 
@@ -112,7 +123,15 @@ impl EpochPipeline {
     /// epoch's record (val fields pending when the service lane is on —
     /// the trainer folds them in at the next barrier).
     pub fn run(trainer: &mut Trainer, epoch: usize) -> anyhow::Result<EpochRecord> {
-        let mut pipe = EpochPipeline { epoch, snapshot: None, timings: PhaseTimings::default() };
+        let full_needed = trainer.cfg.service_lane
+            && trainer.cfg.checkpoint_dir.is_some()
+            && Self::checkpoint_due(trainer, epoch);
+        let mut pipe = EpochPipeline {
+            epoch,
+            snapshot: None,
+            full_needed,
+            timings: PhaseTimings::default(),
+        };
         let mut rec = EpochRecord { epoch, val_acc: f64::NAN, ..Default::default() };
 
         let t = Timer::start();
@@ -160,13 +179,34 @@ impl EpochPipeline {
         }
     }
 
-    /// The epoch's exported full-state snapshot (params + momentum),
-    /// exported at most once per epoch.
-    fn snapshot(&mut self, t: &Trainer) -> anyhow::Result<StateSnapshot> {
+    /// Whether the Eval phase fires this epoch.
+    fn eval_due(t: &Trainer, epoch: usize) -> bool {
+        epoch % t.cfg.eval_every.max(1) == 0 || epoch + 1 == t.cfg.epochs
+    }
+
+    /// Whether the Checkpoint phase fires this epoch.
+    fn checkpoint_due(t: &Trainer, epoch: usize) -> bool {
+        t.cfg.checkpoint_every > 0
+            && (epoch % t.cfg.checkpoint_every == 0 || epoch + 1 == t.cfg.epochs)
+    }
+
+    /// The epoch's exported typed snapshot, exported **at most once per
+    /// epoch**: the first caller triggers the export — at `Full` when an
+    /// async checkpoint is also due this epoch, else at the tier it asked
+    /// for — and every later caller whose tier the cached snapshot
+    /// satisfies shares the same `Arc`.
+    fn snapshot(
+        &mut self,
+        t: &Trainer,
+        tier: SnapshotTier,
+    ) -> anyhow::Result<SharedSnapshot> {
         if let Some(s) = &self.snapshot {
-            return Ok(s.clone());
+            if s.tier() >= tier {
+                return Ok(s.clone());
+            }
         }
-        let snap: StateSnapshot = Arc::new(t.exec.export_state()?);
+        let want = if self.full_needed { SnapshotTier::Full } else { tier };
+        let snap: SharedSnapshot = Arc::new(t.exec.export_snapshot(want)?);
         self.snapshot = Some(snap.clone());
         Ok(snap)
     }
@@ -284,16 +324,17 @@ impl EpochPipeline {
     // --- Eval: sync forward pass, or snapshot + async submit --------------
     fn eval(&mut self, t: &mut Trainer, rec: &mut EpochRecord) -> anyhow::Result<()> {
         let epoch = self.epoch;
-        let eval_due =
-            epoch % t.cfg.eval_every.max(1) == 0 || epoch + 1 == t.cfg.epochs;
-        if !eval_due {
+        if !Self::eval_due(t, epoch) {
             return Ok(());
         }
         if t.cfg.service_lane {
-            let snap = self.snapshot(t)?;
+            // the eval lane reads only parameters, so an eval-only epoch
+            // exports the halved params tier; when a checkpoint is also
+            // due this epoch the cache hands back the shared full export
+            let snap = self.snapshot(t, SnapshotTier::Params)?;
             t.ensure_service()?;
-            let lane = t.service.as_mut().expect("ensure_service populated the lane");
-            lane.submit_eval(epoch, snap)?;
+            let lanes = t.service.as_mut().expect("ensure_service populated the lanes");
+            lanes.submit_eval(epoch, snap)?;
             // rec.val_acc stays NaN-pending; the trainer folds the lane's
             // result in at the next barrier (bitwise identical to the
             // sync value below)
@@ -308,17 +349,17 @@ impl EpochPipeline {
     // --- Checkpoint: sync serialization, or snapshot + async submit -------
     fn checkpoint(&mut self, t: &mut Trainer) -> anyhow::Result<()> {
         let epoch = self.epoch;
-        let due = t.cfg.checkpoint_every > 0
-            && (epoch % t.cfg.checkpoint_every == 0 || epoch + 1 == t.cfg.epochs);
-        if !due {
+        if !Self::checkpoint_due(t, epoch) {
             return Ok(());
         }
         let Some(dir) = t.cfg.checkpoint_dir.clone() else { return Ok(()) };
         if t.cfg.service_lane {
-            let snap = self.snapshot(t)?;
+            // a resumable checkpoint needs the optimizer trajectory: the
+            // full tier, shared with this epoch's eval when one was due
+            let snap = self.snapshot(t, SnapshotTier::Full)?;
             t.ensure_service()?;
-            let lane = t.service.as_mut().expect("ensure_service populated the lane");
-            lane.submit_checkpoint(epoch, snap)?;
+            let lanes = t.service.as_mut().expect("ensure_service populated the lanes");
+            lanes.submit_checkpoint(epoch, snap)?;
         } else {
             crate::runtime::checkpoint::save(&t.exec, &dir, epoch)?;
         }

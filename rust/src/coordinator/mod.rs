@@ -9,12 +9,11 @@
 //! multi-worker epochs (`cfg.workers > 1`) through the `WorkerPool`'s
 //! deterministic bulk-synchronous schedule, and — with `--service-lane
 //! on` — eval and checkpointing leave the critical path entirely via the
-//! engine's `ServiceLane` (docs/worker-model.md).  The [`CostModel`]
+//! engine's split `ServiceLanes`, riding typed snapshot tiers
+//! (docs/snapshots.md, docs/worker-model.md).  The [`CostModel`]
 //! projects measured single-host step latencies to the paper's
 //! multi-GPU scale; [`resume`] persists the coordinator-side state that
 //! makes `--resume` bit-exact.
-
-#![warn(missing_docs)]
 
 pub mod costmodel;
 pub mod epoch;

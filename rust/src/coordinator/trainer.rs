@@ -23,12 +23,15 @@
 //! setup for those baselines.
 //!
 //! With `cfg.service_lane` on, the Eval and Checkpoint phases leave the
-//! critical path entirely: they export an exact parameter snapshot and
-//! enqueue the job on a persistent background [`ServiceLane`] (its own
-//! replica of the executor, built on its own thread), whose results this
-//! trainer folds back into the epoch records at the next barrier in
-//! fixed epoch order.  Async eval is bitwise identical to sync eval
-//! (`tests/service_lane_determinism.rs`).
+//! critical path entirely: they export an exact typed snapshot — the
+//! params-only tier for eval-only epochs, the full tier when a
+//! checkpoint is due — and enqueue the job on the split background
+//! [`ServiceLanes`] (an eval lane with its own replica of the executor,
+//! and an independent checkpoint lane), whose results this trainer folds
+//! back into the epoch records at the next barrier, keyed by epoch.
+//! Async eval is bitwise identical to sync eval
+//! (`tests/service_lane_determinism.rs`); snapshot tiers and the lane
+//! lifecycle are documented in docs/snapshots.md.
 
 use crate::config::{ExperimentConfig, StrategyConfig};
 use crate::coordinator::costmodel::CostModel;
@@ -36,8 +39,8 @@ use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    CheckpointWriter, Engine, EvalSink, RefreshSink, ServiceEvent, ServiceLane, StepMode,
-    WorkerPool,
+    CheckpointWriter, Engine, EvalSink, RefreshSink, ServiceEvent, ServiceLanes, Snapshot,
+    StepMode, WorkerPool,
 };
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
@@ -66,9 +69,9 @@ pub struct Trainer {
     /// The multi-worker execution driver used when `cfg.workers > 1`
     /// (N gather lanes behind a deterministic bulk-synchronous reduction).
     pub pool: WorkerPool,
-    /// The async eval/checkpoint lane (spawned lazily on first use when
-    /// `cfg.service_lane`; `None` otherwise).
-    pub(crate) service: Option<ServiceLane>,
+    /// The async eval + checkpoint lanes (spawned lazily on first use
+    /// when `cfg.service_lane`; `None` otherwise).
+    pub(crate) service: Option<ServiceLanes>,
     pub(crate) strategy: Box<dyn Strategy>,
     pub(crate) rng: Rng,
     pub(crate) sb: SbSelector,
@@ -164,9 +167,9 @@ impl Trainer {
                 }
             }
         }
-        // Spawn the service lane before the epoch loop: the one-time
-        // replica build (its own PJRT client + compiled executables) is
-        // paid here, outside every epoch's timed phases, instead of
+        // Spawn the service lanes before the epoch loop: the one-time
+        // eval-replica build (its own PJRT client + compiled executables)
+        // is paid here, outside every epoch's timed phases, instead of
         // landing on the first Eval phase's critical path — and build
         // failures surface before any training happens.
         if self.cfg.service_lane {
@@ -190,7 +193,9 @@ impl Trainer {
             }
             records.push(rec);
             // barrier: fold any service-lane results that have completed
-            // (always in fixed epoch order — the lane is a FIFO worker)
+            // (merged in (epoch, eval-before-checkpoint) order and keyed
+            // by epoch, so fold-in is deterministic whichever of the two
+            // lanes finished first)
             self.fold_service(&mut records, start_epoch, false)?;
         }
         // final barrier: every outstanding async eval/checkpoint completes
@@ -209,12 +214,12 @@ impl Trainer {
         EpochPipeline::run(self, epoch)
     }
 
-    /// Spawn the service lane if `cfg.service_lane` asked for one and it
-    /// is not up yet.  The lane gets its own replica of the executor
-    /// (built on the lane thread via the `ReplicaBuilder` contract), a
-    /// clone of the validation set, and — when checkpointing is
-    /// configured — a writer that serializes snapshots through
-    /// `runtime/checkpoint.rs`.
+    /// Spawn the service lanes if `cfg.service_lane` asked for them and
+    /// they are not up yet.  The eval lane gets its own replica of the
+    /// executor (built on the lane thread via the `ReplicaBuilder`
+    /// contract) and a clone of the validation set; the checkpoint lane
+    /// spawns only when checkpointing is configured, with a writer that
+    /// serializes full-state snapshots through `runtime/checkpoint.rs`.
     pub(crate) fn ensure_service(&mut self) -> anyhow::Result<()> {
         if self.service.is_some() {
             return Ok(());
@@ -222,11 +227,11 @@ impl Trainer {
         let builder = crate::engine::DataParallel::replica_builder(&self.exec)?;
         let writer = self.cfg.checkpoint_dir.clone().map(|dir| {
             let meta = self.exec.meta.clone();
-            Box::new(move |state: &[Vec<f32>], epoch: usize| {
-                crate::runtime::checkpoint::save_state(&meta, state, &dir, epoch)
+            Box::new(move |snap: &Snapshot, epoch: usize| {
+                crate::runtime::checkpoint::save_snapshot(&meta, snap, &dir, epoch)
             }) as CheckpointWriter
         });
-        self.service = Some(ServiceLane::spawn(
+        self.service = Some(ServiceLanes::spawn(
             builder,
             self.data.val.clone(),
             self.engine.batch(),
@@ -244,8 +249,8 @@ impl Trainer {
         start_epoch: usize,
         block: bool,
     ) -> anyhow::Result<()> {
-        let Some(lane) = self.service.as_mut() else { return Ok(()) };
-        let events = if block { lane.drain()? } else { lane.try_events()? };
+        let Some(lanes) = self.service.as_mut() else { return Ok(()) };
+        let events = if block { lanes.drain()? } else { lanes.try_events()? };
         for ev in events {
             let idx = ev.epoch() - start_epoch;
             anyhow::ensure!(idx < records.len(), "service event for unknown epoch");

@@ -9,9 +9,13 @@ use super::Dataset;
 
 /// Reusable batch staging buffers.
 pub struct BatchAssembler {
+    /// Device batch size (slots per step).
     pub batch: usize,
+    /// Row-major gathered sample data, `batch * sample_dim` elements.
     pub x: Vec<f32>,
+    /// Row-major gathered labels, `batch * label_len` elements.
     pub y: Vec<i32>,
+    /// Per-slot gradient weights (padding slots carry 0).
     pub sw: Vec<f32>,
     /// How many real (non-padding) samples the current batch holds.
     pub real: usize,
@@ -21,6 +25,8 @@ pub struct BatchAssembler {
 }
 
 impl BatchAssembler {
+    /// An assembler sized for `data`'s sample layout at device batch
+    /// `batch`.
     pub fn new(data: &Dataset, batch: usize) -> Self {
         BatchAssembler {
             batch,
@@ -77,6 +83,7 @@ pub struct DoubleBuffer {
 }
 
 impl DoubleBuffer {
+    /// Two parked assemblers sized for `data` at device batch `batch`.
     pub fn new(data: &Dataset, batch: usize) -> Self {
         DoubleBuffer {
             parked: vec![BatchAssembler::new(data, batch), BatchAssembler::new(data, batch)],

@@ -10,18 +10,28 @@
 use super::{Dataset, TrainVal};
 use crate::util::rng::Rng;
 
+/// Configuration for [`imagenet_proxy`].
 #[derive(Clone, Debug)]
 pub struct ImagenetProxyCfg {
+    /// Training-split sample count.
     pub n_train: usize,
+    /// Validation-split sample count.
     pub n_val: usize,
+    /// Image height = width in pixels.
     pub hw: usize,
+    /// Image channels.
     pub channels: usize,
+    /// Number of label classes.
     pub classes: usize,
     /// Template signal amplitude (higher = easier).
     pub signal: f32,
+    /// Noise sigma for the easy-sample mass.
     pub noise_easy: f32,
+    /// Noise sigma for the hard tail.
     pub noise_hard: f32,
+    /// Fraction of samples drawn from the hard tail.
     pub hard_frac: f64,
+    /// Fraction of labels flipped (memorization tail).
     pub label_noise: f64,
 }
 
@@ -108,11 +118,16 @@ pub fn imagenet_proxy(cfg: &ImagenetProxyCfg, seed: u64) -> TrainVal {
 // DeepCAM proxy: per-pixel binary segmentation
 // ---------------------------------------------------------------------------
 
+/// Configuration for [`deepcam_proxy`].
 #[derive(Clone, Debug)]
 pub struct DeepcamProxyCfg {
+    /// Training-split sample count.
     pub n_train: usize,
+    /// Validation-split sample count.
     pub n_val: usize,
+    /// Image height = width in pixels.
     pub hw: usize,
+    /// Input channels.
     pub channels: usize,
     /// Max number of blobs ("cyclones") per image.
     pub max_blobs: usize,

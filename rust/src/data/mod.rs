@@ -9,32 +9,43 @@
 //! Generators mark which samples are noisy/hard ground truth so tests and
 //! diagnostics can verify the hiding machinery targets the right samples.
 
+/// Batch assembly into reusable staging buffers.
 pub mod batch;
+/// Image-like proxy generators (ImageNet / DeepCAM scale).
 pub mod image;
+/// Batch-aligned epoch sharding for the worker pool.
 pub mod shard;
+/// Synthetic generators (Gaussian mixture, fractal boundary).
 pub mod synth;
 
 /// A fully materialized dataset (samples are row-major contiguous f32).
 #[derive(Clone)]
 pub struct Dataset {
+    /// Dataset display name (logs, bench tables).
     pub name: String,
+    /// Sample count.
     pub n: usize,
     /// Elements per sample (e.g. 64 for the MLP, 8*8*3 for the CNN).
     pub sample_dim: usize,
     /// Labels per sample: 1 for classification, H*W for segmentation.
     pub label_len: usize,
+    /// Number of label classes.
     pub classes: usize,
+    /// Row-major sample data, `n * sample_dim` elements.
     pub x: Vec<f32>,
+    /// Row-major labels, `n * label_len` elements.
     pub y: Vec<i32>,
     /// Ground-truth marker: sample is label-noised / hard-tail.
     pub noisy: Vec<bool>,
 }
 
 impl Dataset {
+    /// Sample `i`'s feature row.
     pub fn sample_x(&self, i: usize) -> &[f32] {
         &self.x[i * self.sample_dim..(i + 1) * self.sample_dim]
     }
 
+    /// Sample `i`'s label row.
     pub fn sample_y(&self, i: usize) -> &[i32] {
         &self.y[i * self.label_len..(i + 1) * self.label_len]
     }
@@ -44,6 +55,7 @@ impl Dataset {
         self.y[i * self.label_len]
     }
 
+    /// Check the buffer sizes and label ranges are mutually consistent.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.x.len() == self.n * self.sample_dim, "x size");
         anyhow::ensure!(self.y.len() == self.n * self.label_len, "y size");
@@ -67,7 +79,9 @@ impl Dataset {
 
 /// Train + validation split produced by every generator.
 pub struct TrainVal {
+    /// The training split.
     pub train: Dataset,
+    /// The validation split.
     pub val: Dataset,
 }
 

@@ -11,11 +11,16 @@
 use super::{Dataset, TrainVal};
 use crate::util::rng::Rng;
 
+/// Configuration for [`gauss_mixture`].
 #[derive(Clone, Debug)]
 pub struct GaussMixtureCfg {
+    /// Training-split sample count.
     pub n_train: usize,
+    /// Validation-split sample count.
     pub n_val: usize,
+    /// Feature dimension per sample.
     pub dim: usize,
+    /// Number of mixture components (= label classes).
     pub classes: usize,
     /// Distance scale between class centers (higher = easier task).
     pub separation: f32,
@@ -117,14 +122,22 @@ pub fn gauss_mixture(cfg: &GaussMixtureCfg, seed: u64) -> TrainVal {
 // Fractal proxy (upstream pretraining geometry, Table 4)
 // ---------------------------------------------------------------------------
 
+/// Configuration for [`fractal_proxy`].
 #[derive(Clone, Debug)]
 pub struct FractalCfg {
+    /// Training-split sample count.
     pub n_train: usize,
+    /// Validation-split sample count.
     pub n_val: usize,
+    /// Feature dimension per sample.
     pub dim: usize,
+    /// Number of fractal-parameter classes.
     pub classes: usize,
+    /// Additive feature-noise sigma.
     pub noise: f32,
+    /// Fraction of samples in the hard tail.
     pub hard_frac: f64,
+    /// Fraction of labels flipped (memorization tail).
     pub label_noise: f64,
 }
 

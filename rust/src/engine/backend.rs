@@ -24,6 +24,7 @@
 //! values ([`crate::data::batch::BatchAssembler`] buffers in,
 //! [`crate::runtime::BatchStats`] + exported state out).
 
+use super::snapshot::{Snapshot, SnapshotTier};
 use crate::runtime::BatchStats;
 
 /// One device step-execution endpoint: a full SGD step or a forward-only
@@ -44,13 +45,23 @@ pub trait StepBackend {
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats>;
 }
 
-/// Host-side snapshot round-trip of a backend's full mutable model state
-/// (parameters + optimizer state) as plain `f32` tensors.
+/// Host-side snapshot round-trip of a backend's mutable model state as
+/// plain `f32` tensors.
 ///
-/// The contract the worker pool's averaging reduction relies on:
-/// [`StateExchange::export_state`] followed by
-/// [`StateExchange::import_state`] preserves every f32 bit pattern
-/// exactly, so replication and the fixed worker-order averaging fold are
+/// Two export tiers (see [`crate::engine::snapshot`] and
+/// docs/snapshots.md): the flat full-state pair
+/// ([`StateExchange::export_state`] / [`StateExchange::import_state`],
+/// params + optimizer state — the worker pool's averaging
+/// representation), and the params-only fast path
+/// ([`StateExchange::export_params`] / [`StateExchange::import_params`])
+/// that forward-only consumers (the eval lane) ride, at half the leaf
+/// traffic on momentum backends.  [`StateExchange::export_snapshot`] /
+/// [`StateExchange::import_snapshot`] wrap both behind the typed
+/// [`Snapshot`].
+///
+/// The contract every consumer relies on: an export followed by the
+/// matching import preserves every f32 bit pattern exactly, so replica
+/// evals, checkpoints, and the fixed worker-order averaging fold are
 /// deterministic run to run.
 pub trait StateExchange {
     /// Snapshot the full mutable model state (parameters + optimizer
@@ -60,6 +71,92 @@ pub trait StateExchange {
     /// Restore state previously produced by [`StateExchange::export_state`]
     /// (or an elementwise average of several such snapshots).
     fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()>;
+
+    /// Snapshot only the parameter leaves — the fast export path for
+    /// forward-only consumers, at half the device→host traffic of
+    /// [`StateExchange::export_state`] on momentum backends.
+    ///
+    /// The default forwards to `export_state`, which is exactly right for
+    /// backends whose entire mutable state *is* their parameters; momentum
+    /// backends override it to skip the optimizer leaves.
+    ///
+    /// Determinism contract: a forward pass over imported params-only
+    /// state is **bitwise identical** to one over imported full state —
+    /// optimizer state never feeds a forward pass:
+    ///
+    /// ```
+    /// use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+    /// use kakurenbo::engine::testbed::MockBackend;
+    /// use kakurenbo::engine::{Engine, EvalSink, StateExchange, StepMode};
+    ///
+    /// let tv = gauss_mixture(
+    ///     &GaussMixtureCfg { n_train: 8, n_val: 21, dim: 6, classes: 3, ..Default::default() },
+    ///     5,
+    /// );
+    /// let eval = |be: &mut MockBackend| {
+    ///     let order: Vec<u32> = (0..tv.val.n as u32).collect();
+    ///     let mut eng = Engine::new(&tv.val, 8);
+    ///     let mut sink = EvalSink::default();
+    ///     eng.run(be, &tv.val, &order, None, StepMode::Forward, &mut sink).unwrap();
+    ///     let (acc, loss) = sink.result();
+    ///     (acc.to_bits(), loss.to_bits())
+    /// };
+    /// let mut primary = MockBackend::new();
+    /// primary.param = 1.618034;
+    /// // one replica restored from the params-only tier ...
+    /// let mut via_params = MockBackend::new();
+    /// via_params.import_params(&primary.export_params().unwrap()).unwrap();
+    /// // ... one from the full-state tier: their evals match bit for bit
+    /// let mut via_full = MockBackend::new();
+    /// via_full.import_state(&primary.export_state().unwrap()).unwrap();
+    /// assert_eq!(eval(&mut via_params), eval(&mut via_full));
+    /// assert_eq!(eval(&mut via_params), eval(&mut primary));
+    /// ```
+    fn export_params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.export_state()
+    }
+
+    /// Snapshot the optimizer-state leaves (same order as
+    /// [`StateExchange::export_params`]), or `None` for backends with no
+    /// separable optimizer state (the default).
+    fn export_momentum(&self) -> anyhow::Result<Option<Vec<Vec<f32>>>> {
+        Ok(None)
+    }
+
+    /// Restore parameter leaves only, leaving any optimizer state
+    /// untouched.  The default forwards to `import_state` (correct for
+    /// stateless backends); momentum backends override it.
+    fn import_params(&mut self, params: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.import_state(params)
+    }
+
+    /// Export a typed [`Snapshot`] at the requested tier.
+    fn export_snapshot(&self, tier: SnapshotTier) -> anyhow::Result<Snapshot> {
+        Ok(match tier {
+            SnapshotTier::Params => Snapshot::params_only(self.export_params()?),
+            SnapshotTier::Full => {
+                Snapshot::full(self.export_params()?, self.export_momentum()?)
+            }
+        })
+    }
+
+    /// Restore from a typed [`Snapshot`]: a params-only snapshot restores
+    /// parameters and leaves optimizer state as-is; a full snapshot
+    /// restores everything it carries.
+    fn import_snapshot(&mut self, snap: &Snapshot) -> anyhow::Result<()> {
+        match (snap.tier(), snap.momentum()) {
+            (SnapshotTier::Params, _) | (SnapshotTier::Full, None) => {
+                self.import_params(snap.params())
+            }
+            (SnapshotTier::Full, Some(momentum)) => {
+                let mut state =
+                    Vec::with_capacity(snap.params().len() + momentum.len());
+                state.extend_from_slice(snap.params());
+                state.extend_from_slice(momentum);
+                self.import_state(&state)
+            }
+        }
+    }
 }
 
 /// A worker-local backend replica: steps batches and round-trips its
@@ -160,6 +257,25 @@ mod tests {
         let mut a = vec![vec![1.0f32; 3]];
         assert!(accumulate_state(&mut a, &[vec![1.0f32; 2]]).is_err());
         assert!(accumulate_state(&mut a, &[vec![1.0f32; 3], vec![0.0]]).is_err());
+    }
+
+    #[test]
+    fn typed_snapshot_round_trip_on_stateless_backend() {
+        use crate::engine::testbed::MockBackend;
+        let mut a = MockBackend::new();
+        a.param = 2.5;
+        let p = a.export_snapshot(SnapshotTier::Params).unwrap();
+        assert_eq!(p.tier(), SnapshotTier::Params);
+        let f = a.export_snapshot(SnapshotTier::Full).unwrap();
+        assert_eq!(f.tier(), SnapshotTier::Full);
+        // a stateless backend's full tier carries no momentum section
+        assert!(f.momentum().is_none());
+        let mut b = MockBackend::new();
+        b.import_snapshot(&p).unwrap();
+        assert_eq!(b.param.to_bits(), a.param.to_bits());
+        let mut c = MockBackend::new();
+        c.import_snapshot(&f).unwrap();
+        assert_eq!(c.param.to_bits(), a.param.to_bits());
     }
 
     #[test]

@@ -51,22 +51,25 @@
 //! determinism contract as the overlap switch above); see
 //! docs/worker-model.md for the full execution model.
 //!
-//! # Off the critical path: the service lane
+//! # Off the critical path: the service lanes
 //!
-//! [`service`] hosts the [`ServiceLane`]: a persistent background thread
-//! (built on the same [`ReplicaBuilder`] contract as the pool's replica
-//! lanes) that runs validation evals and checkpoint serialization against
-//! exported parameter snapshots while the primary executor trains the
-//! next epoch.  Async eval is bitwise identical to sync eval (the lane
+//! [`service`] hosts the split [`ServiceLanes`]: a persistent **eval
+//! lane** (its own executor replica, built on the same
+//! [`ReplicaBuilder`] contract as the pool's replica lanes, consuming
+//! params-tier snapshots) and an independent **checkpoint lane** (no
+//! replica; serializes full-state snapshots), each with its own FIFO
+//! queue, running while the primary executor trains the next epoch.
+//! What a snapshot carries is typed — [`snapshot`] defines the
+//! [`Snapshot`] / [`SnapshotTier`] pair and docs/snapshots.md the
+//! lifecycle.  Async eval is bitwise identical to sync eval (the lane
 //! evaluates an exact snapshot with the identical accumulation order) —
 //! enforced by `tests/service_lane_determinism.rs`.
-
-#![warn(missing_docs)]
 
 pub mod backend;
 pub mod modes;
 pub mod pool;
 pub mod service;
+pub mod snapshot;
 pub mod testbed;
 
 pub use backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
@@ -75,7 +78,8 @@ pub use modes::{
     RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
-pub use service::{CheckpointWriter, ServiceEvent, ServiceLane, StateSnapshot};
+pub use service::{CheckpointWriter, ServiceEvent, ServiceLanes};
+pub use snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::Dataset;

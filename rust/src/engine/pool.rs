@@ -62,6 +62,7 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 
 use super::backend::{accumulate_state, finish_average, DataParallel, ReplicaBuilder, StateExchange};
+use super::snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 use super::{dispatch, StepBackend, StepCtx, StepMode, StepSink};
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::shard::Shard;
@@ -106,15 +107,14 @@ pub struct PoolOutcome {
     pub workers: Vec<WorkerReport>,
 }
 
-/// A state snapshot shared between the reduction loop and every lane
-/// (the primary's state at run start, or a barrier's averaged state).
-type SharedState = Arc<Vec<Vec<f32>>>;
-
 /// Commands the reduction loop sends a persistent replica lane.
 enum LaneCmd {
-    /// Replace the replica's full state with this snapshot (the averaged
-    /// parameters at a step barrier, or the primary's state at run start).
-    Sync(SharedState),
+    /// Replace the replica's state with this typed snapshot (the averaged
+    /// state at a step barrier, or the primary's state at run start).
+    /// Always the [`SnapshotTier::Full`] tier: true synchronous SGD must
+    /// keep every replica's *optimizer trajectory* identical, so the
+    /// `--dp average` sync never rides the params-only fast path.
+    Sync(SharedSnapshot),
     /// Execute one step on an assembled batch; reply with
     /// [`LaneReply::Step`], exporting the post-step state when `export`.
     Step {
@@ -202,8 +202,8 @@ fn lane_main(build: ReplicaBuilder, cmd_rx: Receiver<LaneCmd>, reply_tx: Sender<
     }
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
-            LaneCmd::Sync(state) => {
-                if let Err(e) = replica.import_state(&state) {
+            LaneCmd::Sync(snap) => {
+                if let Err(e) = replica.import_snapshot(&snap) {
                     let _ = reply_tx.send(LaneReply::Fail(format!("state import: {e}")));
                     return;
                 }
@@ -513,7 +513,11 @@ impl WorkerPool {
         // Re-synchronize every replica with the primary's current state:
         // lanes persist across runs, so whatever an earlier run (or an
         // earlier epoch's averaging) left behind is overwritten up front.
-        let init = Arc::new(primary.export_state()?);
+        // Full tier always — replicas must share the optimizer state too.
+        let init: SharedSnapshot = Arc::new(primary.export_snapshot(SnapshotTier::Full)?);
+        // leaf count of the params section: the barrier's flat averaged
+        // states split back into typed snapshots at this boundary
+        let param_leaves = init.params().len();
         for lane in &self.lanes {
             lane.send(LaneCmd::Sync(init.clone()))?;
         }
@@ -524,7 +528,7 @@ impl WorkerPool {
 
         type Parked = Vec<(usize, BatchAssembler)>;
         let (parked, last_avg) = std::thread::scope(
-            |scope| -> anyhow::Result<(Parked, Option<SharedState>)> {
+            |scope| -> anyhow::Result<(Parked, Option<SharedSnapshot>)> {
                 let mut done_rx = Vec::with_capacity(w_count);
                 let mut back_tx = Vec::with_capacity(w_count);
                 for (shard, initial) in shards.iter().zip(gather_bufs) {
@@ -536,7 +540,7 @@ impl WorkerPool {
                 }
 
                 let mut parked: Parked = Vec::with_capacity(w_count * steps.min(2));
-                let mut last_avg: Option<SharedState> = None;
+                let mut last_avg: Option<SharedSnapshot> = None;
                 for s in 0..steps {
                     // Fan out: forward each worker's gathered batch to its
                     // replica lane; all lanes compute concurrently.
@@ -596,7 +600,11 @@ impl WorkerPool {
                         let t = Timer::start();
                         let mut avg = acc.expect("averaging step folded no state");
                         finish_average(&mut avg, w_count);
-                        let avg = Arc::new(avg);
+                        // wrap the flat averaged state back into a typed
+                        // full-tier snapshot (a pure split — every f32
+                        // bit pattern is preserved) before broadcast
+                        let avg: SharedSnapshot =
+                            Arc::new(Snapshot::from_state(avg, param_leaves)?);
                         for lane in rep_lanes {
                             lane.send(LaneCmd::Sync(avg.clone()))?;
                         }
@@ -613,7 +621,7 @@ impl WorkerPool {
             self.buffers[w].put(buf);
         }
         if let Some(avg) = last_avg {
-            primary.import_state(&avg)?;
+            primary.import_snapshot(&avg)?;
         }
         let mut ctx = StepCtx { backend: primary, scratch: &mut self.scratch, data };
         sink.finish(&mut ctx)?;

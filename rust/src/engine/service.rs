@@ -1,63 +1,61 @@
-//! The async service lane: validation eval + checkpoint serialization off
-//! the training critical path.
+//! The async service lanes: validation eval and checkpoint serialization
+//! off the training critical path, each on its own queue.
 //!
-//! # Why a lane, not a thread pool
+//! # Why two lanes, not one
 //!
-//! Both jobs the lane runs consume only an *immutable* exported parameter
-//! snapshot ([`crate::engine::StateExchange::export_state`]), so nothing
-//! about them has to block the next epoch: the primary executor can start
-//! training epoch `e+1` the moment epoch `e`'s state is exported.  But the
-//! production backend's device state is not `Send` (PJRT literals, a
-//! client handle), so the lane cannot borrow the primary executor.  It
-//! instead follows the exact replica contract the worker pool's replica
-//! lanes established in the data-parallel path (`engine/pool.rs`):
-//! a `Send` [`ReplicaBuilder`] is shipped into one persistent
-//! background thread, which *builds* its own replica there (own PJRT
-//! client, own compiled executables) and owns it for the lane's whole
-//! life.  Snapshots cross the channel as `Send` host tensors.
+//! Both jobs consume only an *immutable* exported [`Snapshot`], so
+//! neither has to block the next epoch: the primary executor can start
+//! training epoch `e+1` the moment epoch `e`'s state is exported.  But
+//! the two jobs want different things:
+//!
+//! * **Eval** needs a live replica (the production backend's device state
+//!   is not `Send`, so the lane *builds* its own — the [`ReplicaBuilder`]
+//!   contract the worker pool's replica lanes established) and consumes
+//!   the cheap [`SnapshotTier::Params`] tier.
+//! * **Checkpoint** needs no replica at all — it serializes the snapshot
+//!   through a [`CheckpointWriter`] — but requires the
+//!   [`SnapshotTier::Full`] tier (momentum must ride along for
+//!   bit-exact resume).
+//!
+//! A single FIFO worker serializes eval behind checkpoint writes: at
+//! segmentation-scale parameter counts (the paper's DeepCAM workload) one
+//! checkpoint's npy serialization dwarfs an eval and the lane becomes the
+//! bottleneck it was built to remove.  [`ServiceLanes`] therefore runs an
+//! **eval lane** and a **checkpoint lane** as independent worker threads
+//! with independent queues: a slow model write for epoch `e` no longer
+//! delays the eval of epoch `e+1`.
 //!
 //! # Determinism contract
 //!
-//! The lane evaluates an **exact** snapshot: the export/import round-trip
-//! preserves every f32 bit pattern, the replica runs the same compiled
-//! artifacts, and the lane walks the validation set in the same batch
-//! order with the same [`BatchAssembler`] fill and the same accumulation
-//! order as the synchronous [`crate::engine::EvalSink`] path.  Async eval
-//! is therefore bitwise identical to sync eval — enforced by
-//! `rust/tests/service_lane_determinism.rs`.  Because the lane is a single
-//! FIFO worker, completed events always come back in submission order
-//! (fixed epoch order), which is what lets the coordinator fold results
-//! into epoch records deterministically.
+//! Unchanged from the single-lane design, and enforced by
+//! `rust/tests/service_lane_determinism.rs`: the eval lane evaluates an
+//! **exact** snapshot (the params export/import round-trip preserves
+//! every f32 bit pattern) with the same [`BatchAssembler`] fill and the
+//! same accumulation order as the synchronous
+//! [`crate::engine::EvalSink`] path, so async eval is bitwise identical
+//! to sync eval.  Each lane is FIFO, so per-lane completions arrive in
+//! submission (fixed epoch) order; across lanes,
+//! [`ServiceLanes::try_events`] / [`ServiceLanes::drain`] merge by
+//! `(epoch, eval-before-checkpoint)` — the synchronous phase order — and
+//! the coordinator folds results into records keyed by epoch, so barrier
+//! fold-in is deterministic no matter which lane finishes first.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
 
-use super::backend::{ReplicaBackend, ReplicaBuilder};
+use super::backend::{ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
 use super::modes::EvalSink;
+use super::snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 use crate::data::batch::BatchAssembler;
 use crate::data::Dataset;
 use crate::util::timer::Timer;
 
-/// An immutable full-state snapshot (params + optimizer state, the
-/// [`crate::engine::StateExchange::export_state`] layout) shared between
-/// the coordinator and the service lane without copying.
-pub type StateSnapshot = Arc<Vec<Vec<f32>>>;
+/// A `Send` closure that serializes one full-state snapshot as a
+/// checkpoint for the given epoch.  The coordinator constructs it from
+/// the runtime's checkpoint writer plus the executor's parameter
+/// metadata, so the engine layer never depends on runtime types.
+pub type CheckpointWriter = Box<dyn Fn(&Snapshot, usize) -> anyhow::Result<()> + Send>;
 
-/// A `Send` closure that serializes one state snapshot as a checkpoint for
-/// the given epoch.  The coordinator constructs it from the runtime's
-/// checkpoint writer plus the executor's parameter metadata, so the engine
-/// layer never depends on runtime types.
-pub type CheckpointWriter = Box<dyn Fn(&[Vec<f32>], usize) -> anyhow::Result<()> + Send>;
-
-/// Jobs the coordinator submits to the lane.
-enum ServiceCmd {
-    /// Run a full validation forward pass on the snapshot.
-    Eval { epoch: usize, state: StateSnapshot },
-    /// Serialize the snapshot through the configured [`CheckpointWriter`].
-    Checkpoint { epoch: usize, state: StateSnapshot },
-}
-
-/// One completed service-lane job, returned in submission order.
+/// One completed service-lane job.
 #[derive(Clone, Debug)]
 pub enum ServiceEvent {
     /// Validation eval finished for `epoch`.
@@ -94,94 +92,84 @@ impl ServiceEvent {
             ServiceEvent::Eval { secs, .. } | ServiceEvent::Checkpoint { secs, .. } => *secs,
         }
     }
+
+    /// Barrier fold-in key: epoch first, eval before checkpoint within an
+    /// epoch (the synchronous pipeline's phase order).
+    fn fold_key(&self) -> (usize, u8) {
+        match self {
+            ServiceEvent::Eval { epoch, .. } => (*epoch, 0),
+            ServiceEvent::Checkpoint { epoch, .. } => (*epoch, 1),
+        }
+    }
 }
 
-enum ServiceReply {
-    /// The replica finished building; the lane accepts jobs.
+/// A job handler living on a lane thread: consumes `(epoch, snapshot)`
+/// submissions one at a time.
+type JobHandler = Box<dyn FnMut(usize, SharedSnapshot) -> anyhow::Result<ServiceEvent>>;
+
+/// A `Send` constructor for a lane's handler, invoked once on the lane
+/// thread (the eval lane builds its non-`Send` replica inside this).
+type HandlerInit = Box<dyn FnOnce() -> anyhow::Result<JobHandler> + Send>;
+
+enum LaneReply {
+    /// The handler finished initializing; the lane accepts jobs.
     Ready,
     /// One completed job.
     Done(ServiceEvent),
-    /// The lane's replica or a job failed; the lane exits.
+    /// Handler init or a job failed; the lane exits.
     Fail(String),
 }
 
-/// A persistent background thread running validation evals and checkpoint
-/// serialization against exported state snapshots, while the primary
-/// executor trains the next epoch.
-///
-/// Dropping the lane closes the command channel; the thread drains any
-/// in-flight jobs and exits, and `Drop` joins it.
-pub struct ServiceLane {
-    cmd_tx: Option<Sender<ServiceCmd>>,
-    reply_rx: Receiver<ServiceReply>,
+/// One FIFO worker thread with its own queue: jobs go in as
+/// `(epoch, snapshot)`, [`ServiceEvent`]s come back in submission order.
+struct ServiceWorker {
+    cmd_tx: Option<Sender<(usize, SharedSnapshot)>>,
+    reply_rx: Receiver<LaneReply>,
     handle: Option<std::thread::JoinHandle<()>>,
     pending: usize,
 }
 
-impl ServiceLane {
-    /// Spawn the lane: the replica builds on the lane thread (blocking
-    /// this call until it is ready, so spawn failures surface here and
-    /// every later submit is cheap).  `val` is the validation set the lane
-    /// evaluates; `batch` the device batch size; `checkpoint` the optional
-    /// snapshot serializer (checkpoint jobs fail without one).
-    pub fn spawn(
-        build: ReplicaBuilder,
-        val: Dataset,
-        batch: usize,
-        checkpoint: Option<CheckpointWriter>,
-    ) -> anyhow::Result<Self> {
-        let (cmd_tx, cmd_rx) = channel::<ServiceCmd>();
-        let (reply_tx, reply_rx) = channel::<ServiceReply>();
+impl ServiceWorker {
+    /// Spawn the worker and block until its handler reports ready, so
+    /// init failures (replica build) surface here and every later submit
+    /// is cheap.
+    fn spawn(name: &str, init: HandlerInit) -> anyhow::Result<Self> {
+        let (cmd_tx, cmd_rx) = channel::<(usize, SharedSnapshot)>();
+        let (reply_tx, reply_rx) = channel::<LaneReply>();
         let handle = std::thread::Builder::new()
-            .name("service-lane".into())
-            .spawn(move || service_main(build, val, batch, checkpoint, cmd_rx, reply_tx))?;
-        let lane = ServiceLane { cmd_tx: Some(cmd_tx), reply_rx, handle: Some(handle), pending: 0 };
-        match lane.reply_rx.recv() {
-            Ok(ServiceReply::Ready) => Ok(lane),
-            Ok(ServiceReply::Fail(e)) => anyhow::bail!("service lane spawn failed: {e}"),
-            Ok(ServiceReply::Done(_)) => anyhow::bail!("service lane: job reply before ready"),
+            .name(name.to_string())
+            .spawn(move || worker_main(init, cmd_rx, reply_tx))?;
+        let worker =
+            ServiceWorker { cmd_tx: Some(cmd_tx), reply_rx, handle: Some(handle), pending: 0 };
+        match worker.reply_rx.recv() {
+            Ok(LaneReply::Ready) => Ok(worker),
+            Ok(LaneReply::Fail(e)) => anyhow::bail!("service lane spawn failed: {e}"),
+            Ok(LaneReply::Done(_)) => anyhow::bail!("service lane: job reply before ready"),
             Err(_) => anyhow::bail!("service lane died during spawn"),
         }
     }
 
-    fn submit(&mut self, cmd: ServiceCmd) -> anyhow::Result<()> {
+    fn submit(&mut self, epoch: usize, snap: SharedSnapshot) -> anyhow::Result<()> {
         self.cmd_tx
             .as_ref()
             .expect("lane alive until drop")
-            .send(cmd)
+            .send((epoch, snap))
             .map_err(|_| anyhow::anyhow!("service lane died"))?;
         self.pending += 1;
         Ok(())
     }
 
-    /// Queue a validation eval of `state` for `epoch` (returns
-    /// immediately; the result arrives as a [`ServiceEvent::Eval`]).
-    pub fn submit_eval(&mut self, epoch: usize, state: StateSnapshot) -> anyhow::Result<()> {
-        self.submit(ServiceCmd::Eval { epoch, state })
-    }
-
-    /// Queue checkpoint serialization of `state` for `epoch`.
-    pub fn submit_checkpoint(&mut self, epoch: usize, state: StateSnapshot) -> anyhow::Result<()> {
-        self.submit(ServiceCmd::Checkpoint { epoch, state })
-    }
-
-    /// Jobs submitted but not yet folded back.
-    pub fn pending(&self) -> usize {
-        self.pending
-    }
-
-    /// Non-blocking: collect every job that has completed so far, in
-    /// submission (fixed epoch) order.
-    pub fn try_events(&mut self) -> anyhow::Result<Vec<ServiceEvent>> {
-        let mut out = Vec::new();
+    /// Non-blocking: append every completed job so far (in submission
+    /// order) to `out`.
+    fn collect_ready(&mut self, out: &mut Vec<ServiceEvent>) -> anyhow::Result<()> {
         loop {
             match self.reply_rx.try_recv() {
-                Ok(ServiceReply::Done(ev)) => {
+                Ok(LaneReply::Done(ev)) => {
                     self.pending -= 1;
                     out.push(ev);
                 }
-                Ok(ServiceReply::Fail(e)) => anyhow::bail!("service lane job failed: {e}"),
-                Ok(ServiceReply::Ready) => anyhow::bail!("service lane: duplicate ready"),
+                Ok(LaneReply::Fail(e)) => anyhow::bail!("service lane job failed: {e}"),
+                Ok(LaneReply::Ready) => anyhow::bail!("service lane: duplicate ready"),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     anyhow::ensure!(
@@ -193,82 +181,60 @@ impl ServiceLane {
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
-    /// Blocking: wait for every submitted job to complete; returns all
-    /// events (including already-completed ones) in submission order.
-    pub fn drain(&mut self) -> anyhow::Result<Vec<ServiceEvent>> {
-        let mut out = self.try_events()?;
+    /// Blocking: wait out every outstanding job, appending to `out`.
+    fn drain_into(&mut self, out: &mut Vec<ServiceEvent>) -> anyhow::Result<()> {
+        self.collect_ready(out)?;
         while self.pending > 0 {
             match self.reply_rx.recv() {
-                Ok(ServiceReply::Done(ev)) => {
+                Ok(LaneReply::Done(ev)) => {
                     self.pending -= 1;
                     out.push(ev);
                 }
-                Ok(ServiceReply::Fail(e)) => anyhow::bail!("service lane job failed: {e}"),
-                Ok(ServiceReply::Ready) => anyhow::bail!("service lane: duplicate ready"),
-                Err(_) => anyhow::bail!(
-                    "service lane died with {} jobs in flight",
-                    self.pending
-                ),
+                Ok(LaneReply::Fail(e)) => anyhow::bail!("service lane job failed: {e}"),
+                Ok(LaneReply::Ready) => anyhow::bail!("service lane: duplicate ready"),
+                Err(_) => {
+                    anyhow::bail!("service lane died with {} jobs in flight", self.pending)
+                }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
-impl Drop for ServiceLane {
+impl Drop for ServiceWorker {
     fn drop(&mut self) {
-        drop(self.cmd_tx.take()); // disconnect: service_main's recv loop exits
+        drop(self.cmd_tx.take()); // disconnect: worker_main's recv loop exits
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
 }
 
-/// Lane thread body: build the replica locally, then serve jobs until the
-/// coordinator drops the command channel.
-fn service_main(
-    build: ReplicaBuilder,
-    val: Dataset,
-    batch: usize,
-    checkpoint: Option<CheckpointWriter>,
-    cmd_rx: Receiver<ServiceCmd>,
-    reply_tx: Sender<ServiceReply>,
+/// Worker thread body: run the handler init locally, then serve jobs
+/// until the owner drops the command channel.
+fn worker_main(
+    init: HandlerInit,
+    cmd_rx: Receiver<(usize, SharedSnapshot)>,
+    reply_tx: Sender<LaneReply>,
 ) {
-    let mut replica = match build() {
-        Ok(r) => r,
+    let mut handler = match init() {
+        Ok(h) => h,
         Err(e) => {
-            let _ = reply_tx.send(ServiceReply::Fail(format!("replica build: {e}")));
+            let _ = reply_tx.send(LaneReply::Fail(e.to_string()));
             return;
         }
     };
-    let mut asm = BatchAssembler::new(&val, batch);
-    let eval_idx: Vec<u32> = (0..val.n as u32).collect();
-    if reply_tx.send(ServiceReply::Ready).is_err() {
+    if reply_tx.send(LaneReply::Ready).is_err() {
         return;
     }
-    while let Ok(cmd) = cmd_rx.recv() {
-        let result = match cmd {
-            ServiceCmd::Eval { epoch, state } => {
-                run_eval(replica.as_mut(), &val, &eval_idx, &mut asm, epoch, &state)
-            }
-            ServiceCmd::Checkpoint { epoch, state } => {
-                let t = Timer::start();
-                match &checkpoint {
-                    Some(w) => w(&state, epoch)
-                        .map(|()| ServiceEvent::Checkpoint { epoch, secs: t.elapsed_s() }),
-                    None => Err(anyhow::anyhow!(
-                        "checkpoint submitted but no writer configured"
-                    )),
-                }
-            }
-        };
-        let reply = match result {
-            Ok(ev) => ServiceReply::Done(ev),
+    while let Ok((epoch, snap)) = cmd_rx.recv() {
+        let reply = match handler(epoch, snap) {
+            Ok(ev) => LaneReply::Done(ev),
             Err(e) => {
-                let _ = reply_tx.send(ServiceReply::Fail(e.to_string()));
+                let _ = reply_tx.send(LaneReply::Fail(e.to_string()));
                 return;
             }
         };
@@ -278,20 +244,137 @@ fn service_main(
     }
 }
 
-/// One full validation pass on the replica: import the snapshot, then walk
-/// the validation order in batch chunks through the *same*
-/// [`EvalSink::accumulate`] fold the synchronous engine path uses, so the
-/// result is bitwise identical to sync eval by construction.
+/// The split service lanes: a persistent **eval lane** (own executor
+/// replica, consumes params-tier snapshots) and an independent
+/// **checkpoint lane** (no replica, consumes full-state snapshots), each
+/// with its own FIFO queue, running while the primary trains the next
+/// epoch.
+///
+/// Dropping the lanes closes both command channels; the threads drain
+/// their in-flight jobs and exit, and `Drop` joins them.
+pub struct ServiceLanes {
+    eval: ServiceWorker,
+    checkpoint: Option<ServiceWorker>,
+}
+
+impl ServiceLanes {
+    /// Spawn the lanes.  The eval replica builds on its lane thread
+    /// (blocking this call until ready, so build failures surface here);
+    /// the checkpoint lane spawns only when a `writer` is configured.
+    /// `val` is the validation set the eval lane walks; `batch` the
+    /// device batch size.
+    pub fn spawn(
+        build: ReplicaBuilder,
+        val: Dataset,
+        batch: usize,
+        writer: Option<CheckpointWriter>,
+    ) -> anyhow::Result<Self> {
+        let eval = ServiceWorker::spawn(
+            "service-eval",
+            Box::new(move || {
+                let mut replica = build()?;
+                let mut asm = BatchAssembler::new(&val, batch);
+                let eval_idx: Vec<u32> = (0..val.n as u32).collect();
+                Ok(Box::new(move |epoch: usize, snap: SharedSnapshot| {
+                    run_eval(replica.as_mut(), &val, &eval_idx, &mut asm, epoch, &snap)
+                }) as JobHandler)
+            }),
+        )?;
+        let checkpoint = match writer {
+            Some(w) => Some(ServiceWorker::spawn(
+                "service-checkpoint",
+                Box::new(move || {
+                    Ok(Box::new(move |epoch: usize, snap: SharedSnapshot| {
+                        let t = Timer::start();
+                        w(&snap, epoch)?;
+                        Ok(ServiceEvent::Checkpoint { epoch, secs: t.elapsed_s() })
+                    }) as JobHandler)
+                }),
+            )?),
+            None => None,
+        };
+        Ok(ServiceLanes { eval, checkpoint })
+    }
+
+    /// Queue a validation eval of `snap` for `epoch` on the eval lane
+    /// (returns immediately; the result arrives as a
+    /// [`ServiceEvent::Eval`]).  Any tier is accepted — the lane reads
+    /// only the parameter section.
+    pub fn submit_eval(&mut self, epoch: usize, snap: SharedSnapshot) -> anyhow::Result<()> {
+        self.eval.submit(epoch, snap)
+    }
+
+    /// Queue checkpoint serialization of `snap` for `epoch` on the
+    /// checkpoint lane.  Rejects params-only snapshots (a checkpoint
+    /// without momentum could not resume bit-exactly) and configurations
+    /// without a writer.  The tier is the only engine-level validation;
+    /// writer-specific requirements (e.g. `save_snapshot` demanding a
+    /// momentum section from momentum backends) surface as lane errors
+    /// at the next barrier.
+    pub fn submit_checkpoint(
+        &mut self,
+        epoch: usize,
+        snap: SharedSnapshot,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snap.tier() >= SnapshotTier::Full,
+            "checkpoint needs a full-state snapshot, got the {} tier",
+            snap.tier().name()
+        );
+        self.checkpoint
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint submitted but no writer configured"))?
+            .submit(epoch, snap)
+    }
+
+    /// Jobs submitted but not yet folded back, across both lanes.
+    pub fn pending(&self) -> usize {
+        self.eval.pending + self.checkpoint.as_ref().map_or(0, |c| c.pending)
+    }
+
+    /// Non-blocking: collect every job that has completed so far on
+    /// either lane, merged into fold-in order
+    /// (`(epoch, eval-before-checkpoint)`).
+    pub fn try_events(&mut self) -> anyhow::Result<Vec<ServiceEvent>> {
+        let mut out = Vec::new();
+        self.eval.collect_ready(&mut out)?;
+        if let Some(ckpt) = self.checkpoint.as_mut() {
+            ckpt.collect_ready(&mut out)?;
+        }
+        out.sort_by_key(ServiceEvent::fold_key);
+        Ok(out)
+    }
+
+    /// Blocking: wait for every submitted job on both lanes; returns all
+    /// events (including already-completed ones) in fold-in order.
+    pub fn drain(&mut self) -> anyhow::Result<Vec<ServiceEvent>> {
+        let mut out = Vec::new();
+        self.eval.drain_into(&mut out)?;
+        if let Some(ckpt) = self.checkpoint.as_mut() {
+            ckpt.drain_into(&mut out)?;
+        }
+        out.sort_by_key(ServiceEvent::fold_key);
+        Ok(out)
+    }
+}
+
+/// One full validation pass on the eval-lane replica: import the
+/// snapshot's parameter section, then walk the validation order in batch
+/// chunks through the *same* [`EvalSink::accumulate`] fold the
+/// synchronous engine path uses, so the result is bitwise identical to
+/// sync eval by construction.
 fn run_eval(
     replica: &mut dyn ReplicaBackend,
     val: &Dataset,
     eval_idx: &[u32],
     asm: &mut BatchAssembler,
     epoch: usize,
-    state: &StateSnapshot,
+    snap: &SharedSnapshot,
 ) -> anyhow::Result<ServiceEvent> {
     let t = Timer::start();
-    replica.import_state(state)?;
+    // params-only restore: whichever tier rode along, the forward pass
+    // reads only the parameter section (momentum never feeds an eval)
+    replica.import_params(snap.params())?;
     let mut sink = EvalSink::default();
     for chunk in eval_idx.chunks(asm.batch) {
         asm.fill(val, chunk, None);
@@ -305,6 +388,8 @@ fn run_eval(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
+
     use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
     use crate::engine::testbed::MockBackend;
     use crate::engine::DataParallel;
@@ -319,21 +404,25 @@ mod tests {
         .val
     }
 
-    fn snapshot(param: f32) -> StateSnapshot {
-        Arc::new(vec![vec![param]])
+    fn params_snap(param: f32) -> SharedSnapshot {
+        Arc::new(Snapshot::params_only(vec![vec![param]]))
+    }
+
+    fn full_snap(param: f32) -> SharedSnapshot {
+        Arc::new(Snapshot::full(vec![vec![param]], None))
     }
 
     #[test]
     fn events_come_back_in_submission_order() {
         let be = MockBackend::new();
-        let mut lane =
-            ServiceLane::spawn(be.replica_builder().unwrap(), tiny_val(21), B, None).unwrap();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(21), B, None).unwrap();
         for epoch in 0..5 {
-            lane.submit_eval(epoch, snapshot(1.0 + epoch as f32 * 0.25)).unwrap();
+            lanes.submit_eval(epoch, params_snap(1.0 + epoch as f32 * 0.25)).unwrap();
         }
-        assert_eq!(lane.pending(), 5);
-        let events = lane.drain().unwrap();
-        assert_eq!(lane.pending(), 0);
+        assert_eq!(lanes.pending(), 5);
+        let events = lanes.drain().unwrap();
+        assert_eq!(lanes.pending(), 0);
         let epochs: Vec<usize> = events.iter().map(|e| e.epoch()).collect();
         assert_eq!(epochs, vec![0, 1, 2, 3, 4]);
     }
@@ -342,14 +431,14 @@ mod tests {
     fn eval_uses_the_submitted_snapshot_not_the_spawn_state() {
         let be = MockBackend::new();
         let val = tiny_val(13);
-        let mut lane =
-            ServiceLane::spawn(be.replica_builder().unwrap(), val.clone(), B, None).unwrap();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), val.clone(), B, None).unwrap();
         // same snapshot twice => bitwise-identical results
-        lane.submit_eval(0, snapshot(0.5)).unwrap();
-        lane.submit_eval(1, snapshot(0.5)).unwrap();
+        lanes.submit_eval(0, params_snap(0.5)).unwrap();
+        lanes.submit_eval(1, params_snap(0.5)).unwrap();
         // a different snapshot => different forward stats
-        lane.submit_eval(2, snapshot(2.5)).unwrap();
-        let events = lane.drain().unwrap();
+        lanes.submit_eval(2, params_snap(2.5)).unwrap();
+        let events = lanes.drain().unwrap();
         let losses: Vec<f64> = events
             .iter()
             .map(|e| match e {
@@ -361,39 +450,145 @@ mod tests {
         assert_ne!(losses[0].to_bits(), losses[2].to_bits());
     }
 
+    /// The params-only tier and the full tier evaluate bitwise
+    /// identically — the eval lane reads only the parameter section.
+    #[test]
+    fn params_tier_eval_matches_full_tier_eval() {
+        let be = MockBackend::new();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(17), B, None).unwrap();
+        lanes.submit_eval(0, params_snap(1.75)).unwrap();
+        lanes.submit_eval(1, full_snap(1.75)).unwrap();
+        let events = lanes.drain().unwrap();
+        let bits: Vec<(u64, u64)> = events
+            .iter()
+            .map(|e| match e {
+                ServiceEvent::Eval { acc, loss, .. } => (acc.to_bits(), loss.to_bits()),
+                other => panic!("unexpected event {other:?}"),
+            })
+            .collect();
+        assert_eq!(bits[0], bits[1]);
+    }
+
     #[test]
     fn checkpoint_jobs_call_the_writer() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let calls = Arc::new(AtomicUsize::new(0));
         let seen = calls.clone();
-        let writer: CheckpointWriter = Box::new(move |state, epoch| {
-            anyhow::ensure!(state.len() == 1 && epoch == 3, "wrong job payload");
+        let writer: CheckpointWriter = Box::new(move |snap, epoch| {
+            anyhow::ensure!(
+                snap.params().len() == 1 && epoch == 3,
+                "wrong job payload"
+            );
             seen.fetch_add(1, Ordering::SeqCst);
             Ok(())
         });
         let be = MockBackend::new();
-        let mut lane =
-            ServiceLane::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
                 .unwrap();
-        lane.submit_checkpoint(3, snapshot(1.0)).unwrap();
-        let events = lane.drain().unwrap();
+        lanes.submit_checkpoint(3, full_snap(1.0)).unwrap();
+        let events = lanes.drain().unwrap();
         assert!(matches!(events[0], ServiceEvent::Checkpoint { epoch: 3, .. }));
         assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    /// The lanes are independent queues: a checkpoint writer stalled on
+    /// epoch 0 does not delay the eval lane, and the barrier merge still
+    /// comes back in fold-in order.
+    #[test]
+    fn slow_checkpoint_does_not_block_eval_lane() {
+        use std::sync::mpsc::channel;
+        use std::sync::Mutex;
+        let (gate_tx, gate_rx) = channel::<()>();
+        let gate = Mutex::new(gate_rx);
+        let writer: CheckpointWriter = Box::new(move |_snap, _epoch| {
+            // block until the test releases the gate (bounded, so a
+            // test failure can never wedge the lane's Drop-join)
+            gate.lock()
+                .unwrap()
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .ok();
+            Ok(())
+        });
+        let be = MockBackend::new();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(11), B, Some(writer))
+                .unwrap();
+        lanes.submit_checkpoint(0, full_snap(1.0)).unwrap();
+        lanes.submit_eval(0, params_snap(1.0)).unwrap();
+        lanes.submit_eval(1, params_snap(1.5)).unwrap();
+        // evals complete while the checkpoint write is still blocked
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let mut evals = Vec::new();
+        while evals.len() < 2 && std::time::Instant::now() < deadline {
+            evals.extend(lanes.try_events().unwrap());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // release the gate BEFORE asserting: if an assertion fails and
+        // unwinds, `lanes` drops (joining the checkpoint thread) while
+        // the writer is already unblocked, so the test fails instead of
+        // hanging
+        let pending_with_ckpt_in_flight = lanes.pending();
+        gate_tx.send(()).unwrap();
+        assert_eq!(evals.len(), 2, "evals blocked behind the checkpoint lane");
+        assert!(evals.iter().all(|e| matches!(e, ServiceEvent::Eval { .. })));
+        assert_eq!(pending_with_ckpt_in_flight, 1);
+        let rest = lanes.drain().unwrap();
+        assert!(matches!(rest[0], ServiceEvent::Checkpoint { epoch: 0, .. }));
+        assert_eq!(lanes.pending(), 0);
+    }
+
+    /// Fold-in merge order: within an epoch, eval sorts before
+    /// checkpoint (the synchronous phase order), whatever the lanes'
+    /// completion timing.
+    #[test]
+    fn drain_merges_lanes_in_fold_in_order() {
+        let writer: CheckpointWriter = Box::new(|_snap, _epoch| Ok(()));
+        let be = MockBackend::new();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
+                .unwrap();
+        // submit checkpoints first so they tend to finish first
+        lanes.submit_checkpoint(0, full_snap(1.0)).unwrap();
+        lanes.submit_checkpoint(2, full_snap(1.1)).unwrap();
+        lanes.submit_eval(0, params_snap(1.0)).unwrap();
+        lanes.submit_eval(2, params_snap(1.1)).unwrap();
+        let keys: Vec<(usize, bool)> = lanes
+            .drain()
+            .unwrap()
+            .iter()
+            .map(|e| (e.epoch(), matches!(e, ServiceEvent::Checkpoint { .. })))
+            .collect();
+        assert_eq!(keys, vec![(0, false), (0, true), (2, false), (2, true)]);
     }
 
     #[test]
     fn checkpoint_without_writer_is_an_error() {
         let be = MockBackend::new();
-        let mut lane =
-            ServiceLane::spawn(be.replica_builder().unwrap(), tiny_val(9), B, None).unwrap();
-        lane.submit_checkpoint(0, snapshot(1.0)).unwrap();
-        assert!(lane.drain().is_err());
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, None).unwrap();
+        assert!(lanes.submit_checkpoint(0, full_snap(1.0)).is_err());
+    }
+
+    /// The type system's tier guarantee at the queue boundary: a
+    /// params-only snapshot can never reach the checkpoint writer.
+    #[test]
+    fn params_only_checkpoint_rejected_at_submit() {
+        let writer: CheckpointWriter = Box::new(|_snap, _epoch| Ok(()));
+        let be = MockBackend::new();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
+                .unwrap();
+        let err = lanes.submit_checkpoint(0, params_snap(1.0)).unwrap_err();
+        assert!(err.to_string().contains("full-state"), "{err}");
+        assert_eq!(lanes.pending(), 0);
     }
 
     #[test]
     fn failed_builder_surfaces_at_spawn() {
         let build: ReplicaBuilder = Box::new(|| anyhow::bail!("no artifacts"));
-        assert!(ServiceLane::spawn(build, tiny_val(9), B, None).is_err());
+        assert!(ServiceLanes::spawn(build, tiny_val(9), B, None).is_err());
     }
 
     #[test]
@@ -409,10 +604,10 @@ mod tests {
             noisy: vec![],
         };
         let be = MockBackend::new();
-        let mut lane =
-            ServiceLane::spawn(be.replica_builder().unwrap(), empty, B, None).unwrap();
-        lane.submit_eval(0, snapshot(1.0)).unwrap();
-        let events = lane.drain().unwrap();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), empty, B, None).unwrap();
+        lanes.submit_eval(0, params_snap(1.0)).unwrap();
+        let events = lanes.drain().unwrap();
         match &events[0] {
             ServiceEvent::Eval { acc, loss, .. } => {
                 assert_eq!(*acc, 0.0);

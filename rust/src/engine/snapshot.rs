@@ -1,0 +1,194 @@
+//! Typed state snapshots: what an export carries, made explicit.
+//!
+//! Every consumer of exported model state needs one of exactly two
+//! payloads:
+//!
+//! * **Params** — the parameter leaves alone.  Enough for any forward
+//!   pass: validation eval, hidden-stat refresh, transfer export.  For an
+//!   SGD-momentum backend this is *half* the leaves (and half the
+//!   device→host traffic) of a full export, which is why eval-heavy runs
+//!   want this tier on their critical path.
+//! * **Full** — parameters plus the optimizer state (SGD momentum).
+//!   Required wherever the optimizer trajectory must continue bit-exactly:
+//!   checkpoints, `--dp average` replica synchronization, resume.
+//!
+//! [`Snapshot`] carries the tier *in the type*, so a consumer that needs
+//! momentum (the checkpoint lane, the pool's averaging sync) can reject a
+//! params-only snapshot at submission time instead of corrupting state at
+//! import time.  The tier an epoch exports is chosen once, up front, by
+//! the epoch pipeline (`coordinator/epoch.rs`): an epoch that both evals
+//! and checkpoints exports one `Full` snapshot and shares it; an epoch
+//! that only evals exports the cheap `Params` tier.  See
+//! docs/snapshots.md for the lifecycle and the export-cost model.
+//!
+//! Bit-exactness contract: a snapshot is a plain host copy of the
+//! backend's `f32` leaves — export followed by import preserves every bit
+//! pattern, whichever tier rode along (enforced by
+//! `tests/service_lane_determinism.rs` and the doc-test on
+//! [`crate::engine::StateExchange::export_params`]).
+
+use std::sync::Arc;
+
+/// How much backend state a [`Snapshot`] carries.
+///
+/// Ordered: `Params < Full`, so "does this snapshot satisfy that
+/// consumer?" is `snapshot.tier() >= needed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SnapshotTier {
+    /// Parameter leaves only — sufficient for forward passes (eval,
+    /// refresh), half the export traffic of `Full` on momentum backends.
+    Params,
+    /// Parameters plus optimizer state — required for checkpoints and
+    /// data-parallel replica synchronization.
+    Full,
+}
+
+impl SnapshotTier {
+    /// Display name (bench tables, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapshotTier::Params => "params",
+            SnapshotTier::Full => "full",
+        }
+    }
+}
+
+/// An immutable, typed copy of a backend's exported state: parameter
+/// leaves plus — on the [`SnapshotTier::Full`] tier of a backend that has
+/// any — the optimizer momentum leaves, in the same stable leaf order.
+///
+/// A backend without separable optimizer state (the engine testbed's
+/// `MockBackend`) exports `Full` snapshots with `momentum() == None`; the
+/// tier still records the *intent*, so consumers can require `Full`
+/// without knowing the backend's optimizer shape.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    tier: SnapshotTier,
+    params: Vec<Vec<f32>>,
+    momentum: Option<Vec<Vec<f32>>>,
+}
+
+impl Snapshot {
+    /// A params-only snapshot (the eval-lane fast path).
+    pub fn params_only(params: Vec<Vec<f32>>) -> Self {
+        Snapshot { tier: SnapshotTier::Params, params, momentum: None }
+    }
+
+    /// A full-state snapshot; `momentum` is `None` for backends whose
+    /// entire mutable state is their parameters.
+    pub fn full(params: Vec<Vec<f32>>, momentum: Option<Vec<Vec<f32>>>) -> Self {
+        Snapshot { tier: SnapshotTier::Full, params, momentum }
+    }
+
+    /// Wrap a flat full-state export (the legacy
+    /// [`crate::engine::StateExchange::export_state`] layout: params then
+    /// momentum) as a typed `Full` snapshot.  `param_leaves` is the
+    /// parameter leaf count; the flat state must hold exactly
+    /// `param_leaves` leaves (stateless backend) or `2 * param_leaves`
+    /// (params + momentum).
+    pub fn from_state(mut state: Vec<Vec<f32>>, param_leaves: usize) -> anyhow::Result<Self> {
+        if state.len() == param_leaves {
+            Ok(Snapshot::full(state, None))
+        } else if state.len() == 2 * param_leaves {
+            let momentum = state.split_off(param_leaves);
+            Ok(Snapshot::full(state, Some(momentum)))
+        } else {
+            anyhow::bail!(
+                "flat state has {} leaves, expected {param_leaves} or {}",
+                state.len(),
+                2 * param_leaves
+            )
+        }
+    }
+
+    /// The tier this snapshot was exported at.
+    pub fn tier(&self) -> SnapshotTier {
+        self.tier
+    }
+
+    /// The parameter leaves, in the backend's stable leaf order.
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// The optimizer momentum leaves (same order as [`Snapshot::params`]),
+    /// when the snapshot carries them.
+    pub fn momentum(&self) -> Option<&[Vec<f32>]> {
+        self.momentum.as_deref()
+    }
+
+    /// Total leaf count across both sections.
+    pub fn leaves(&self) -> usize {
+        self.params.len() + self.momentum.as_ref().map_or(0, |m| m.len())
+    }
+
+    /// Total `f32` element count across both sections (the export-cost
+    /// model's unit: host traffic scales linearly in this).
+    pub fn elems(&self) -> usize {
+        let count = |leaves: &[Vec<f32>]| leaves.iter().map(|l| l.len()).sum::<usize>();
+        count(&self.params) + self.momentum.as_deref().map_or(0, count)
+    }
+
+    /// Flatten back to the legacy `export_state` layout (params then
+    /// momentum).  Fails on a params-only snapshot — that tier cannot
+    /// reconstruct optimizer state.
+    pub fn to_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            self.tier == SnapshotTier::Full,
+            "params-only snapshot cannot produce a full state"
+        );
+        let mut state = self.params.clone();
+        if let Some(m) = &self.momentum {
+            state.extend(m.iter().cloned());
+        }
+        Ok(state)
+    }
+}
+
+/// A snapshot shared across threads without copying (the coordinator
+/// hands the same `Arc` to the eval lane, the checkpoint lane, and the
+/// pool's replica lanes).
+pub type SharedSnapshot = Arc<Snapshot>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_ordering_params_below_full() {
+        assert!(SnapshotTier::Params < SnapshotTier::Full);
+        assert!(SnapshotTier::Full >= SnapshotTier::Params);
+        assert_eq!(SnapshotTier::Params.name(), "params");
+        assert_eq!(SnapshotTier::Full.name(), "full");
+    }
+
+    #[test]
+    fn from_state_splits_momentum_backends() {
+        let flat = vec![vec![1.0f32, 2.0], vec![3.0], vec![0.1, 0.2], vec![0.3]];
+        let snap = Snapshot::from_state(flat, 2).unwrap();
+        assert_eq!(snap.tier(), SnapshotTier::Full);
+        assert_eq!(snap.params(), &[vec![1.0, 2.0], vec![3.0]]);
+        assert_eq!(snap.momentum().unwrap(), &[vec![0.1, 0.2], vec![0.3]]);
+        assert_eq!(snap.leaves(), 4);
+        assert_eq!(snap.elems(), 6);
+    }
+
+    #[test]
+    fn from_state_accepts_stateless_backends() {
+        let snap = Snapshot::from_state(vec![vec![1.5f32]], 1).unwrap();
+        assert_eq!(snap.tier(), SnapshotTier::Full);
+        assert!(snap.momentum().is_none());
+        assert!(Snapshot::from_state(vec![vec![1.0]; 3], 2).is_err());
+    }
+
+    #[test]
+    fn to_state_round_trips_and_rejects_params_only() {
+        let flat = vec![vec![1.0f32], vec![2.0], vec![-1.0], vec![-2.0]];
+        let snap = Snapshot::from_state(flat.clone(), 2).unwrap();
+        assert_eq!(snap.to_state().unwrap(), flat);
+        let p = Snapshot::params_only(vec![vec![1.0f32]]);
+        assert_eq!(p.tier(), SnapshotTier::Params);
+        assert!(p.to_state().is_err());
+        assert_eq!(p.elems(), 1);
+    }
+}

@@ -6,8 +6,6 @@
 //! * `lr`       — the learning-rate compensation rule (LR, Eq. 8).
 //! * `droptop`  — Appendix D: additionally drop the top-loss tail.
 
-#![warn(missing_docs)]
-
 pub mod droptop;
 pub mod fraction;
 pub mod lr;

@@ -14,6 +14,10 @@
 //!   * runtime: PJRT CPU client executing the AOT artifacts — Python is
 //!     never on the training path.
 
+// Crate-wide documentation gate: every public item in every module must
+// carry rustdoc (CI builds docs with `-D warnings -D missing-docs`).
+#![warn(missing_docs)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

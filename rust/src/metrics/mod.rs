@@ -10,6 +10,7 @@ use crate::util::stats::Histogram;
 /// of these fields over epochs).
 #[derive(Clone, Debug, Default)]
 pub struct EpochRecord {
+    /// The epoch index this record describes.
     pub epoch: usize,
     /// Base LR after scheduler, before KAKURENBO scaling.
     pub base_lr: f64,
@@ -33,12 +34,20 @@ pub struct EpochRecord {
     pub train_loss: f64,
     /// Validation top-1 accuracy (NaN when not evaluated this epoch).
     pub val_acc: f64,
+    /// Mean validation loss (0 when not evaluated this epoch).
     pub val_loss: f64,
-    /// Measured wall-clock seconds: total and components.
+    /// Measured wall-clock seconds: select + train + refresh (the
+    /// paper's epoch timing; excludes eval/checkpoint).
     pub time_total: f64,
+    /// Seconds in the training pass.
     pub time_train: f64,
+    /// Seconds in strategy selection (the Plan phase).
     pub time_select: f64,
+    /// Seconds in the hidden-list stat refresh.
     pub time_refresh: f64,
+    /// Seconds the Eval phase spent on the critical path (snapshot
+    /// export + submit when the service lane is on; the full forward
+    /// sweep when off; 0 on epochs without an eval).
     pub time_eval: f64,
     /// Seconds the worker pool's reduction loop spent blocked on gather
     /// lanes / the step barrier during the *training* pass (0 for
@@ -77,6 +86,8 @@ pub struct EpochRecord {
 }
 
 impl EpochRecord {
+    /// Serialize every scalar field (plus the optional per-class /
+    /// histogram extras) for `results/*.json`.
     pub fn to_json(&self) -> Json {
         let mut o = crate::jobj![
             ("epoch", self.epoch),
@@ -140,16 +151,25 @@ impl EpochRecord {
 /// A complete training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunResult {
+    /// Experiment name the run was filed under.
     pub name: String,
+    /// Strategy display name.
     pub strategy: String,
+    /// Per-epoch records in epoch order.
     pub records: Vec<EpochRecord>,
+    /// Validation accuracy at the last evaluated epoch.
     pub final_acc: f64,
+    /// Best validation accuracy across the run.
     pub best_acc: f64,
+    /// Sum of measured epoch seconds (`time_total`).
     pub total_time: f64,
+    /// Sum of modeled paper-scale epoch seconds.
     pub total_modeled_time: f64,
 }
 
 impl RunResult {
+    /// Roll per-epoch records up into a run result (final/best accuracy
+    /// ignore NaN not-evaluated epochs).
     pub fn from_records(name: &str, strategy: &str, records: Vec<EpochRecord>) -> Self {
         let evals: Vec<f64> = records
             .iter()
@@ -193,6 +213,7 @@ impl RunResult {
         None
     }
 
+    /// Serialize the run (aggregates + every epoch record).
     pub fn to_json(&self) -> Json {
         crate::jobj![
             ("name", self.name.as_str()),

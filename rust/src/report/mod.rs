@@ -14,8 +14,11 @@ use crate::util::table::{diff_pct, pct, speedup_pct, Table};
 /// Bench context: scale flag (`cargo bench -- --quick`), output directory,
 /// shared XLA runtime.
 pub struct BenchCtx {
+    /// Reduced-scale mode (`--quick` / `KAKURENBO_QUICK`).
     pub quick: bool,
+    /// Where result JSON payloads land (`results/`).
     pub out_dir: PathBuf,
+    /// The shared PJRT runtime every bench run compiles against.
     pub rt: XlaRuntime,
 }
 
@@ -118,6 +121,8 @@ pub fn comparison_table(
     Ok(runs)
 }
 
+/// Print the paper-style comparison table for already-computed runs
+/// (first run is the baseline row).
 pub fn print_comparison(title: &str, runs: &[RunResult]) {
     let base = &runs[0];
     let mut t = Table::new(title).header(&[

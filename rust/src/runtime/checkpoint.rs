@@ -24,15 +24,20 @@
 //! epoch `e` can still be in flight while the trainer runs epoch `e+1`.
 //!
 //! Legacy params-only checkpoints (no `vel` entries) still load:
-//! parameters restore by name, momentum keeps its current
+//! parameters restore by name through the typed params-only snapshot
+//! tier ([`crate::engine::Snapshot`]), momentum keeps its current
 //! (zero-initialized) values.
 //!
-//! [`save_state`] serializes an exported snapshot without touching the
-//! executor — the entry point the async service lane uses to write a
-//! checkpoint for epoch `e` while the executor trains epoch `e+1`.
+//! [`save_snapshot`] serializes an exported typed snapshot without
+//! touching the executor — the entry point the async checkpoint lane
+//! uses to write a checkpoint for epoch `e` while the executor trains
+//! epoch `e+1`; it rejects params-only snapshots, so a non-resumable
+//! checkpoint can never reach disk.  [`save_state`] is the flat-layout
+//! equivalent.
 
 use std::path::Path;
 
+use crate::engine::{Snapshot, SnapshotTier, StateExchange};
 use crate::runtime::artifact::VariantMeta;
 use crate::runtime::executor::ModelExecutor;
 use crate::util::fsutil::{gc_files, write_atomic};
@@ -41,8 +46,8 @@ use crate::util::npy;
 
 /// Save the executor's full state at `dir` (created if needed).
 pub fn save(exec: &ModelExecutor, dir: &Path, epoch: usize) -> anyhow::Result<()> {
-    let state = exec.export_state()?;
-    save_state(&exec.meta, &state, dir, epoch)
+    let snap = exec.export_snapshot(SnapshotTier::Full)?;
+    save_snapshot(&exec.meta, &snap, dir, epoch)
 }
 
 /// Whether a directory entry is a checkpoint leaf payload file
@@ -58,11 +63,32 @@ fn is_leaf_file(name: &str) -> bool {
         && name.ends_with(".npy")
 }
 
-/// Serialize a full exported state snapshot (params then momentum, in
+/// Serialize a typed full-state snapshot as a checkpoint at `dir`,
+/// without touching the executor.  Byte-identical to [`save`] on the
+/// executor the snapshot was exported from, and crash-safe (see the
+/// module docs).  Rejects params-only snapshots — a checkpoint without
+/// momentum could not resume the optimizer trajectory bit-exactly.
+pub fn save_snapshot(
+    meta: &VariantMeta,
+    snap: &Snapshot,
+    dir: &Path,
+    epoch: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        snap.tier() >= SnapshotTier::Full,
+        "checkpoint for variant {} needs a full-state snapshot, got the {} tier",
+        meta.name,
+        snap.tier().name()
+    );
+    let momentum = snap.momentum().ok_or_else(|| {
+        anyhow::anyhow!("full-state snapshot for {} is missing its momentum section", meta.name)
+    })?;
+    save_leaves(meta, snap.params(), momentum, dir, epoch)
+}
+
+/// Serialize a flat full exported state (params then momentum, in
 /// manifest leaf order — the `StateExchange::export_state` layout) as a
-/// checkpoint at `dir`, without touching the executor.  Byte-identical to
-/// [`save`] on the executor the snapshot was exported from, and
-/// crash-safe (see the module docs).
+/// checkpoint at `dir`.  The flat-layout twin of [`save_snapshot`].
 pub fn save_state(
     meta: &VariantMeta,
     state: &[Vec<f32>],
@@ -77,20 +103,41 @@ pub fn save_state(
         meta.name,
         2 * n
     );
+    save_leaves(meta, &state[..n], &state[n..], dir, epoch)
+}
+
+/// Shared serialization body: one `.npy` per parameter leaf (`p###_*`)
+/// and one per momentum leaf (`v###_*`), then the atomic index flip and
+/// the post-save sweep.
+fn save_leaves(
+    meta: &VariantMeta,
+    params: &[Vec<f32>],
+    vel: &[Vec<f32>],
+    dir: &Path,
+    epoch: usize,
+) -> anyhow::Result<()> {
+    let n = meta.params.len();
+    anyhow::ensure!(
+        params.len() == n && vel.len() == n,
+        "snapshot has {} param / {} momentum leaves, variant {} expects {n} each",
+        params.len(),
+        vel.len(),
+        meta.name
+    );
     std::fs::create_dir_all(dir)?;
     let mut index = Vec::new();
     let mut keep = Vec::with_capacity(2 * n);
     for (i, m) in meta.params.iter().enumerate() {
         anyhow::ensure!(
-            state[i].len() == m.numel() && state[n + i].len() == m.numel(),
+            params[i].len() == m.numel() && vel[i].len() == m.numel(),
             "state leaf {i} shape mismatch for {}",
             m.name
         );
         let stem = m.name.replace('/', "_");
         let fname = format!("p{i:03}_{stem}.e{epoch}.npy");
         let vname = format!("v{i:03}_{stem}.e{epoch}.npy");
-        npy::write_f32(&dir.join(&fname), &state[i], &m.shape)?;
-        npy::write_f32(&dir.join(&vname), &state[n + i], &m.shape)?;
+        npy::write_f32(&dir.join(&fname), &params[i], &m.shape)?;
+        npy::write_f32(&dir.join(&vname), &vel[i], &m.shape)?;
         index.push(crate::jobj![
             ("name", m.name.as_str()),
             ("file", fname.as_str()),
@@ -119,10 +166,12 @@ pub fn save_state(
 }
 
 /// Load a checkpoint into the executor.  The checkpoint's variant must
-/// match (same parameter names/shapes).  Full checkpoints (with momentum)
-/// restore the complete optimizer state; legacy params-only checkpoints
-/// restore the weights by name and leave momentum untouched.  Returns the
-/// saved epoch.
+/// match (same parameter names/shapes).  Both generations route through
+/// the typed snapshot path: full checkpoints (with momentum) restore as
+/// a [`SnapshotTier::Full`] snapshot (complete optimizer state); legacy
+/// params-only checkpoints restore as a [`SnapshotTier::Params`]
+/// snapshot — weights by name, momentum untouched.  Returns the saved
+/// epoch.
 pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
     let m = parse_file(&dir.join("checkpoint.json"))?;
     let variant = m.req("variant")?.as_str().unwrap_or_default();
@@ -157,9 +206,11 @@ pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
             let vfile = p.req("vel")?.as_str().unwrap_or_default();
             vels.push(npy::read_f32(&dir.join(vfile))?.0);
         }
-        params.extend(vels); // the export_state layout: params then momentum
-        exec.import_state(&params)?;
+        exec.import_snapshot(&Snapshot::full(params, Some(vels)))?;
     } else {
+        // legacy params-only generation: resolve each manifest leaf by
+        // (name, size), then restore through the params-only snapshot
+        // tier — momentum keeps its current values, as before
         let mut source = Vec::new();
         for p in entries {
             let name = p.req("name")?.as_str().unwrap_or_default().to_string();
@@ -167,12 +218,19 @@ pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
             let (data, _shape) = npy::read_f32(&dir.join(file))?;
             source.push((name, data));
         }
-        let imported = exec.import_params(&source)?;
-        anyhow::ensure!(
-            imported == exec.meta.params.len(),
-            "checkpoint restored only {imported}/{} leaves",
-            exec.meta.params.len()
-        );
+        let mut ordered = Vec::with_capacity(exec.meta.params.len());
+        for m in &exec.meta.params {
+            // move the leaf out of `source` (no second full-parameter
+            // copy on top of the npy buffers)
+            let pos = source
+                .iter()
+                .position(|(n, d)| n == &m.name && d.len() == m.numel())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("checkpoint is missing leaf {:?} ({} elems)", m.name, m.numel())
+                })?;
+            ordered.push(source.swap_remove(pos).1);
+        }
+        exec.import_snapshot(&Snapshot::params_only(ordered))?;
     }
     Ok(m.req("epoch")?.as_usize().unwrap_or(0))
 }

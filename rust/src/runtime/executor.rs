@@ -270,6 +270,39 @@ impl ModelExecutor {
         Ok(out)
     }
 
+    /// Snapshot only the parameter leaves (manifest leaf order) — the
+    /// params-only export tier: half the device→host traffic of
+    /// [`ModelExecutor::export_state`], and all a forward pass reads.
+    pub fn export_param_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect()
+    }
+
+    /// Restore the parameter leaves positionally (manifest leaf order),
+    /// leaving momentum untouched — the import half of the params-only
+    /// tier (eval replicas, legacy params-only checkpoints).
+    pub fn import_param_state(&mut self, params: &[Vec<f32>]) -> anyhow::Result<()> {
+        let n = self.meta.params.len();
+        anyhow::ensure!(
+            params.len() == n,
+            "params have {} leaves, executor expects {n}",
+            params.len()
+        );
+        for (i, m) in self.meta.params.iter().enumerate() {
+            anyhow::ensure!(
+                params[i].len() == m.numel(),
+                "param leaf {i} shape mismatch for {}",
+                m.name
+            );
+        }
+        for (i, m) in self.meta.params.iter().enumerate() {
+            self.params[i] = lit_f32(&params[i], &m.shape)?;
+        }
+        Ok(())
+    }
+
     /// Restore state previously produced by [`ModelExecutor::export_state`]
     /// (or an elementwise average of several such snapshots).
     pub fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
@@ -292,8 +325,10 @@ impl ModelExecutor {
         Ok(())
     }
 
-    /// Export parameters by name (transfer learning / checkpoints).
-    pub fn export_params(&self) -> anyhow::Result<Vec<(String, Vec<f32>)>> {
+    /// Export parameters by name (transfer learning / legacy checkpoint
+    /// inspection).  For the positional fast path the engine's snapshot
+    /// tiers use, see [`ModelExecutor::export_param_state`].
+    pub fn export_named_params(&self) -> anyhow::Result<Vec<(String, Vec<f32>)>> {
         self.meta
             .params
             .iter()
@@ -310,7 +345,7 @@ impl ModelExecutor {
     /// Import matching parameters by (name, shape); others keep their
     /// current values.  Returns how many leaves were imported.  Used by the
     /// transfer-learning pipeline: trunk transfers, head re-initializes.
-    pub fn import_params(&mut self, source: &[(String, Vec<f32>)]) -> anyhow::Result<usize> {
+    pub fn import_named_params(&mut self, source: &[(String, Vec<f32>)]) -> anyhow::Result<usize> {
         let mut imported = 0;
         for (i, m) in self.meta.params.iter().enumerate() {
             if let Some((_, data)) = source
@@ -357,7 +392,10 @@ impl crate::engine::StepBackend for ModelExecutor {
 
 /// The export/import round-trip preserves f32 bit patterns exactly
 /// (host `Vec<f32>` ↔ device literal is a lossless copy), so the pool's
-/// fixed worker-order averaging fold is deterministic.
+/// fixed worker-order averaging fold is deterministic.  The params-only
+/// tier ([`crate::engine::StateExchange::export_params`]) downloads the
+/// `n` parameter literals and skips the `n` momentum literals — the
+/// halved critical-path export eval-only epochs ride.
 impl crate::engine::StateExchange for ModelExecutor {
     fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
         ModelExecutor::export_state(self)
@@ -365,6 +403,57 @@ impl crate::engine::StateExchange for ModelExecutor {
 
     fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
         ModelExecutor::import_state(self, state)
+    }
+
+    fn export_params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.export_param_state()
+    }
+
+    fn export_momentum(&self) -> anyhow::Result<Option<Vec<Vec<f32>>>> {
+        let mut out = Vec::with_capacity(self.vel.len());
+        for l in &self.vel {
+            out.push(l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        }
+        Ok(Some(out))
+    }
+
+    fn import_params(&mut self, params: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.import_param_state(params)
+    }
+
+    /// Leaf-wise typed restore (no flat-state concatenation): params
+    /// always; momentum when the snapshot carries it.  A `Full`-tier
+    /// snapshot without a momentum section is rejected — this executor's
+    /// full state includes the optimizer trajectory.
+    fn import_snapshot(&mut self, snap: &crate::engine::Snapshot) -> anyhow::Result<()> {
+        use crate::engine::SnapshotTier;
+        match (snap.tier(), snap.momentum()) {
+            (SnapshotTier::Params, _) => self.import_param_state(snap.params()),
+            (SnapshotTier::Full, Some(momentum)) => {
+                let n = self.meta.params.len();
+                anyhow::ensure!(
+                    momentum.len() == n,
+                    "momentum has {} leaves, executor expects {n}",
+                    momentum.len()
+                );
+                for (i, m) in self.meta.params.iter().enumerate() {
+                    anyhow::ensure!(
+                        momentum[i].len() == m.numel(),
+                        "momentum leaf {i} shape mismatch for {}",
+                        m.name
+                    );
+                }
+                self.import_param_state(snap.params())?;
+                for (i, m) in self.meta.params.iter().enumerate() {
+                    self.vel[i] = lit_f32(&momentum[i], &m.shape)?;
+                }
+                Ok(())
+            }
+            (SnapshotTier::Full, None) => anyhow::bail!(
+                "full-state snapshot for {} is missing its momentum section",
+                self.meta.name
+            ),
+        }
     }
 }
 

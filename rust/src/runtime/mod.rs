@@ -1,8 +1,6 @@
 //! Runtime: PJRT CPU client + AOT artifact loading + model execution.
 //! Python never runs here — artifacts are produced once by `make artifacts`.
 
-#![warn(missing_docs)]
-
 pub mod artifact;
 pub mod checkpoint;
 pub mod client;

@@ -5,6 +5,7 @@
 
 use crate::util::rng::Rng;
 
+/// A built Walker alias table over a fixed weight vector.
 #[derive(Clone, Debug)]
 pub struct AliasTable {
     prob: Vec<f64>,   // acceptance probability per bucket
@@ -54,11 +55,13 @@ impl AliasTable {
         AliasTable { prob, alias }
     }
 
+    /// Number of buckets (the weight-vector length).
     #[inline]
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// Whether the table was built over zero buckets.
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

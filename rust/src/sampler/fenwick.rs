@@ -9,6 +9,7 @@
 
 use crate::util::rng::Rng;
 
+/// A Fenwick-tree weighted sampler with mutable per-index weights.
 #[derive(Clone, Debug)]
 pub struct FenwickSampler {
     tree: Vec<f64>, // 1-based partial sums
@@ -16,6 +17,7 @@ pub struct FenwickSampler {
 }
 
 impl FenwickSampler {
+    /// Build from non-negative initial weights.
     pub fn new(weights: &[f64]) -> Self {
         let n = weights.len();
         let mut s = FenwickSampler { tree: vec![0.0; n + 1], weights: vec![0.0; n] };
@@ -25,18 +27,22 @@ impl FenwickSampler {
         s
     }
 
+    /// Number of weights.
     pub fn len(&self) -> usize {
         self.weights.len()
     }
 
+    /// Whether the sampler holds zero weights.
     pub fn is_empty(&self) -> bool {
         self.weights.is_empty()
     }
 
+    /// Sum of all current weights.
     pub fn total(&self) -> f64 {
         self.prefix_sum(self.len())
     }
 
+    /// Current weight of index `i`.
     pub fn weight(&self, i: usize) -> f64 {
         self.weights[i]
     }

@@ -7,7 +7,9 @@
 //!   O(log N) online weight updates; used when importance weights change
 //!   within an epoch (Selective-Backprop style selection).
 
+/// Walker alias table: O(1) weighted draws with replacement.
 pub mod alias;
+/// Fenwick-tree sampler: O(log N) draws with online weight updates.
 pub mod fenwick;
 
 use crate::util::rng::Rng;

@@ -6,27 +6,45 @@
 //! KAKURENBO's 1/(1-F_e) factor (hiding/lr.rs) multiplies *on top of*
 //! whatever these produce — it is scheduler-independent by construction.
 
+/// Which decay shape the base learning rate follows.
 #[derive(Clone, Debug)]
 pub enum LrSchedule {
     /// Constant base LR.
     Constant,
     /// Multiply by `rate` at each epoch milestone ("step" in App. B).
-    Step { milestones: Vec<usize>, rate: f64 },
+    Step {
+        /// Epochs at which the decay step applies.
+        milestones: Vec<usize>,
+        /// Multiplicative decay applied at each milestone.
+        rate: f64,
+    },
     /// Cosine annealing to ~0 over `total` epochs.
-    Cosine { total: usize },
+    Cosine {
+        /// Annealing horizon in epochs.
+        total: usize,
+    },
     /// Decay by `rate` every `every` epochs (EfficientNet: 0.9 every 2).
-    ExpEvery { every: usize, rate: f64 },
+    ExpEvery {
+        /// Epochs between decay steps.
+        every: usize,
+        /// Multiplicative decay per step.
+        rate: f64,
+    },
 }
 
+/// Base learning rate + decay schedule + warmup.
 #[derive(Clone, Debug)]
 pub struct LrConfig {
+    /// Peak learning rate (after warmup, before decay).
     pub base_lr: f64,
+    /// Decay shape applied on top of `base_lr`.
     pub schedule: LrSchedule,
     /// Linear warmup from 0 over this many epochs (Goyal et al. [34]).
     pub warmup_epochs: usize,
 }
 
 impl LrConfig {
+    /// A constant schedule at `base_lr` with no warmup.
     pub fn constant(base_lr: f64) -> Self {
         LrConfig { base_lr, schedule: LrSchedule::Constant, warmup_epochs: 0 }
     }

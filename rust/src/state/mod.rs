@@ -9,8 +9,13 @@
 
 use crate::data::Dataset;
 
+/// Per-sample lagging statistics: the store the hiding selector, the
+/// baselines, and the per-class diagnostics all read from.  Snapshotted
+/// wholesale by the exact-resume path (`coordinator/resume.rs`) beside
+/// the model checkpoint.
 #[derive(Clone)]
 pub struct SampleState {
+    /// Sample count (every vector below has this length).
     pub n: usize,
     /// Lagging per-sample loss (sorting key for hiding / ISWR weights).
     pub loss: Vec<f32>,
@@ -43,6 +48,7 @@ pub struct SampleState {
 }
 
 impl SampleState {
+    /// A fresh store for `n` samples (optimistic init — see below).
     pub fn new(n: usize) -> Self {
         SampleState {
             n,

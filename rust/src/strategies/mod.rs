@@ -6,8 +6,6 @@
 //! behaviour, and the config flags driving each strategy — lives in
 //! docs/strategies.md.
 
-#![warn(missing_docs)]
-
 pub mod baseline;
 pub mod el2n;
 pub mod forget;

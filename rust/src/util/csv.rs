@@ -4,6 +4,7 @@
 use std::io::Write;
 use std::path::Path;
 
+/// A header-checked CSV file writer.
 pub struct CsvWriter {
     out: std::io::BufWriter<std::fs::File>,
     columns: usize,
@@ -18,6 +19,7 @@ fn quote(field: &str) -> String {
 }
 
 impl CsvWriter {
+    /// Create `path` (and parent dirs) and write the header row.
     pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -30,6 +32,7 @@ impl CsvWriter {
         Ok(w)
     }
 
+    /// Write one row (must match the header's column count).
     pub fn write_row(&mut self, cells: &[String]) -> anyhow::Result<()> {
         anyhow::ensure!(
             cells.len() == self.columns,
@@ -42,6 +45,7 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Flush and close the file.
     pub fn finish(mut self) -> anyhow::Result<()> {
         self.out.flush()?;
         Ok(())

@@ -10,20 +10,31 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key-sorted for stable serialization).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure with its source position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// 1-based source line.
     pub line: usize,
+    /// 1-based source column.
     pub col: usize,
 }
 
@@ -40,6 +51,7 @@ impl std::error::Error for JsonError {}
 // ---------------------------------------------------------------------------
 
 impl Json {
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -53,6 +65,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key {key:?} in {self:.60?}"))
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -60,10 +73,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -71,6 +86,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -78,6 +94,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -85,6 +102,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -92,6 +110,7 @@ impl Json {
         }
     }
 
+    /// Parse an all-number array into `usize`s.
     pub fn usize_list(&self) -> anyhow::Result<Vec<usize>> {
         self.as_arr()
             .ok_or_else(|| anyhow::anyhow!("expected array"))?
@@ -336,6 +355,7 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Parse a complete JSON document (rejects trailing data).
 pub fn parse(s: &str) -> Result<Json, JsonError> {
     let mut p = Parser::new(s);
     let v = p.parse_value()?;
@@ -346,6 +366,7 @@ pub fn parse(s: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
+/// Read and parse a JSON file, naming the path in any error.
 pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
@@ -437,12 +458,14 @@ impl Json {
         }
     }
 
+    /// Serialize without whitespace.
     pub fn to_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
         s
     }
 
+    /// Serialize indented (one space per depth level).
     pub fn to_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(1), 0);

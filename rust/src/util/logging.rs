@@ -4,25 +4,34 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, ordered from always-shown to most verbose.
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems (always shown).
     Error = 0,
+    /// Suspicious-but-survivable conditions.
     Warn = 1,
+    /// Per-epoch progress (the default verbosity).
     Info = 2,
+    /// Per-phase diagnostics.
     Debug = 3,
 }
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Set the global verbosity threshold.
 pub fn set_level(level: Level) {
     VERBOSITY.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `level` currently pass the threshold.
 pub fn enabled(level: Level) -> bool {
     level as u8 <= VERBOSITY.load(Ordering::Relaxed)
 }
 
+/// Emit one message at `level` (prefer the `info!`/`warn_!`/`debug!`/
+/// `error!` macros).
 pub fn log(level: Level, args: std::fmt::Arguments) {
     if enabled(level) {
         let tag = match level {
@@ -35,18 +44,23 @@ pub fn log(level: Level, args: std::fmt::Arguments) {
     }
 }
 
+/// Log at [`Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! info {
     ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) };
 }
+/// Log at [`Level::Warn`] with `format!` syntax (trailing `_` avoids the
+/// built-in `warn` attribute name).
 #[macro_export]
 macro_rules! warn_ {
     ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) };
 }
+/// Log at [`Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! debug {
     ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) };
 }
+/// Log at [`Level::Error`] with `format!` syntax.
 #[macro_export]
 macro_rules! error {
     ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) };

@@ -1,15 +1,27 @@
 //! Offline substrates: everything a crates.io-connected project would pull
 //! in as dependencies, implemented in-tree (see DESIGN.md §4).
 
+/// CSV writer for result exports.
 pub mod csv;
+/// Crash-safe filesystem primitives (atomic writes, fsync, GC sweeps).
 pub mod fsutil;
+/// Minimal JSON parser / serializer.
 pub mod json;
+/// Leveled stderr logging.
 pub mod logging;
+/// NumPy `.npy` array read/write.
 pub mod npy;
+/// ASCII line plots for convergence curves.
 pub mod plot;
+/// Minimal property-testing harness.
 pub mod proptest;
+/// Deterministic splittable PRNG.
 pub mod rng;
+/// Histograms, percentiles, and running statistics.
 pub mod stats;
+/// ASCII table rendering for bench output.
 pub mod table;
+/// Host thread-count helpers.
 pub mod threadpool;
+/// Wall-clock timers and per-phase time ledgers.
 pub mod timer;

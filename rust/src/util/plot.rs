@@ -1,9 +1,13 @@
 //! Terminal line charts for convergence curves (Fig. 2/3 style output):
 //! multiple named series rendered onto an ASCII canvas with axes.
 
+/// One named line series for [`line_chart`].
 pub struct Series<'a> {
+    /// Legend label.
     pub name: &'a str,
+    /// X coordinates (same length as `ys`).
     pub xs: &'a [f64],
+    /// Y coordinates.
     pub ys: &'a [f64],
 }
 

@@ -11,7 +11,9 @@ use super::rng::Rng;
 
 /// A generator of random test cases with optional shrinking.
 pub trait Gen {
+    /// The generated case type.
     type Value: std::fmt::Debug + Clone;
+    /// Draw one random case.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
     /// Candidate smaller versions of a failing value (simplest first).
     fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
@@ -52,9 +54,13 @@ pub fn check<G: Gen>(name: &str, seed: u64, cases: usize, gen_: &G, prop: impl F
 
 /// `Vec<f32>` of length in `[min_len, max_len]`, values in `[lo, hi]`.
 pub struct VecF32 {
+    /// Minimum generated length.
     pub min_len: usize,
+    /// Maximum generated length.
     pub max_len: usize,
+    /// Lower value bound.
     pub lo: f32,
+    /// Upper value bound.
     pub hi: f32,
 }
 
@@ -81,7 +87,9 @@ impl Gen for VecF32 {
 
 /// usize in [lo, hi].
 pub struct USize {
+    /// Lower bound (inclusive).
     pub lo: usize,
+    /// Upper bound (inclusive).
     pub hi: usize,
 }
 

@@ -21,6 +21,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (SplitMix64-expanded, so nearby seeds diverge).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -48,6 +49,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// The next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -114,6 +116,7 @@ impl Rng {
         }
     }
 
+    /// Normal draw with the given mean and standard deviation, as f32.
     #[inline]
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         mean + std * self.normal() as f32

@@ -40,17 +40,22 @@ pub fn percentile(xs: &[f32], q: f64) -> f32 {
 /// Fixed-bin histogram over [lo, hi]; values outside clamp to edge bins.
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// Lower range edge.
     pub lo: f32,
+    /// Upper range edge.
     pub hi: f32,
+    /// Per-bin counts.
     pub counts: Vec<u64>,
 }
 
 impl Histogram {
+    /// An empty histogram with `bins` bins over `[lo, hi]`.
     pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
         assert!(bins > 0 && hi > lo);
         Histogram { lo, hi, counts: vec![0; bins] }
     }
 
+    /// Histogram of `xs` with `bins` bins over `[lo, hi]`.
     pub fn of(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Self {
         let mut h = Histogram::new(lo, hi, bins);
         for &x in xs {
@@ -59,6 +64,7 @@ impl Histogram {
         h
     }
 
+    /// Count one value (clamped to the edge bins).
     pub fn add(&mut self, x: f32) {
         let bins = self.counts.len();
         let t = ((x - self.lo) / (self.hi - self.lo) * bins as f32) as i64;
@@ -66,6 +72,7 @@ impl Histogram {
         self.counts[idx] += 1;
     }
 
+    /// Total count across all bins.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
@@ -98,15 +105,18 @@ impl Histogram {
 /// Exponential moving average.
 #[derive(Clone, Copy, Debug)]
 pub struct Ema {
+    /// Smoothing factor in (0, 1]; higher tracks faster.
     pub alpha: f64,
     value: Option<f64>,
 }
 
 impl Ema {
+    /// An empty EMA with smoothing factor `alpha`.
     pub fn new(alpha: f64) -> Self {
         Ema { alpha, value: None }
     }
 
+    /// Fold one observation in; returns the updated average.
     pub fn push(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -116,6 +126,7 @@ impl Ema {
         v
     }
 
+    /// The current average (`None` before the first push).
     pub fn get(&self) -> Option<f64> {
         self.value
     }

@@ -3,6 +3,7 @@
 //! Every `bench_*` binary prints its reproduction of a paper table through
 //! this module so rows line up and can be diffed against EXPERIMENTS.md.
 
+/// A titled ASCII table accumulated row by row.
 #[derive(Default)]
 pub struct Table {
     title: String,
@@ -11,20 +12,24 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with a title line.
     pub fn new(title: impl Into<String>) -> Self {
         Table { title: title.into(), ..Default::default() }
     }
 
+    /// Set the header row (builder style).
     pub fn header(mut self, cols: &[&str]) -> Self {
         self.header = cols.iter().map(|s| s.to_string()).collect();
         self
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         self.rows.push(cells);
         self
     }
 
+    /// Render to a string with aligned columns and separators.
     pub fn render(&self) -> String {
         let ncols = self
             .header
@@ -74,16 +79,18 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
 }
 
-/// Format helpers matching the paper's reporting style.
+/// Accuracy as a percent with two decimals (paper style).
 pub fn pct(x: f64) -> String {
     format!("{:.2}", x * 100.0)
 }
 
+/// Signed accuracy delta vs a baseline, in parens (paper style).
 pub fn diff_pct(x: f64, baseline: f64) -> String {
     let d = (x - baseline) * 100.0;
     if d >= 0.0 {
@@ -93,10 +100,12 @@ pub fn diff_pct(x: f64, baseline: f64) -> String {
     }
 }
 
+/// Seconds with one decimal.
 pub fn secs(x: f64) -> String {
     format!("{x:.1}")
 }
 
+/// Signed relative-time delta vs a baseline, in parens (paper style).
 pub fn speedup_pct(time: f64, baseline: f64) -> String {
     let d = (time / baseline - 1.0) * 100.0;
     if d >= 0.0 {

@@ -9,19 +9,23 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// A one-shot wall-clock stopwatch.
 pub struct Timer {
     start: Instant,
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Seconds since [`Timer::start`].
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since [`Timer::start`].
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_s() * 1e3
     }
@@ -34,10 +38,12 @@ pub struct TimeLedger {
 }
 
 impl TimeLedger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Charge `seconds` to the `name` bucket.
     pub fn add(&mut self, name: &'static str, seconds: f64) {
         *self.buckets.entry(name).or_insert(0.0) += seconds;
     }
@@ -50,24 +56,29 @@ impl TimeLedger {
         out
     }
 
+    /// Seconds charged to `name` so far (0 for unknown buckets).
     pub fn get(&self, name: &str) -> f64 {
         self.buckets.get(name).copied().unwrap_or(0.0)
     }
 
+    /// Sum across all buckets.
     pub fn total(&self) -> f64 {
         self.buckets.values().sum()
     }
 
+    /// Iterate `(bucket, seconds)` pairs in name order.
     pub fn entries(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
         self.buckets.iter().map(|(&k, &v)| (k, v))
     }
 
+    /// Fold another ledger's buckets into this one.
     pub fn merge(&mut self, other: &TimeLedger) {
         for (k, v) in other.entries() {
             self.add(k, v);
         }
     }
 
+    /// Clear every bucket.
     pub fn reset(&mut self) {
         self.buckets.clear();
     }

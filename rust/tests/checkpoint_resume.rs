@@ -54,8 +54,8 @@ fn assert_records_bitwise_eq(
 }
 
 fn assert_params_bitwise_eq(a: &Trainer, b: &Trainer) {
-    let pa = a.exec.export_params().unwrap();
-    let pb = b.exec.export_params().unwrap();
+    let pa = a.exec.export_named_params().unwrap();
+    let pb = b.exec.export_named_params().unwrap();
     assert_eq!(pa.len(), pb.len());
     for ((na, da), (nb, db)) in pa.iter().zip(&pb) {
         assert_eq!(na, nb);
@@ -146,5 +146,76 @@ fn resumed_baseline_run_matches_tail_via_service_lane() {
     assert_eq!(resumed_result.records.first().unwrap().epoch, 4);
     assert_records_bitwise_eq(&resumed_result.records, &full_result.records[4..]);
     assert_params_bitwise_eq(&resumed, &full);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Legacy params-only checkpoints (no `vel` entries) still load — now
+/// routed through the typed params-only snapshot tier
+/// (`Snapshot::params_only` -> `StateExchange::import_snapshot`):
+/// weights restore by name even from a shuffled legacy index, and
+/// momentum keeps its current values.
+#[test]
+fn legacy_params_only_checkpoint_loads_via_typed_snapshot_path() {
+    let Some(rt) = runtime() else { return };
+    let dir = tmp_dir("legacy");
+    std::fs::remove_dir_all(&dir).ok();
+
+    use kakurenbo::engine::StateExchange;
+    use kakurenbo::runtime::ModelExecutor;
+    use kakurenbo::util::json::{parse_file, Json};
+
+    let mut a = ModelExecutor::new(&rt, "mlp_c10_b64", 11).unwrap();
+    let x = vec![0.3f32; 64 * 64];
+    let y = vec![1i32; 64];
+    let sw = vec![1.0f32; 64];
+    // one step so both params and momentum move off their init
+    a.train_step(&x, &y, &sw, 0.1).unwrap();
+    kakurenbo::runtime::checkpoint::save(&a, &dir, 4).unwrap();
+
+    // Strip the momentum generation down to a pre-full-state layout:
+    // delete the v*.npy payloads, drop the "vel" index entries, and
+    // shuffle the index order (legacy tools did not guarantee it).
+    let path = dir.join("checkpoint.json");
+    let mut m = parse_file(&path).unwrap();
+    if let Json::Obj(obj) = &mut m {
+        if let Some(Json::Arr(entries)) = obj.get_mut("params") {
+            for e in entries.iter_mut() {
+                if let Json::Obj(o) = e {
+                    o.remove("vel");
+                }
+            }
+            entries.reverse();
+        }
+    }
+    std::fs::write(&path, m.to_pretty()).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        if name.starts_with('v') && name.ends_with(".npy") {
+            std::fs::remove_file(dir.join(&name)).unwrap();
+        }
+    }
+
+    let mut b = ModelExecutor::new(&rt, "mlp_c10_b64", 999).unwrap();
+    let momentum_before = StateExchange::export_momentum(&b).unwrap().unwrap();
+    let epoch = kakurenbo::runtime::checkpoint::load(&mut b, &dir).unwrap();
+    assert_eq!(epoch, 4);
+
+    // parameters restored bit for bit despite the shuffled legacy index
+    let pa = StateExchange::export_params(&a).unwrap();
+    let pb = StateExchange::export_params(&b).unwrap();
+    assert_eq!(pa.len(), pb.len());
+    for (la, lb) in pa.iter().zip(&pb) {
+        let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb);
+    }
+    // the params-only tier leaves momentum exactly as it was
+    let momentum_after = StateExchange::export_momentum(&b).unwrap().unwrap();
+    assert_eq!(momentum_before.len(), momentum_after.len());
+    for (la, lb) in momentum_before.iter().zip(&momentum_after) {
+        let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb);
+    }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -23,11 +23,11 @@ fn batch_inputs(exec: &ModelExecutor, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32
 fn train_step_zero_lr_preserves_params() {
     let Some(rt) = runtime() else { return };
     let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 7).unwrap();
-    let before = exec.export_params().unwrap();
+    let before = exec.export_named_params().unwrap();
     let (x, y, sw) = batch_inputs(&exec, 1);
     // lr = 0: momentum update runs but w' = w - 0*v' = w
     exec.train_step(&x, &y, &sw, 0.0).unwrap();
-    let after = exec.export_params().unwrap();
+    let after = exec.export_named_params().unwrap();
     for ((n1, p1), (n2, p2)) in before.iter().zip(&after) {
         assert_eq!(n1, n2);
         for (a, b) in p1.iter().zip(p2) {
@@ -40,11 +40,11 @@ fn train_step_zero_lr_preserves_params() {
 fn train_step_zero_weights_preserve_params() {
     let Some(rt) = runtime() else { return };
     let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 7).unwrap();
-    let before = exec.export_params().unwrap();
+    let before = exec.export_named_params().unwrap();
     let (x, y, _) = batch_inputs(&exec, 2);
     let sw = vec![0.0f32; exec.meta.batch];
     exec.train_step(&x, &y, &sw, 0.5).unwrap();
-    let after = exec.export_params().unwrap();
+    let after = exec.export_named_params().unwrap();
     for ((n1, p1), (_, p2)) in before.iter().zip(&after) {
         for (a, b) in p1.iter().zip(p2) {
             assert!((a - b).abs() < 1e-6, "{n1} changed under sw=0");
@@ -116,30 +116,30 @@ fn fwd_embed_shapes_and_probs() {
 fn reset_params_is_deterministic() {
     let Some(rt) = runtime() else { return };
     let mut exec = ModelExecutor::new(&rt, "mlp_c10_b64", 42).unwrap();
-    let a = exec.export_params().unwrap();
+    let a = exec.export_named_params().unwrap();
     let (x, y, sw) = batch_inputs(&exec, 7);
     exec.train_step(&x, &y, &sw, 0.1).unwrap();
     exec.reset_params(42).unwrap();
-    let b = exec.export_params().unwrap();
+    let b = exec.export_named_params().unwrap();
     assert_eq!(a.len(), b.len());
     for ((_, pa), (_, pb)) in a.iter().zip(&b) {
         assert_eq!(pa, pb);
     }
     exec.reset_params(43).unwrap();
-    let c = exec.export_params().unwrap();
+    let c = exec.export_named_params().unwrap();
     assert!(a.iter().zip(&c).any(|((_, pa), (_, pc))| pa != pc));
 }
 
 #[test]
-fn import_params_matches_by_name_and_shape() {
+fn import_named_params_matches_by_name_and_shape() {
     let Some(rt) = runtime() else { return };
     let src = ModelExecutor::new(&rt, "mlp_c64_b64", 1).unwrap();
     let mut dst = ModelExecutor::new(&rt, "mlp_c10_b64", 2).unwrap();
-    let trunk = src.export_params().unwrap();
-    let imported = dst.import_params(&trunk).unwrap();
+    let trunk = src.export_named_params().unwrap();
+    let imported = dst.import_named_params(&trunk).unwrap();
     // fc1/fc2 (w+b) match; the c64 vs c10 heads must NOT transfer
     assert_eq!(imported, 4, "expected exactly the 4 trunk leaves");
-    let dst_params = dst.export_params().unwrap();
+    let dst_params = dst.export_named_params().unwrap();
     let src_fc1 = &trunk.iter().find(|(n, _)| n == "fc1/w").unwrap().1;
     let dst_fc1 = &dst_params.iter().find(|(n, _)| n == "fc1/w").unwrap().1;
     assert_eq!(src_fc1, dst_fc1);

@@ -1,16 +1,19 @@
 //! The service-lane determinism contract: evaluation (and checkpointing)
-//! moved onto the async background lane must be **bitwise identical** to
-//! the synchronous path — the lane consumes an exact exported snapshot,
-//! so going async can change *when* the numbers are computed but never
-//! *what* they are.
+//! moved onto the async background lanes must be **bitwise identical** to
+//! the synchronous path — the lanes consume exact exported typed
+//! snapshots, so going async can change *when* the numbers are computed
+//! but never *what* they are.  The split-lane design (independent eval /
+//! checkpoint queues) and the params-only eval tier must preserve this.
 //!
 //! Two layers of coverage:
-//!   * engine-level (mock backend, always runs): lane eval vs the
-//!     engine's `EvalSink` path on the same state;
+//!   * engine-level (mock backend, always runs): eval-lane results vs the
+//!     engine's `EvalSink` path on the same state, across both snapshot
+//!     tiers;
 //!   * trainer-level (PJRT, skipped without artifacts): full runs with
 //!     `--service-lane on` vs `off` must produce bitwise-identical
 //!     records (loss curves, val accuracy, hidden counts), final
-//!     parameters, and byte-identical checkpoints.
+//!     parameters, and byte-identical checkpoints — including composed
+//!     with `--dp average`.
 
 use std::sync::Arc;
 
@@ -19,14 +22,16 @@ use kakurenbo::coordinator::Trainer;
 use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
 use kakurenbo::engine::testbed::MockBackend;
 use kakurenbo::engine::{
-    DataParallel, Engine, EvalSink, ServiceEvent, ServiceLane, StateExchange, StepMode,
+    DataParallel, Engine, EvalSink, ServiceEvent, ServiceLanes, SnapshotTier, StateExchange,
+    StepMode,
 };
 use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
 
 const B: usize = 8;
 
-/// Engine-level: the lane's eval of an exported snapshot is bitwise
-/// identical to the engine's synchronous eval of the same backend state.
+/// Engine-level: the eval lane's eval of an exported snapshot is bitwise
+/// identical to the engine's synchronous eval of the same backend state —
+/// on the params-only tier *and* the full tier.
 #[test]
 fn async_eval_matches_sync_eval_bitwise() {
     let tv = gauss_mixture(
@@ -50,25 +55,29 @@ fn async_eval_matches_sync_eval_bitwise() {
         .unwrap();
     let (sync_acc, sync_loss) = sync_sink.result();
 
-    // async: the lane's replica evaluates the exported snapshot
-    let mut lane = ServiceLane::spawn(
+    // async: the eval lane's replica evaluates the exported snapshots
+    let mut lanes = ServiceLanes::spawn(
         primary.replica_builder().unwrap(),
         tv.val.clone(),
         B,
         None,
     )
     .unwrap();
-    let snap = Arc::new(primary.export_state().unwrap());
-    lane.submit_eval(9, snap).unwrap();
-    let events = lane.drain().unwrap();
-    assert_eq!(events.len(), 1);
-    match &events[0] {
-        ServiceEvent::Eval { epoch, acc, loss, .. } => {
-            assert_eq!(*epoch, 9);
-            assert_eq!(acc.to_bits(), sync_acc.to_bits());
-            assert_eq!(loss.to_bits(), sync_loss.to_bits());
+    let params_snap = Arc::new(primary.export_snapshot(SnapshotTier::Params).unwrap());
+    let full_snap = Arc::new(primary.export_snapshot(SnapshotTier::Full).unwrap());
+    lanes.submit_eval(9, params_snap).unwrap();
+    lanes.submit_eval(10, full_snap).unwrap();
+    let events = lanes.drain().unwrap();
+    assert_eq!(events.len(), 2);
+    for (ev, want_epoch) in events.iter().zip([9usize, 10]) {
+        match ev {
+            ServiceEvent::Eval { epoch, acc, loss, .. } => {
+                assert_eq!(*epoch, want_epoch);
+                assert_eq!(acc.to_bits(), sync_acc.to_bits());
+                assert_eq!(loss.to_bits(), sync_loss.to_bits());
+            }
+            other => panic!("unexpected event {other:?}"),
         }
-        other => panic!("unexpected event {other:?}"),
     }
 }
 
@@ -82,7 +91,7 @@ fn lane_evaluates_the_snapshot_not_the_live_backend() {
         3,
     );
     let mut primary = MockBackend::new();
-    let snap_before = Arc::new(primary.export_state().unwrap());
+    let snap_before = Arc::new(primary.export_snapshot(SnapshotTier::Params).unwrap());
     let (ref_acc, ref_loss) = {
         let val_order: Vec<u32> = (0..tv.val.n as u32).collect();
         let mut sink = EvalSink::default();
@@ -98,15 +107,15 @@ fn lane_evaluates_the_snapshot_not_the_live_backend() {
     eng.run(&mut primary, &tv.train, &order, None, StepMode::Train { lr: 0.1 }, &mut sink)
         .unwrap();
 
-    let mut lane = ServiceLane::spawn(
+    let mut lanes = ServiceLanes::spawn(
         primary.replica_builder().unwrap(),
         tv.val.clone(),
         B,
         None,
     )
     .unwrap();
-    lane.submit_eval(0, snap_before).unwrap();
-    let events = lane.drain().unwrap();
+    lanes.submit_eval(0, snap_before).unwrap();
+    let events = lanes.drain().unwrap();
     match &events[0] {
         ServiceEvent::Eval { acc, loss, .. } => {
             assert_eq!(acc.to_bits(), ref_acc.to_bits());
@@ -157,7 +166,7 @@ fn service_lane_run_is_bitwise_identical_to_sync_run() {
         cfg.checkpoint_dir = Some(if on { dir_on.clone() } else { dir_off.clone() });
         let mut t = Trainer::new(&rt, cfg).unwrap();
         let result = t.run().unwrap();
-        let params = t.exec.export_params().unwrap();
+        let params = t.exec.export_named_params().unwrap();
         (result, params)
     };
     let (r_off, p_off) = run(false);

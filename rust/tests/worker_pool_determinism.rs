@@ -411,8 +411,8 @@ mod end_to_end {
         let mut restored = ModelExecutor::new(&rt, "mlp_c100_b64", 999).unwrap();
         let epoch = kakurenbo::runtime::checkpoint::load(&mut restored, &dir).unwrap();
         assert_eq!(epoch, 0);
-        let pa = exec.export_params().unwrap();
-        let pb = restored.export_params().unwrap();
+        let pa = exec.export_named_params().unwrap();
+        let pb = restored.export_named_params().unwrap();
         for ((n1, d1), (n2, d2)) in pa.iter().zip(&pb) {
             assert_eq!(n1, n2);
             let ba: Vec<u32> = d1.iter().map(|v| v.to_bits()).collect();
