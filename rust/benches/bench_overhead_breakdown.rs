@@ -17,8 +17,13 @@ use kakurenbo::coordinator::{CostModel, Trainer};
 use kakurenbo::data::shard::shard_order_aligned;
 use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
 use kakurenbo::engine::testbed::MockBackend;
-use kakurenbo::engine::{EvalSink, SnapshotTier, StateExchange, StepMode, WorkerPool};
+use kakurenbo::engine::{
+    EvalSink, SharedSnapshot, Snapshot, SnapshotTier, StateExchange, StepMode, WorkerPool,
+};
 use kakurenbo::report::BenchCtx;
+use kakurenbo::runtime::artifact::{ParamMeta, VariantMeta};
+use kakurenbo::runtime::checkpoint::save_snapshot;
+use kakurenbo::util::artifact::WritePool;
 use kakurenbo::util::table::Table;
 use kakurenbo::util::timer::Timer;
 
@@ -150,6 +155,88 @@ fn main() -> anyhow::Result<()> {
             ("elems", snap.elems()),
             ("export_s", secs),
         ]);
+    }
+    t.print();
+
+    // --- checkpoint write: pooled vs serial, compressed vs raw --------------
+    // The checkpoint store serializes each leaf (encode → optional LZSS →
+    // sha256 → atomic write) through a write pool; this section measures a
+    // Full-tier write of a synthetic variant under all four configs.  Each
+    // config gets a fresh directory — the store is content-addressed, so
+    // reusing one would dedup every leaf after the first config and
+    // measure nothing.
+    let ck_leaves = ctx.scale(24usize, 6);
+    let ck_numel = ctx.scale(48_000usize, 8_000);
+    let ck_meta = VariantMeta {
+        name: "bench_ckpt".into(),
+        family: "bench".into(),
+        batch: 8,
+        input_shape: vec![4],
+        label_shape: vec![1],
+        classes: 2,
+        embed_dim: 0,
+        param_count: ck_leaves * ck_numel,
+        params: (0..ck_leaves)
+            .map(|i| ParamMeta {
+                name: format!("block{i}/w"),
+                shape: vec![ck_numel],
+                init_std: 0.1,
+            })
+            .collect(),
+        artifacts: Default::default(),
+    };
+    let ck_params: Vec<Vec<f32>> = (0..ck_leaves)
+        .map(|i| (0..ck_numel).map(|j| ((i * 31 + j * 7) % 997) as f32 * 0.013).collect())
+        .collect();
+    // momentum decays toward sparse repetitive values — the compressible
+    // half of a real Full-tier snapshot
+    let ck_vels: Vec<Vec<f32>> =
+        (0..ck_leaves).map(|i| vec![i as f32 * 0.5; ck_numel]).collect();
+    let ck_snap: SharedSnapshot =
+        std::sync::Arc::new(Snapshot::full(ck_params, Some(ck_vels)));
+    let mut t = Table::new(format!(
+        "Checkpoint write ({ck_leaves} leaves x {ck_numel} f32)"
+    ))
+    .header(&["pool", "codec", "MB written", "write (s)", "hash (s)", "lzss (s)", "wall (s)", "vs serial/raw"]);
+    let mut ckpt_payload = Vec::new();
+    let mut ck_base_wall = 0.0;
+    for (pool_label, threads) in [("serial", 1usize), ("pooled", 0usize)] {
+        for (codec_label, compress) in [("raw", false), ("lzss", true)] {
+            let dir = std::env::temp_dir().join(format!(
+                "kakurenbo_bench_ckpt_{pool_label}_{codec_label}_{}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            let pool = WritePool::new(threads);
+            let timer = Timer::start();
+            let stats = save_snapshot(&ck_meta, &ck_snap, &dir, 0, &pool, compress)?;
+            let wall = timer.elapsed_s();
+            if pool_label == "serial" && codec_label == "raw" {
+                ck_base_wall = wall;
+            }
+            t.row(vec![
+                pool_label.to_string(),
+                codec_label.to_string(),
+                format!("{:.2}", stats.written_bytes as f64 / 1e6),
+                format!("{:.4}", stats.write_s),
+                format!("{:.4}", stats.hash_s),
+                format!("{:.4}", stats.compress_s),
+                format!("{wall:.4}"),
+                format!("{:+.1}%", (wall / ck_base_wall - 1.0) * 100.0),
+            ]);
+            ckpt_payload.push(kakurenbo::jobj![
+                ("pool", pool_label),
+                ("codec", codec_label),
+                ("leaves", stats.leaves),
+                ("written_bytes", stats.written_bytes),
+                ("raw_bytes", stats.raw_bytes),
+                ("write_s", stats.write_s),
+                ("hash_s", stats.hash_s),
+                ("compress_s", stats.compress_s),
+                ("wall_s", wall),
+            ]);
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
     t.print();
 
@@ -299,6 +386,10 @@ fn main() -> anyhow::Result<()> {
     payload.push(kakurenbo::jobj![(
         "export_tiers",
         kakurenbo::util::json::Json::Arr(export_payload)
+    )]);
+    payload.push(kakurenbo::jobj![(
+        "checkpoint_write",
+        kakurenbo::util::json::Json::Arr(ckpt_payload)
     )]);
     ctx.save_json("overhead_breakdown", &kakurenbo::util::json::Json::Arr(payload))?;
     Ok(())

@@ -193,16 +193,22 @@ impl DpMode {
     }
 }
 
-/// Parse the `--service-lane` CLI value (`on`/`off`, with the usual
-/// boolean spellings accepted).
-pub fn parse_service_lane(value: &str) -> anyhow::Result<bool> {
+/// Parse an on/off CLI switch (`on`/`off`, with the usual boolean
+/// spellings accepted).  `flag` names the option in the error message.
+pub fn parse_switch(flag: &str, value: &str) -> anyhow::Result<bool> {
     match value {
         "on" | "true" | "1" | "yes" => Ok(true),
         "off" | "false" | "0" | "no" => Ok(false),
         other => anyhow::bail!(
-            "unknown --service-lane value {other:?}; expected \"on\" or \"off\""
+            "unknown {flag} value {other:?}; expected \"on\" or \"off\""
         ),
     }
+}
+
+/// Parse the `--service-lane` CLI value (`on`/`off`, with the usual
+/// boolean spellings accepted).
+pub fn parse_service_lane(value: &str) -> anyhow::Result<bool> {
+    parse_switch("--service-lane", value)
 }
 
 impl StrategyConfig {
@@ -315,6 +321,18 @@ pub struct ExperimentConfig {
     pub checkpoint_dir: Option<PathBuf>,
     /// Resume from the checkpoint in `checkpoint_dir` before training.
     pub resume: bool,
+    /// Leaf write-pool worker threads for checkpoint serialization
+    /// (`--checkpoint-pool N`).  0 (the default) auto-sizes from the host
+    /// core count; 1 runs leaf writes inline (serial).
+    pub checkpoint_pool: usize,
+    /// Verify per-leaf sha256 digests against the manifest on checkpoint
+    /// load (`--checkpoint-verify on|off`, default on).  Off skips the
+    /// hash pass — faster loads, no corruption detection.
+    pub checkpoint_verify: bool,
+    /// LZSS-compress momentum leaves in Full-tier checkpoints
+    /// (`--checkpoint-compress on|off`, default on).  Params are always
+    /// stored raw; only the compressed-vs-raw momentum framing changes.
+    pub checkpoint_compress: bool,
 }
 
 impl ExperimentConfig {
@@ -343,6 +361,9 @@ impl ExperimentConfig {
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: false,
+            checkpoint_pool: 0,
+            checkpoint_verify: true,
+            checkpoint_compress: true,
         }
     }
 
@@ -375,6 +396,11 @@ impl ExperimentConfig {
         if let StrategyConfig::Forget { prune_epoch, .. } = &self.strategy {
             anyhow::ensure!(*prune_epoch < self.epochs, "prune_epoch >= epochs");
         }
+        anyhow::ensure!(
+            self.checkpoint_pool <= 256,
+            "--checkpoint-pool {} is implausibly large (max 256; 0 = auto)",
+            self.checkpoint_pool
+        );
         Ok(())
     }
 
@@ -398,6 +424,15 @@ impl ExperimentConfig {
             "checkpoint_every" => self.checkpoint_every = value.parse()?,
             "checkpoint_dir" => self.checkpoint_dir = Some(PathBuf::from(value)),
             "resume" => self.resume = value.parse()?,
+            "checkpoint_pool" | "checkpoint-pool" => {
+                self.checkpoint_pool = value.parse()?
+            }
+            "checkpoint_verify" | "checkpoint-verify" => {
+                self.checkpoint_verify = parse_switch("--checkpoint-verify", value)?
+            }
+            "checkpoint_compress" | "checkpoint-compress" => {
+                self.checkpoint_compress = parse_switch("--checkpoint-compress", value)?
+            }
             "max_fraction" => match &mut self.strategy {
                 StrategyConfig::Kakurenbo { max_fraction, .. } => *max_fraction = value.parse()?,
                 StrategyConfig::Forget { fraction, .. }
@@ -434,6 +469,9 @@ impl ExperimentConfig {
             ("service_lane", self.service_lane),
             ("base_lr", self.lr.base_lr),
             ("momentum", self.momentum),
+            ("checkpoint_pool", self.checkpoint_pool),
+            ("checkpoint_verify", self.checkpoint_verify),
+            ("checkpoint_compress", self.checkpoint_compress),
         ]
     }
 }
@@ -591,5 +629,44 @@ mod tests {
             c.service_lane = on;
             assert!(c.validate().is_ok());
         }
+    }
+
+    #[test]
+    fn checkpoint_knob_defaults() {
+        let c = base_cfg(StrategyConfig::Baseline);
+        assert_eq!(c.checkpoint_pool, 0, "pool defaults to auto");
+        assert!(c.checkpoint_verify, "verify defaults on");
+        assert!(c.checkpoint_compress, "compress defaults on");
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn checkpoint_overrides_apply_both_spellings() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        c.apply_override("checkpoint_pool", "4").unwrap();
+        assert_eq!(c.checkpoint_pool, 4);
+        c.apply_override("checkpoint-pool", "8").unwrap();
+        assert_eq!(c.checkpoint_pool, 8);
+        c.apply_override("checkpoint_verify", "off").unwrap();
+        assert!(!c.checkpoint_verify);
+        c.apply_override("checkpoint-verify", "on").unwrap();
+        assert!(c.checkpoint_verify);
+        c.apply_override("checkpoint_compress", "0").unwrap();
+        assert!(!c.checkpoint_compress);
+        c.apply_override("checkpoint-compress", "yes").unwrap();
+        assert!(c.checkpoint_compress);
+        let err = c.apply_override("checkpoint_verify", "maybe").unwrap_err();
+        assert!(err.to_string().contains("--checkpoint-verify"), "{err}");
+        assert!(c.apply_override("checkpoint_pool", "lots").is_err());
+    }
+
+    #[test]
+    fn checkpoint_pool_bound_validated() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        c.checkpoint_pool = 256;
+        assert!(c.validate().is_ok());
+        c.checkpoint_pool = 257;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--checkpoint-pool"), "{err}");
     }
 }

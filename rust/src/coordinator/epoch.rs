@@ -151,7 +151,7 @@ impl EpochPipeline {
         pipe.close(Phase::Eval, t, &mut rec);
 
         let t = Timer::start();
-        pipe.checkpoint(trainer)?;
+        pipe.checkpoint(trainer, &mut rec)?;
         pipe.close(Phase::Checkpoint, t, &mut rec);
 
         let t = Timer::start();
@@ -347,7 +347,7 @@ impl EpochPipeline {
     }
 
     // --- Checkpoint: sync serialization, or snapshot + async submit -------
-    fn checkpoint(&mut self, t: &mut Trainer) -> anyhow::Result<()> {
+    fn checkpoint(&mut self, t: &mut Trainer, rec: &mut EpochRecord) -> anyhow::Result<()> {
         let epoch = self.epoch;
         if !Self::checkpoint_due(t, epoch) {
             return Ok(());
@@ -360,14 +360,33 @@ impl EpochPipeline {
             t.ensure_service()?;
             let lanes = t.service.as_mut().expect("ensure_service populated the lanes");
             lanes.submit_checkpoint(epoch, snap)?;
+            // write-pool stats fold in at the next barrier with the event
         } else {
-            crate::runtime::checkpoint::save(&t.exec, &dir, epoch)?;
+            // the sync path shares one persistent write pool across the
+            // run (created at the first checkpoint; pool size 1 stays a
+            // plain inline serial writer)
+            if t.ckpt_pool.is_none() {
+                t.ckpt_pool =
+                    Some(crate::util::artifact::WritePool::new(t.cfg.checkpoint_pool));
+            }
+            let snap = self.snapshot(t, SnapshotTier::Full)?;
+            let pool = t.ckpt_pool.as_ref().expect("pool initialized above");
+            let stats = crate::runtime::checkpoint::save_snapshot(
+                &t.exec.meta,
+                &snap,
+                &dir,
+                epoch,
+                pool,
+                t.cfg.checkpoint_compress,
+            )?;
+            rec.fold_ckpt_stats(&stats);
         }
         // The coordinator-side resume state (per-sample stats, RNG stream,
-        // schedule offset) is small, host-only, and must match this exact
-        // epoch boundary — always written synchronously, stamped with the
-        // epoch so resume can detect a crash-torn directory.
-        super::resume::save(&dir, epoch, &t.state, &t.rng, t.schedule_offset)?;
+        // SB selector history, schedule offset) is small, host-only, and
+        // must match this exact epoch boundary — always written
+        // synchronously, stamped with the epoch so resume can detect a
+        // crash-torn directory.
+        super::resume::save(&dir, epoch, &t.state, &t.rng, &t.sb, t.schedule_offset)?;
         Ok(())
     }
 

@@ -12,18 +12,23 @@
 //! state epoch `k+1` of the uninterrupted run would have seen — pinned by
 //! `rust/tests/checkpoint_resume.rs`.
 //!
-//! Scope: exact resume covers strategies whose planning is a pure
+//! Scope: exact resume covers every strategy.  Planning that is a pure
 //! function of `(epoch, SampleState, rng)` — baseline, KAKURENBO (all
-//! component grids), random hiding, FORGET, EL2N, InfoBatch.
-//! Selective-Backprop keeps per-run selector history (its loss CDF) that
-//! is not persisted; an SB resume is well-defined but re-warms that
-//! history.  Legacy checkpoints without a trainer-state file still load:
-//! [`load`] returns `None` and the trainer falls back to params-only
-//! resume (fresh stats, fresh RNG), exactly the pre-existing behavior.
+//! component grids), random hiding, FORGET, EL2N, InfoBatch — replays
+//! from the persisted arrays + RNG stream alone, and Selective-Backprop's
+//! per-run selector history (its rolling loss-CDF reservoir plus the
+//! overwrite cursor) rides along as `state_sb_history.e<epoch>.npy` +
+//! the manifest's `sb_cursor`, so an SB `--resume` replays the
+//! acceptance stream bit-exactly too.  Legacy checkpoints without a
+//! trainer-state file still load: [`load`] returns `None` and the
+//! trainer falls back to params-only resume (fresh stats, fresh RNG);
+//! trainer-state files from before SB persistence restore everything
+//! else and simply leave the selector re-warming, the old behavior.
 
 use std::path::Path;
 
 use crate::state::SampleState;
+use crate::strategies::sb::SbSelector;
 use crate::util::fsutil::{gc_files, write_atomic};
 use crate::util::json::{parse_file, Json};
 use crate::util::npy;
@@ -82,6 +87,7 @@ pub fn save(
     epoch: usize,
     state: &SampleState,
     rng: &Rng,
+    sb: &SbSelector,
     schedule_offset: usize,
 ) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -104,12 +110,19 @@ pub fn save(
         &last_update,
         &hide_count,
     ];
-    let mut keep = Vec::with_capacity(STEMS.len());
+    let mut keep = Vec::with_capacity(STEMS.len() + 1);
     for (stem, data) in STEMS.iter().zip(arrays) {
         let fname = state_file(stem, epoch);
         npy::write_f32(&dir.join(&fname), data, &[n])?;
         keep.push(fname);
     }
+    // the SB selector's rolling loss reservoir (length varies — its own
+    // payload, not one of the n-sized arrays); the cursor goes in the
+    // manifest
+    let (sb_history, sb_cursor) = sb.export_history();
+    let sb_file = state_file("sb_history", epoch);
+    npy::write_f32(&dir.join(&sb_file), sb_history, &[sb_history.len()])?;
+    keep.push(sb_file);
     // RNG words as hex strings: u64 state does not survive a JSON f64
     let rng_hex: Vec<Json> =
         rng.state().iter().map(|w| Json::Str(format!("{w:016x}"))).collect();
@@ -117,6 +130,7 @@ pub fn save(
         ("n", n),
         ("epoch", epoch),
         ("schedule_offset", schedule_offset),
+        ("sb_cursor", sb_cursor),
         ("rng", Json::Arr(rng_hex)),
     ];
     // payloads reach stable storage before the manifest points at them
@@ -141,6 +155,7 @@ pub fn load(
     expected_epoch: usize,
     state: &mut SampleState,
     rng: &mut Rng,
+    sb: &mut SbSelector,
 ) -> anyhow::Result<Option<usize>> {
     let path = dir.join(STATE_FILE);
     if !path.exists() {
@@ -192,6 +207,15 @@ pub fn load(
             .map_err(|e| anyhow::anyhow!("rng word {hex:?}: {e}"))?;
     }
     *rng = Rng::from_state(s);
+
+    // SB selector history: present since `sb_cursor` joined the
+    // manifest.  Older trainer-state files restore everything else and
+    // leave the selector re-warming (the pre-persistence behavior).
+    if let Some(cursor) = m.get("sb_cursor").and_then(|c| c.as_usize()) {
+        let name = state_file("sb_history", expected_epoch);
+        let (history, _shape) = npy::read_f32(&dir.join(&name))?;
+        sb.import_history(&history, cursor);
+    }
     Ok(Some(m.req("schedule_offset")?.as_usize().unwrap_or(0)))
 }
 
@@ -216,11 +240,12 @@ mod tests {
         for _ in 0..23 {
             rng.next_u64();
         }
-        save(&dir, 7, &s, &rng, 5).unwrap();
+        save(&dir, 7, &s, &rng, &SbSelector::new(1.0, 8), 5).unwrap();
 
         let mut s2 = SampleState::new(10);
         let mut rng2 = Rng::new(0);
-        let off = load(&dir, 7, &mut s2, &mut rng2).unwrap();
+        let mut sb2 = SbSelector::new(1.0, 8);
+        let off = load(&dir, 7, &mut s2, &mut rng2, &mut sb2).unwrap();
         assert_eq!(off, Some(5));
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&s.loss), bits(&s2.loss));
@@ -247,7 +272,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let mut s = SampleState::new(4);
         let mut rng = Rng::new(1);
-        assert_eq!(load(&dir, 0, &mut s, &mut rng).unwrap(), None);
+        let mut sb = SbSelector::new(1.0, 8);
+        assert_eq!(load(&dir, 0, &mut s, &mut rng, &mut sb).unwrap(), None);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -259,16 +285,17 @@ mod tests {
         let dir = tmp("mixed");
         let mut s = SampleState::new(5);
         s.set_hidden(&[1]);
-        save(&dir, 4, &s, &Rng::new(3), 2).unwrap();
+        save(&dir, 4, &s, &Rng::new(3), &SbSelector::new(1.0, 8), 2).unwrap();
         let mut restored = SampleState::new(5);
         let mut rng = Rng::new(0);
+        let mut sb = SbSelector::new(1.0, 8);
         let before = rng.state();
-        assert_eq!(load(&dir, 2, &mut restored, &mut rng).unwrap(), None);
+        assert_eq!(load(&dir, 2, &mut restored, &mut rng, &mut sb).unwrap(), None);
         // nothing was restored on the mismatch path
         assert_eq!(restored.hidden_count(), 0);
         assert_eq!(rng.state(), before);
         // the matching epoch still restores
-        assert_eq!(load(&dir, 4, &mut restored, &mut rng).unwrap(), Some(2));
+        assert_eq!(load(&dir, 4, &mut restored, &mut rng, &mut sb).unwrap(), Some(2));
         assert_eq!(restored.hidden_count(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -277,10 +304,73 @@ mod tests {
     fn sample_count_mismatch_rejected() {
         let dir = tmp("mismatch");
         let s = SampleState::new(6);
-        save(&dir, 0, &s, &Rng::new(2), 0).unwrap();
+        save(&dir, 0, &s, &Rng::new(2), &SbSelector::new(1.0, 8), 0).unwrap();
         let mut other = SampleState::new(7);
         let mut rng = Rng::new(2);
-        assert!(load(&dir, 0, &mut other, &mut rng).is_err());
+        let mut sb = SbSelector::new(1.0, 8);
+        assert!(load(&dir, 0, &mut other, &mut rng, &mut sb).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The SB selector's loss reservoir and cursor survive the roundtrip,
+    /// so a restored selector replays the acceptance stream bit-exactly.
+    #[test]
+    fn sb_history_roundtrips() {
+        let dir = tmp("sb");
+        let s = SampleState::new(3);
+        let mut sb = SbSelector::new(1.0, 16);
+        for i in 0..40 {
+            sb.record((i % 7) as f32); // overfilled: cursor has wrapped
+        }
+        save(&dir, 9, &s, &Rng::new(5), &sb, 0).unwrap();
+
+        let mut s2 = SampleState::new(3);
+        let mut rng2 = Rng::new(5);
+        let mut sb2 = SbSelector::new(1.0, 16);
+        assert_eq!(load(&dir, 9, &mut s2, &mut rng2, &mut sb2).unwrap(), Some(0));
+        let (h1, c1) = sb.export_history();
+        let (h2, c2) = sb2.export_history();
+        assert_eq!(c1, c2);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(h1), bits(h2));
+        let mut ra = Rng::new(17);
+        let mut rb = Rng::new(17);
+        for i in 0..100 {
+            let loss = (i % 11) as f32;
+            assert_eq!(sb.accept(loss, &mut ra), sb2.accept(loss, &mut rb), "step {i}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Trainer-state manifests written before SB persistence have no
+    /// `sb_cursor`; they still restore everything else and leave the
+    /// selector untouched.
+    #[test]
+    fn legacy_manifest_without_sb_cursor_loads() {
+        let dir = tmp("sb_legacy");
+        let mut s = SampleState::new(4);
+        s.set_hidden(&[2]);
+        let mut warm = SbSelector::new(1.0, 8);
+        warm.record(3.0);
+        save(&dir, 2, &s, &Rng::new(4), &warm, 6).unwrap();
+        // rewrite the manifest as the pre-SB format: drop sb_cursor
+        let path = dir.join(STATE_FILE);
+        let m = parse_file(&path).unwrap();
+        let legacy = crate::jobj![
+            ("n", m.req("n").unwrap().as_usize().unwrap()),
+            ("epoch", 2usize),
+            ("schedule_offset", 6usize),
+            ("rng", m.req("rng").unwrap().clone()),
+        ];
+        write_atomic(&path, &legacy.to_pretty()).unwrap();
+
+        let mut s2 = SampleState::new(4);
+        let mut rng2 = Rng::new(0);
+        let mut sb2 = SbSelector::new(1.0, 8);
+        assert_eq!(load(&dir, 2, &mut s2, &mut rng2, &mut sb2).unwrap(), Some(6));
+        assert_eq!(s2.hidden_count(), 1);
+        // selector untouched: still empty
+        assert!(sb2.export_history().0.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

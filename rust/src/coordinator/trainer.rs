@@ -39,7 +39,7 @@ use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    CheckpointWriter, Engine, EvalSink, RefreshSink, ServiceEvent, ServiceLanes, Snapshot,
+    CheckpointWriter, Engine, EvalSink, RefreshSink, ServiceEvent, ServiceLanes, SharedSnapshot,
     StepMode, WorkerPool,
 };
 use crate::metrics::{EpochRecord, RunResult};
@@ -83,6 +83,10 @@ pub struct Trainer {
     /// schedule when it restarts from scratch (paper §4: "training then
     /// restarts from epoch 0").
     pub(crate) schedule_offset: usize,
+    /// Persistent leaf write pool for the *sync* checkpoint path,
+    /// created lazily at the first checkpoint (the async lane's writer
+    /// owns its own pool on the lane thread).
+    pub(crate) ckpt_pool: Option<crate::util::artifact::WritePool>,
 }
 
 impl Trainer {
@@ -132,6 +136,7 @@ impl Trainer {
             sb_queue: Vec::new(),
             eval_idx,
             schedule_offset: 0,
+            ckpt_pool: None,
             service: None,
             cfg,
             exec,
@@ -151,13 +156,23 @@ impl Trainer {
             let dir = self.cfg.checkpoint_dir.clone().ok_or_else(|| {
                 anyhow::anyhow!("resume requested without checkpoint_dir")
             })?;
-            let ckpt_epoch = crate::runtime::checkpoint::load(&mut self.exec, &dir)?;
+            let ckpt_epoch = crate::runtime::checkpoint::load_with(
+                &mut self.exec,
+                &dir,
+                self.cfg.checkpoint_verify,
+            )?;
             start_epoch = ckpt_epoch + 1;
             // exact resume when the trainer-side state rode along with the
             // checkpoint *and* carries the same epoch stamp; legacy or
             // crash-torn directories fall back to params-only (fresh
             // stats + fresh RNG — see coordinator/resume.rs)
-            match super::resume::load(&dir, ckpt_epoch, &mut self.state, &mut self.rng)? {
+            match super::resume::load(
+                &dir,
+                ckpt_epoch,
+                &mut self.state,
+                &mut self.rng,
+                &mut self.sb,
+            )? {
                 Some(offset) => {
                     self.schedule_offset = offset;
                     crate::info!("resumed from {dir:?} at epoch {start_epoch} (exact)");
@@ -225,10 +240,15 @@ impl Trainer {
             return Ok(());
         }
         let builder = crate::engine::DataParallel::replica_builder(&self.exec)?;
+        let pool_threads = self.cfg.checkpoint_pool;
+        let compress = self.cfg.checkpoint_compress;
         let writer = self.cfg.checkpoint_dir.clone().map(|dir| {
             let meta = self.exec.meta.clone();
-            Box::new(move |snap: &Snapshot, epoch: usize| {
-                crate::runtime::checkpoint::save_snapshot(&meta, snap, &dir, epoch)
+            // the lane thread owns a persistent write pool: leaf jobs fan
+            // out per save and join before the manifest flip
+            let pool = crate::util::artifact::WritePool::new(pool_threads);
+            Box::new(move |snap: SharedSnapshot, epoch: usize| {
+                crate::runtime::checkpoint::save_snapshot(&meta, &snap, &dir, epoch, &pool, compress)
             }) as CheckpointWriter
         });
         self.service = Some(ServiceLanes::spawn(
@@ -256,13 +276,16 @@ impl Trainer {
             anyhow::ensure!(idx < records.len(), "service event for unknown epoch");
             let rec = &mut records[idx];
             rec.time_service += ev.secs();
-            if let ServiceEvent::Eval { epoch, acc, loss, .. } = ev {
-                rec.val_acc = acc;
-                rec.val_loss = loss;
-                // the per-epoch log line printed before this result came
-                // back; surface the folded accuracy so async runs keep
-                // live accuracy monitoring
-                crate::info!("[service] epoch {epoch:>3}  acc {acc:.4}  val loss {loss:.4}");
+            match ev {
+                ServiceEvent::Eval { epoch, acc, loss, .. } => {
+                    rec.val_acc = acc;
+                    rec.val_loss = loss;
+                    // the per-epoch log line printed before this result
+                    // came back; surface the folded accuracy so async
+                    // runs keep live accuracy monitoring
+                    crate::info!("[service] epoch {epoch:>3}  acc {acc:.4}  val loss {loss:.4}");
+                }
+                ServiceEvent::Checkpoint { stats, .. } => rec.fold_ckpt_stats(&stats),
             }
         }
         Ok(())

@@ -3,7 +3,8 @@
 //!
 //! # Why two lanes, not one
 //!
-//! Both jobs consume only an *immutable* exported [`Snapshot`], so
+//! Both jobs consume only an *immutable* exported
+//! [`Snapshot`](super::snapshot::Snapshot), so
 //! neither has to block the next epoch: the primary executor can start
 //! training epoch `e+1` the moment epoch `e`'s state is exported.  But
 //! the two jobs want different things:
@@ -44,16 +45,22 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 use super::backend::{ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
 use super::modes::EvalSink;
-use super::snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
+use super::snapshot::{SharedSnapshot, SnapshotTier};
 use crate::data::batch::BatchAssembler;
 use crate::data::Dataset;
+use crate::util::artifact::WriteStats;
 use crate::util::timer::Timer;
 
 /// A `Send` closure that serializes one full-state snapshot as a
-/// checkpoint for the given epoch.  The coordinator constructs it from
-/// the runtime's checkpoint writer plus the executor's parameter
-/// metadata, so the engine layer never depends on runtime types.
-pub type CheckpointWriter = Box<dyn Fn(&Snapshot, usize) -> anyhow::Result<()> + Send>;
+/// checkpoint for the given epoch, returning the write-pool statistics
+/// (leaves, bytes, write/hash/compress seconds) for fold-in.  The
+/// coordinator constructs it from the runtime's checkpoint writer (which
+/// owns the persistent leaf write pool) plus the executor's parameter
+/// metadata, so the engine layer never depends on runtime types.  The
+/// snapshot arrives by shared handle — writer internals fan it out
+/// across pool threads via `Arc` clones.
+pub type CheckpointWriter =
+    Box<dyn Fn(SharedSnapshot, usize) -> anyhow::Result<WriteStats> + Send>;
 
 /// One completed service-lane job.
 #[derive(Clone, Debug)]
@@ -75,6 +82,9 @@ pub enum ServiceEvent {
         epoch: usize,
         /// Seconds the lane spent on the job (off the critical path).
         secs: f64,
+        /// Leaf write-pool statistics the writer reported (leaves,
+        /// bytes, dedup hits, write/hash/compress seconds).
+        stats: WriteStats,
     },
 }
 
@@ -286,8 +296,8 @@ impl ServiceLanes {
                 Box::new(move || {
                     Ok(Box::new(move |epoch: usize, snap: SharedSnapshot| {
                         let t = Timer::start();
-                        w(&snap, epoch)?;
-                        Ok(ServiceEvent::Checkpoint { epoch, secs: t.elapsed_s() })
+                        let stats = w(snap, epoch)?;
+                        Ok(ServiceEvent::Checkpoint { epoch, secs: t.elapsed_s(), stats })
                     }) as JobHandler)
                 }),
             )?),
@@ -391,6 +401,7 @@ mod tests {
     use std::sync::Arc;
 
     use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+    use crate::engine::snapshot::Snapshot;
     use crate::engine::testbed::MockBackend;
     use crate::engine::DataParallel;
 
@@ -481,7 +492,7 @@ mod tests {
                 "wrong job payload"
             );
             seen.fetch_add(1, Ordering::SeqCst);
-            Ok(())
+            Ok(WriteStats { leaves: snap.leaves(), ..WriteStats::default() })
         });
         let be = MockBackend::new();
         let mut lanes =
@@ -509,7 +520,7 @@ mod tests {
                 .unwrap()
                 .recv_timeout(std::time::Duration::from_secs(60))
                 .ok();
-            Ok(())
+            Ok(WriteStats::default())
         });
         let be = MockBackend::new();
         let mut lanes =
@@ -544,7 +555,7 @@ mod tests {
     /// completion timing.
     #[test]
     fn drain_merges_lanes_in_fold_in_order() {
-        let writer: CheckpointWriter = Box::new(|_snap, _epoch| Ok(()));
+        let writer: CheckpointWriter = Box::new(|_snap, _epoch| Ok(WriteStats::default()));
         let be = MockBackend::new();
         let mut lanes =
             ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
@@ -575,7 +586,7 @@ mod tests {
     /// params-only snapshot can never reach the checkpoint writer.
     #[test]
     fn params_only_checkpoint_rejected_at_submit() {
-        let writer: CheckpointWriter = Box::new(|_snap, _epoch| Ok(()));
+        let writer: CheckpointWriter = Box::new(|_snap, _epoch| Ok(WriteStats::default()));
         let be = MockBackend::new();
         let mut lanes =
             ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))

@@ -12,7 +12,7 @@
 //! Overrides (any subset): `--epochs --seed --workers --dp --base_lr
 //! --momentum --max_fraction --tau --drop_top --variant --eval_every
 //! --detailed_metrics --service-lane --checkpoint_every --checkpoint_dir
-//! --resume`
+//! --resume --checkpoint-pool --checkpoint-verify --checkpoint-compress`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -25,6 +25,8 @@ const OVERRIDE_KEYS: &[&str] = &[
     "epochs", "seed", "workers", "dp", "base_lr", "warmup_epochs", "momentum",
     "max_fraction", "tau", "drop_top", "variant", "eval_every", "detailed_metrics",
     "checkpoint_every", "checkpoint_dir", "resume", "service-lane", "service_lane",
+    "checkpoint_pool", "checkpoint-pool", "checkpoint_verify", "checkpoint-verify",
+    "checkpoint_compress", "checkpoint-compress",
 ];
 
 fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
@@ -191,7 +193,8 @@ Strategies: baseline kakurenbo kakurenbo-vXXXX (ablation bits HE/MB/RF/LR)
 Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
             --momentum --max_fraction --tau --drop_top --variant
             --eval_every --service-lane --checkpoint_every
-            --checkpoint_dir --resume
+            --checkpoint_dir --resume --checkpoint-pool
+            --checkpoint-verify --checkpoint-compress
 Flags:      --verbose --quiet --out <dir>
 
 --workers N executes data-parallel: the epoch order is sharded across N
@@ -210,4 +213,10 @@ in fixed epoch order and are bitwise identical to the serial path
 (default: off).  --checkpoint_every K + --checkpoint_dir D write full
 checkpoints (params + momentum + trainer state); --resume continues a
 run from D bit-exactly.
+
+Checkpoints are content-addressed sha256 artifacts (docs/snapshots.md):
+  --checkpoint-pool N        leaf write-pool threads (0 = auto, 1 = serial)
+  --checkpoint-verify on|off verify per-leaf digests on load (default on)
+  --checkpoint-compress on|off LZSS momentum leaves (default on; params
+                             are always raw)
 ";

@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use crate::util::artifact::WriteStats;
 use crate::util::json::Json;
 use crate::util::stats::Histogram;
 
@@ -83,9 +84,39 @@ pub struct EpochRecord {
     pub hidden_per_class: Vec<usize>,
     /// Loss histogram over the full dataset (only when detailed_metrics).
     pub loss_hist: Option<Histogram>,
+    /// Checkpoint leaves serialized this epoch (params + momentum; 0 on
+    /// epochs without a checkpoint).
+    pub ckpt_leaves: usize,
+    /// Bytes actually written to the checkpoint store (post-compression,
+    /// deduplicated leaves excluded).
+    pub ckpt_bytes: usize,
+    /// Leaves skipped because an identical digest already existed in the
+    /// content-addressed store.
+    pub ckpt_deduped: usize,
+    /// Seconds spent in checkpoint leaf file writes (summed across pool
+    /// workers, so this can exceed wall-clock).
+    pub ckpt_write_s: f64,
+    /// Seconds spent hashing checkpoint leaves (sha256, summed across
+    /// pool workers).
+    pub ckpt_hash_s: f64,
+    /// Seconds spent compressing checkpoint leaves (LZSS, summed across
+    /// pool workers).
+    pub ckpt_compress_s: f64,
 }
 
 impl EpochRecord {
+    /// Fold a checkpoint write's [`WriteStats`] into the record (called
+    /// both on the sync path and when an async service-lane checkpoint
+    /// report folds back in).
+    pub fn fold_ckpt_stats(&mut self, s: &WriteStats) {
+        self.ckpt_leaves += s.leaves;
+        self.ckpt_bytes += s.written_bytes;
+        self.ckpt_deduped += s.deduped;
+        self.ckpt_write_s += s.write_s;
+        self.ckpt_hash_s += s.hash_s;
+        self.ckpt_compress_s += s.compress_s;
+    }
+
     /// Serialize every scalar field (plus the optional per-class /
     /// histogram extras) for `results/*.json`.
     pub fn to_json(&self) -> Json {
@@ -116,6 +147,12 @@ impl EpochRecord {
             ("time_average", self.time_average),
             ("modeled_sync", self.modeled_sync),
             ("modeled_time", self.modeled_time),
+            ("ckpt_leaves", self.ckpt_leaves),
+            ("ckpt_bytes", self.ckpt_bytes),
+            ("ckpt_deduped", self.ckpt_deduped),
+            ("ckpt_write_s", self.ckpt_write_s),
+            ("ckpt_hash_s", self.ckpt_hash_s),
+            ("ckpt_compress_s", self.ckpt_compress_s),
         ];
         if let Json::Obj(m) = &mut o {
             if !self.worker_samples.is_empty() {
@@ -271,6 +308,29 @@ mod tests {
             parsed.get("records").unwrap().as_arr().unwrap().len(),
             1
         );
+    }
+
+    #[test]
+    fn ckpt_stats_fold_and_serialize() {
+        let mut r = rec(0, 0.5, 1.0);
+        let s = WriteStats {
+            leaves: 4,
+            written_bytes: 1000,
+            raw_bytes: 1500,
+            deduped: 2,
+            write_s: 0.25,
+            hash_s: 0.5,
+            compress_s: 0.125,
+        };
+        r.fold_ckpt_stats(&s);
+        r.fold_ckpt_stats(&s); // sync + async reports accumulate
+        assert_eq!(r.ckpt_leaves, 8);
+        assert_eq!(r.ckpt_bytes, 2000);
+        assert_eq!(r.ckpt_deduped, 4);
+        assert_eq!(r.ckpt_hash_s, 1.0);
+        let j = r.to_json();
+        assert_eq!(j.get("ckpt_leaves").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("ckpt_bytes").unwrap().as_usize(), Some(2000));
     }
 
     #[test]

@@ -1,79 +1,117 @@
 //! Checkpointing: save/restore the executor's full mutable model state
-//! (parameters **and** SGD momentum) as a directory of `.npy` files plus
-//! a JSON index — inspectable from Python (`np.load`) and stable across
-//! runs.
+//! (parameters **and** SGD momentum) as a content-addressed store of
+//! framed leaf artifacts plus a JSON manifest.
 //!
-//! Layout: `<dir>/checkpoint.json` (variant, epoch, leaf index) and one
-//! array per leaf per generation: `p000_fc1_w.e7.npy` (parameter) +
-//! `v000_fc1_w.e7.npy` (momentum), where `.e7` is the epoch the save
-//! belongs to.  Momentum is part of the checkpoint so a resumed run
-//! continues the optimizer trajectory bit-exactly (see
-//! `coordinator/resume.rs` for the coordinator-side state that rides
-//! along).
+//! # Layout (format 2)
+//!
+//! `<dir>/checkpoint.json` records the variant, epoch, and one entry per
+//! parameter leaf: the leaf's name plus the sha256 **digests** of its
+//! param and momentum payloads.  Payloads live in `obj_<digest>.art`
+//! files — an `.npy` byte image (`util/npy.rs`, so leaves stay
+//! inspectable after unframing) wrapped in the artifact frame
+//! (`util/artifact.rs`: magic, codec, raw length).  Params are stored
+//! raw for fast eval-replica loads; momentum is LZSS-compressed when the
+//! save enables compression.  Because files are named by content:
+//!
+//! * a leaf unchanged since the previous generation dedups to the
+//!   existing object — no write at all;
+//! * loads re-hash every object and compare against the manifest digest
+//!   (the `--checkpoint-verify` knob), so bit rot and torn writes fail
+//!   with a named-leaf error before any payload parsing runs;
+//! * GC is refcount-by-manifest: after the manifest flip, every artifact
+//!   the manifest does not reference is superseded and swept.
+//!
+//! # The write pool
+//!
+//! [`save_snapshot`] fans the per-leaf serializations (encode → optional
+//! compress → hash → atomic write) across a [`WritePool`] and joins all
+//! workers **before** the manifest flip, so checkpoint latency scales
+//! with the largest leaf instead of the sum of all leaves.  Per-leaf
+//! timing folds into the returned [`WriteStats`] (surfaced through the
+//! service lane into the epoch record and the overhead bench).
 //!
 //! # Crash safety
 //!
-//! A save never overwrites the files the current `checkpoint.json`
-//! points at: payload files carry the epoch in their name, the index is
-//! replaced atomically (temp + rename, [`crate::util::fsutil`]) only
-//! after every payload file is on disk, and the superseded generation is
-//! garbage-collected last.  A crash at any point leaves a directory
-//! whose index references a complete, single-epoch set — there is no
-//! window in which `--resume` can read mixed-epoch parameters.  This
-//! matters doubly with the async service lane, where the model write for
-//! epoch `e` can still be in flight while the trainer runs epoch `e+1`.
+//! A save never overwrites anything the current `checkpoint.json` points
+//! at: objects are immutable once published (temp + fsync + rename, so a
+//! digest-named file either exists complete or not at all), the manifest
+//! is replaced atomically only after every object is durable, and the
+//! sweep runs last.  A crash at any point leaves a manifest referencing
+//! a complete, single-generation set — there is no window in which
+//! `--resume` can read mixed-generation parameters.  This matters doubly
+//! with the async service lane, where the model write for epoch `e` can
+//! still be in flight while the trainer runs epoch `e+1`.
 //!
-//! Legacy params-only checkpoints (no `vel` entries) still load:
-//! parameters restore by name through the typed params-only snapshot
-//! tier ([`crate::engine::Snapshot`]), momentum keeps its current
-//! (zero-initialized) values.
+//! # Legacy generations
 //!
-//! [`save_snapshot`] serializes an exported typed snapshot without
-//! touching the executor — the entry point the async checkpoint lane
-//! uses to write a checkpoint for epoch `e` while the executor trains
-//! epoch `e+1`; it rejects params-only snapshots, so a non-resumable
-//! checkpoint can never reach disk.  [`save_state`] is the flat-layout
-//! equivalent.
+//! Both earlier on-disk formats still load: epoch-suffixed full
+//! checkpoints (`p###_*.e7.npy` + `v###_*.e7.npy` with `vel` index
+//! entries) restore as a [`SnapshotTier::Full`] snapshot, and the oldest
+//! params-only layout restores by name through the params-only tier
+//! (momentum keeps its current values).  The GC predicate recognizes
+//! legacy and digest-named payloads coexisting in one directory, so the
+//! first new-format save cleanly supersedes a legacy generation.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use crate::engine::{Snapshot, SnapshotTier, StateExchange};
+use crate::engine::{SharedSnapshot, Snapshot, SnapshotTier, StateExchange};
 use crate::runtime::artifact::VariantMeta;
 use crate::runtime::executor::ModelExecutor;
+use crate::util::artifact::{
+    is_object_file, load_leaf, store_leaf, Codec, WritePool, WriteJob, WriteStats,
+};
 use crate::util::fsutil::{gc_files, write_atomic};
 use crate::util::json::{parse_file, Json};
 use crate::util::npy;
 
-/// Save the executor's full state at `dir` (created if needed).
-pub fn save(exec: &ModelExecutor, dir: &Path, epoch: usize) -> anyhow::Result<()> {
-    let snap = exec.export_snapshot(SnapshotTier::Full)?;
-    save_snapshot(&exec.meta, &snap, dir, epoch)
+/// On-disk manifest format written by this module.
+pub const MANIFEST_FORMAT: usize = 2;
+
+/// Save the executor's full state at `dir` (created if needed), serial
+/// writes, compression on — the convenience wrapper tests and one-shot
+/// callers use.  Hot paths hold a persistent pool and call
+/// [`save_snapshot`] directly.
+pub fn save(exec: &ModelExecutor, dir: &Path, epoch: usize) -> anyhow::Result<WriteStats> {
+    let snap: SharedSnapshot = Arc::new(exec.export_snapshot(SnapshotTier::Full)?);
+    save_snapshot(&exec.meta, &snap, dir, epoch, &WritePool::serial(), true)
 }
 
-/// Whether a directory entry is a checkpoint leaf payload file
-/// (`p###_*.npy` / `v###_*.npy`, any generation) — the set the
-/// post-save garbage sweep is allowed to touch.
+/// Whether a directory entry belongs to the checkpoint payload store —
+/// the set the post-save garbage sweep is allowed to touch.  Matches
+/// legacy epoch-suffixed leaves (`p###_*.npy` / `v###_*.npy`),
+/// digest-named artifacts (`obj_<64 hex>.art`), and orphaned artifact
+/// temp files a crashed writer left behind (`obj_*.tmp`); both naming
+/// generations can coexist in one directory and GC keeps exactly what
+/// the current manifest references.
 fn is_leaf_file(name: &str) -> bool {
     let b = name.as_bytes();
-    b.len() > 4
+    let legacy = b.len() > 4
         && (b[0] == b'p' || b[0] == b'v')
         && b[1].is_ascii_digit()
         && b[2].is_ascii_digit()
         && b[3].is_ascii_digit()
-        && name.ends_with(".npy")
+        && name.ends_with(".npy");
+    legacy
+        || is_object_file(name)
+        || (name.starts_with("obj_") && name.ends_with(".tmp"))
 }
 
 /// Serialize a typed full-state snapshot as a checkpoint at `dir`,
-/// without touching the executor.  Byte-identical to [`save`] on the
-/// executor the snapshot was exported from, and crash-safe (see the
-/// module docs).  Rejects params-only snapshots — a checkpoint without
+/// without touching the executor: leaf jobs fan out across `pool`
+/// (params raw; momentum LZSS when `compress`), the manifest flips
+/// atomically after the join, and unreferenced artifacts are swept.
+/// This is the entry point the async checkpoint lane and the sync epoch
+/// phase both use.  Rejects params-only snapshots — a checkpoint without
 /// momentum could not resume the optimizer trajectory bit-exactly.
 pub fn save_snapshot(
     meta: &VariantMeta,
-    snap: &Snapshot,
+    snap: &SharedSnapshot,
     dir: &Path,
     epoch: usize,
-) -> anyhow::Result<()> {
+    pool: &WritePool,
+    compress: bool,
+) -> anyhow::Result<WriteStats> {
     anyhow::ensure!(
         snap.tier() >= SnapshotTier::Full,
         "checkpoint for variant {} needs a full-state snapshot, got the {} tier",
@@ -83,18 +121,91 @@ pub fn save_snapshot(
     let momentum = snap.momentum().ok_or_else(|| {
         anyhow::anyhow!("full-state snapshot for {} is missing its momentum section", meta.name)
     })?;
-    save_leaves(meta, snap.params(), momentum, dir, epoch)
+    let n = meta.params.len();
+    anyhow::ensure!(
+        snap.params().len() == n && momentum.len() == n,
+        "snapshot has {} param / {} momentum leaves, variant {} expects {n} each",
+        snap.params().len(),
+        momentum.len(),
+        meta.name
+    );
+    for (i, m) in meta.params.iter().enumerate() {
+        anyhow::ensure!(
+            snap.params()[i].len() == m.numel() && momentum[i].len() == m.numel(),
+            "state leaf {i} shape mismatch for {}",
+            m.name
+        );
+    }
+    std::fs::create_dir_all(dir)?;
+
+    // one job per leaf half; jobs capture the shared snapshot by Arc so
+    // pool workers can outlive this stack frame's borrows
+    let mut jobs: Vec<WriteJob> = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        let snap = snap.clone();
+        let dir = dir.to_path_buf();
+        let shape = meta.params[i].shape.clone();
+        jobs.push(Box::new(move || {
+            let bytes = npy::encode_f32(&snap.params()[i], &shape)?;
+            store_leaf(&dir, &bytes, false)
+        }));
+    }
+    for i in 0..n {
+        let snap = snap.clone();
+        let dir = dir.to_path_buf();
+        let shape = meta.params[i].shape.clone();
+        jobs.push(Box::new(move || {
+            let vel = snap.momentum().expect("tier checked above");
+            let bytes = npy::encode_f32(&vel[i], &shape)?;
+            store_leaf(&dir, &bytes, compress)
+        }));
+    }
+    let metas = pool.run(jobs)?;
+
+    let mut index = Vec::with_capacity(n);
+    let mut keep = Vec::with_capacity(2 * n);
+    let mut stats = WriteStats::default();
+    for i in 0..n {
+        let (p, v) = (&metas[i], &metas[n + i]);
+        stats.absorb(p);
+        stats.absorb(v);
+        index.push(crate::jobj![
+            ("name", meta.params[i].name.as_str()),
+            ("digest", p.digest.as_str()),
+            ("codec", p.codec.name()),
+            ("vel_digest", v.digest.as_str()),
+            ("vel_codec", v.codec.name()),
+        ]);
+        keep.push(p.file.clone());
+        keep.push(v.file.clone());
+    }
+    let manifest = crate::jobj![
+        ("variant", meta.name.as_str()),
+        ("epoch", epoch),
+        ("format", MANIFEST_FORMAT),
+        ("param_count", meta.param_count),
+        ("params", Json::Arr(index)),
+    ];
+    // every object is already durable (store_leaf publishes via temp +
+    // fsync + rename); the manifest flip is the atomic commit point
+    write_atomic(&dir.join("checkpoint.json"), &manifest.to_pretty())?;
+    // refcount-by-manifest sweep: any payload (either naming generation)
+    // the fresh manifest does not reference is superseded
+    gc_files(dir, &keep, is_leaf_file);
+    Ok(stats)
 }
 
 /// Serialize a flat full exported state (params then momentum, in
 /// manifest leaf order — the `StateExchange::export_state` layout) as a
-/// checkpoint at `dir`.  The flat-layout twin of [`save_snapshot`].
+/// checkpoint at `dir`.  The flat-layout twin of [`save`], with the same
+/// serial-pool + compression defaults, so the two produce byte-identical
+/// stores for identical state.
 pub fn save_state(
     meta: &VariantMeta,
     state: &[Vec<f32>],
     dir: &Path,
     epoch: usize,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<WriteStats> {
     let n = meta.params.len();
     anyhow::ensure!(
         state.len() == 2 * n,
@@ -103,156 +214,375 @@ pub fn save_state(
         meta.name,
         2 * n
     );
-    save_leaves(meta, &state[..n], &state[n..], dir, epoch)
+    let snap: SharedSnapshot =
+        Arc::new(Snapshot::full(state[..n].to_vec(), Some(state[n..].to_vec())));
+    save_snapshot(meta, &snap, dir, epoch, &WritePool::serial(), true)
 }
 
-/// Shared serialization body: one `.npy` per parameter leaf (`p###_*`)
-/// and one per momentum leaf (`v###_*`), then the atomic index flip and
-/// the post-save sweep.
-fn save_leaves(
-    meta: &VariantMeta,
-    params: &[Vec<f32>],
-    vel: &[Vec<f32>],
-    dir: &Path,
-    epoch: usize,
-) -> anyhow::Result<()> {
-    let n = meta.params.len();
-    anyhow::ensure!(
-        params.len() == n && vel.len() == n,
-        "snapshot has {} param / {} momentum leaves, variant {} expects {n} each",
-        params.len(),
-        vel.len(),
-        meta.name
-    );
-    std::fs::create_dir_all(dir)?;
-    let mut index = Vec::new();
-    let mut keep = Vec::with_capacity(2 * n);
-    for (i, m) in meta.params.iter().enumerate() {
-        anyhow::ensure!(
-            params[i].len() == m.numel() && vel[i].len() == m.numel(),
-            "state leaf {i} shape mismatch for {}",
-            m.name
-        );
-        let stem = m.name.replace('/', "_");
-        let fname = format!("p{i:03}_{stem}.e{epoch}.npy");
-        let vname = format!("v{i:03}_{stem}.e{epoch}.npy");
-        npy::write_f32(&dir.join(&fname), &params[i], &m.shape)?;
-        npy::write_f32(&dir.join(&vname), &vel[i], &m.shape)?;
-        index.push(crate::jobj![
-            ("name", m.name.as_str()),
-            ("file", fname.as_str()),
-            ("vel", vname.as_str()),
-        ]);
-        keep.push(fname);
-        keep.push(vname);
-    }
-    let manifest = crate::jobj![
-        ("variant", meta.name.as_str()),
-        ("epoch", epoch),
-        ("param_count", meta.param_count),
-        ("params", Json::Arr(index)),
-    ];
-    // payloads must be on stable storage before the manifest references
-    // them (a journaled rename can otherwise hit disk first)
-    for f in &keep {
-        crate::util::fsutil::sync_file(&dir.join(f))?;
-    }
-    // atomic pointer flip: readers see the old complete index or this one
-    write_atomic(&dir.join("checkpoint.json"), &manifest.to_pretty())?;
-    // sweep the superseded generation (best effort; stale files that a
-    // crashed sweep leaves behind are never referenced by the index)
-    gc_files(dir, &keep, is_leaf_file);
-    Ok(())
+/// Load a checkpoint into the executor with digest verification on —
+/// see [`load_with`].
+pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
+    load_with(exec, dir, true)
 }
 
 /// Load a checkpoint into the executor.  The checkpoint's variant must
-/// match (same parameter names/shapes).  Both generations route through
-/// the typed snapshot path: full checkpoints (with momentum) restore as
-/// a [`SnapshotTier::Full`] snapshot (complete optimizer state); legacy
-/// params-only checkpoints restore as a [`SnapshotTier::Params`]
-/// snapshot — weights by name, momentum untouched.  Returns the saved
-/// epoch.
-pub fn load(exec: &mut ModelExecutor, dir: &Path) -> anyhow::Result<usize> {
+/// match (same parameter names/shapes).  All three on-disk generations
+/// route through the typed snapshot path — see [`load_snapshot`].
+/// Returns the saved epoch.
+pub fn load_with(exec: &mut ModelExecutor, dir: &Path, verify: bool) -> anyhow::Result<usize> {
+    let (snap, epoch) = load_snapshot(&exec.meta, dir, verify)?;
+    exec.import_snapshot(&snap)?;
+    Ok(epoch)
+}
+
+/// Host-side checkpoint read: parse the manifest, fetch + (optionally)
+/// digest-verify every leaf, and build the typed snapshot — no executor
+/// or PJRT device involved, which is what lets crash-injection and
+/// corruption tests run on any host.  Format-2 manifests restore params
+/// + momentum as a [`SnapshotTier::Full`] snapshot; legacy epoch-suffix
+/// checkpoints likewise; the oldest params-only layout restores by name
+/// as a [`SnapshotTier::Params`] snapshot.  Returns the snapshot and the
+/// saved epoch.
+pub fn load_snapshot(
+    meta: &VariantMeta,
+    dir: &Path,
+    verify: bool,
+) -> anyhow::Result<(Snapshot, usize)> {
     let m = parse_file(&dir.join("checkpoint.json"))?;
     let variant = m.req("variant")?.as_str().unwrap_or_default();
     anyhow::ensure!(
-        variant == exec.meta.name,
+        variant == meta.name,
         "checkpoint is for variant {variant:?}, executor is {:?}",
-        exec.meta.name
+        meta.name
     );
+    let epoch = m.req("epoch")?.as_usize().unwrap_or(0);
     let entries = m.req("params")?.as_arr().unwrap_or(&[]);
-    let full = !entries.is_empty() && entries.iter().all(|p| p.get("vel").is_some());
-    if full {
-        // positional restore — so the leaf names must line up with the
-        // executor's manifest order, or same-sized leaves could land in
-        // the wrong slots
-        anyhow::ensure!(
-            entries.len() == exec.meta.params.len(),
-            "checkpoint has {} leaves, executor expects {}",
-            entries.len(),
-            exec.meta.params.len()
-        );
-        let mut params = Vec::with_capacity(entries.len());
-        let mut vels = Vec::with_capacity(entries.len());
-        for (p, leaf) in entries.iter().zip(&exec.meta.params) {
-            let name = p.req("name")?.as_str().unwrap_or_default();
-            anyhow::ensure!(
-                name == leaf.name,
-                "checkpoint leaf {name:?} does not match executor leaf {:?}",
-                leaf.name
-            );
-            let file = p.req("file")?.as_str().unwrap_or_default();
-            params.push(npy::read_f32(&dir.join(file))?.0);
-            let vfile = p.req("vel")?.as_str().unwrap_or_default();
-            vels.push(npy::read_f32(&dir.join(vfile))?.0);
-        }
-        exec.import_snapshot(&Snapshot::full(params, Some(vels)))?;
+    let format = m.get("format").and_then(|f| f.as_usize()).unwrap_or(1);
+    let snap = if format >= 2 {
+        load_artifact_leaves(meta, dir, entries, verify)?
     } else {
-        // legacy params-only generation: resolve each manifest leaf by
-        // (name, size), then restore through the params-only snapshot
-        // tier — momentum keeps its current values, as before
-        let mut source = Vec::new();
-        for p in entries {
-            let name = p.req("name")?.as_str().unwrap_or_default().to_string();
-            let file = p.req("file")?.as_str().unwrap_or_default();
-            let (data, _shape) = npy::read_f32(&dir.join(file))?;
-            source.push((name, data));
+        let full = !entries.is_empty() && entries.iter().all(|p| p.get("vel").is_some());
+        if full {
+            load_legacy_full(meta, dir, entries)?
+        } else {
+            load_legacy_params_only(meta, dir, entries)?
         }
-        let mut ordered = Vec::with_capacity(exec.meta.params.len());
-        for m in &exec.meta.params {
-            // move the leaf out of `source` (no second full-parameter
-            // copy on top of the npy buffers)
-            let pos = source
-                .iter()
-                .position(|(n, d)| n == &m.name && d.len() == m.numel())
-                .ok_or_else(|| {
-                    anyhow::anyhow!("checkpoint is missing leaf {:?} ({} elems)", m.name, m.numel())
-                })?;
-            ordered.push(source.swap_remove(pos).1);
+    };
+    Ok((snap, epoch))
+}
+
+/// Format-2 body: positional restore from the content-addressed store.
+/// Leaf names must line up with the variant manifest order, or
+/// same-sized leaves could land in the wrong slots.
+fn load_artifact_leaves(
+    meta: &VariantMeta,
+    dir: &Path,
+    entries: &[Json],
+    verify: bool,
+) -> anyhow::Result<Snapshot> {
+    anyhow::ensure!(
+        entries.len() == meta.params.len(),
+        "checkpoint has {} leaves, executor expects {}",
+        entries.len(),
+        meta.params.len()
+    );
+    let mut params = Vec::with_capacity(entries.len());
+    let mut vels = Vec::with_capacity(entries.len());
+    for (p, leaf) in entries.iter().zip(&meta.params) {
+        let name = p.req("name")?.as_str().unwrap_or_default();
+        anyhow::ensure!(
+            name == leaf.name,
+            "checkpoint leaf {name:?} does not match executor leaf {:?}",
+            leaf.name
+        );
+        // codecs are recorded for tooling; the frame self-describes, so
+        // parsing here just validates the manifest
+        Codec::parse(p.req("codec")?.as_str().unwrap_or_default())?;
+        Codec::parse(p.req("vel_codec")?.as_str().unwrap_or_default())?;
+        for (digest_key, out) in [("digest", &mut params), ("vel_digest", &mut vels)] {
+            let digest = p.req(digest_key)?.as_str().unwrap_or_default();
+            let bytes = load_leaf(dir, digest, verify)
+                .map_err(|e| anyhow::anyhow!("leaf {:?} ({digest_key}): {e}", leaf.name))?;
+            let (data, _shape) = npy::decode_f32(&bytes)?;
+            anyhow::ensure!(
+                data.len() == leaf.numel(),
+                "leaf {:?} has {} elems, expected {}",
+                leaf.name,
+                data.len(),
+                leaf.numel()
+            );
+            out.push(data);
         }
-        exec.import_snapshot(&Snapshot::params_only(ordered))?;
     }
-    Ok(m.req("epoch")?.as_usize().unwrap_or(0))
+    Ok(Snapshot::full(params, Some(vels)))
+}
+
+/// Legacy epoch-suffixed full generation (`file` + `vel` index entries).
+fn load_legacy_full(
+    meta: &VariantMeta,
+    dir: &Path,
+    entries: &[Json],
+) -> anyhow::Result<Snapshot> {
+    anyhow::ensure!(
+        entries.len() == meta.params.len(),
+        "checkpoint has {} leaves, executor expects {}",
+        entries.len(),
+        meta.params.len()
+    );
+    let mut params = Vec::with_capacity(entries.len());
+    let mut vels = Vec::with_capacity(entries.len());
+    for (p, leaf) in entries.iter().zip(&meta.params) {
+        let name = p.req("name")?.as_str().unwrap_or_default();
+        anyhow::ensure!(
+            name == leaf.name,
+            "checkpoint leaf {name:?} does not match executor leaf {:?}",
+            leaf.name
+        );
+        let file = p.req("file")?.as_str().unwrap_or_default();
+        params.push(npy::read_f32(&dir.join(file))?.0);
+        let vfile = p.req("vel")?.as_str().unwrap_or_default();
+        vels.push(npy::read_f32(&dir.join(vfile))?.0);
+    }
+    Ok(Snapshot::full(params, Some(vels)))
+}
+
+/// Oldest params-only generation: resolve each manifest leaf by
+/// (name, size), then restore through the params-only snapshot tier —
+/// momentum keeps its current values, as before.
+fn load_legacy_params_only(
+    meta: &VariantMeta,
+    dir: &Path,
+    entries: &[Json],
+) -> anyhow::Result<Snapshot> {
+    let mut source = Vec::new();
+    for p in entries {
+        let name = p.req("name")?.as_str().unwrap_or_default().to_string();
+        let file = p.req("file")?.as_str().unwrap_or_default();
+        let (data, _shape) = npy::read_f32(&dir.join(file))?;
+        source.push((name, data));
+    }
+    let mut ordered = Vec::with_capacity(meta.params.len());
+    for m in &meta.params {
+        // move the leaf out of `source` (no second full-parameter copy
+        // on top of the npy buffers)
+        let pos = source
+            .iter()
+            .position(|(n, d)| n == &m.name && d.len() == m.numel())
+            .ok_or_else(|| {
+                anyhow::anyhow!("checkpoint is missing leaf {:?} ({} elems)", m.name, m.numel())
+            })?;
+        ordered.push(source.swap_remove(pos).1);
+    }
+    Ok(Snapshot::params_only(ordered))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::artifact::ParamMeta;
     use crate::runtime::{default_artifacts_dir, XlaRuntime};
+
+    /// A synthetic variant (no PJRT artifacts needed) for host-only
+    /// save/load tests.
+    pub(crate) fn synth_meta(leaves: usize, numel: usize) -> VariantMeta {
+        let params: Vec<ParamMeta> = (0..leaves)
+            .map(|i| ParamMeta {
+                name: format!("block{i}/w"),
+                shape: vec![numel],
+                init_std: 0.1,
+            })
+            .collect();
+        VariantMeta {
+            name: "synthetic".to_string(),
+            family: "test".to_string(),
+            batch: 8,
+            input_shape: vec![4],
+            label_shape: vec![1],
+            classes: 2,
+            embed_dim: 0,
+            param_count: leaves * numel,
+            params,
+            artifacts: std::collections::BTreeMap::new(),
+        }
+    }
+
+    fn synth_snapshot(meta: &VariantMeta, seed: f32) -> SharedSnapshot {
+        let params: Vec<Vec<f32>> = meta
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (0..m.numel()).map(|j| seed + i as f32 + j as f32 * 0.25).collect())
+            .collect();
+        // momentum full of repeated values, like late-training tensors
+        let vel: Vec<Vec<f32>> = meta
+            .params
+            .iter()
+            .map(|m| vec![seed * 0.5; m.numel()])
+            .collect();
+        Arc::new(Snapshot::full(params, Some(vel)))
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("kakurenbo_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn assert_snapshots_eq(a: &Snapshot, b: &Snapshot) {
+        assert_eq!(a.params().len(), b.params().len());
+        for (la, lb) in a.params().iter().zip(b.params()) {
+            let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb);
+        }
+        match (a.momentum(), b.momentum()) {
+            (Some(va), Some(vb)) => {
+                assert_eq!(va.len(), vb.len());
+                for (la, lb) in va.iter().zip(vb) {
+                    let ba: Vec<u32> = la.iter().map(|v| v.to_bits()).collect();
+                    let bb: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ba, bb);
+                }
+            }
+            (None, None) => {}
+            _ => panic!("momentum presence differs"),
+        }
+    }
 
     #[test]
     fn leaf_file_pattern() {
+        // legacy generation
         assert!(is_leaf_file("p000_fc1_w.e7.npy"));
         assert!(is_leaf_file("v012_conv_b.npy"));
+        // digest-named artifacts + crashed-writer temp litter
+        let digest = "c".repeat(64);
+        assert!(is_leaf_file(&format!("obj_{digest}.art")));
+        assert!(is_leaf_file(&format!("obj_{digest}.art.3.tmp")));
+        // never touched by the sweep
         assert!(!is_leaf_file("state_loss.e7.npy"));
         assert!(!is_leaf_file("checkpoint.json"));
+        assert!(!is_leaf_file("checkpoint.json.tmp"));
         assert!(!is_leaf_file("px00_fc1_w.npy"));
+        assert!(!is_leaf_file("obj_short.art"));
+    }
+
+    /// Host-only: format-2 save → load round-trips bit-exactly through
+    /// the serial and the pooled writer alike, and every artifact left
+    /// in the directory is referenced by the manifest.
+    #[test]
+    fn artifact_roundtrip_serial_and_pooled() {
+        let meta = synth_meta(6, 300);
+        let snap = synth_snapshot(&meta, 1.5);
+        for (label, pool) in [("serial", WritePool::serial()), ("pooled", WritePool::new(4))] {
+            let dir = tmp(&format!("rt_{label}"));
+            std::fs::remove_dir_all(&dir).ok();
+            let stats = save_snapshot(&meta, &snap, &dir, 7, &pool, true).unwrap();
+            assert_eq!(stats.leaves, 12, "{label}");
+            assert!(stats.written_bytes > 0, "{label}");
+            let (loaded, epoch) = load_snapshot(&meta, &dir, true).unwrap();
+            assert_eq!(epoch, 7);
+            assert_snapshots_eq(&loaded, &snap);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    /// Serial and pooled saves of the same snapshot produce identical
+    /// stores (same digests, same manifest modulo nothing) — the
+    /// service-lane determinism contract extended to the pool.
+    #[test]
+    fn pooled_store_matches_serial_store() {
+        let meta = synth_meta(5, 200);
+        let snap = synth_snapshot(&meta, -0.75);
+        let (da, db) = (tmp("det_a"), tmp("det_b"));
+        std::fs::remove_dir_all(&da).ok();
+        std::fs::remove_dir_all(&db).ok();
+        save_snapshot(&meta, &snap, &da, 3, &WritePool::serial(), true).unwrap();
+        save_snapshot(&meta, &snap, &db, 3, &WritePool::new(4), true).unwrap();
+        for entry in std::fs::read_dir(&da).unwrap() {
+            let name = entry.unwrap().file_name();
+            let fa = std::fs::read(da.join(&name)).unwrap();
+            let fb = std::fs::read(db.join(&name)).unwrap();
+            assert_eq!(fa, fb, "{name:?} differs");
+        }
+        std::fs::remove_dir_all(&da).ok();
+        std::fs::remove_dir_all(&db).ok();
+    }
+
+    /// Unchanged leaves dedup across generations: re-saving the same
+    /// snapshot writes zero new payload bytes, and GC keeps exactly the
+    /// manifest-referenced objects.
+    #[test]
+    fn unchanged_leaves_dedup_across_generations() {
+        let meta = synth_meta(4, 250);
+        let snap = synth_snapshot(&meta, 2.0);
+        let dir = tmp("dedup");
+        std::fs::remove_dir_all(&dir).ok();
+        let pool = WritePool::serial();
+        let first = save_snapshot(&meta, &snap, &dir, 1, &pool, true).unwrap();
+        assert_eq!(first.deduped, 0);
+        let second = save_snapshot(&meta, &snap, &dir, 2, &pool, true).unwrap();
+        assert_eq!(second.deduped, 8, "every leaf should hit the store");
+        assert_eq!(second.written_bytes, 0);
+        // generation 2 loads fine and the store holds only referenced objects
+        let (loaded, epoch) = load_snapshot(&meta, &dir, true).unwrap();
+        assert_eq!(epoch, 2);
+        assert_snapshots_eq(&loaded, &snap);
+        let m = parse_file(&dir.join("checkpoint.json")).unwrap();
+        let referenced: std::collections::BTreeSet<String> = m
+            .req("params")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .flat_map(|p| {
+                ["digest", "vel_digest"].into_iter().map(|k| {
+                    crate::util::artifact::object_file(p.req(k).unwrap().as_str().unwrap())
+                })
+            })
+            .collect();
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().into_string().unwrap();
+            if is_object_file(&name) {
+                assert!(referenced.contains(&name), "orphan object {name}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A new-format save into a directory holding a legacy generation
+    /// sweeps the superseded `.npy` leaves (mixed-format GC).
+    #[test]
+    fn new_save_supersedes_legacy_generation() {
+        let meta = synth_meta(3, 100);
+        let dir = tmp("mixed_gc");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for legacy in ["p000_block0_w.e1.npy", "v000_block0_w.e1.npy"] {
+            std::fs::write(dir.join(legacy), b"stale").unwrap();
+        }
+        // coordinator state files must survive the sweep
+        std::fs::write(dir.join("state_loss.e1.npy"), b"keep").unwrap();
+        let snap = synth_snapshot(&meta, 0.25);
+        save_snapshot(&meta, &snap, &dir, 2, &WritePool::serial(), true).unwrap();
+        assert!(!dir.join("p000_block0_w.e1.npy").exists());
+        assert!(!dir.join("v000_block0_w.e1.npy").exists());
+        assert!(dir.join("state_loss.e1.npy").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn params_only_snapshot_rejected() {
+        let meta = synth_meta(2, 50);
+        let snap: SharedSnapshot =
+            Arc::new(Snapshot::params_only(vec![vec![0.0; 50], vec![0.0; 50]]));
+        let err = save_snapshot(&meta, &snap, &tmp("reject"), 0, &WritePool::serial(), true)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("full-state snapshot"), "{err}");
     }
 
     #[test]
     fn save_load_roundtrip() {
         let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
-        let dir = std::env::temp_dir().join(format!("kakurenbo_ckpt_{}", std::process::id()));
+        let dir = tmp("pjrt");
         std::fs::remove_dir_all(&dir).ok();
         let mut a = ModelExecutor::new(&rt, "mlp_c10_b64", 11).unwrap();
         // perturb params *and* momentum so we're not just checking the
@@ -261,7 +591,8 @@ mod tests {
         let y = vec![1i32; 64];
         let sw = vec![1.0f32; 64];
         a.train_step(&x, &y, &sw, 0.1).unwrap();
-        save(&a, &dir, 7).unwrap();
+        let stats = save(&a, &dir, 7).unwrap();
+        assert!(stats.leaves > 0 && stats.written_bytes > 0);
 
         let mut b = ModelExecutor::new(&rt, "mlp_c10_b64", 999).unwrap();
         let epoch = load(&mut b, &dir).unwrap();
@@ -275,15 +606,29 @@ mod tests {
             let bb: Vec<u32> = lb.iter().map(|v| v.to_bits()).collect();
             assert_eq!(ba, bb);
         }
-        // a later save into the same dir sweeps the old generation
+        // a later save into the same dir keeps only what its manifest
+        // references (refcount-by-manifest GC)
         a.train_step(&x, &y, &sw, 0.1).unwrap();
         save(&a, &dir, 9).unwrap();
-        let stale: Vec<String> = std::fs::read_dir(&dir)
+        let m = parse_file(&dir.join("checkpoint.json")).unwrap();
+        let referenced: Vec<String> = m
+            .req("params")
             .unwrap()
-            .filter_map(|e| e.unwrap().file_name().into_string().ok())
-            .filter(|n| is_leaf_file(n) && n.contains(".e7."))
+            .as_arr()
+            .unwrap()
+            .iter()
+            .flat_map(|p| {
+                ["digest", "vel_digest"].into_iter().map(|k| {
+                    crate::util::artifact::object_file(p.req(k).unwrap().as_str().unwrap())
+                })
+            })
             .collect();
-        assert!(stale.is_empty(), "old generation not swept: {stale:?}");
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().into_string().unwrap();
+            if is_leaf_file(&name) {
+                assert!(referenced.contains(&name), "unreferenced payload {name} survived GC");
+            }
+        }
         assert_eq!(load(&mut b, &dir).unwrap(), 9);
         // wrong variant rejected
         let mut c = ModelExecutor::new(&rt, "mlp_c100_b64", 1).unwrap();
@@ -294,8 +639,7 @@ mod tests {
     #[test]
     fn save_state_matches_save() {
         let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
-        let base = std::env::temp_dir()
-            .join(format!("kakurenbo_ckpt_state_{}", std::process::id()));
+        let base = tmp("state");
         std::fs::remove_dir_all(&base).ok();
         let (da, db) = (base.join("a"), base.join("b"));
         let mut a = ModelExecutor::new(&rt, "mlp_c10_b64", 5).unwrap();
@@ -318,12 +662,11 @@ mod tests {
 
     #[test]
     fn reordered_index_names_rejected() {
-        let Ok(rt) = XlaRuntime::new(&default_artifacts_dir()) else { return };
-        let dir = std::env::temp_dir()
-            .join(format!("kakurenbo_ckpt_names_{}", std::process::id()));
+        let meta = synth_meta(3, 80);
+        let dir = tmp("names");
         std::fs::remove_dir_all(&dir).ok();
-        let a = ModelExecutor::new(&rt, "mlp_c10_b64", 2).unwrap();
-        save(&a, &dir, 1).unwrap();
+        let snap = synth_snapshot(&meta, 4.0);
+        save_snapshot(&meta, &snap, &dir, 1, &WritePool::serial(), true).unwrap();
         // swap two index entries: positional load must refuse the
         // name mismatch instead of loading leaves into wrong slots
         let path = dir.join("checkpoint.json");
@@ -334,8 +677,7 @@ mod tests {
             }
         }
         std::fs::write(&path, m.to_pretty()).unwrap();
-        let mut b = ModelExecutor::new(&rt, "mlp_c10_b64", 3).unwrap();
-        let err = load(&mut b, &dir).unwrap_err().to_string();
+        let err = load_snapshot(&meta, &dir, true).unwrap_err().to_string();
         assert!(err.contains("does not match"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -54,6 +54,23 @@ impl SbSelector {
         rng.chance(p)
     }
 
+    /// The rolling history and overwrite cursor, in storage order — what
+    /// `coordinator/resume.rs` persists so an SB `--resume` replays the
+    /// acceptance stream bit-exactly.
+    pub fn export_history(&self) -> (&[f32], usize) {
+        (&self.history, self.cursor)
+    }
+
+    /// Restore a history captured by [`SbSelector::export_history`].
+    /// Entries beyond the reservoir cap are dropped; the cursor is only
+    /// meaningful once the reservoir is full (it stays 0 while filling,
+    /// matching how [`SbSelector::record`] evolves it).
+    pub fn import_history(&mut self, history: &[f32], cursor: usize) {
+        self.history = history.to_vec();
+        self.history.truncate(self.cap);
+        self.cursor = if self.history.len() < self.cap { 0 } else { cursor % self.cap };
+    }
+
     /// Expected selectivity over the current history (diagnostics).
     pub fn mean_accept_prob(&self) -> f64 {
         if self.history.is_empty() {
@@ -162,5 +179,27 @@ mod tests {
         let mut s = SbSelector::new(1.0, 10);
         let mut rng = Rng::new(3);
         assert!(s.accept(0.0, &mut rng));
+    }
+
+    /// Export → import reproduces the selector exactly: the restored
+    /// copy makes the identical accept decisions on the same RNG stream,
+    /// including cursor-wrapped reservoirs.
+    #[test]
+    fn history_export_import_is_exact() {
+        let mut a = SbSelector::new(1.0, 16);
+        // overfill so the cursor has wrapped
+        for i in 0..40 {
+            a.record((i % 7) as f32);
+        }
+        let (hist, cursor) = a.export_history();
+        let (hist, cursor) = (hist.to_vec(), cursor);
+        let mut b = SbSelector::new(1.0, 16);
+        b.import_history(&hist, cursor);
+        let mut rng_a = Rng::new(11);
+        let mut rng_b = Rng::new(11);
+        for i in 0..200 {
+            let loss = (i % 13) as f32 * 0.5;
+            assert_eq!(a.accept(loss, &mut rng_a), b.accept(loss, &mut rng_b), "step {i}");
+        }
     }
 }

@@ -1,0 +1,731 @@
+//! The checkpoint artifact layer: framed, digest-named, optionally
+//! compressed leaf payloads plus the persistent write pool that fans
+//! leaf serialization across worker threads.
+//!
+//! # Frame format
+//!
+//! Every stored leaf file wraps an inner payload (an `.npy` byte image,
+//! `util/npy.rs`) in a 13-byte frame:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     magic  "KKA1"
+//!   4       1     codec  (0 = raw, 1 = lzss)
+//!   5       8     raw payload length, u64 little-endian
+//!   13      ..    payload (raw bytes, or the LZSS stream)
+//! ```
+//!
+//! # Content addressing + integrity
+//!
+//! [`store_leaf`] hashes the **stored** bytes (frame included) with
+//! in-tree SHA-256 (`util/sha256.rs`) and writes them to
+//! `obj_<digest>.art` via an atomic temp + fsync + rename, so the file
+//! for a digest either exists complete or not at all.  The digest is what
+//! manifests record, so (a) a load can verify the exact bytes it reads
+//! *before* any decompression or `.npy` parsing touches them, and (b) an
+//! unchanged leaf re-saved in a later generation hits the existing file
+//! and skips the write entirely (dedup; GC then becomes
+//! keep-what-the-manifest-references, see `runtime/checkpoint.rs`).
+//!
+//! # Compression
+//!
+//! The in-tree codec is byte-oriented LZSS (4 KiB window, 3..=18-byte
+//! matches) — modest ratios on float data, but momentum tensors late in
+//! training are full of repeated byte patterns (zeros, saturated
+//! exponents) and shrink meaningfully, while the frame falls back to raw
+//! whenever compression does not pay, so storing can never lose.
+//!
+//! # The write pool
+//!
+//! [`WritePool`] owns N persistent worker threads consuming boxed
+//! `FnOnce` jobs (each one leaf's encode → compress → hash → write) from
+//! a shared queue; [`WritePool::run`] submits a batch and blocks until
+//! every job replies, returning results in submission order.  Checkpoint
+//! latency then scales with the largest leaf instead of the sum of all
+//! leaves.  The pool is deliberately generic over jobs (it lives in
+//! `util`, below the engine/runtime layers that use it).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::util::sha256::Sha256;
+use crate::util::timer::Timer;
+
+/// Stored-frame magic for checkpoint leaf artifacts.
+pub const FRAME_MAGIC: &[u8; 4] = b"KKA1";
+/// Frame header length (magic + codec byte + raw length).
+pub const FRAME_HEADER_LEN: usize = 13;
+
+/// How a frame's payload is encoded on disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Payload bytes stored verbatim.
+    Raw,
+    /// In-tree LZSS (4 KiB window, 3..=18-byte matches).
+    Lzss,
+}
+
+impl Codec {
+    /// Manifest spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Raw => "raw",
+            Codec::Lzss => "lzss",
+        }
+    }
+
+    /// Parse the manifest spelling.
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "raw" => Ok(Codec::Raw),
+            "lzss" => Ok(Codec::Lzss),
+            other => anyhow::bail!("unknown artifact codec {other:?}"),
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            Codec::Raw => 0,
+            Codec::Lzss => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> anyhow::Result<Self> {
+        match tag {
+            0 => Ok(Codec::Raw),
+            1 => Ok(Codec::Lzss),
+            other => anyhow::bail!("unknown artifact codec tag {other}"),
+        }
+    }
+}
+
+// --- LZSS codec -----------------------------------------------------------
+
+const LZ_WINDOW: usize = 4096;
+const LZ_MIN_MATCH: usize = 3;
+const LZ_MAX_MATCH: usize = 18;
+
+/// Compress `data` with LZSS.  Token stream: one flag byte per 8 tokens
+/// (bit set ⇒ literal byte follows; clear ⇒ a 2-byte match: 12-bit
+/// backward distance − 1, 4-bit length − 3).
+pub fn lzss_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    // single-slot hash table over 3-byte prefixes: last position seen
+    let mut table = vec![usize::MAX; 1 << 13];
+    let hash = |a: u8, b: u8, c: u8| -> usize {
+        ((a as usize) ^ ((b as usize) << 4) ^ ((c as usize) << 8)) & ((1 << 13) - 1)
+    };
+    let mut i = 0usize;
+    let mut flag_pos = 0usize;
+    let mut flag_bit = 8u8; // 8 forces a fresh flag byte on the first token
+    let mut push_token = |out: &mut Vec<u8>, literal: Option<u8>, m: Option<(usize, usize)>| {
+        if flag_bit == 8 {
+            flag_pos = out.len();
+            out.push(0);
+            flag_bit = 0;
+        }
+        if let Some(b) = literal {
+            out[flag_pos] |= 1 << flag_bit;
+            out.push(b);
+        } else if let Some((dist, len)) = m {
+            let d = (dist - 1) as u16; // 0..4095
+            let l = (len - LZ_MIN_MATCH) as u16; // 0..15
+            let word = (d << 4) | l;
+            out.push((word >> 8) as u8);
+            out.push((word & 0xff) as u8);
+        }
+        flag_bit += 1;
+    };
+    while i < data.len() {
+        let mut best: Option<(usize, usize)> = None;
+        if i + LZ_MIN_MATCH <= data.len() {
+            let h = hash(data[i], data[i + 1], data[i + 2]);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX && cand < i && i - cand <= LZ_WINDOW {
+                let max_len = (data.len() - i).min(LZ_MAX_MATCH);
+                let mut len = 0usize;
+                while len < max_len && data[cand + len] == data[i + len] {
+                    len += 1;
+                }
+                if len >= LZ_MIN_MATCH {
+                    best = Some((i - cand, len));
+                }
+            }
+        }
+        match best {
+            Some((dist, len)) => {
+                push_token(&mut out, None, Some((dist, len)));
+                // seed the table through the matched span so later
+                // occurrences can still find these positions
+                let end = i + len;
+                i += 1;
+                while i < end && i + LZ_MIN_MATCH <= data.len() {
+                    table[hash(data[i], data[i + 1], data[i + 2])] = i;
+                    i += 1;
+                }
+                i = end;
+            }
+            None => {
+                push_token(&mut out, Some(data[i]), None);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Decompress an LZSS stream produced by [`lzss_compress`] into exactly
+/// `raw_len` bytes; any mismatch (truncation, trailing garbage, a
+/// distance pointing before the start) is an error, never a panic.
+pub fn lzss_decompress(data: &[u8], raw_len: usize) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut i = 0usize;
+    while out.len() < raw_len {
+        anyhow::ensure!(i < data.len(), "lzss stream truncated (flag byte)");
+        let flags = data[i];
+        i += 1;
+        for bit in 0..8 {
+            if out.len() == raw_len {
+                break;
+            }
+            if flags & (1 << bit) != 0 {
+                anyhow::ensure!(i < data.len(), "lzss stream truncated (literal)");
+                out.push(data[i]);
+                i += 1;
+            } else {
+                anyhow::ensure!(i + 1 < data.len(), "lzss stream truncated (match)");
+                let word = ((data[i] as u16) << 8) | data[i + 1] as u16;
+                i += 2;
+                let dist = (word >> 4) as usize + 1;
+                let len = (word & 0xf) as usize + LZ_MIN_MATCH;
+                anyhow::ensure!(
+                    dist <= out.len(),
+                    "lzss match distance {dist} exceeds output ({})",
+                    out.len()
+                );
+                anyhow::ensure!(
+                    out.len() + len <= raw_len,
+                    "lzss match overruns declared raw length"
+                );
+                let start = out.len() - dist;
+                // byte-at-a-time: matches may overlap themselves
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    anyhow::ensure!(i == data.len(), "lzss stream has trailing bytes");
+    Ok(out)
+}
+
+// --- frame ----------------------------------------------------------------
+
+/// Wrap `raw` payload bytes in a stored frame.  With `try_compress`, the
+/// payload is LZSS-compressed and kept only when it actually shrinks;
+/// otherwise (and always when `try_compress` is false) the frame stores
+/// raw.  Returns the stored bytes, the codec used, and the seconds spent
+/// compressing.
+pub fn encode_frame(raw: &[u8], try_compress: bool) -> (Vec<u8>, Codec, f64) {
+    let (payload, codec, compress_s) = if try_compress {
+        let t = Timer::start();
+        let packed = lzss_compress(raw);
+        let secs = t.elapsed_s();
+        if packed.len() < raw.len() {
+            (packed, Codec::Lzss, secs)
+        } else {
+            (raw.to_vec(), Codec::Raw, secs)
+        }
+    } else {
+        (raw.to_vec(), Codec::Raw, 0.0)
+    };
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(FRAME_MAGIC);
+    out.push(codec.tag());
+    out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    (out, codec, compress_s)
+}
+
+/// Unwrap a stored frame back to its raw payload bytes.
+pub fn decode_frame(stored: &[u8]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(stored.len() >= FRAME_HEADER_LEN, "artifact frame truncated");
+    anyhow::ensure!(&stored[..4] == FRAME_MAGIC, "not a checkpoint artifact frame");
+    let codec = Codec::from_tag(stored[4])?;
+    let mut len8 = [0u8; 8];
+    len8.copy_from_slice(&stored[5..13]);
+    let raw_len = u64::from_le_bytes(len8) as usize;
+    let payload = &stored[FRAME_HEADER_LEN..];
+    match codec {
+        Codec::Raw => {
+            anyhow::ensure!(payload.len() == raw_len, "raw frame length mismatch");
+            Ok(payload.to_vec())
+        }
+        Codec::Lzss => lzss_decompress(payload, raw_len),
+    }
+}
+
+// --- content-addressed store ----------------------------------------------
+
+/// File name for a stored leaf with this digest.
+pub fn object_file(digest: &str) -> String {
+    format!("obj_{digest}.art")
+}
+
+/// Whether a directory entry is a content-addressed leaf object
+/// (`obj_<64 hex>.art`).
+pub fn is_object_file(name: &str) -> bool {
+    name.len() == 4 + 64 + 4
+        && name.starts_with("obj_")
+        && name.ends_with(".art")
+        && name[4..4 + 64].bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+}
+
+/// One stored leaf's metadata + timing, as [`store_leaf`] returns it and
+/// the checkpoint manifest records it.
+#[derive(Clone, Debug)]
+pub struct LeafMeta {
+    /// SHA-256 of the stored file bytes, 64 lowercase hex chars.
+    pub digest: String,
+    /// Stored file name (`obj_<digest>.art`).
+    pub file: String,
+    /// Codec the frame actually used (compression may fall back to raw).
+    pub codec: Codec,
+    /// Bytes of the stored file (frame + payload).
+    pub stored_bytes: usize,
+    /// Bytes of the raw (uncompressed) payload.
+    pub raw_bytes: usize,
+    /// True when an identical object already existed and the write was
+    /// skipped (content-address hit from a previous generation).
+    pub deduped: bool,
+    /// Seconds spent writing + fsyncing (0 when deduped).
+    pub write_s: f64,
+    /// Seconds spent hashing the stored bytes.
+    pub hash_s: f64,
+    /// Seconds spent compressing (0 for raw-only frames).
+    pub compress_s: f64,
+}
+
+/// Serialize one leaf into the content-addressed store at `dir`:
+/// frame (+ optional compression) → hash → atomic write, skipping the
+/// write when `obj_<digest>.art` already exists (identical content by
+/// construction — the digest covers every stored byte, and objects are
+/// only ever published complete via temp + rename).
+pub fn store_leaf(dir: &Path, raw: &[u8], try_compress: bool) -> anyhow::Result<LeafMeta> {
+    let (stored, codec, compress_s) = encode_frame(raw, try_compress);
+    let t = Timer::start();
+    let mut h = Sha256::new();
+    h.update(&stored);
+    let digest = h.finalize_hex();
+    let hash_s = t.elapsed_s();
+    let file = object_file(&digest);
+    let path = dir.join(&file);
+    let mut meta = LeafMeta {
+        digest,
+        file,
+        codec,
+        stored_bytes: stored.len(),
+        raw_bytes: raw.len(),
+        deduped: false,
+        write_s: 0.0,
+        hash_s,
+        compress_s,
+    };
+    if path.exists() {
+        meta.deduped = true;
+        return Ok(meta);
+    }
+    let t = Timer::start();
+    crate::util::fsutil::write_atomic_bytes(&path, &stored)?;
+    meta.write_s = t.elapsed_s();
+    Ok(meta)
+}
+
+/// Read one leaf back from the store.  With `verify`, the stored bytes
+/// are re-hashed and must match `digest` — corruption surfaces here as a
+/// typed error *before* any decompression or payload parsing runs.
+/// Returns the raw payload bytes.
+pub fn load_leaf(dir: &Path, digest: &str, verify: bool) -> anyhow::Result<Vec<u8>> {
+    let path = dir.join(object_file(digest));
+    let stored = std::fs::read(&path)?;
+    if verify {
+        let mut h = Sha256::new();
+        h.update(&stored);
+        let actual = h.finalize_hex();
+        anyhow::ensure!(
+            actual == digest,
+            "sha256 mismatch for {path:?}: manifest records {digest}, stored bytes hash to {actual}"
+        );
+    }
+    decode_frame(&stored)
+}
+
+// --- aggregate write statistics -------------------------------------------
+
+/// Aggregate timing + volume for one checkpoint save, folded from every
+/// leaf's [`LeafMeta`].  Rides the service lane's fold-in event into the
+/// epoch record and the bench checkpoint-write table.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WriteStats {
+    /// Leaves serialized (params + momentum).
+    pub leaves: usize,
+    /// Stored bytes actually written (deduped leaves excluded).
+    pub written_bytes: usize,
+    /// Raw (uncompressed) payload bytes across all leaves.
+    pub raw_bytes: usize,
+    /// Leaves skipped because an identical object already existed.
+    pub deduped: usize,
+    /// Total seconds in write + fsync across leaves (sum over workers).
+    pub write_s: f64,
+    /// Total seconds hashing stored bytes across leaves.
+    pub hash_s: f64,
+    /// Total seconds compressing across leaves.
+    pub compress_s: f64,
+}
+
+impl WriteStats {
+    /// Fold one leaf's metadata in.
+    pub fn absorb(&mut self, m: &LeafMeta) {
+        self.leaves += 1;
+        self.raw_bytes += m.raw_bytes;
+        if m.deduped {
+            self.deduped += 1;
+        } else {
+            self.written_bytes += m.stored_bytes;
+        }
+        self.write_s += m.write_s;
+        self.hash_s += m.hash_s;
+        self.compress_s += m.compress_s;
+    }
+
+    /// Fold another aggregate in (multi-save accumulation).
+    pub fn merge(&mut self, o: &WriteStats) {
+        self.leaves += o.leaves;
+        self.written_bytes += o.written_bytes;
+        self.raw_bytes += o.raw_bytes;
+        self.deduped += o.deduped;
+        self.write_s += o.write_s;
+        self.hash_s += o.hash_s;
+        self.compress_s += o.compress_s;
+    }
+}
+
+// --- the persistent write pool --------------------------------------------
+
+/// One leaf-serialization job: runs on a pool worker, returns the stored
+/// leaf's metadata.  Jobs are `'static` — callers capture shared payload
+/// data by `Arc` (e.g. a [`crate::engine`] `SharedSnapshot`).
+pub type WriteJob = Box<dyn FnOnce() -> anyhow::Result<LeafMeta> + Send + 'static>;
+
+/// A persistent pool of leaf-write workers.  Construct once (per
+/// checkpoint lane / trainer), [`WritePool::run`] per save: the batch
+/// fans out across the workers and `run` blocks until every job has
+/// replied, preserving submission order in the returned vector.  With
+/// `threads <= 1` no threads are spawned and jobs run inline on the
+/// caller (the serial reference the bench table compares against).
+pub struct WritePool {
+    job_tx: Option<Sender<(usize, WriteJob)>>,
+    done_rx: Option<Receiver<(usize, anyhow::Result<LeafMeta>)>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WritePool {
+    /// A pool with `threads` persistent workers (`0` = one per available
+    /// CPU, `1` = inline serial execution, no threads).
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            crate::util::threadpool::default_threads()
+        } else {
+            threads
+        };
+        if threads <= 1 {
+            return WritePool { job_tx: None, done_rx: None, handles: Vec::new(), threads: 1 };
+        }
+        let (job_tx, job_rx) = channel::<(usize, WriteJob)>();
+        let (done_tx, done_rx) = channel::<(usize, anyhow::Result<LeafMeta>)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let job_rx = job_rx.clone();
+            let done_tx = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ckpt-write-{w}"))
+                .spawn(move || loop {
+                    // hold the lock only for the dequeue, not the job
+                    let job = match job_rx.lock() {
+                        Ok(rx) => rx.recv(),
+                        Err(_) => break,
+                    };
+                    let Ok((idx, job)) = job else { break };
+                    if done_tx.send((idx, job())).is_err() {
+                        break;
+                    }
+                })
+                .expect("spawn checkpoint write worker");
+            handles.push(handle);
+        }
+        WritePool { job_tx: Some(job_tx), done_rx: Some(done_rx), handles, threads }
+    }
+
+    /// Serial pool (no worker threads; jobs run inline).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Worker count (1 for the inline serial pool).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of jobs to completion; results come back in submission
+    /// order.  The first job error is returned — after every outstanding
+    /// reply has been collected, so the pool stays consistent for the
+    /// next batch even when a job fails.
+    pub fn run(&self, jobs: Vec<WriteJob>) -> anyhow::Result<Vec<LeafMeta>> {
+        let n = jobs.len();
+        let (Some(job_tx), Some(done_rx)) = (&self.job_tx, &self.done_rx) else {
+            // inline serial execution
+            return jobs.into_iter().map(|job| job()).collect();
+        };
+        for (idx, job) in jobs.into_iter().enumerate() {
+            job_tx
+                .send((idx, job))
+                .map_err(|_| anyhow::anyhow!("checkpoint write pool died"))?;
+        }
+        let mut slots: Vec<Option<anyhow::Result<LeafMeta>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (idx, res) = done_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("checkpoint write pool died mid-batch"))?;
+            slots[idx] = Some(res);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every job replied exactly once"))
+            .collect()
+    }
+}
+
+impl Drop for WritePool {
+    fn drop(&mut self) {
+        drop(self.job_tx.take()); // disconnect: workers' recv fails and they exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kakurenbo_artifact_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn lzss_roundtrips() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"abcabcabcabcabcabc".to_vec(),
+            vec![0u8; 10_000],
+            (0..5000u32).map(|i| (i % 7) as u8).collect(),
+            (0..5000u32).map(|i| (i * 2654435761u32.wrapping_mul(i)) as u8).collect(),
+        ];
+        for data in cases {
+            let packed = lzss_compress(&data);
+            let back = lzss_decompress(&packed, data.len()).unwrap();
+            assert_eq!(back, data);
+        }
+    }
+
+    #[test]
+    fn lzss_compresses_repetitive_data() {
+        let data = vec![0u8; 4096];
+        let packed = lzss_compress(&data);
+        assert!(packed.len() < data.len() / 4, "{} bytes", packed.len());
+    }
+
+    #[test]
+    fn lzss_rejects_corrupt_streams() {
+        let data: Vec<u8> = (0..200u8).collect();
+        let packed = lzss_compress(&data);
+        // truncation
+        assert!(lzss_decompress(&packed[..packed.len() - 1], data.len()).is_err());
+        // wrong declared length
+        assert!(lzss_decompress(&packed, data.len() + 1).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrips_both_codecs() {
+        let compressible = vec![7u8; 9000];
+        let (stored, codec, _) = encode_frame(&compressible, true);
+        assert_eq!(codec, Codec::Lzss);
+        assert!(stored.len() < compressible.len());
+        assert_eq!(decode_frame(&stored).unwrap(), compressible);
+
+        let (stored, codec, _) = encode_frame(&compressible, false);
+        assert_eq!(codec, Codec::Raw);
+        assert_eq!(decode_frame(&stored).unwrap(), compressible);
+    }
+
+    #[test]
+    fn incompressible_data_falls_back_to_raw() {
+        // a pseudo-random byte soup LZSS cannot shrink
+        let noise: Vec<u8> = (0..4096u64)
+            .map(|i| (i.wrapping_mul(0x9e3779b97f4a7c15) >> 33) as u8)
+            .collect();
+        let (stored, codec, _) = encode_frame(&noise, true);
+        assert_eq!(codec, Codec::Raw);
+        assert_eq!(decode_frame(&stored).unwrap(), noise);
+    }
+
+    #[test]
+    fn object_file_pattern() {
+        let d = "a".repeat(64);
+        assert!(is_object_file(&object_file(&d)));
+        assert!(!is_object_file("obj_short.art"));
+        assert!(!is_object_file("p000_fc1_w.e7.npy"));
+        assert!(!is_object_file(&format!("obj_{}.art.tmp", d)));
+        let upper = format!("obj_{}.art", "A".repeat(64));
+        assert!(!is_object_file(&upper));
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_dedup() {
+        let dir = tmp("store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = vec![3u8; 5000];
+        let m1 = store_leaf(&dir, &raw, true).unwrap();
+        assert!(!m1.deduped);
+        assert_eq!(m1.codec, Codec::Lzss);
+        // identical content dedups against the existing object
+        let m2 = store_leaf(&dir, &raw, true).unwrap();
+        assert!(m2.deduped);
+        assert_eq!(m2.digest, m1.digest);
+        assert_eq!(load_leaf(&dir, &m1.digest, true).unwrap(), raw);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn verify_catches_a_flipped_byte() {
+        let dir = tmp("verify");
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw: Vec<u8> = (0..3000u32).map(|i| (i % 251) as u8).collect();
+        let m = store_leaf(&dir, &raw, false).unwrap();
+        let path = dir.join(&m.file);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 10;
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_leaf(&dir, &m.digest, true).unwrap_err().to_string();
+        assert!(err.contains("sha256 mismatch"), "{err}");
+        // verification off: bytes load (differently) without the check
+        let loaded = load_leaf(&dir, &m.digest, false).unwrap();
+        assert_ne!(loaded, raw);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pool_preserves_submission_order() {
+        for threads in [1usize, 4] {
+            let pool = WritePool::new(threads);
+            let jobs: Vec<WriteJob> = (0..16usize)
+                .map(|i| {
+                    Box::new(move || {
+                        Ok(LeafMeta {
+                            digest: format!("{i}"),
+                            file: String::new(),
+                            codec: Codec::Raw,
+                            stored_bytes: i,
+                            raw_bytes: i,
+                            deduped: false,
+                            write_s: 0.0,
+                            hash_s: 0.0,
+                            compress_s: 0.0,
+                        })
+                    }) as WriteJob
+                })
+                .collect();
+            let out = pool.run(jobs).unwrap();
+            let order: Vec<usize> = out.iter().map(|m| m.stored_bytes).collect();
+            assert_eq!(order, (0..16).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_surfaces_job_errors_and_stays_usable() {
+        let pool = WritePool::new(2);
+        let jobs: Vec<WriteJob> = vec![
+            Box::new(|| anyhow::bail!("leaf 0 exploded")),
+            Box::new(|| {
+                Ok(LeafMeta {
+                    digest: String::new(),
+                    file: String::new(),
+                    codec: Codec::Raw,
+                    stored_bytes: 0,
+                    raw_bytes: 0,
+                    deduped: false,
+                    write_s: 0.0,
+                    hash_s: 0.0,
+                    compress_s: 0.0,
+                })
+            }),
+        ];
+        let err = pool.run(jobs).unwrap_err().to_string();
+        assert!(err.contains("leaf 0 exploded"), "{err}");
+        // a failed batch must not wedge the pool for the next one
+        let ok: Vec<WriteJob> = vec![Box::new(|| {
+            Ok(LeafMeta {
+                digest: "ok".into(),
+                file: String::new(),
+                codec: Codec::Raw,
+                stored_bytes: 1,
+                raw_bytes: 1,
+                deduped: false,
+                write_s: 0.0,
+                hash_s: 0.0,
+                compress_s: 0.0,
+            })
+        })];
+        assert_eq!(pool.run(ok).unwrap()[0].digest, "ok");
+    }
+
+    #[test]
+    fn stats_fold_leaves_and_dedup() {
+        let mut s = WriteStats::default();
+        s.absorb(&LeafMeta {
+            digest: String::new(),
+            file: String::new(),
+            codec: Codec::Raw,
+            stored_bytes: 100,
+            raw_bytes: 90,
+            deduped: false,
+            write_s: 0.5,
+            hash_s: 0.25,
+            compress_s: 0.0,
+        });
+        s.absorb(&LeafMeta {
+            digest: String::new(),
+            file: String::new(),
+            codec: Codec::Lzss,
+            stored_bytes: 40,
+            raw_bytes: 90,
+            deduped: true,
+            write_s: 0.0,
+            hash_s: 0.25,
+            compress_s: 0.1,
+        });
+        assert_eq!(s.leaves, 2);
+        assert_eq!(s.written_bytes, 100); // deduped leaf not counted
+        assert_eq!(s.raw_bytes, 180);
+        assert_eq!(s.deduped, 1);
+        assert!((s.write_s - 0.5).abs() < 1e-12);
+        assert!((s.hash_s - 0.5).abs() < 1e-12);
+    }
+}

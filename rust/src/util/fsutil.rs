@@ -10,6 +10,7 @@
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Write `contents` to `path` atomically **and durably**: the bytes land
 /// in a `.tmp` sibling, are fsynced to stable storage, and the file is
@@ -24,6 +25,30 @@ pub fn write_atomic(path: &Path, contents: &str) -> anyhow::Result<()> {
     let tmp = path.with_file_name(format!("{file}.tmp"));
     let mut f = std::fs::File::create(&tmp)?;
     f.write_all(contents.as_bytes())?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Monotonic counter making concurrent temp-file names unique: two write
+/// pool workers storing the *same* content-addressed object must not
+/// clobber each other's in-flight temp file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Byte-payload twin of [`write_atomic`], safe under concurrency: the
+/// temp sibling carries a process-unique sequence number
+/// (`{file}.{seq}.tmp`), so parallel writers racing on the same
+/// destination each rename a complete, durable file into place.
+pub fn write_atomic_bytes(path: &Path, contents: &[u8]) -> anyhow::Result<()> {
+    let file = path
+        .file_name()
+        .and_then(|f| f.to_str())
+        .ok_or_else(|| anyhow::anyhow!("write_atomic_bytes: bad path {path:?}"))?;
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_file_name(format!("{file}.{seq}.tmp"));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(contents)?;
     f.sync_all()?;
     drop(f);
     std::fs::rename(&tmp, path)?;
@@ -70,6 +95,31 @@ mod tests {
         write_atomic(&path, "new").unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "new");
         assert!(!dir.join("manifest.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_bytes_concurrent_same_destination() {
+        let dir = tmp("atomic_bytes");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("obj.art");
+        let payload = vec![0x5au8; 4096];
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let path = &path;
+                let payload = &payload;
+                s.spawn(move || write_atomic_bytes(path, payload).unwrap());
+            }
+        });
+        assert_eq!(std::fs::read(&path).unwrap(), payload);
+        // no temp litter survives the race
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().into_string().unwrap())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,6 +1,8 @@
 //! Offline substrates: everything a crates.io-connected project would pull
 //! in as dependencies, implemented in-tree (see DESIGN.md §4).
 
+/// Framed, digest-named checkpoint leaf store + the leaf write pool.
+pub mod artifact;
 /// CSV writer for result exports.
 pub mod csv;
 /// Crash-safe filesystem primitives (atomic writes, fsync, GC sweeps).
@@ -17,6 +19,8 @@ pub mod plot;
 pub mod proptest;
 /// Deterministic splittable PRNG.
 pub mod rng;
+/// In-tree SHA-256 (FIPS 180-4) for artifact digests.
+pub mod sha256;
 /// Histograms, percentiles, and running statistics.
 pub mod stats;
 /// ASCII table rendering for bench output.

@@ -8,8 +8,11 @@ use std::path::Path;
 
 const MAGIC: &[u8; 6] = b"\x93NUMPY";
 
-/// Write a C-contiguous f32 array.
-pub fn write_f32(path: &Path, data: &[f32], shape: &[usize]) -> anyhow::Result<()> {
+/// Encode a C-contiguous f32 array to an in-memory `.npy` v1.0 byte
+/// image — byte-identical to what [`write_f32`] puts on disk.  The
+/// checkpoint artifact layer frames these bytes rather than re-deriving
+/// the format.
+pub fn encode_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Vec<u8>> {
     anyhow::ensure!(
         data.len() == shape.iter().product::<usize>(),
         "data/shape mismatch"
@@ -31,32 +34,25 @@ pub fn write_f32(path: &Path, data: &[f32], shape: &[usize]) -> anyhow::Result<(
     header.push_str(&" ".repeat(pad));
     header.push('\n');
 
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&[1, 0])?;
-    f.write_all(&(header.len() as u16).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
+    let mut out = Vec::with_capacity(10 + header.len() + data.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&[1, 0]);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
     for v in data {
-        f.write_all(&v.to_le_bytes())?;
+        out.extend_from_slice(&v.to_le_bytes());
     }
-    Ok(())
+    Ok(out)
 }
 
-/// Read an f32 `.npy` file; returns (data, shape).
-pub fn read_f32(path: &Path) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 6];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not an npy file");
-    let mut ver = [0u8; 2];
-    f.read_exact(&mut ver)?;
-    anyhow::ensure!(ver[0] == 1, "unsupported npy version {}", ver[0]);
-    let mut len = [0u8; 2];
-    f.read_exact(&mut len)?;
-    let hlen = u16::from_le_bytes(len) as usize;
-    let mut header = vec![0u8; hlen];
-    f.read_exact(&mut header)?;
-    let header = String::from_utf8(header)?;
+/// Decode an in-memory `.npy` v1.0 byte image; returns (data, shape).
+pub fn decode_f32(bytes: &[u8]) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+    anyhow::ensure!(bytes.len() >= 10, "npy image truncated");
+    anyhow::ensure!(&bytes[..6] == MAGIC, "not an npy file");
+    anyhow::ensure!(bytes[6] == 1, "unsupported npy version {}", bytes[6]);
+    let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    anyhow::ensure!(bytes.len() >= 10 + hlen, "npy header truncated");
+    let header = std::str::from_utf8(&bytes[10..10 + hlen])?;
     anyhow::ensure!(header.contains("'<f4'"), "only <f4 supported: {header}");
     anyhow::ensure!(header.contains("False"), "fortran order unsupported");
     // parse shape tuple
@@ -74,14 +70,29 @@ pub fn read_f32(path: &Path) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
         })
         .collect::<Result<_, _>>()?;
     let n: usize = shape.iter().product();
-    let mut bytes = Vec::new();
-    f.read_to_end(&mut bytes)?;
-    anyhow::ensure!(bytes.len() >= n * 4, "truncated npy payload");
-    let data = bytes[..n * 4]
+    let payload = &bytes[10 + hlen..];
+    anyhow::ensure!(payload.len() >= n * 4, "truncated npy payload");
+    let data = payload[..n * 4]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
     Ok((data, shape))
+}
+
+/// Write a C-contiguous f32 array.
+pub fn write_f32(path: &Path, data: &[f32], shape: &[usize]) -> anyhow::Result<()> {
+    let bytes = encode_f32(data, shape)?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read an f32 `.npy` file; returns (data, shape).
+pub fn read_f32(path: &Path) -> anyhow::Result<(Vec<f32>, Vec<usize>)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    decode_f32(&bytes)
 }
 
 #[cfg(test)]
@@ -123,5 +134,18 @@ mod tests {
     #[test]
     fn rejects_shape_mismatch() {
         assert!(write_f32(&tmp("bad"), &[1.0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn encode_matches_file_bytes() {
+        let path = tmp("encode");
+        let data: Vec<f32> = (0..20).map(|i| i as f32 - 9.5).collect();
+        write_f32(&path, &data, &[4, 5]).unwrap();
+        let from_disk = std::fs::read(&path).unwrap();
+        assert_eq!(encode_f32(&data, &[4, 5]).unwrap(), from_disk);
+        let (d, s) = decode_f32(&from_disk).unwrap();
+        assert_eq!(s, vec![4, 5]);
+        assert_eq!(d, data);
+        std::fs::remove_file(&path).ok();
     }
 }
