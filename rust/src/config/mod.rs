@@ -193,6 +193,46 @@ impl DpMode {
     }
 }
 
+/// What the worker pool does when a lane dies or stalls past the
+/// straggler timeout mid-run (`--fault-policy`).
+///
+/// See docs/worker-model.md ("Fault tolerance") for the recovery
+/// contract and guidance on choosing a policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Abort the run with a named error at the first lane fault
+    /// (default).  Nothing is retried; combine with `--checkpoint-every`
+    /// and `--resume` to restart from the last committed generation.
+    #[default]
+    Fail,
+    /// Retire the faulty lane and deterministically re-issue its
+    /// unfinished shard slices to surviving lanes.  The `(step, worker)`
+    /// fold order is preserved, so the recovered run stays bitwise
+    /// identical to an undisturbed run of the same logical order.
+    Elastic,
+}
+
+impl FaultPolicy {
+    /// Parse the `--fault-policy` CLI value.
+    pub fn parse(value: &str) -> anyhow::Result<Self> {
+        match value {
+            "fail" => Ok(FaultPolicy::Fail),
+            "elastic" => Ok(FaultPolicy::Elastic),
+            other => anyhow::bail!(
+                "unknown --fault-policy {other:?}; expected \"fail\" or \"elastic\""
+            ),
+        }
+    }
+
+    /// Canonical CLI spelling (logs / result JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultPolicy::Fail => "fail",
+            FaultPolicy::Elastic => "elastic",
+        }
+    }
+}
+
 /// Parse an on/off CLI switch (`on`/`off`, with the usual boolean
 /// spellings accepted).  `flag` names the option in the error message.
 pub fn parse_switch(flag: &str, value: &str) -> anyhow::Result<bool> {
@@ -333,6 +373,16 @@ pub struct ExperimentConfig {
     /// (`--checkpoint-compress on|off`, default on).  Params are always
     /// stored raw; only the compressed-vs-raw momentum framing changes.
     pub checkpoint_compress: bool,
+    /// Lane-fault handling for multi-worker runs (`--fault-policy
+    /// fail|elastic`, default fail).  `elastic` retires dead or
+    /// timed-out lanes and re-issues their remaining shard slices
+    /// deterministically; `fail` aborts with a named error.
+    pub fault_policy: FaultPolicy,
+    /// Straggler detection timeout in milliseconds
+    /// (`--straggler-timeout-ms N`, default 0 = disabled).  A lane that
+    /// produces nothing for this long at a step barrier is treated as
+    /// faulty under the active [`FaultPolicy`].
+    pub straggler_timeout_ms: u64,
 }
 
 impl ExperimentConfig {
@@ -364,6 +414,8 @@ impl ExperimentConfig {
             checkpoint_pool: 0,
             checkpoint_verify: true,
             checkpoint_compress: true,
+            fault_policy: FaultPolicy::Fail,
+            straggler_timeout_ms: 0,
         }
     }
 
@@ -401,6 +453,12 @@ impl ExperimentConfig {
             "--checkpoint-pool {} is implausibly large (max 256; 0 = auto)",
             self.checkpoint_pool
         );
+        anyhow::ensure!(
+            self.straggler_timeout_ms <= 600_000,
+            "--straggler-timeout-ms {} is implausibly large (max 600000 = 10min; \
+             0 = disabled)",
+            self.straggler_timeout_ms
+        );
         Ok(())
     }
 
@@ -432,6 +490,12 @@ impl ExperimentConfig {
             }
             "checkpoint_compress" | "checkpoint-compress" => {
                 self.checkpoint_compress = parse_switch("--checkpoint-compress", value)?
+            }
+            "fault_policy" | "fault-policy" => {
+                self.fault_policy = FaultPolicy::parse(value)?
+            }
+            "straggler_timeout_ms" | "straggler-timeout-ms" => {
+                self.straggler_timeout_ms = value.parse()?
             }
             "max_fraction" => match &mut self.strategy {
                 StrategyConfig::Kakurenbo { max_fraction, .. } => *max_fraction = value.parse()?,
@@ -472,6 +536,8 @@ impl ExperimentConfig {
             ("checkpoint_pool", self.checkpoint_pool),
             ("checkpoint_verify", self.checkpoint_verify),
             ("checkpoint_compress", self.checkpoint_compress),
+            ("fault_policy", self.fault_policy.name()),
+            ("straggler_timeout_ms", self.straggler_timeout_ms as usize),
         ]
     }
 }
@@ -658,6 +724,43 @@ mod tests {
         let err = c.apply_override("checkpoint_verify", "maybe").unwrap_err();
         assert!(err.to_string().contains("--checkpoint-verify"), "{err}");
         assert!(c.apply_override("checkpoint_pool", "lots").is_err());
+    }
+
+    #[test]
+    fn fault_policy_parses_and_rejects() {
+        assert_eq!(FaultPolicy::parse("fail").unwrap(), FaultPolicy::Fail);
+        assert_eq!(FaultPolicy::parse("elastic").unwrap(), FaultPolicy::Elastic);
+        let err = FaultPolicy::parse("heroic").unwrap_err().to_string();
+        assert!(err.contains("--fault-policy"), "{err}");
+        assert_eq!(FaultPolicy::default(), FaultPolicy::Fail);
+        assert_eq!(FaultPolicy::Elastic.name(), "elastic");
+    }
+
+    #[test]
+    fn fault_overrides_apply_both_spellings() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        assert_eq!(c.fault_policy, FaultPolicy::Fail, "default must stay fail");
+        assert_eq!(c.straggler_timeout_ms, 0, "straggler timeout defaults off");
+        c.apply_override("fault_policy", "elastic").unwrap();
+        assert_eq!(c.fault_policy, FaultPolicy::Elastic);
+        c.apply_override("fault-policy", "fail").unwrap();
+        assert_eq!(c.fault_policy, FaultPolicy::Fail);
+        c.apply_override("straggler_timeout_ms", "2500").unwrap();
+        assert_eq!(c.straggler_timeout_ms, 2500);
+        c.apply_override("straggler-timeout-ms", "0").unwrap();
+        assert_eq!(c.straggler_timeout_ms, 0);
+        assert!(c.apply_override("fault_policy", "maybe").is_err());
+        assert!(c.apply_override("straggler_timeout_ms", "soon").is_err());
+    }
+
+    #[test]
+    fn straggler_timeout_bound_validated() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        c.straggler_timeout_ms = 600_000;
+        assert!(c.validate().is_ok());
+        c.straggler_timeout_ms = 600_001;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--straggler-timeout-ms"), "{err}");
     }
 
     #[test]

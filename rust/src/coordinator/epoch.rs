@@ -279,6 +279,9 @@ impl EpochPipeline {
                 rec.time_barrier += pout.workers.iter().map(|w| w.wait_s).sum::<f64>();
                 rec.dp_syncs = pout.sync_steps;
                 rec.time_average = pout.time_average;
+                rec.lanes_dropped = pout.dropped_lanes;
+                rec.lanes_rejoined = pout.rejoined_lanes;
+                rec.time_reissue = pout.time_reissue;
                 rec.modeled_sync = t.cost.sync_overhead(pout.sync_steps, t.cfg.workers);
                 outcome
             }

@@ -33,7 +33,7 @@
 //! (`tests/service_lane_determinism.rs`); snapshot tiers and the lane
 //! lifecycle are documented in docs/snapshots.md.
 
-use crate::config::{ExperimentConfig, StrategyConfig};
+use crate::config::{ExperimentConfig, FaultPolicy, StrategyConfig};
 use crate::coordinator::costmodel::CostModel;
 use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
@@ -128,7 +128,11 @@ impl Trainer {
             _ => 1.0,
         };
         let engine = Engine::new(&data.train, exec.meta.batch);
-        let pool = WorkerPool::new(&data.train, exec.meta.batch);
+        let mut pool = WorkerPool::new(&data.train, exec.meta.batch);
+        pool.set_fault_policy(
+            cfg.fault_policy == FaultPolicy::Elastic,
+            cfg.straggler_timeout_ms,
+        );
         let eval_idx: Vec<u32> = (0..data.val.n as u32).collect();
         Ok(Trainer {
             rng: Rng::new(cfg.seed ^ 0x7472_6169),
@@ -286,6 +290,24 @@ impl Trainer {
                     crate::info!("[service] epoch {epoch:>3}  acc {acc:.4}  val loss {loss:.4}");
                 }
                 ServiceEvent::Checkpoint { stats, .. } => rec.fold_ckpt_stats(&stats),
+                ServiceEvent::Error { epoch, lane, message, .. } => {
+                    // a failed lane job is a lane fault: the configured
+                    // fault policy decides between a named abort and
+                    // count-and-continue (the lane itself survived and
+                    // keeps serving its queue either way)
+                    anyhow::ensure!(
+                        self.cfg.fault_policy == FaultPolicy::Elastic,
+                        "service {} lane failed at epoch {epoch}: {message} \
+                         (--fault-policy fail aborts; elastic counts the \
+                         failure and continues)",
+                        lane.name()
+                    );
+                    rec.service_errors += 1;
+                    crate::info!(
+                        "[service] epoch {epoch:>3}  {} lane error: {message}",
+                        lane.name()
+                    );
+                }
             }
         }
         Ok(())

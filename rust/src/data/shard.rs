@@ -4,8 +4,10 @@
 //! workers, Appendix B.1).  Our runtime shards the epoch order the same way
 //! the PyTorch DistributedSampler does — contiguous equal chunks after the
 //! global shuffle, padded by wrap-around so every worker takes the same
-//! number of steps (the allreduce is bulk-synchronous: ragged shards would
-//! deadlock a real job; see docs/worker-model.md).
+//! number of steps (a real allreduce is bulk-synchronous; the engine's
+//! pool tolerates ragged shards by retiring exhausted lanes from the
+//! barrier, but padding keeps every lane productive — see
+//! docs/worker-model.md).
 //!
 //! Two granularities of padding exist:
 //!
@@ -139,7 +141,9 @@ pub fn global_step_order(shards: &[Shard]) -> Vec<u32> {
 /// For batch-aligned shards this flat stream, chunked by `batch`, performs
 /// exactly the device calls of the worker pool's bulk-synchronous
 /// schedule, in its deterministic `(step, worker)` reduction order — the
-/// serial reference the pool is tested against.
+/// serial reference the pool is tested against.  Ragged shards are
+/// handled the way the pool handles them: a shard contributes nothing at
+/// steps past its own length.
 ///
 /// ```
 /// use kakurenbo::data::shard::{global_batch_order, shard_order_aligned};
@@ -152,7 +156,7 @@ pub fn global_batch_order(shards: &[Shard], batch: usize) -> Vec<u32> {
     if shards.is_empty() {
         return vec![];
     }
-    let steps = shards[0].steps(batch);
+    let steps = shards.iter().map(|s| s.steps(batch)).max().unwrap_or(0);
     let mut out = Vec::with_capacity(shards.iter().map(Shard::len).sum());
     for s in 0..steps {
         for shard in shards {
@@ -160,6 +164,108 @@ pub fn global_batch_order(shards: &[Shard], batch: usize) -> Vec<u32> {
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Elastic re-sharding (fault tolerance)
+// ---------------------------------------------------------------------------
+
+/// One slice of a dead lane's unfinished shard, re-issued to a surviving
+/// recovery lane under `--fault-policy elastic`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReissuedSlice {
+    /// The dead lane's original step index this slice belongs to — the
+    /// recovered run still consumes it at exactly this barrier position,
+    /// which is what keeps the `(step, worker)` fold order (and therefore
+    /// the results, bit for bit) identical to an undisturbed run.
+    pub step: usize,
+    /// Recovery lane (0-based among the re-issue lanes) that gathers this
+    /// slice.
+    pub lane: usize,
+    /// The sample indices of the slice (the dead shard's `step_batch`).
+    pub indices: Vec<u32>,
+}
+
+/// Deterministically re-issue the tail of a dead worker's shard — every
+/// step from `from_step` onward — across `survivors` recovery lanes,
+/// round-robin in step order.
+///
+/// The assignment is a pure function of `(shard, from_step, batch,
+/// survivors)`: no clock, no detection-timing dependence.  Each original
+/// step appears exactly once, so the union of the re-issued slices covers
+/// the dead lane's remaining batch indices exactly once, in the original
+/// step order — the elastic-recovery determinism contract
+/// (docs/worker-model.md, "Fault tolerance").
+///
+/// ```
+/// use kakurenbo::data::shard::{reissue_tail, Shard};
+/// let dead = Shard { worker: 1, indices: (0..12).collect() };
+/// // lane died before its step 1; 2 survivors pick up steps 1..3
+/// let slices = reissue_tail(&dead, 1, 4, 2);
+/// assert_eq!(slices.len(), 2);
+/// assert_eq!((slices[0].step, slices[0].lane), (1, 0));
+/// assert_eq!((slices[1].step, slices[1].lane), (2, 1));
+/// assert_eq!(slices[0].indices, vec![4, 5, 6, 7]);
+/// assert_eq!(slices[1].indices, vec![8, 9, 10, 11]);
+/// ```
+pub fn reissue_tail(
+    shard: &Shard,
+    from_step: usize,
+    batch: usize,
+    survivors: usize,
+) -> Vec<ReissuedSlice> {
+    let k = survivors.max(1);
+    let mut out = Vec::new();
+    for t in from_step..shard.steps(batch) {
+        out.push(ReissuedSlice {
+            step: t,
+            lane: (t - from_step) % k,
+            indices: shard.step_batch(t, batch).to_vec(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod reissue_tests {
+    use super::*;
+
+    #[test]
+    fn covers_remaining_indices_exactly_once_in_step_order() {
+        let shard = Shard { worker: 2, indices: (100..140).collect() };
+        for from in 0..shard.steps(8) {
+            for k in 1..4usize {
+                let slices = reissue_tail(&shard, from, 8, k);
+                let flat: Vec<u32> =
+                    slices.iter().flat_map(|s| s.indices.clone()).collect();
+                assert_eq!(flat, shard.indices[from * 8..], "from={from} k={k}");
+                // steps are the original ones, consecutive from `from`
+                for (i, s) in slices.iter().enumerate() {
+                    assert_eq!(s.step, from + i);
+                    assert_eq!(s.lane, i % k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tail_and_past_end() {
+        let shard = Shard { worker: 0, indices: (0..10).collect() };
+        let slices = reissue_tail(&shard, 2, 4, 2);
+        // steps(4) = 3: only the ragged step 2 remains
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0].indices, vec![8, 9]);
+        assert!(reissue_tail(&shard, 3, 4, 2).is_empty());
+        assert!(reissue_tail(&shard, 99, 4, 2).is_empty());
+    }
+
+    #[test]
+    fn zero_survivors_clamps_to_one_lane() {
+        let shard = Shard { worker: 0, indices: (0..8).collect() };
+        let slices = reissue_tail(&shard, 0, 4, 0);
+        assert!(slices.iter().all(|s| s.lane == 0));
+        assert_eq!(slices.len(), 2);
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +359,23 @@ mod tests {
         assert_eq!(s1.step_batch(0, 4), &[12, 13, 14, 15]);
         assert_eq!(s1.step_batch(2, 4), &[0, 1, 2, 3]);
         assert!(s1.step_batch(3, 4).is_empty());
+    }
+
+    #[test]
+    fn batch_order_handles_ragged_shards() {
+        // worker 0 takes 2 steps, worker 1 only 1: the short shard simply
+        // stops contributing, matching the pool's ragged-tolerant barrier
+        let shards = vec![
+            Shard { worker: 0, indices: vec![0, 1, 2, 3] },
+            Shard { worker: 1, indices: vec![4, 5] },
+        ];
+        assert_eq!(global_batch_order(&shards, 2), vec![0, 1, 4, 5, 2, 3]);
+        // order is driven by the longest shard even when it is not first
+        let shards = vec![
+            Shard { worker: 0, indices: vec![0, 1] },
+            Shard { worker: 1, indices: vec![4, 5, 6, 7] },
+        ];
+        assert_eq!(global_batch_order(&shards, 2), vec![0, 1, 4, 5, 6, 7]);
     }
 
     #[test]

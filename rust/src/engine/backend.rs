@@ -166,6 +166,56 @@ pub trait ReplicaBackend: StepBackend + StateExchange {}
 
 impl<T: StepBackend + StateExchange> ReplicaBackend for T {}
 
+// A boxed replica is itself a backend (delegating every method, including
+// the defaulted tier fast paths, to the inner implementation) so wrappers
+// like `engine::chaos::ChaosBackend` can interpose on replicas produced by
+// an arbitrary `ReplicaBuilder` without knowing the concrete type.
+impl StepBackend for Box<dyn ReplicaBackend> {
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        (**self).train_step(x, y, sw, lr)
+    }
+
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        (**self).fwd_stats(x, y)
+    }
+}
+
+impl StateExchange for Box<dyn ReplicaBackend> {
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        (**self).export_state()
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
+        (**self).import_state(state)
+    }
+
+    fn export_params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        (**self).export_params()
+    }
+
+    fn export_momentum(&self) -> anyhow::Result<Option<Vec<Vec<f32>>>> {
+        (**self).export_momentum()
+    }
+
+    fn import_params(&mut self, params: &[Vec<f32>]) -> anyhow::Result<()> {
+        (**self).import_params(params)
+    }
+
+    fn export_snapshot(&self, tier: SnapshotTier) -> anyhow::Result<Snapshot> {
+        (**self).export_snapshot(tier)
+    }
+
+    fn import_snapshot(&mut self, snap: &Snapshot) -> anyhow::Result<()> {
+        (**self).import_snapshot(snap)
+    }
+}
+
 /// A `Send` constructor for a worker-local replica.
 ///
 /// Invoked once, on the lane thread that will own the replica; the

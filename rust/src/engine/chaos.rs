@@ -1,0 +1,370 @@
+//! Deterministic fault injection for the worker pool — the chaos harness.
+//!
+//! At fleet scale, worker lanes die mid-epoch, stragglers stall the
+//! bulk-synchronous barrier, and state exports fail.  The fault-tolerance
+//! contract (docs/worker-model.md, "Fault tolerance") is only provable if
+//! those failures can be produced *on demand and reproducibly*; this
+//! module is that injection surface.
+//!
+//! A [`ChaosPlan`] is a scripted (or seeded, via [`ChaosPlan::randomized`])
+//! list of [`ChaosEvent`]s — *kill lane `w` at step `s`*, *delay lane `w`
+//! by `d` ms at step `s`*, *fail lane `w`'s next state export after step
+//! `s`*.  Two consumers execute a plan:
+//!
+//! * **The pool's gather lanes**
+//!   ([`inject_chaos`](crate::engine::WorkerPool::inject_chaos)): a
+//!   killed gather lane stops delivering batches (its
+//!   channel disconnects, exactly like a crashed prefetch thread), a
+//!   delayed lane sleeps before filling — the host-side failure modes of
+//!   the serial-equivalent schedule.
+//! * **[`ChaosBackend`]**, a [`StepBackend`]/[`StateExchange`]/
+//!   [`DataParallel`] wrapper threaded through the [`ReplicaBuilder`]
+//!   contract: replicas built from a chaos-wrapped primary inherit the
+//!   plan and their worker rank (assigned in builder-creation order, which
+//!   is the pool's worker order), so a device-side kill, stall, or export
+//!   failure fires on exactly the scripted `(worker, step)` — the replica
+//!   failure modes of the `--dp average` schedule.
+//!
+//! Everything is deterministic: plans are plain data, worker ranks are
+//! assigned in a fixed order, and step counters are lane-local — the same
+//! plan against the same run produces the same failure at the same
+//! barrier, which is what lets `tests/chaos_harness.rs` assert that
+//! elastic recovery is *bitwise identical* to the undisturbed run.
+//!
+//! This is test infrastructure: the wrapper routes every export through
+//! the flat [`StateExchange::export_state`] path (so the injected export
+//! failure cannot be bypassed by a tier fast path) and is not meant to
+//! wrap the production executor in real runs.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::backend::{DataParallel, ReplicaBuilder, StateExchange, StepBackend};
+use crate::runtime::BatchStats;
+use crate::util::rng::Rng;
+
+/// What a [`ChaosEvent`] does to its target lane when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// The lane dies: the step fails with a named `chaos:` error and the
+    /// lane thread exits, exactly like a crashed worker.
+    Kill,
+    /// The lane stalls for this many milliseconds before executing the
+    /// step — a straggler.
+    Delay(u64),
+    /// The step itself succeeds but the lane's next state export fails —
+    /// a lost allreduce contribution.
+    FailExport,
+}
+
+/// One scripted injection: `action` fires when lane `worker` reaches its
+/// lane-local step `step`.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosEvent {
+    /// Target worker rank (gather lane or replica lane).
+    pub worker: usize,
+    /// Lane-local step index at which the action fires.
+    pub step: usize,
+    /// What happens.
+    pub action: ChaosAction,
+}
+
+/// A deterministic, scriptable fault-injection plan: an ordered list of
+/// [`ChaosEvent`]s.  When several events target the same `(worker, step)`,
+/// the first one wins.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        ChaosPlan::default()
+    }
+
+    /// Script a lane kill: worker `worker` dies at step `step`.
+    pub fn kill(mut self, worker: usize, step: usize) -> Self {
+        self.events.push(ChaosEvent { worker, step, action: ChaosAction::Kill });
+        self
+    }
+
+    /// Script a straggler: worker `worker` stalls `ms` milliseconds before
+    /// executing step `step`.
+    pub fn delay(mut self, worker: usize, step: usize, ms: u64) -> Self {
+        self.events.push(ChaosEvent { worker, step, action: ChaosAction::Delay(ms) });
+        self
+    }
+
+    /// Script an export failure: worker `worker`'s state export after step
+    /// `step` fails (device-side lanes only — gather lanes export nothing).
+    pub fn fail_export(mut self, worker: usize, step: usize) -> Self {
+        self.events.push(ChaosEvent { worker, step, action: ChaosAction::FailExport });
+        self
+    }
+
+    /// A seeded random plan over `workers` lanes and `steps` steps: one
+    /// kill, plus (when more than one lane exists) sometimes a short delay
+    /// on a *different* lane.  Same seed, same plan — the CI chaos matrix
+    /// sweeps seeds, not timings.
+    pub fn randomized(seed: u64, workers: usize, steps: usize) -> Self {
+        let mut plan = ChaosPlan::default();
+        if workers == 0 || steps == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed);
+        let kw = rng.below(workers);
+        plan = plan.kill(kw, rng.below(steps));
+        if workers > 1 && rng.chance(0.5) {
+            let mut dw = rng.below(workers);
+            if dw == kw {
+                dw = (dw + 1) % workers;
+            }
+            plan = plan.delay(dw, rng.below(steps), 1 + rng.below(5) as u64);
+        }
+        plan
+    }
+
+    /// The scripted events, in script order.
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The action (if any) that fires when `worker` reaches step `step`.
+    pub fn action(&self, worker: usize, step: usize) -> Option<ChaosAction> {
+        self.events
+            .iter()
+            .find(|e| e.worker == worker && e.step == step)
+            .map(|e| e.action)
+    }
+}
+
+/// A backend wrapper that executes a [`ChaosPlan`] on the device side.
+///
+/// Wrap the primary with [`ChaosBackend::primary`] and hand it to the pool
+/// as usual: the primary itself is never targeted (its rank is
+/// `usize::MAX`), but every replica built through
+/// [`DataParallel::replica_builder`] inherits the plan plus the next
+/// worker rank (0, 1, … in builder-creation order — the pool builds lane
+/// builders sequentially in worker order, so ranks line up with
+/// [`crate::data::shard::Shard::worker`]).  Each replica counts its own
+/// steps; when its `(worker, step)` matches a scripted event the action
+/// fires: [`ChaosAction::Kill`] fails the step with a named error,
+/// [`ChaosAction::Delay`] sleeps first, [`ChaosAction::FailExport`] arms
+/// a one-shot failure of the next [`StateExchange::export_state`] call.
+///
+/// Create a fresh wrapper per run: worker ranks are handed out
+/// monotonically from the wrapped primary, and replica step counters live
+/// for the replica's (persistent-lane) lifetime.
+pub struct ChaosBackend<B> {
+    inner: B,
+    plan: Arc<ChaosPlan>,
+    worker: usize,
+    step: usize,
+    fail_export: Cell<bool>,
+    next_worker: Arc<AtomicUsize>,
+}
+
+impl<B> ChaosBackend<B> {
+    /// Wrap the primary backend; replicas built from it inherit `plan`.
+    pub fn primary(inner: B, plan: ChaosPlan) -> Self {
+        ChaosBackend {
+            inner,
+            plan: Arc::new(plan),
+            worker: usize::MAX,
+            step: 0,
+            fail_export: Cell::new(false),
+            next_worker: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// The wrapped backend, mutably.
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    /// Consult the plan for this lane's current step (then advance it).
+    fn inject(&mut self) -> anyhow::Result<()> {
+        let s = self.step;
+        self.step += 1;
+        match self.plan.action(self.worker, s) {
+            Some(ChaosAction::Kill) => {
+                anyhow::bail!("chaos: worker {} killed at step {s}", self.worker)
+            }
+            Some(ChaosAction::Delay(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+            Some(ChaosAction::FailExport) => self.fail_export.set(true),
+            None => {}
+        }
+        Ok(())
+    }
+}
+
+impl<B: StepBackend> StepBackend for ChaosBackend<B> {
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        self.inject()?;
+        self.inner.train_step(x, y, sw, lr)
+    }
+
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        self.inject()?;
+        self.inner.fwd_stats(x, y)
+    }
+}
+
+impl<B: StateExchange> StateExchange for ChaosBackend<B> {
+    // Only the two required methods are implemented, so every tiered
+    // export/import default routes through this pair and the injected
+    // export failure cannot be bypassed by a fast path.
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        if self.fail_export.take() {
+            anyhow::bail!("chaos: worker {} state export failed", self.worker);
+        }
+        self.inner.export_state()
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.inner.import_state(state)
+    }
+}
+
+impl<B: DataParallel> DataParallel for ChaosBackend<B> {
+    fn replica_builder(&self) -> anyhow::Result<ReplicaBuilder> {
+        let worker = self.next_worker.fetch_add(1, Ordering::SeqCst);
+        let plan = Arc::clone(&self.plan);
+        let build = self.inner.replica_builder()?;
+        Ok(Box::new(move || {
+            let replica = build()?;
+            Ok(Box::new(ChaosBackend {
+                inner: replica,
+                plan,
+                worker,
+                step: 0,
+                fail_export: Cell::new(false),
+                next_worker: Arc::new(AtomicUsize::new(0)),
+            }) as Box<dyn super::backend::ReplicaBackend>)
+        }))
+    }
+
+    fn replica_cache_key(&self) -> String {
+        // never share lanes with the unwrapped backend: replicas must
+        // carry the plan (and fresh chaos runs should not inherit stale
+        // lane step counters from cached lanes)
+        format!("chaos:{}", self.inner.replica_cache_key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::testbed::MockBackend;
+
+    #[test]
+    fn plan_lookup_is_positional_and_first_wins() {
+        let plan = ChaosPlan::new().kill(1, 3).delay(0, 2, 7).kill(1, 3);
+        assert_eq!(plan.action(1, 3), Some(ChaosAction::Kill));
+        assert_eq!(plan.action(0, 2), Some(ChaosAction::Delay(7)));
+        assert_eq!(plan.action(1, 2), None);
+        assert_eq!(plan.action(2, 3), None);
+        assert_eq!(plan.events().len(), 3);
+        assert!(ChaosPlan::new().is_empty());
+    }
+
+    #[test]
+    fn randomized_plans_are_seed_deterministic_and_in_bounds() {
+        for seed in 0..32u64 {
+            let a = ChaosPlan::randomized(seed, 4, 6);
+            let b = ChaosPlan::randomized(seed, 4, 6);
+            assert_eq!(a.events().len(), b.events().len(), "seed {seed}");
+            for (x, y) in a.events().iter().zip(b.events()) {
+                assert_eq!((x.worker, x.step, x.action), (y.worker, y.step, y.action));
+                assert!(x.worker < 4 && x.step < 6, "seed {seed}");
+            }
+            assert!(a.events().iter().any(|e| e.action == ChaosAction::Kill));
+        }
+        assert!(ChaosPlan::randomized(9, 0, 5).is_empty());
+        assert!(ChaosPlan::randomized(9, 3, 0).is_empty());
+    }
+
+    #[test]
+    fn kill_fires_at_the_scripted_step_only() {
+        let mut be = ChaosBackend {
+            inner: MockBackend::new(),
+            plan: Arc::new(ChaosPlan::new().kill(2, 2)),
+            worker: 2,
+            step: 0,
+            fail_export: Cell::new(false),
+            next_worker: Arc::new(AtomicUsize::new(0)),
+        };
+        assert!(be.fwd_stats(&[0.5], &[1]).is_ok());
+        assert!(be.fwd_stats(&[0.5], &[1]).is_ok());
+        let err = be.fwd_stats(&[0.5], &[1]).unwrap_err().to_string();
+        assert!(err.contains("chaos") && err.contains("killed"), "{err}");
+        // the primary (rank usize::MAX) is never targeted
+        let mut primary = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(0, 0));
+        assert!(primary.fwd_stats(&[0.5], &[1]).is_ok());
+    }
+
+    #[test]
+    fn fail_export_is_one_shot_and_step_succeeds() {
+        let mut be = ChaosBackend {
+            inner: MockBackend::new(),
+            plan: Arc::new(ChaosPlan::new().fail_export(0, 1)),
+            worker: 0,
+            step: 0,
+            fail_export: Cell::new(false),
+            next_worker: Arc::new(AtomicUsize::new(0)),
+        };
+        assert!(be.train_step(&[0.5], &[1], &[1.0], 0.01).is_ok());
+        assert!(be.export_state().is_ok()); // step 0: nothing armed
+        assert!(be.train_step(&[0.5], &[1], &[1.0], 0.01).is_ok()); // arms it
+        let err = be.export_state().unwrap_err().to_string();
+        assert!(err.contains("export failed"), "{err}");
+        assert!(be.export_state().is_ok()); // one-shot
+    }
+
+    #[test]
+    fn replicas_inherit_the_plan_with_sequential_ranks() {
+        let primary = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(1, 0));
+        let b0 = primary.replica_builder().unwrap();
+        let b1 = primary.replica_builder().unwrap();
+        let mut r0 = b0().unwrap();
+        let mut r1 = b1().unwrap();
+        assert!(r0.fwd_stats(&[0.5], &[1]).is_ok()); // rank 0: untouched
+        assert!(r1.fwd_stats(&[0.5], &[1]).is_err()); // rank 1: killed at step 0
+        assert!(primary.replica_cache_key().starts_with("chaos:"));
+    }
+
+    #[test]
+    fn untargeted_wrapper_is_a_pure_delegate() {
+        let mut plain = MockBackend::new();
+        let mut wrapped = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(7, 0));
+        for _ in 0..3 {
+            plain.train_step(&[0.25, 0.5], &[1, 2], &[1.0, 1.0], 0.05).unwrap();
+            wrapped.train_step(&[0.25, 0.5], &[1, 2], &[1.0, 1.0], 0.05).unwrap();
+        }
+        assert_eq!(plain.param.to_bits(), wrapped.inner().param.to_bits());
+        assert_eq!(plain.trace, wrapped.inner().trace);
+        assert_eq!(
+            plain.export_state().unwrap(),
+            wrapped.export_state().unwrap()
+        );
+    }
+}

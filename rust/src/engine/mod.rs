@@ -66,6 +66,7 @@
 //! enforced by `tests/service_lane_determinism.rs`.
 
 pub mod backend;
+pub mod chaos;
 pub mod modes;
 pub mod pool;
 pub mod service;
@@ -73,12 +74,13 @@ pub mod snapshot;
 pub mod testbed;
 
 pub use backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
+pub use chaos::{ChaosAction, ChaosBackend, ChaosEvent, ChaosPlan};
 pub use modes::{
     execute_plan, execute_sharded_average, execute_sharded_plain, EpochOutcome, EvalSink,
     RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
-pub use service::{CheckpointWriter, ServiceEvent, ServiceLanes};
+pub use service::{CheckpointWriter, ServiceEvent, ServiceLaneKind, ServiceLanes};
 pub use snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 
 use crate::data::batch::{BatchAssembler, DoubleBuffer};

@@ -5,9 +5,9 @@
 //!
 //! The coordinator shards each epoch's order with
 //! [`crate::data::shard::shard_order_aligned`], so every worker owns the
-//! same number of full device batches (ragged shards are rejected: the
-//! step barrier is bulk-synchronous and a short lane would deadlock a real
-//! allreduce — see docs/worker-model.md).  Each worker owns its own
+//! same number of full device batches (ragged shards are tolerated: a
+//! lane whose shard exhausts early retires from the step barrier instead
+//! of blocking it — see docs/worker-model.md).  Each worker owns its own
 //! double-buffered pipelined driver over its [`Shard`]: a gather lane
 //! (one prefetch thread + two parked [`BatchAssembler`]s handed over by
 //! value through channels, exactly the engine's overlap scheme) that
@@ -31,6 +31,26 @@
 //!   (parameters never change); train passes follow global-batch SGD
 //!   semantics and are *not* serial-equivalent (documented in
 //!   docs/worker-model.md).
+//!
+//! # Fault tolerance
+//!
+//! Under the elastic fault policy ([`WorkerPool::set_fault_policy`], the
+//! trainer's `--fault-policy elastic`) a lane failure no longer aborts
+//! the run.  A gather lane that dies (its channel disconnects) or stalls
+//! past the straggler timeout has the unfinished tail of its shard
+//! deterministically re-issued to fresh recovery lanes
+//! ([`crate::data::shard::reissue_tail`]); in the data-parallel schedule
+//! a dead replica lane's remaining steps execute on the primary, restored
+//! to the last synchronized snapshot.  Either way every batch still
+//! executes at its original `(step, worker)` barrier position, so the
+//! recovered run's results are **bitwise identical** to an undisturbed
+//! run over the same logical epoch order — detection timing affects
+//! wall-clock only.  Under the default `fail` policy a fault aborts with
+//! a named error instead of hanging the barrier.  Failures are injected
+//! deterministically in tests via [`crate::engine::chaos::ChaosPlan`]
+//! ([`WorkerPool::inject_chaos`] targets gather lanes;
+//! [`crate::engine::chaos::ChaosBackend`] targets replicas);
+//! `tests/chaos_harness.rs` drives the kill/delay/rejoin matrices.
 //!
 //! # Replica lanes and the `Send` boundary
 //!
@@ -58,14 +78,18 @@
 //! sampler — the contract is "threads are invisible", not "W is
 //! invisible".
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
+};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::backend::{accumulate_state, finish_average, DataParallel, ReplicaBuilder, StateExchange};
+use super::chaos::{ChaosAction, ChaosPlan};
 use super::snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 use super::{dispatch, StepBackend, StepCtx, StepMode, StepSink};
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
-use crate::data::shard::Shard;
+use crate::data::shard::{reissue_tail, Shard};
 use crate::data::Dataset;
 use crate::runtime::BatchStats;
 use crate::util::timer::Timer;
@@ -103,7 +127,20 @@ pub struct PoolOutcome {
     /// Seconds spent finalizing and broadcasting the averaged state
     /// across the syncs above (the host-side allreduce cost).
     pub time_average: f64,
-    /// Per-worker accounting, indexed by worker rank.
+    /// Lanes retired mid-run after a death or straggler timeout (elastic
+    /// fault policy only — under the `fail` policy a fault aborts the run
+    /// instead of counting here).
+    pub dropped_lanes: usize,
+    /// Recovery lanes brought up to adopt dropped work: fresh re-issue
+    /// gather lanes in the serial-equivalent schedule, the primary
+    /// standing in for a dead replica in the data-parallel schedule.
+    pub rejoined_lanes: usize,
+    /// Seconds spent standing up re-issue lanes after fault detection
+    /// (the elastic-recovery latency).
+    pub time_reissue: f64,
+    /// Per-worker accounting, indexed by worker rank.  A dropped worker's
+    /// rows keep accruing: recovered steps are attributed to the *logical*
+    /// worker whose shard they came from.
     pub workers: Vec<WorkerReport>,
 }
 
@@ -175,6 +212,13 @@ impl ReplicaLane {
         self.reply_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("replica lane died"))
+    }
+
+    /// Like [`ReplicaLane::recv`], but gives up after `timeout` — the
+    /// straggler-detection path.  The caller decides whether a timeout is
+    /// fatal (`fail` policy) or retires the lane (`elastic`).
+    fn recv_timeout(&self, timeout: Duration) -> Result<LaneReply, RecvTimeoutError> {
+        self.reply_rx.recv_timeout(timeout)
     }
 }
 
@@ -258,6 +302,18 @@ pub struct WorkerPool {
     /// ([`DataParallel::replica_cache_key`]); a different key respawns
     /// them, so one backend's replicas never receive another's state.
     lanes_key: String,
+    /// Elastic fault policy ([`WorkerPool::set_fault_policy`]): survive a
+    /// lane failure by re-issuing the dead lane's remaining steps.
+    /// `false` (the default, `--fault-policy fail`) aborts with a named
+    /// error instead.
+    elastic: bool,
+    /// Straggler detection: a lane that takes longer than this to deliver
+    /// its barrier contribution counts as failed.  `None` (the default)
+    /// waits forever.
+    straggler_timeout: Option<Duration>,
+    /// One-shot scripted fault injection for the next run's gather lanes
+    /// ([`WorkerPool::inject_chaos`]; test harness only).
+    chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl WorkerPool {
@@ -271,6 +327,9 @@ impl WorkerPool {
             scratch: BatchAssembler::new(data, batch),
             lanes: Vec::new(),
             lanes_key: String::new(),
+            elastic: false,
+            straggler_timeout: None,
+            chaos: None,
         }
     }
 
@@ -279,43 +338,58 @@ impl WorkerPool {
         self.batch
     }
 
-    /// Validate shards, size the lane buffer pools, and compute the step
-    /// count.  Returns `(steps, outcome skeleton)`.
+    /// Configure the fault policy (docs/worker-model.md, "Fault
+    /// tolerance").  With `elastic`, a dead or timed-out lane's remaining
+    /// steps are deterministically re-issued and the run's results stay
+    /// bitwise identical to an undisturbed run; otherwise a fault aborts
+    /// with a named error.  `straggler_timeout_ms = 0` disables straggler
+    /// detection (a stalled lane is waited on forever).
+    pub fn set_fault_policy(&mut self, elastic: bool, straggler_timeout_ms: u64) {
+        self.elastic = elastic;
+        self.straggler_timeout = match straggler_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+    }
+
+    /// Arm a scripted [`ChaosPlan`] for the **next** run only (consumed
+    /// at run start): scripted kills and delays execute on the matching
+    /// gather lanes of either schedule.  Replica-side injection goes
+    /// through [`crate::engine::chaos::ChaosBackend`] instead.  Test
+    /// harness surface — see `tests/chaos_harness.rs`.
+    pub fn inject_chaos(&mut self, plan: ChaosPlan) {
+        self.chaos = Some(Arc::new(plan));
+    }
+
+    /// Size the lane buffer pools and compute the per-lane and global
+    /// step counts.  Returns `(steps, per-lane steps, outcome skeleton)`.
+    /// Ragged shards are accepted: a short lane simply retires from the
+    /// barrier once its shard is exhausted.
     fn prepare(
         &mut self,
         data: &Dataset,
         shards: &[Shard],
-    ) -> anyhow::Result<(usize, PoolOutcome)> {
+    ) -> anyhow::Result<(usize, Vec<usize>, PoolOutcome)> {
         anyhow::ensure!(!shards.is_empty(), "worker pool needs at least one shard");
-        let len = shards[0].len();
-        anyhow::ensure!(
-            shards.iter().all(|s| s.len() == len),
-            "ragged shards: every worker must take the same number of steps \
-             (the step barrier is bulk-synchronous; see docs/worker-model.md)"
-        );
         while self.buffers.len() < shards.len() {
             self.buffers.push(DoubleBuffer::new(data, self.batch));
         }
         if !self.scratch.matches(data) {
             self.scratch = BatchAssembler::new(data, self.batch);
         }
-        let steps = len.div_ceil(self.batch);
+        let lane_steps: Vec<usize> = shards.iter().map(|s| s.steps(self.batch)).collect();
+        let steps = lane_steps.iter().copied().max().unwrap_or(0);
         let workers = (0..shards.len())
             .map(|w| WorkerReport { worker: w, ..Default::default() })
             .collect();
-        Ok((steps, PoolOutcome { steps, workers, ..Default::default() }))
+        Ok((steps, lane_steps, PoolOutcome { steps, workers, ..Default::default() }))
     }
 
     /// Take the initial assemblers for each lane (two per worker, fewer
-    /// when the run is shorter).
-    fn take_lanes(
-        &mut self,
-        data: &Dataset,
-        workers: usize,
-        steps: usize,
-    ) -> Vec<Vec<BatchAssembler>> {
-        let mut lanes = Vec::with_capacity(workers);
-        for w in 0..workers {
+    /// when that lane's shard is shorter).
+    fn take_lanes(&mut self, data: &Dataset, lane_steps: &[usize]) -> Vec<Vec<BatchAssembler>> {
+        let mut lanes = Vec::with_capacity(lane_steps.len());
+        for (w, &steps) in lane_steps.iter().enumerate() {
             let mut lane = Vec::with_capacity(steps.min(2));
             for _ in 0..steps.min(2) {
                 lane.push(self.buffers[w].take(data));
@@ -371,7 +445,9 @@ impl WorkerPool {
     /// gather lanes fill batches concurrently, while every device step
     /// runs on `backend` in fixed `(step, worker)` order.  Bitwise
     /// identical to driving the engine over
-    /// [`crate::data::shard::global_batch_order`] on a single stream.
+    /// [`crate::data::shard::global_batch_order`] on a single stream —
+    /// including runs recovered under the elastic fault policy, because a
+    /// dead gather lane's batches are re-gathered, not re-ordered.
     pub fn run_serial_equivalent(
         &mut self,
         backend: &mut dyn StepBackend,
@@ -380,37 +456,104 @@ impl WorkerPool {
         mode: StepMode,
         sink: &mut dyn StepSink,
     ) -> anyhow::Result<PoolOutcome> {
-        let (steps, mut outcome) = self.prepare(data, shards)?;
+        let (steps, lane_steps, mut outcome) = self.prepare(data, shards)?;
         let w_count = shards.len();
         let bs = self.batch;
+        let elastic = self.elastic;
+        let straggler = self.straggler_timeout;
+        let chaos = self.chaos.take();
         if steps == 0 {
             let mut ctx = StepCtx { backend, scratch: &mut self.scratch, data };
             sink.finish(&mut ctx)?;
             return Ok(outcome);
         }
-        let lanes = self.take_lanes(data, w_count, steps);
+        let lanes = self.take_lanes(data, &lane_steps);
         let scratch = &mut self.scratch;
 
         let parked = std::thread::scope(
             |scope| -> anyhow::Result<Vec<(usize, BatchAssembler)>> {
-                let mut done_rx = Vec::with_capacity(w_count);
-                let mut back_tx = Vec::with_capacity(w_count);
-                for (shard, initial) in shards.iter().zip(lanes) {
+                let mut done_rx: Vec<Option<Receiver<BatchAssembler>>> =
+                    Vec::with_capacity(w_count);
+                let mut back_tx: Vec<Option<Sender<BatchAssembler>>> =
+                    Vec::with_capacity(w_count);
+                for (w, (shard, initial)) in shards.iter().zip(lanes).enumerate() {
                     let (d_tx, d_rx) = sync_channel::<BatchAssembler>(1);
                     let (b_tx, b_rx) = channel::<BatchAssembler>();
-                    spawn_filler(scope, shard, data, bs, steps, initial, b_rx, d_tx);
-                    done_rx.push(d_rx);
-                    back_tx.push(b_tx);
+                    spawn_filler(
+                        scope,
+                        shard,
+                        data,
+                        bs,
+                        lane_steps[w],
+                        initial,
+                        b_rx,
+                        d_tx,
+                        chaos.clone(),
+                    );
+                    done_rx.push(Some(d_rx));
+                    back_tx.push(Some(b_tx));
                 }
+                // dead[w] holds the recovery lanes serving worker w's
+                // re-issued steps once its own gather lane is retired
+                let mut dead: Vec<Option<Reissue>> = (0..w_count).map(|_| None).collect();
 
                 let mut parked = Vec::with_capacity(w_count * steps.min(2));
                 for s in 0..steps {
                     for w in 0..w_count {
-                        let t = Timer::start();
-                        let buf = done_rx[w]
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("worker {w} gather lane died"))?;
-                        outcome.workers[w].wait_s += t.elapsed_s();
+                        if s >= lane_steps[w] {
+                            continue; // ragged shard: lane already retired
+                        }
+                        // Acquire worker w's batch for step s — from its
+                        // own gather lane, or (once dropped) from the
+                        // recovery lane this step was re-issued to.
+                        let (buf, recovered) = loop {
+                            if let Some(re) = dead[w].as_ref() {
+                                let j = (s - re.from_step) % re.out_rx.len();
+                                let t = Timer::start();
+                                let buf = re.out_rx[j].recv().map_err(|_| {
+                                    anyhow::anyhow!("worker {w} recovery lane died at step {s}")
+                                })?;
+                                outcome.workers[w].wait_s += t.elapsed_s();
+                                break (buf, Some(j));
+                            }
+                            let rx = done_rx[w].as_ref().expect("live lane has a receiver");
+                            let t = Timer::start();
+                            let fault = match straggler {
+                                Some(to) => match rx.recv_timeout(to) {
+                                    Ok(buf) => {
+                                        outcome.workers[w].wait_s += t.elapsed_s();
+                                        break (buf, None);
+                                    }
+                                    Err(RecvTimeoutError::Timeout) => LaneFault::Straggler,
+                                    Err(RecvTimeoutError::Disconnected) => LaneFault::Dead,
+                                },
+                                None => match rx.recv() {
+                                    Ok(buf) => {
+                                        outcome.workers[w].wait_s += t.elapsed_s();
+                                        break (buf, None);
+                                    }
+                                    Err(_) => LaneFault::Dead,
+                                },
+                            };
+                            outcome.workers[w].wait_s += t.elapsed_s();
+                            if !elastic {
+                                fault.bail("gather", w, s, straggler)?;
+                            }
+                            // Elastic: retire the lane and re-issue its
+                            // remaining steps round-robin across fresh
+                            // recovery lanes; the loop then consumes step
+                            // s from recovery lane 0.
+                            let t = Timer::start();
+                            done_rx[w] = None;
+                            back_tx[w] = None;
+                            let survivors =
+                                done_rx.iter().filter(|r| r.is_some()).count().max(1);
+                            dead[w] =
+                                Some(Reissue::spawn(scope, data, &shards[w], s, bs, survivors));
+                            outcome.dropped_lanes += 1;
+                            outcome.rejoined_lanes += 1;
+                            outcome.time_reissue += t.elapsed_s();
+                        };
                         let stats = dispatch(&mut *backend, mode, &buf)?;
                         let mut ctx =
                             StepCtx { backend: &mut *backend, scratch: &mut *scratch, data };
@@ -418,10 +561,22 @@ impl WorkerPool {
                         outcome.samples += buf.real;
                         outcome.workers[w].samples += buf.real;
                         outcome.workers[w].steps += 1;
-                        if s + 2 < steps {
-                            let _ = back_tx[w].send(buf);
-                        } else {
-                            parked.push((w, buf));
+                        match recovered {
+                            // recovery lanes own their buffers (the lane
+                            // may already have exited — ignore send errors)
+                            Some(j) => {
+                                let _ =
+                                    dead[w].as_ref().expect("recovery lane").back_tx[j].send(buf);
+                            }
+                            None => {
+                                if s + 2 < lane_steps[w] {
+                                    if let Some(tx) = back_tx[w].as_ref() {
+                                        let _ = tx.send(buf);
+                                    }
+                                } else {
+                                    parked.push((w, buf));
+                                }
+                            }
                         }
                     }
                 }
@@ -500,9 +655,12 @@ impl WorkerPool {
         mode: StepMode,
         sink: &mut dyn StepSink,
     ) -> anyhow::Result<PoolOutcome> {
-        let (steps, mut outcome) = self.prepare(data, shards)?;
+        let (steps, lane_steps, mut outcome) = self.prepare(data, shards)?;
         let w_count = shards.len();
         let bs = self.batch;
+        let elastic = self.elastic;
+        let straggler = self.straggler_timeout;
+        let chaos = self.chaos.take();
         if steps == 0 {
             let mut ctx = StepCtx { backend: primary, scratch: &mut self.scratch, data };
             sink.finish(&mut ctx)?;
@@ -522,44 +680,136 @@ impl WorkerPool {
             lane.send(LaneCmd::Sync(init.clone()))?;
         }
 
-        let gather_bufs = self.take_lanes(data, w_count, steps);
+        let gather_bufs = self.take_lanes(data, &lane_steps);
         let scratch = &mut self.scratch;
         let rep_lanes = &self.lanes;
 
         type Parked = Vec<(usize, BatchAssembler)>;
         let (parked, last_avg) = std::thread::scope(
             |scope| -> anyhow::Result<(Parked, Option<SharedSnapshot>)> {
-                let mut done_rx = Vec::with_capacity(w_count);
-                let mut back_tx = Vec::with_capacity(w_count);
-                for (shard, initial) in shards.iter().zip(gather_bufs) {
+                let mut done_rx: Vec<Option<Receiver<BatchAssembler>>> =
+                    Vec::with_capacity(w_count);
+                let mut back_tx: Vec<Option<Sender<BatchAssembler>>> =
+                    Vec::with_capacity(w_count);
+                for (w, (shard, initial)) in shards.iter().zip(gather_bufs).enumerate() {
                     let (d_tx, d_rx) = sync_channel::<BatchAssembler>(1);
                     let (b_tx, b_rx) = channel::<BatchAssembler>();
-                    spawn_filler(scope, shard, data, bs, steps, initial, b_rx, d_tx);
-                    done_rx.push(d_rx);
-                    back_tx.push(b_tx);
+                    spawn_filler(
+                        scope,
+                        shard,
+                        data,
+                        bs,
+                        lane_steps[w],
+                        initial,
+                        b_rx,
+                        d_tx,
+                        chaos.clone(),
+                    );
+                    done_rx.push(Some(d_rx));
+                    back_tx.push(Some(b_tx));
+                }
+
+                // A dead lane's remaining steps execute on the primary,
+                // restored to `pre_step` — the snapshot every replica
+                // held before the current step — so the fold stays
+                // bitwise identical to an undisturbed run.
+                let mut dead = vec![false; w_count];
+                let mut pre_step: SharedSnapshot = init.clone();
+                let mut rec_buf: Option<BatchAssembler> = None;
+                // retire lane w from the run: stop its gather, count the
+                // drop; the primary adopts its remaining steps
+                macro_rules! retire {
+                    ($w:expr) => {{
+                        let t = Timer::start();
+                        dead[$w] = true;
+                        done_rx[$w] = None;
+                        back_tx[$w] = None;
+                        outcome.dropped_lanes += 1;
+                        outcome.rejoined_lanes += 1;
+                        outcome.time_reissue += t.elapsed_s();
+                    }};
                 }
 
                 let mut parked: Parked = Vec::with_capacity(w_count * steps.min(2));
                 let mut last_avg: Option<SharedSnapshot> = None;
                 for s in 0..steps {
-                    // Fan out: forward each worker's gathered batch to its
-                    // replica lane; all lanes compute concurrently.
-                    for (w, rx) in done_rx.iter().enumerate() {
-                        let buf = rx
-                            .recv()
-                            .map_err(|_| anyhow::anyhow!("worker {w} gather lane died"))?;
-                        rep_lanes[w].send(LaneCmd::Step { buf, mode, export: averaging })?;
-                    }
-                    // Fixed (step, worker) reduction: fold stats (and, when
-                    // averaging, states) in worker order regardless of
-                    // which lane finished first.
-                    let mut acc: Option<Vec<Vec<f32>>> = None;
+                    // Fan out: forward each live worker's gathered batch
+                    // to its replica lane; all lanes compute concurrently.
                     for w in 0..w_count {
-                        let t = Timer::start();
-                        let reply = rep_lanes[w].recv()?;
-                        outcome.workers[w].wait_s += t.elapsed_s();
-                        match reply {
-                            LaneReply::Step { buf, stats, state } => {
+                        if s >= lane_steps[w] || dead[w] {
+                            continue;
+                        }
+                        let rx = done_rx[w].as_ref().expect("live lane has a receiver");
+                        let buf = match rx.recv() {
+                            Ok(b) => b,
+                            Err(_) => {
+                                if !elastic {
+                                    LaneFault::Dead.bail("gather", w, s, straggler)?;
+                                }
+                                retire!(w);
+                                continue;
+                            }
+                        };
+                        if rep_lanes[w]
+                            .send(LaneCmd::Step { buf, mode, export: averaging })
+                            .is_err()
+                        {
+                            if !elastic {
+                                LaneFault::Dead.bail("replica", w, s, straggler)?;
+                            }
+                            retire!(w);
+                        }
+                    }
+                    // Fixed (step, worker) reduction: fold stats (and,
+                    // when averaging, states) in worker order regardless
+                    // of which lane finished first.  A dead worker's step
+                    // executes on the primary at its original fold
+                    // position.
+                    let mut acc: Option<Vec<Vec<f32>>> = None;
+                    let mut participants = 0usize;
+                    for w in 0..w_count {
+                        if s >= lane_steps[w] {
+                            continue; // ragged shard: lane already retired
+                        }
+                        participants += 1;
+                        let step_reply = loop {
+                            if dead[w] {
+                                break None;
+                            }
+                            let t = Timer::start();
+                            let got: Result<LaneReply, LaneFault> = match straggler {
+                                Some(to) => match rep_lanes[w].recv_timeout(to) {
+                                    Ok(r) => Ok(r),
+                                    Err(RecvTimeoutError::Timeout) => Err(LaneFault::Straggler),
+                                    Err(RecvTimeoutError::Disconnected) => Err(LaneFault::Dead),
+                                },
+                                None => rep_lanes[w].recv().map_err(|_| LaneFault::Dead),
+                            };
+                            outcome.workers[w].wait_s += t.elapsed_s();
+                            match got {
+                                Ok(LaneReply::Step { buf, stats, state }) => {
+                                    break Some((buf, stats, state));
+                                }
+                                Ok(LaneReply::Ready) => {
+                                    anyhow::bail!("worker {w}: unexpected ready reply")
+                                }
+                                Ok(LaneReply::Fail(e)) => {
+                                    if !elastic {
+                                        anyhow::bail!("worker {w} step failed: {e}");
+                                    }
+                                }
+                                Err(fault) => {
+                                    if !elastic {
+                                        fault.bail("replica", w, s, straggler)?;
+                                    }
+                                }
+                            }
+                            // elastic: retire the lane; the next loop
+                            // iteration hands the step to the primary
+                            retire!(w);
+                        };
+                        match step_reply {
+                            Some((buf, stats, state)) => {
                                 let mut ctx = StepCtx {
                                     backend: &mut *primary,
                                     scratch: &mut *scratch,
@@ -569,8 +819,10 @@ impl WorkerPool {
                                 outcome.samples += buf.real;
                                 outcome.workers[w].samples += buf.real;
                                 outcome.workers[w].steps += 1;
-                                if s + 2 < steps {
-                                    let _ = back_tx[w].send(buf);
+                                if s + 2 < lane_steps[w] {
+                                    if let Some(tx) = back_tx[w].as_ref() {
+                                        let _ = tx.send(buf);
+                                    }
                                 } else {
                                     parked.push((w, buf));
                                 }
@@ -588,28 +840,63 @@ impl WorkerPool {
                                     });
                                 }
                             }
-                            LaneReply::Fail(e) => {
-                                anyhow::bail!("worker {w} step failed: {e}")
-                            }
-                            LaneReply::Ready => {
-                                anyhow::bail!("worker {w}: unexpected ready reply")
+                            None => {
+                                // The dead worker's step, executed on the
+                                // primary from the replicas' pre-step
+                                // state — bitwise what the replica would
+                                // have computed.
+                                if averaging {
+                                    primary.import_snapshot(&pre_step)?;
+                                }
+                                let rb = rec_buf
+                                    .get_or_insert_with(|| BatchAssembler::new(data, bs));
+                                rb.fill(data, shards[w].step_batch(s, bs), None);
+                                let stats = dispatch(&mut *primary, mode, rb)?;
+                                let mut ctx = StepCtx {
+                                    backend: &mut *primary,
+                                    scratch: &mut *scratch,
+                                    data,
+                                };
+                                sink.on_batch(&mut ctx, &rb.slots, rb.real, &stats)?;
+                                outcome.samples += rb.real;
+                                outcome.workers[w].samples += rb.real;
+                                outcome.workers[w].steps += 1;
+                                if averaging {
+                                    let st = primary.export_state()?;
+                                    acc = Some(match acc.take() {
+                                        None => st,
+                                        Some(mut a) => {
+                                            accumulate_state(&mut a, &st)?;
+                                            a
+                                        }
+                                    });
+                                }
                             }
                         }
                     }
                     if averaging {
                         let t = Timer::start();
                         let mut avg = acc.expect("averaging step folded no state");
-                        finish_average(&mut avg, w_count);
+                        finish_average(&mut avg, participants);
                         // wrap the flat averaged state back into a typed
                         // full-tier snapshot (a pure split — every f32
                         // bit pattern is preserved) before broadcast
                         let avg: SharedSnapshot =
                             Arc::new(Snapshot::from_state(avg, param_leaves)?);
-                        for lane in rep_lanes {
-                            lane.send(LaneCmd::Sync(avg.clone()))?;
+                        for (w, lane) in rep_lanes.iter().enumerate() {
+                            if dead[w] {
+                                continue;
+                            }
+                            if lane.send(LaneCmd::Sync(avg.clone())).is_err() {
+                                if !elastic {
+                                    LaneFault::Dead.bail("replica", w, s, straggler)?;
+                                }
+                                retire!(w);
+                            }
                         }
                         outcome.sync_steps += 1;
                         outcome.time_average += t.elapsed_s();
+                        pre_step = avg.clone();
                         last_avg = Some(avg);
                     }
                 }
@@ -625,13 +912,100 @@ impl WorkerPool {
         }
         let mut ctx = StepCtx { backend: primary, scratch: &mut self.scratch, data };
         sink.finish(&mut ctx)?;
+        if outcome.dropped_lanes > 0 {
+            // dead replica lanes (and stragglers we stopped listening to)
+            // cannot rejoin the barrier protocol mid-stream; respawn the
+            // whole lane set before the next run
+            self.lanes.clear();
+            self.lanes_key.clear();
+        }
         Ok(outcome)
+    }
+}
+
+/// How a lane failed at the barrier.
+enum LaneFault {
+    /// The lane's channel disconnected — its thread is gone.
+    Dead,
+    /// The lane missed the straggler timeout.
+    Straggler,
+}
+
+impl LaneFault {
+    /// The `--fault-policy fail` abort: a named error instead of a hung
+    /// barrier.  Always returns `Err`.
+    fn bail(
+        &self,
+        kind: &str,
+        worker: usize,
+        step: usize,
+        timeout: Option<Duration>,
+    ) -> anyhow::Result<()> {
+        match self {
+            LaneFault::Dead => anyhow::bail!(
+                "worker {worker} {kind} lane died at step {step} (--fault-policy fail \
+                 aborts; elastic re-issues the remaining steps)"
+            ),
+            LaneFault::Straggler => anyhow::bail!(
+                "worker {worker} stalled past the {}ms straggler timeout at step {step} \
+                 (--fault-policy fail)",
+                timeout.map_or(0, |d| d.as_millis() as u64)
+            ),
+        }
+    }
+}
+
+/// The recovery lanes standing in for one dropped worker (elastic fault
+/// policy, serial-equivalent schedule): the dead worker's step `t` is
+/// served by recovery lane `(t - from_step) % lanes`, matching
+/// [`reissue_tail`]'s round-robin assignment.
+struct Reissue {
+    from_step: usize,
+    out_rx: Vec<Receiver<BatchAssembler>>,
+    back_tx: Vec<Sender<BatchAssembler>>,
+}
+
+impl Reissue {
+    /// Re-issue the tail of `shard` (steps `from_step..`) across
+    /// `survivors` fresh recovery gather lanes spawned on `scope`.  The
+    /// slices are copied out up front ([`reissue_tail`]) so the recovery
+    /// threads own their work outright.
+    fn spawn<'scope, 'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        data: &'env Dataset,
+        shard: &Shard,
+        from_step: usize,
+        batch: usize,
+        survivors: usize,
+    ) -> Self {
+        let mut groups: Vec<Vec<Vec<u32>>> =
+            (0..survivors.max(1)).map(|_| Vec::new()).collect();
+        for slice in reissue_tail(shard, from_step, batch, survivors) {
+            groups[slice.lane].push(slice.indices);
+        }
+        let mut out_rx = Vec::with_capacity(groups.len());
+        let mut back_tx = Vec::with_capacity(groups.len());
+        for slices in groups {
+            let (d_tx, d_rx) = sync_channel::<BatchAssembler>(1);
+            let (b_tx, b_rx) = channel::<BatchAssembler>();
+            let initial: Vec<BatchAssembler> = (0..slices.len().min(2))
+                .map(|_| BatchAssembler::new(data, batch))
+                .collect();
+            spawn_reissue_filler(scope, data, slices, initial, b_rx, d_tx);
+            out_rx.push(d_rx);
+            back_tx.push(b_tx);
+        }
+        Reissue { from_step, out_rx, back_tx }
     }
 }
 
 /// Spawn one worker's gather lane: fills its shard's batches in step
 /// order, double-buffered (two assemblers circulating by value through
-/// the `back_rx` / `out_tx` channel pair).
+/// the `back_rx` / `out_tx` channel pair).  A [`ChaosPlan`] targeting
+/// `shard.worker` executes here: a scripted kill exits the thread before
+/// the step's batch is delivered (the channel disconnect *is* the failure
+/// signal, exactly like a crashed prefetch thread), a scripted delay
+/// sleeps first.
 #[allow(clippy::too_many_arguments)]
 fn spawn_filler<'scope, 'env>(
     scope: &'scope std::thread::Scope<'scope, 'env>,
@@ -642,9 +1016,18 @@ fn spawn_filler<'scope, 'env>(
     mut initial: Vec<BatchAssembler>,
     back_rx: Receiver<BatchAssembler>,
     out_tx: SyncSender<BatchAssembler>,
+    chaos: Option<Arc<ChaosPlan>>,
 ) {
+    let worker = shard.worker;
     scope.spawn(move || {
         for s in 0..steps {
+            match chaos.as_ref().and_then(|p| p.action(worker, s)) {
+                Some(ChaosAction::Kill) => return,
+                Some(ChaosAction::Delay(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms))
+                }
+                Some(ChaosAction::FailExport) | None => {}
+            }
             let mut buf = match initial.pop() {
                 Some(b) => b,
                 None => match back_rx.recv() {
@@ -653,6 +1036,35 @@ fn spawn_filler<'scope, 'env>(
                 },
             };
             buf.fill(data, shard.step_batch(s, batch), None);
+            if out_tx.send(buf).is_err() {
+                return;
+            }
+        }
+    });
+}
+
+/// A recovery gather lane (elastic fault policy): fills the re-issued
+/// slices of a dead worker's shard in re-issue order, double-buffered
+/// like [`spawn_filler`] but over *owned* index vectors — the recovery
+/// work is computed at fault-detection time and moved in.
+fn spawn_reissue_filler<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    data: &'env Dataset,
+    slices: Vec<Vec<u32>>,
+    mut initial: Vec<BatchAssembler>,
+    back_rx: Receiver<BatchAssembler>,
+    out_tx: SyncSender<BatchAssembler>,
+) {
+    scope.spawn(move || {
+        for idx in slices {
+            let mut buf = match initial.pop() {
+                Some(b) => b,
+                None => match back_rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => return,
+                },
+            };
+            buf.fill(data, &idx, None);
             if out_tx.send(buf).is_err() {
                 return;
             }
@@ -756,22 +1168,237 @@ mod tests {
         }
     }
 
+    /// Satellite regression (docs/worker-model.md): a lane whose shard
+    /// exhausts early retires from the barrier instead of deadlocking it.
+    /// Maximally ragged: one lane takes every step, the other exactly one.
     #[test]
-    fn ragged_shards_rejected() {
-        let d = tiny(16);
+    fn ragged_shards_retire_from_the_barrier() {
+        let d = tiny(32);
         let shards = vec![
-            Shard { worker: 0, indices: vec![0, 1, 2] },
-            Shard { worker: 1, indices: vec![3, 4] },
+            Shard { worker: 0, indices: (0..24).collect() }, // 3 steps of B=8
+            Shard { worker: 1, indices: (24..26).collect() }, // 1 ragged step
         ];
+        let mode = StepMode::Train { lr: 0.05 };
+        // reference: a manual (step, worker) loop over the same logical
+        // order (the flat global_batch_order re-chunks ragged tails, so
+        // the engine-over-flat stream is not the right reference here)
+        let mut ref_be = MockBackend::new();
+        let mut ref_sink = EvalSink::default();
+        let mut buf = BatchAssembler::new(&d, B);
+        let mut scratch = BatchAssembler::new(&d, B);
+        for s in 0..3 {
+            for sh in &shards {
+                let idx = sh.step_batch(s, B);
+                if idx.is_empty() {
+                    continue;
+                }
+                buf.fill(&d, idx, None);
+                let stats = dispatch(&mut ref_be, mode, &buf).unwrap();
+                let mut ctx =
+                    StepCtx { backend: &mut ref_be, scratch: &mut scratch, data: &d };
+                ref_sink.on_batch(&mut ctx, &buf.slots, buf.real, &stats).unwrap();
+            }
+        }
+        let mut ctx = StepCtx { backend: &mut ref_be, scratch: &mut scratch, data: &d };
+        ref_sink.finish(&mut ctx).unwrap();
+
         let mut pool = WorkerPool::new(&d, B);
         let mut be = MockBackend::new();
         let mut sink = EvalSink::default();
-        assert!(pool
+        let out = pool
+            .run_serial_equivalent(&mut be, &d, &shards, mode, &mut sink)
+            .unwrap();
+        assert_eq!(out.steps, 3);
+        assert_eq!(out.workers[0].steps, 3);
+        assert_eq!(out.workers[1].steps, 1);
+        assert_eq!(out.samples, 26);
+        assert_eq!(ref_be.param.to_bits(), be.param.to_bits());
+        assert_eq!(ref_be.trace, be.trace);
+        let (ra, rl) = ref_sink.result();
+        let (pa, pl) = sink.result();
+        assert_eq!(ra.to_bits(), pa.to_bits());
+        assert_eq!(rl.to_bits(), pl.to_bits());
+
+        // the data-parallel schedule tolerates the same raggedness, and
+        // forward passes still match the serial-equivalent results
+        let mut be_f = MockBackend::new();
+        let mut sink_f = EvalSink::default();
+        pool.run_serial_equivalent(&mut be_f, &d, &shards, StepMode::Forward, &mut sink_f)
+            .unwrap();
+        let mut be_dp = MockBackend::new();
+        let mut sink_dp = EvalSink::default();
+        let out = pool
+            .run_data_parallel(&mut be_dp, &d, &shards, StepMode::Forward, &mut sink_dp)
+            .unwrap();
+        assert_eq!(out.samples, 26);
+        let (fa, fl) = sink_f.result();
+        let (da, dl) = sink_dp.result();
+        assert_eq!(fa.to_bits(), da.to_bits());
+        assert_eq!(fl.to_bits(), dl.to_bits());
+    }
+
+    /// Elastic recovery contract: a gather-lane kill mid-run re-issues
+    /// the dead shard's tail, and the recovered run is bitwise identical
+    /// to the undisturbed one.
+    #[test]
+    fn elastic_serial_recovery_is_bitwise_identical() {
+        let d = tiny(53);
+        let order: Vec<u32> = (0..53u32).rev().collect();
+        let shards = shard_order_aligned(&order, 4, B);
+        let mode = StepMode::Train { lr: 0.05 };
+
+        let mut be_a = MockBackend::new();
+        let mut sink_a = EvalSink::default();
+        let mut pool_a = WorkerPool::new(&d, B);
+        let out_a =
+            pool_a.run_serial_equivalent(&mut be_a, &d, &shards, mode, &mut sink_a).unwrap();
+
+        let mut be_b = MockBackend::new();
+        let mut sink_b = EvalSink::default();
+        let mut pool_b = WorkerPool::new(&d, B);
+        pool_b.set_fault_policy(true, 0);
+        pool_b.inject_chaos(ChaosPlan::new().kill(2, 1));
+        let out_b =
+            pool_b.run_serial_equivalent(&mut be_b, &d, &shards, mode, &mut sink_b).unwrap();
+
+        assert_eq!(out_b.dropped_lanes, 1);
+        assert_eq!(out_b.rejoined_lanes, 1);
+        assert!(out_b.time_reissue >= 0.0);
+        assert_eq!(out_a.dropped_lanes, 0);
+        assert_eq!(be_a.param.to_bits(), be_b.param.to_bits());
+        assert_eq!(be_a.trace, be_b.trace);
+        let (aa, al) = sink_a.result();
+        let (ba, bl) = sink_b.result();
+        assert_eq!(aa.to_bits(), ba.to_bits());
+        assert_eq!(al.to_bits(), bl.to_bits());
+        assert_eq!(out_a.samples, out_b.samples);
+        // recovered steps are attributed to the logical worker
+        for (ra, rb) in out_a.workers.iter().zip(&out_b.workers) {
+            assert_eq!(ra.steps, rb.steps);
+            assert_eq!(ra.samples, rb.samples);
+        }
+    }
+
+    /// Under the default fail policy a dead gather lane aborts with a
+    /// named error instead of hanging the barrier.
+    #[test]
+    fn fail_policy_gather_death_aborts_with_named_error() {
+        let d = tiny(53);
+        let order: Vec<u32> = (0..53u32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mut pool = WorkerPool::new(&d, B);
+        pool.inject_chaos(ChaosPlan::new().kill(1, 0));
+        let mut be = MockBackend::new();
+        let mut sink = EvalSink::default();
+        let err = pool
             .run_serial_equivalent(&mut be, &d, &shards, StepMode::Forward, &mut sink)
-            .is_err());
-        assert!(pool
-            .run_data_parallel(&mut be, &d, &shards, StepMode::Forward, &mut sink)
-            .is_err());
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("worker 1 gather lane died at step 0"), "{err}");
+        assert!(err.contains("--fault-policy"), "{err}");
+    }
+
+    /// A straggler past the timeout is recovered elastically with
+    /// bitwise-identical results; under the fail policy it aborts with a
+    /// named straggler error.
+    #[test]
+    fn straggler_timeout_detection_and_recovery() {
+        let d = tiny(53);
+        let order: Vec<u32> = (0..53u32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mode = StepMode::Train { lr: 0.03 };
+
+        let mut be_a = MockBackend::new();
+        let mut sink_a = EvalSink::default();
+        let mut pool_a = WorkerPool::new(&d, B);
+        pool_a.run_serial_equivalent(&mut be_a, &d, &shards, mode, &mut sink_a).unwrap();
+
+        // elastic: worker 1 stalls 400ms at its step 1, timeout 100ms
+        let mut be_b = MockBackend::new();
+        let mut sink_b = EvalSink::default();
+        let mut pool_b = WorkerPool::new(&d, B);
+        pool_b.set_fault_policy(true, 100);
+        pool_b.inject_chaos(ChaosPlan::new().delay(1, 1, 400));
+        let out =
+            pool_b.run_serial_equivalent(&mut be_b, &d, &shards, mode, &mut sink_b).unwrap();
+        assert!(out.dropped_lanes >= 1, "stall should trip the timeout");
+        assert_eq!(be_a.param.to_bits(), be_b.param.to_bits());
+        assert_eq!(be_a.trace, be_b.trace);
+
+        // fail policy: the same stall aborts with a named error
+        let mut pool_c = WorkerPool::new(&d, B);
+        pool_c.set_fault_policy(false, 100);
+        pool_c.inject_chaos(ChaosPlan::new().delay(0, 0, 500));
+        let mut be_c = MockBackend::new();
+        let mut sink_c = EvalSink::default();
+        let err = pool_c
+            .run_serial_equivalent(&mut be_c, &d, &shards, mode, &mut sink_c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("straggler timeout"), "{err}");
+        assert!(err.contains("worker 0"), "{err}");
+    }
+
+    /// Data-parallel elastic recovery: a replica killed mid-run has its
+    /// remaining steps adopted by the primary from the pre-step snapshot,
+    /// and the averaged parameters stay bitwise identical.
+    #[test]
+    fn elastic_data_parallel_replica_kill_matches_undisturbed() {
+        use crate::engine::chaos::ChaosBackend;
+        let d = tiny(48);
+        let order: Vec<u32> = (0..48u32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mode = StepMode::Train { lr: 0.05 };
+
+        let mut be_a = MockBackend::new();
+        let mut sink_a = EvalSink::default();
+        let mut pool_a = WorkerPool::new(&d, B);
+        pool_a.run_data_parallel(&mut be_a, &d, &shards, mode, &mut sink_a).unwrap();
+
+        for kill_step in [0usize, 1, 2] {
+            let mut be_b =
+                ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(1, kill_step));
+            let mut sink_b = EvalSink::default();
+            let mut pool_b = WorkerPool::new(&d, B);
+            pool_b.set_fault_policy(true, 0);
+            let out =
+                pool_b.run_data_parallel(&mut be_b, &d, &shards, mode, &mut sink_b).unwrap();
+            assert_eq!(out.dropped_lanes, 1, "kill_step={kill_step}");
+            assert_eq!(out.rejoined_lanes, 1, "kill_step={kill_step}");
+            assert_eq!(
+                be_a.param.to_bits(),
+                be_b.inner().param.to_bits(),
+                "kill_step={kill_step}"
+            );
+            let (aa, al) = sink_a.result();
+            let (ba, bl) = sink_b.result();
+            assert_eq!(aa.to_bits(), ba.to_bits(), "kill_step={kill_step}");
+            assert_eq!(al.to_bits(), bl.to_bits(), "kill_step={kill_step}");
+        }
+    }
+
+    /// Under the fail policy a killed replica aborts the data-parallel
+    /// run with the named chaos error (no hang), and the pool recovers.
+    #[test]
+    fn fail_policy_replica_kill_aborts_with_named_error() {
+        use crate::engine::chaos::ChaosBackend;
+        let d = tiny(48);
+        let order: Vec<u32> = (0..48u32).collect();
+        let shards = shard_order_aligned(&order, 2, B);
+        let mut be =
+            ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(0, 1));
+        let mut pool = WorkerPool::new(&d, B);
+        let mut sink = EvalSink::default();
+        let err = pool
+            .run_data_parallel(&mut be, &d, &shards, StepMode::Train { lr: 0.02 }, &mut sink)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("worker 0 step failed"), "{err}");
+        assert!(err.contains("chaos"), "{err}");
+        // lanes were cleared; a healthy run succeeds afterwards
+        let mut ok = MockBackend::new();
+        let mut sink = EvalSink::default();
+        pool.run_data_parallel(&mut ok, &d, &shards, StepMode::Forward, &mut sink).unwrap();
     }
 
     #[test]

@@ -40,6 +40,17 @@
 //! `(epoch, eval-before-checkpoint)` — the synchronous phase order — and
 //! the coordinator folds results into records keyed by epoch, so barrier
 //! fold-in is deterministic no matter which lane finishes first.
+//!
+//! # Job failure
+//!
+//! A failed *job* (a checkpoint write error, an eval forward error) must
+//! not wedge the pipeline: the lane stays alive and the failure comes
+//! back as a named [`ServiceEvent::Error`] in the same fold-in stream,
+//! so the coordinator can apply the configured fault policy (abort with
+//! a clear message under `--fault-policy fail`, count and continue under
+//! `elastic`).  Only handler *init* failures (e.g. the eval replica
+//! build) kill a lane — those surface synchronously at
+//! [`ServiceLanes::spawn`].
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
@@ -61,6 +72,26 @@ use crate::util::timer::Timer;
 /// across pool threads via `Arc` clones.
 pub type CheckpointWriter =
     Box<dyn Fn(SharedSnapshot, usize) -> anyhow::Result<WriteStats> + Send>;
+
+/// Which service lane an event came from — names the lane in
+/// [`ServiceEvent::Error`] so fault handling can report *what* failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceLaneKind {
+    /// The validation-eval lane (owns the eval replica).
+    Eval,
+    /// The checkpoint-serialization lane (owns the writer).
+    Checkpoint,
+}
+
+impl ServiceLaneKind {
+    /// Lane name for error messages and JSON records.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceLaneKind::Eval => "eval",
+            ServiceLaneKind::Checkpoint => "checkpoint",
+        }
+    }
+}
 
 /// One completed service-lane job.
 #[derive(Clone, Debug)]
@@ -86,29 +117,49 @@ pub enum ServiceEvent {
         /// bytes, dedup hits, write/hash/compress seconds).
         stats: WriteStats,
     },
+    /// A job failed; the lane survived and keeps serving its queue.
+    Error {
+        /// The epoch whose job failed.
+        epoch: usize,
+        /// Which lane the failed job ran on.
+        lane: ServiceLaneKind,
+        /// The job error, rendered for fault reporting.
+        message: String,
+        /// Seconds the lane spent before the job failed.
+        secs: f64,
+    },
 }
 
 impl ServiceEvent {
     /// The epoch the job belonged to.
     pub fn epoch(&self) -> usize {
         match self {
-            ServiceEvent::Eval { epoch, .. } | ServiceEvent::Checkpoint { epoch, .. } => *epoch,
+            ServiceEvent::Eval { epoch, .. }
+            | ServiceEvent::Checkpoint { epoch, .. }
+            | ServiceEvent::Error { epoch, .. } => *epoch,
         }
     }
 
     /// Lane seconds the job consumed.
     pub fn secs(&self) -> f64 {
         match self {
-            ServiceEvent::Eval { secs, .. } | ServiceEvent::Checkpoint { secs, .. } => *secs,
+            ServiceEvent::Eval { secs, .. }
+            | ServiceEvent::Checkpoint { secs, .. }
+            | ServiceEvent::Error { secs, .. } => *secs,
         }
     }
 
     /// Barrier fold-in key: epoch first, eval before checkpoint within an
-    /// epoch (the synchronous pipeline's phase order).
+    /// epoch (the synchronous pipeline's phase order).  A
+    /// [`ServiceEvent::Error`] sorts where its lane's success event
+    /// would have — it replaces exactly one job's completion.
     fn fold_key(&self) -> (usize, u8) {
         match self {
             ServiceEvent::Eval { epoch, .. } => (*epoch, 0),
             ServiceEvent::Checkpoint { epoch, .. } => (*epoch, 1),
+            ServiceEvent::Error { epoch, lane, .. } => {
+                (*epoch, if *lane == ServiceLaneKind::Eval { 0 } else { 1 })
+            }
         }
     }
 }
@@ -124,9 +175,10 @@ type HandlerInit = Box<dyn FnOnce() -> anyhow::Result<JobHandler> + Send>;
 enum LaneReply {
     /// The handler finished initializing; the lane accepts jobs.
     Ready,
-    /// One completed job.
+    /// One completed job — success or a named [`ServiceEvent::Error`].
     Done(ServiceEvent),
-    /// Handler init or a job failed; the lane exits.
+    /// Handler init failed; the lane exits.  Job failures never use this
+    /// arm — they ride `Done(ServiceEvent::Error)` and the lane survives.
     Fail(String),
 }
 
@@ -143,12 +195,12 @@ impl ServiceWorker {
     /// Spawn the worker and block until its handler reports ready, so
     /// init failures (replica build) surface here and every later submit
     /// is cheap.
-    fn spawn(name: &str, init: HandlerInit) -> anyhow::Result<Self> {
+    fn spawn(kind: ServiceLaneKind, init: HandlerInit) -> anyhow::Result<Self> {
         let (cmd_tx, cmd_rx) = channel::<(usize, SharedSnapshot)>();
         let (reply_tx, reply_rx) = channel::<LaneReply>();
         let handle = std::thread::Builder::new()
-            .name(name.to_string())
-            .spawn(move || worker_main(init, cmd_rx, reply_tx))?;
+            .name(format!("service-{}", kind.name()))
+            .spawn(move || worker_main(kind, init, cmd_rx, reply_tx))?;
         let worker =
             ServiceWorker { cmd_tx: Some(cmd_tx), reply_rx, handle: Some(handle), pending: 0 };
         match worker.reply_rx.recv() {
@@ -224,8 +276,11 @@ impl Drop for ServiceWorker {
 }
 
 /// Worker thread body: run the handler init locally, then serve jobs
-/// until the owner drops the command channel.
+/// until the owner drops the command channel.  A failed job becomes a
+/// named [`ServiceEvent::Error`] and the lane keeps serving — only init
+/// failures kill the thread.
 fn worker_main(
+    kind: ServiceLaneKind,
     init: HandlerInit,
     cmd_rx: Receiver<(usize, SharedSnapshot)>,
     reply_tx: Sender<LaneReply>,
@@ -241,12 +296,15 @@ fn worker_main(
         return;
     }
     while let Ok((epoch, snap)) = cmd_rx.recv() {
+        let t = Timer::start();
         let reply = match handler(epoch, snap) {
             Ok(ev) => LaneReply::Done(ev),
-            Err(e) => {
-                let _ = reply_tx.send(LaneReply::Fail(e.to_string()));
-                return;
-            }
+            Err(e) => LaneReply::Done(ServiceEvent::Error {
+                epoch,
+                lane: kind,
+                message: e.to_string(),
+                secs: t.elapsed_s(),
+            }),
         };
         if reply_tx.send(reply).is_err() {
             return;
@@ -280,7 +338,7 @@ impl ServiceLanes {
         writer: Option<CheckpointWriter>,
     ) -> anyhow::Result<Self> {
         let eval = ServiceWorker::spawn(
-            "service-eval",
+            ServiceLaneKind::Eval,
             Box::new(move || {
                 let mut replica = build()?;
                 let mut asm = BatchAssembler::new(&val, batch);
@@ -292,7 +350,7 @@ impl ServiceLanes {
         )?;
         let checkpoint = match writer {
             Some(w) => Some(ServiceWorker::spawn(
-                "service-checkpoint",
+                ServiceLaneKind::Checkpoint,
                 Box::new(move || {
                     Ok(Box::new(move |epoch: usize, snap: SharedSnapshot| {
                         let t = Timer::start();
@@ -572,6 +630,77 @@ mod tests {
             .map(|e| (e.epoch(), matches!(e, ServiceEvent::Checkpoint { .. })))
             .collect();
         assert_eq!(keys, vec![(0, false), (0, true), (2, false), (2, true)]);
+    }
+
+    /// Satellite: a checkpoint write error surfaces as a named
+    /// [`ServiceEvent::Error`] in the fold-in stream — the lane survives
+    /// and serves the next job instead of hanging or dying.
+    #[test]
+    fn checkpoint_write_error_is_a_named_event_and_the_lane_survives() {
+        let writer: CheckpointWriter = Box::new(|_snap, epoch| {
+            anyhow::ensure!(epoch != 0, "disk full writing generation {epoch}");
+            Ok(WriteStats::default())
+        });
+        let be = MockBackend::new();
+        let mut lanes =
+            ServiceLanes::spawn(be.replica_builder().unwrap(), tiny_val(9), B, Some(writer))
+                .unwrap();
+        lanes.submit_checkpoint(0, full_snap(1.0)).unwrap();
+        lanes.submit_checkpoint(1, full_snap(1.0)).unwrap();
+        let events = lanes.drain().unwrap();
+        assert_eq!(lanes.pending(), 0);
+        match &events[0] {
+            ServiceEvent::Error { epoch: 0, lane, message, .. } => {
+                assert_eq!(*lane, ServiceLaneKind::Checkpoint);
+                assert_eq!(lane.name(), "checkpoint");
+                assert!(message.contains("disk full"), "{message}");
+            }
+            other => panic!("expected a checkpoint error event, got {other:?}"),
+        }
+        assert!(matches!(events[1], ServiceEvent::Checkpoint { epoch: 1, .. }));
+    }
+
+    /// Satellite: an eval-lane forward error surfaces as a named
+    /// [`ServiceEvent::Error`] tagged with the eval lane, not a hang.
+    #[test]
+    fn eval_job_error_is_a_named_event() {
+        struct BrokenEval;
+        impl StepBackend for BrokenEval {
+            fn train_step(
+                &mut self,
+                _x: &[f32],
+                _y: &[i32],
+                _sw: &[f32],
+                _lr: f32,
+            ) -> anyhow::Result<crate::runtime::BatchStats> {
+                anyhow::bail!("device lost")
+            }
+            fn fwd_stats(
+                &mut self,
+                _x: &[f32],
+                _y: &[i32],
+            ) -> anyhow::Result<crate::runtime::BatchStats> {
+                anyhow::bail!("device lost")
+            }
+        }
+        impl StateExchange for BrokenEval {
+            fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0]])
+            }
+            fn import_state(&mut self, _state: &[Vec<f32>]) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        let build: ReplicaBuilder = Box::new(|| Ok(Box::new(BrokenEval)));
+        let mut lanes = ServiceLanes::spawn(build, tiny_val(9), B, None).unwrap();
+        lanes.submit_eval(4, params_snap(1.0)).unwrap();
+        let events = lanes.drain().unwrap();
+        match &events[0] {
+            ServiceEvent::Error { epoch: 4, lane: ServiceLaneKind::Eval, message, .. } => {
+                assert!(message.contains("device lost"), "{message}");
+            }
+            other => panic!("expected an eval error event, got {other:?}"),
+        }
     }
 
     #[test]

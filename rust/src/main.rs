@@ -12,7 +12,8 @@
 //! Overrides (any subset): `--epochs --seed --workers --dp --base_lr
 //! --momentum --max_fraction --tau --drop_top --variant --eval_every
 //! --detailed_metrics --service-lane --checkpoint_every --checkpoint_dir
-//! --resume --checkpoint-pool --checkpoint-verify --checkpoint-compress`
+//! --resume --checkpoint-pool --checkpoint-verify --checkpoint-compress
+//! --fault-policy --straggler-timeout-ms`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -26,7 +27,8 @@ const OVERRIDE_KEYS: &[&str] = &[
     "max_fraction", "tau", "drop_top", "variant", "eval_every", "detailed_metrics",
     "checkpoint_every", "checkpoint_dir", "resume", "service-lane", "service_lane",
     "checkpoint_pool", "checkpoint-pool", "checkpoint_verify", "checkpoint-verify",
-    "checkpoint_compress", "checkpoint-compress",
+    "checkpoint_compress", "checkpoint-compress", "fault_policy", "fault-policy",
+    "straggler_timeout_ms", "straggler-timeout-ms",
 ];
 
 fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
@@ -195,6 +197,7 @@ Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
             --eval_every --service-lane --checkpoint_every
             --checkpoint_dir --resume --checkpoint-pool
             --checkpoint-verify --checkpoint-compress
+            --fault-policy --straggler-timeout-ms
 Flags:      --verbose --quiet --out <dir>
 
 --workers N executes data-parallel: the epoch order is sharded across N
@@ -213,6 +216,14 @@ in fixed epoch order and are bitwise identical to the serial path
 (default: off).  --checkpoint_every K + --checkpoint_dir D write full
 checkpoints (params + momentum + trainer state); --resume continues a
 run from D bit-exactly.
+
+--fault-policy {fail,elastic} picks what a multi-worker run does when a
+lane dies or stalls mid-epoch (docs/worker-model.md \"Fault tolerance\"):
+  fail     (default) abort with a named error; combine with --resume
+  elastic  retire the lane and re-issue its remaining shard slices
+           deterministically — bitwise identical to the undisturbed run
+--straggler-timeout-ms N treats a lane silent for N ms at a step barrier
+as faulty (0 = disabled, the default).
 
 Checkpoints are content-addressed sha256 artifacts (docs/snapshots.md):
   --checkpoint-pool N        leaf write-pool threads (0 = auto, 1 = serial)

@@ -102,6 +102,19 @@ pub struct EpochRecord {
     /// Seconds spent compressing checkpoint leaves (LZSS, summed across
     /// pool workers).
     pub ckpt_compress_s: f64,
+    /// Worker-pool lanes retired mid-epoch after a death or straggler
+    /// timeout (elastic fault policy; 0 on undisturbed epochs).
+    pub lanes_dropped: usize,
+    /// Recovery lanes brought up to adopt the retired lanes' remaining
+    /// shard slices (elastic fault policy).
+    pub lanes_rejoined: usize,
+    /// Seconds spent standing up those recovery lanes (the elastic
+    /// re-issue latency).
+    pub time_reissue: f64,
+    /// Service-lane job failures folded into this epoch under the
+    /// elastic fault policy (eval or checkpoint lane; under the fail
+    /// policy the first such failure aborts the run instead).
+    pub service_errors: usize,
 }
 
 impl EpochRecord {
@@ -153,6 +166,10 @@ impl EpochRecord {
             ("ckpt_write_s", self.ckpt_write_s),
             ("ckpt_hash_s", self.ckpt_hash_s),
             ("ckpt_compress_s", self.ckpt_compress_s),
+            ("lanes_dropped", self.lanes_dropped),
+            ("lanes_rejoined", self.lanes_rejoined),
+            ("time_reissue", self.time_reissue),
+            ("service_errors", self.service_errors),
         ];
         if let Json::Obj(m) = &mut o {
             if !self.worker_samples.is_empty() {
@@ -331,6 +348,21 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("ckpt_leaves").unwrap().as_usize(), Some(8));
         assert_eq!(j.get("ckpt_bytes").unwrap().as_usize(), Some(2000));
+    }
+
+    #[test]
+    fn fault_fields_default_zero_and_serialize() {
+        let mut r = rec(0, 0.5, 1.0);
+        assert_eq!(r.lanes_dropped, 0);
+        assert_eq!(r.service_errors, 0);
+        r.lanes_dropped = 1;
+        r.lanes_rejoined = 1;
+        r.time_reissue = 0.25;
+        r.service_errors = 2;
+        let j = r.to_json();
+        assert_eq!(j.get("lanes_dropped").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("lanes_rejoined").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("service_errors").unwrap().as_usize(), Some(2));
     }
 
     #[test]

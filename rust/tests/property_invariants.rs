@@ -318,6 +318,111 @@ fn pool_reduction_matches_serial_interleaved_fold() {
     );
 }
 
+/// Elastic-recovery invariants (docs/worker-model.md, "Fault tolerance"):
+/// for random (order length, worker count, kill point) triples,
+/// (a) `reissue_tail` re-issues every remaining batch slot of the dead
+/// shard exactly once, in step order, round-robin across the recovery
+/// lanes, and (b) an elastic chaos-kill pool run folds bitwise
+/// identically to the undisturbed run — since both fold onto one backend
+/// in `(step, worker)` order, trace equality proves the recovered order
+/// is a permutation-free replay of the undisturbed order.
+#[test]
+fn elastic_reissue_covers_exactly_once_and_folds_bitwise() {
+    use kakurenbo::data::shard::reissue_tail;
+    use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+    use kakurenbo::engine::testbed::MockBackend;
+    use kakurenbo::engine::{ChaosPlan, EvalSink, StepMode, WorkerPool};
+
+    let data = gauss_mixture(
+        &GaussMixtureCfg { n_train: 160, n_val: 4, dim: 4, classes: 3, ..Default::default() },
+        29,
+    )
+    .train;
+    let b = 8;
+    check(
+        "elastic-reissue",
+        43,
+        25,
+        &Pair(USize { lo: 1, hi: 160 }, Pair(USize { lo: 2, hi: 4 }, USize { lo: 0, hi: 62 })),
+        |&(n, (w, r))| {
+            let order: Vec<u32> = (0..n as u32).rev().collect();
+            let shards = shard_order_aligned(&order, w, b);
+            let steps = shards[0].steps(b);
+            if steps == 0 {
+                return Ok(());
+            }
+            let victim = r % w;
+            let kill_step = (r / w) % steps;
+
+            // (a) exactly-once coverage of the dead shard's tail, in step
+            // order, on round-robin recovery lanes.
+            let survivors = w - 1;
+            let slices = reissue_tail(&shards[victim], kill_step, b, survivors);
+            if slices.len() != steps - kill_step {
+                return Err(format!(
+                    "{} slices for {} remaining steps (n={n} w={w} kill={kill_step})",
+                    slices.len(),
+                    steps - kill_step
+                ));
+            }
+            let mut got: Vec<u32> = Vec::new();
+            for (i, sl) in slices.iter().enumerate() {
+                let t = kill_step + i;
+                if sl.step != t {
+                    return Err(format!("slice {i} carries step {} expected {t}", sl.step));
+                }
+                if sl.lane != (t - kill_step) % survivors.max(1) {
+                    return Err(format!("slice {i} on lane {} breaks round-robin", sl.lane));
+                }
+                got.extend_from_slice(&sl.indices);
+            }
+            let mut expect: Vec<u32> = Vec::new();
+            for t in kill_step..steps {
+                expect.extend_from_slice(shards[victim].step_batch(t, b));
+            }
+            if got != expect {
+                return Err(format!("re-issued slots differ (n={n} w={w} kill={kill_step})"));
+            }
+
+            // (b) elastic kill-recovery run folds bitwise identically.
+            let mode = StepMode::Train { lr: 0.02 };
+            let mut ref_be = MockBackend::new();
+            let mut ref_sink = EvalSink::default();
+            let mut pool = WorkerPool::new(&data, b);
+            pool.run_serial_equivalent(&mut ref_be, &data, &shards, mode, &mut ref_sink)
+                .map_err(|e| e.to_string())?;
+
+            let mut be = MockBackend::new();
+            let mut sink = EvalSink::default();
+            let mut pool = WorkerPool::new(&data, b);
+            pool.set_fault_policy(true, 0);
+            pool.inject_chaos(ChaosPlan::new().kill(victim, kill_step));
+            let out = pool
+                .run_serial_equivalent(&mut be, &data, &shards, mode, &mut sink)
+                .map_err(|e| e.to_string())?;
+
+            if out.dropped_lanes != 1 || out.rejoined_lanes != 1 {
+                return Err(format!(
+                    "dropped {} rejoined {} expected 1/1",
+                    out.dropped_lanes, out.rejoined_lanes
+                ));
+            }
+            if ref_be.param.to_bits() != be.param.to_bits() {
+                return Err(format!("param diverged (n={n} w={w} kill={kill_step}@{victim})"));
+            }
+            if ref_be.trace != be.trace {
+                return Err(format!("fold order diverged (n={n} w={w} kill={kill_step}@{victim})"));
+            }
+            let (ra, rl) = ref_sink.result();
+            let (ca, cl) = sink.result();
+            if ra.to_bits() != ca.to_bits() || rl.to_bits() != cl.to_bits() {
+                return Err(format!("sink diverged (n={n} w={w} kill={kill_step}@{victim})"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn droptop_drops_exactly_top_fraction() {
     check("droptop", 23, 150, &StateGen { max_n: 300 }, |case| {

@@ -22,10 +22,11 @@ use kakurenbo::coordinator::Trainer;
 use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
 use kakurenbo::engine::testbed::MockBackend;
 use kakurenbo::engine::{
-    DataParallel, Engine, EvalSink, ServiceEvent, ServiceLanes, SnapshotTier, StateExchange,
-    StepMode,
+    CheckpointWriter, DataParallel, Engine, EvalSink, ServiceEvent, ServiceLaneKind, ServiceLanes,
+    SnapshotTier, StateExchange, StepMode,
 };
 use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+use kakurenbo::util::artifact::WriteStats;
 
 const B: usize = 8;
 
@@ -121,6 +122,75 @@ fn lane_evaluates_the_snapshot_not_the_live_backend() {
             assert_eq!(acc.to_bits(), ref_acc.to_bits());
             assert_eq!(loss.to_bits(), ref_loss.to_bits());
         }
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+/// A failing checkpoint job folds back as a *named*
+/// [`ServiceEvent::Error`] at its generation's fold-in slot — without
+/// disturbing the eval lane's bitwise results — and the checkpoint lane
+/// survives to serialize the next generation.  (Under `--fault-policy
+/// fail` the trainer aborts on this event; under `elastic` it counts it
+/// into `EpochRecord::service_errors` and continues.)
+#[test]
+fn checkpoint_failure_folds_as_named_error_without_disturbing_eval() {
+    let tv = gauss_mixture(
+        &GaussMixtureCfg { n_train: 64, n_val: 23, dim: 6, classes: 3, ..Default::default() },
+        17,
+    );
+    let mut primary = MockBackend::new();
+    let order: Vec<u32> = (0..64).collect();
+    let mut sink = EvalSink::default();
+    let mut eng = Engine::new(&tv.train, B);
+    eng.run(&mut primary, &tv.train, &order, None, StepMode::Train { lr: 0.05 }, &mut sink)
+        .unwrap();
+
+    // reference: synchronous eval of the trained state
+    let val_order: Vec<u32> = (0..tv.val.n as u32).collect();
+    let mut sync_sink = EvalSink::default();
+    let mut eval_eng = Engine::new(&tv.val, B);
+    eval_eng
+        .run(&mut primary, &tv.val, &val_order, None, StepMode::Forward, &mut sync_sink)
+        .unwrap();
+    let (sync_acc, sync_loss) = sync_sink.result();
+
+    let writer: CheckpointWriter = Box::new(|_snap, epoch| {
+        anyhow::ensure!(epoch != 0, "disk full writing generation {epoch}");
+        Ok(WriteStats::default())
+    });
+    let mut lanes = ServiceLanes::spawn(
+        primary.replica_builder().unwrap(),
+        tv.val.clone(),
+        B,
+        Some(writer),
+    )
+    .unwrap();
+    let snap = Arc::new(primary.export_snapshot(SnapshotTier::Full).unwrap());
+    lanes.submit_eval(0, snap.clone()).unwrap();
+    lanes.submit_checkpoint(0, snap.clone()).unwrap();
+    lanes.submit_checkpoint(1, snap).unwrap();
+    let events = lanes.drain().unwrap();
+    assert_eq!(events.len(), 3);
+    // deterministic fold-in order: epoch-0 eval, epoch-0 checkpoint (the
+    // error, sorted where its success event would have landed), epoch 1
+    match &events[0] {
+        ServiceEvent::Eval { epoch, acc, loss, .. } => {
+            assert_eq!(*epoch, 0);
+            assert_eq!(acc.to_bits(), sync_acc.to_bits());
+            assert_eq!(loss.to_bits(), sync_loss.to_bits());
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+    match &events[1] {
+        ServiceEvent::Error { epoch, lane, message, .. } => {
+            assert_eq!(*epoch, 0);
+            assert_eq!(*lane, ServiceLaneKind::Checkpoint);
+            assert!(message.contains("disk full"), "unnamed error: {message}");
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+    match &events[2] {
+        ServiceEvent::Checkpoint { epoch, .. } => assert_eq!(*epoch, 1),
         other => panic!("unexpected event {other:?}"),
     }
 }
