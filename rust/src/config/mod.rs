@@ -383,6 +383,18 @@ pub struct ExperimentConfig {
     /// produces nothing for this long at a step barrier is treated as
     /// faulty under the active [`FaultPolicy`].
     pub straggler_timeout_ms: u64,
+    /// Serve live snapshots over HTTP while training (`--serve <addr>`,
+    /// e.g. `127.0.0.1:8080`; port 0 picks a free port).  Spawns the
+    /// online inference lane: a dedicated serving replica subscribed to
+    /// per-epoch params-tier snapshot publications, answering
+    /// `/v1/stats` and `/v1/embed` queries (docs/serving.md).  `None`
+    /// (the default) disables serving; training records are bitwise
+    /// identical either way.
+    pub serve: Option<String>,
+    /// Worker threads for the inference HTTP front end
+    /// (`--serve-threads N`, default 2).  Must be at least 1; forwards
+    /// still serialize through the lane's single replica.
+    pub serve_threads: usize,
 }
 
 impl ExperimentConfig {
@@ -416,6 +428,8 @@ impl ExperimentConfig {
             checkpoint_compress: true,
             fault_policy: FaultPolicy::Fail,
             straggler_timeout_ms: 0,
+            serve: None,
+            serve_threads: 2,
         }
     }
 
@@ -459,6 +473,22 @@ impl ExperimentConfig {
              0 = disabled)",
             self.straggler_timeout_ms
         );
+        if let Some(addr) = &self.serve {
+            anyhow::ensure!(
+                addr.parse::<std::net::SocketAddr>().is_ok(),
+                "--serve {addr:?} is not a socket address (expected host:port, \
+                 e.g. 127.0.0.1:8080; port 0 picks a free port)"
+            );
+        }
+        anyhow::ensure!(
+            self.serve_threads >= 1,
+            "--serve-threads 0: the inference server needs at least one worker"
+        );
+        anyhow::ensure!(
+            self.serve_threads <= 256,
+            "--serve-threads {} is implausibly large (max 256)",
+            self.serve_threads
+        );
         Ok(())
     }
 
@@ -497,6 +527,8 @@ impl ExperimentConfig {
             "straggler_timeout_ms" | "straggler-timeout-ms" => {
                 self.straggler_timeout_ms = value.parse()?
             }
+            "serve" => self.serve = Some(value.to_string()),
+            "serve_threads" | "serve-threads" => self.serve_threads = value.parse()?,
             "max_fraction" => match &mut self.strategy {
                 StrategyConfig::Kakurenbo { max_fraction, .. } => *max_fraction = value.parse()?,
                 StrategyConfig::Forget { fraction, .. }
@@ -538,6 +570,8 @@ impl ExperimentConfig {
             ("checkpoint_compress", self.checkpoint_compress),
             ("fault_policy", self.fault_policy.name()),
             ("straggler_timeout_ms", self.straggler_timeout_ms as usize),
+            ("serve", self.serve.clone().map(Json::from).unwrap_or(Json::Null)),
+            ("serve_threads", self.serve_threads),
         ]
     }
 }
@@ -761,6 +795,42 @@ mod tests {
         c.straggler_timeout_ms = 600_001;
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("--straggler-timeout-ms"), "{err}");
+    }
+
+    #[test]
+    fn serve_defaults_off_and_overrides_apply() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        assert!(c.serve.is_none(), "serving defaults off");
+        assert_eq!(c.serve_threads, 2);
+        assert!(c.validate().is_ok());
+        c.apply_override("serve", "127.0.0.1:0").unwrap();
+        assert_eq!(c.serve.as_deref(), Some("127.0.0.1:0"));
+        c.apply_override("serve_threads", "4").unwrap();
+        assert_eq!(c.serve_threads, 4);
+        c.apply_override("serve-threads", "1").unwrap();
+        assert_eq!(c.serve_threads, 1);
+        assert!(c.validate().is_ok());
+        assert!(c.apply_override("serve_threads", "many").is_err());
+    }
+
+    #[test]
+    fn serve_address_and_thread_bounds_validated() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        c.serve = Some("not-an-address".into());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--serve") && err.contains("not-an-address"), "{err}");
+        // a bare port and a missing port are both rejected
+        for bad in ["8080", "127.0.0.1"] {
+            c.serve = Some(bad.into());
+            assert!(c.validate().is_err(), "{bad:?} should not validate");
+        }
+        c.serve = Some("127.0.0.1:0".into());
+        assert!(c.validate().is_ok(), "port 0 (pick a free port) is fine");
+        c.serve_threads = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--serve-threads 0"), "{err}");
+        c.serve_threads = 257;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -400,6 +400,22 @@ impl EpochPipeline {
         refreshed: usize,
         rec: &mut EpochRecord,
     ) -> anyhow::Result<()> {
+        // Publish this epoch's params snapshot to the inference lane's
+        // hub.  The publication rides the epoch's snapshot cache: an
+        // epoch that already exported for async eval or a checkpoint
+        // shares that Arc, so serving adds at most one params export per
+        // epoch and never forces the full tier.  The swap itself is one
+        // atomic pointer store — in-flight queries keep the snapshot they
+        // started with.
+        if t.cfg.serve.is_some() {
+            let tp = Timer::start();
+            t.ensure_serve()?;
+            let snap = self.snapshot(t, SnapshotTier::Params)?;
+            let serve = t.serve.as_ref().expect("ensure_serve populated the lane");
+            serve.hub.publish(self.epoch, snap);
+            rec.serve_publishes += 1;
+            rec.time_publish = tp.elapsed_s();
+        }
         if t.cfg.detailed_metrics {
             rec.hidden_per_class = t.state.hidden_per_class(&t.data.train);
             let finite: Vec<f32> =

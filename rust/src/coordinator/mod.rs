@@ -22,7 +22,7 @@ pub mod trainer;
 
 pub use costmodel::CostModel;
 pub use epoch::{EpochPipeline, Phase};
-pub use trainer::Trainer;
+pub use trainer::{ServeRuntime, Trainer};
 
 use crate::config::ExperimentConfig;
 use crate::metrics::RunResult;

@@ -39,15 +39,35 @@ use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    CheckpointWriter, Engine, EvalSink, RefreshSink, ServiceEvent, ServiceLanes, SharedSnapshot,
-    StepMode, WorkerPool,
+    CheckpointWriter, Engine, EvalSink, RefreshSink, ServeLane, ServiceEvent, ServiceLanes,
+    SharedSnapshot, SnapshotHub, StepMode, WorkerPool,
 };
+use crate::serve::{InferenceServer, ServingShape};
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
 use crate::state::SampleState;
 use crate::strategies::sb::SbSelector;
 use crate::strategies::Strategy;
 use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// The online inference lane's moving parts, held together so they spawn
+/// and shut down as one unit: the HTTP front end, the serving replica's
+/// lane, and the snapshot hub the epoch pipeline publishes into.
+///
+/// Field order is drop order: the HTTP server drains first (no new
+/// queries), then the lane joins, then the hub's retained publications
+/// release.
+pub struct ServeRuntime {
+    /// The HTTP front end (`--serve <addr>`); reports the bound address.
+    pub server: InferenceServer,
+    /// The serving replica's lane; its failures fold in as serve-lane
+    /// [`ServiceEvent::Error`]s.
+    pub lane: ServeLane,
+    /// The publication hub: one atomically-swapped params snapshot per
+    /// epoch.
+    pub hub: Arc<SnapshotHub>,
+}
 
 /// Runs one experiment end to end: plans every epoch (strategy, LR,
 /// sharding) and drives the engine / worker pool through the PJRT
@@ -72,6 +92,11 @@ pub struct Trainer {
     /// The async eval + checkpoint lanes (spawned lazily on first use
     /// when `cfg.service_lane`; `None` otherwise).
     pub(crate) service: Option<ServiceLanes>,
+    /// The online inference lane (hub + serving replica + HTTP server),
+    /// spawned when `cfg.serve` names an address; `None` otherwise.
+    /// Public so the serving test battery can substitute a scripted
+    /// [`ServeRuntime`] (e.g. a fault-injected replica) under a real run.
+    pub serve: Option<ServeRuntime>,
     pub(crate) strategy: Box<dyn Strategy>,
     pub(crate) rng: Rng,
     pub(crate) sb: SbSelector,
@@ -142,6 +167,7 @@ impl Trainer {
             schedule_offset: 0,
             ckpt_pool: None,
             service: None,
+            serve: None,
             cfg,
             exec,
             data,
@@ -194,6 +220,13 @@ impl Trainer {
         if self.cfg.service_lane {
             self.ensure_service()?;
         }
+        // Same reasoning for the inference lane: the serving replica and
+        // the HTTP bind both happen before epoch 0, so `--serve` failures
+        // (bad address, port in use) abort up front and /healthz is
+        // reachable (503 "starting") from the first training step.
+        if self.cfg.serve.is_some() {
+            self.ensure_serve()?;
+        }
         let mut records = Vec::with_capacity(self.cfg.epochs.saturating_sub(start_epoch));
         for epoch in start_epoch..self.cfg.epochs {
             let rec = self.run_epoch(epoch)?;
@@ -216,10 +249,12 @@ impl Trainer {
             // by epoch, so fold-in is deterministic whichever of the two
             // lanes finished first)
             self.fold_service(&mut records, start_epoch, false)?;
+            self.fold_serve(&mut records, start_epoch)?;
         }
         // final barrier: every outstanding async eval/checkpoint completes
         // before the run result is assembled
         self.fold_service(&mut records, start_epoch, true)?;
+        self.fold_serve(&mut records, start_epoch)?;
         Ok(RunResult::from_records(
             &self.cfg.name,
             &self.strategy.name(),
@@ -261,6 +296,83 @@ impl Trainer {
             self.engine.batch(),
             writer,
         )?);
+        Ok(())
+    }
+
+    /// Spawn the online inference lane if `cfg.serve` names an address
+    /// and it is not up yet: a snapshot hub, a serving replica on its own
+    /// lane thread (the same `ReplicaBuilder` contract the eval lane
+    /// uses), and the HTTP front end.  The dataset's geometry becomes the
+    /// serving shape, so malformed query payloads are rejected at the
+    /// HTTP layer and never reach the replica.
+    pub(crate) fn ensure_serve(&mut self) -> anyhow::Result<()> {
+        if self.serve.is_some() {
+            return Ok(());
+        }
+        let Some(addr) = self.cfg.serve.clone() else { return Ok(()) };
+        let hub = Arc::new(SnapshotHub::new());
+        let builder = crate::engine::DataParallel::replica_builder(&self.exec)?;
+        let lane = ServeLane::spawn(builder, hub.clone())?;
+        let shape = ServingShape {
+            input_dim: self.data.train.sample_dim,
+            classes: self.data.train.classes,
+        };
+        let server = InferenceServer::start(
+            &addr,
+            self.cfg.serve_threads,
+            hub.clone(),
+            lane.client(),
+            Some(shape),
+        )?;
+        crate::info!("[serve] listening on {}", server.addr());
+        self.serve = Some(ServeRuntime { server, lane, hub });
+        Ok(())
+    }
+
+    /// The inference server's bound address (`None` when `--serve` is
+    /// off or the lane has not spawned yet).  Port 0 resolves to the
+    /// actual port here.
+    pub fn serve_addr(&self) -> Option<std::net::SocketAddr> {
+        self.serve.as_ref().map(|s| s.server.addr())
+    }
+
+    /// Fold the inference lane's activity into the epoch records at a
+    /// barrier: queries answered since the last fold attribute to the
+    /// newest record, and serving-replica failures ride the same
+    /// fault-policy contract as the eval/checkpoint lanes — named abort
+    /// under `fail`, count-and-continue (with `/healthz` degraded) under
+    /// `elastic`.
+    fn fold_serve(
+        &mut self,
+        records: &mut [EpochRecord],
+        start_epoch: usize,
+    ) -> anyhow::Result<()> {
+        let Some(serve) = self.serve.as_mut() else { return Ok(()) };
+        let queries = serve.hub.take_queries();
+        if let Some(rec) = records.last_mut() {
+            rec.serve_queries += queries;
+        }
+        for ev in serve.lane.try_events() {
+            if let ServiceEvent::Error { epoch, lane, message, secs } = ev {
+                anyhow::ensure!(
+                    self.cfg.fault_policy == FaultPolicy::Elastic,
+                    "service {} lane failed at epoch {epoch}: {message} \
+                     (--fault-policy fail aborts; elastic counts the \
+                     failure and continues)",
+                    lane.name()
+                );
+                if let Some(rec) = records
+                    .get_mut(epoch.saturating_sub(start_epoch).min(records.len().saturating_sub(1)))
+                {
+                    rec.service_errors += 1;
+                    rec.time_service += secs;
+                }
+                crate::info!(
+                    "[serve] epoch {epoch:>3}  {} lane error: {message}",
+                    lane.name()
+                );
+            }
+        }
         Ok(())
     }
 

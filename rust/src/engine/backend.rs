@@ -25,7 +25,7 @@
 //! [`crate::runtime::BatchStats`] + exported state out).
 
 use super::snapshot::{Snapshot, SnapshotTier};
-use crate::runtime::BatchStats;
+use crate::runtime::{BatchStats, EmbedStats};
 
 /// One device step-execution endpoint: a full SGD step or a forward-only
 /// stats pass over one assembled batch.  Buffers follow the
@@ -43,6 +43,15 @@ pub trait StepBackend {
 
     /// Forward-only stats (refresh, eval, SB candidate pass).
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats>;
+
+    /// Forward pass that additionally returns penultimate-layer features
+    /// and class probabilities (the serving lane's `/v1/embed` endpoint;
+    /// future cheap-proxy scoring).  Defaults to an error — only backends
+    /// with an embedding head (a compiled `fwd_embed` artifact) override
+    /// it, and callers surface the error instead of inventing features.
+    fn fwd_embed(&mut self, _x: &[f32], _y: &[i32]) -> anyhow::Result<EmbedStats> {
+        anyhow::bail!("this backend has no embedding head (no fwd_embed artifact)")
+    }
 }
 
 /// Host-side snapshot round-trip of a backend's mutable model state as
@@ -183,6 +192,10 @@ impl StepBackend for Box<dyn ReplicaBackend> {
 
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
         (**self).fwd_stats(x, y)
+    }
+
+    fn fwd_embed(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<EmbedStats> {
+        (**self).fwd_embed(x, y)
     }
 }
 

@@ -227,6 +227,11 @@ impl<B: StepBackend> StepBackend for ChaosBackend<B> {
         self.inject()?;
         self.inner.fwd_stats(x, y)
     }
+
+    fn fwd_embed(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<crate::runtime::EmbedStats> {
+        self.inject()?;
+        self.inner.fwd_embed(x, y)
+    }
 }
 
 impl<B: StateExchange> StateExchange for ChaosBackend<B> {

@@ -63,12 +63,17 @@
 //! [`Snapshot`] / [`SnapshotTier`] pair and docs/snapshots.md the
 //! lifecycle.  Async eval is bitwise identical to sync eval (the lane
 //! evaluates an exact snapshot with the identical accumulation order) —
-//! enforced by `tests/service_lane_determinism.rs`.
+//! enforced by `tests/service_lane_determinism.rs`.  A third,
+//! query-driven lane lives in [`serve`]: the online inference lane's
+//! [`SnapshotHub`] (atomically-swapped live snapshot publications) and
+//! [`ServeLane`] (the serving replica), fronted by the HTTP layer in
+//! [`crate::serve`]; see docs/serving.md.
 
 pub mod backend;
 pub mod chaos;
 pub mod modes;
 pub mod pool;
+pub mod serve;
 pub mod service;
 pub mod snapshot;
 pub mod testbed;
@@ -80,6 +85,7 @@ pub use modes::{
     RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
+pub use serve::{Published, ServeAnswer, ServeClient, ServeLane, SnapshotHub};
 pub use service::{CheckpointWriter, ServiceEvent, ServiceLaneKind, ServiceLanes};
 pub use snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 

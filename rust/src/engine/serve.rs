@@ -1,0 +1,488 @@
+//! The online inference lane: live snapshot publication + a serving
+//! replica, off the training critical path.
+//!
+//! Two pieces (the HTTP surface lives in [`crate::serve`]):
+//!
+//! * [`SnapshotHub`] — the publication point.  The epoch pipeline
+//!   publishes each epoch's params-tier snapshot here (one atomic
+//!   pointer swap); query threads read the latest publication with a
+//!   **single atomic load and no lock**, so a swap can never expose a
+//!   torn `(epoch, digests, snapshot)` triple — the epoch a response
+//!   reports is always the epoch whose parameters answered it.
+//! * [`ServeLane`] — the replica owner.  Like the eval lane
+//!   (`engine/service.rs`), the serving replica is built *on* its lane
+//!   thread via the [`ReplicaBuilder`] contract (PJRT state is not
+//!   `Send`); query threads hand it jobs through a [`ServeClient`] and
+//!   block on a per-query reply channel.  The replica re-imports
+//!   parameters only when the publication under a query differs from
+//!   the one it last synced — queries between publications pay no
+//!   import.
+//!
+//! # Failure contract
+//!
+//! A backend failure on the lane (a killed replica, a failed import)
+//! marks the hub **degraded** (surfaced by `/healthz`), answers the
+//! in-flight query with the error, and emits a named
+//! [`ServiceEvent::Error`] tagged [`ServiceLaneKind::Serve`] into the
+//! fold-in stream the trainer drains at each epoch barrier — so
+//! `--fault-policy fail` aborts the run with a clear message while
+//! `elastic` counts the failure and keeps training.  Client-side input
+//! validation happens in the HTTP layer *before* a job is submitted, so
+//! malformed queries never reach the device and never degrade the lane.
+//!
+//! # Determinism contract
+//!
+//! Serving is read-only: the lane touches only its own replica and the
+//! immutable published snapshots, so a run with `--serve` on is bitwise
+//! identical to one with it off (`tests/inference_serving.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+use super::backend::{ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
+use super::service::{ServiceEvent, ServiceLaneKind};
+use super::snapshot::{SharedSnapshot, Snapshot};
+use crate::runtime::BatchStats;
+use crate::util::sha256::sha256_hex;
+use crate::util::timer::Timer;
+
+/// SHA-256 digest of each parameter leaf's little-endian `f32` bytes —
+/// the same byte layout the checkpoint store hashes, so a served digest
+/// is comparable to a stored leaf's.
+pub fn leaf_digests(snap: &Snapshot) -> Vec<String> {
+    snap.params()
+        .iter()
+        .map(|leaf| {
+            let mut bytes = Vec::with_capacity(leaf.len() * 4);
+            for v in leaf {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            sha256_hex(&bytes)
+        })
+        .collect()
+}
+
+/// One publication: everything a response reports about the snapshot it
+/// was answered against, bundled so a single pointer load observes all
+/// of it or none of it.
+#[derive(Debug)]
+pub struct Published {
+    /// The epoch this snapshot was exported at.
+    pub epoch: usize,
+    /// Monotonic publication sequence number (the lane's sync key —
+    /// distinct publications of the same epoch re-import).
+    pub seq: u64,
+    /// Per-leaf SHA-256 digests of the parameter section.
+    pub digests: Vec<String>,
+    /// The published snapshot itself.
+    pub snapshot: SharedSnapshot,
+}
+
+/// The atomically-swapped publication point (see module docs).
+///
+/// Readers pay one `Acquire` pointer load per query; the publisher pays
+/// a short retention-list lock per epoch.  Every publication is retained
+/// for the hub's lifetime (bounded: one per epoch), which is what makes
+/// the lock-free read sound — a loaded pointer can never dangle.
+pub struct SnapshotHub {
+    current: AtomicPtr<Published>,
+    retained: Mutex<Vec<Arc<Published>>>,
+    seq: AtomicU64,
+    publishes: AtomicUsize,
+    queries: AtomicUsize,
+    degraded: AtomicBool,
+}
+
+impl Default for SnapshotHub {
+    fn default() -> Self {
+        SnapshotHub::new()
+    }
+}
+
+impl SnapshotHub {
+    /// An empty hub: not ready until the first [`SnapshotHub::publish`].
+    pub fn new() -> Self {
+        SnapshotHub {
+            current: AtomicPtr::new(std::ptr::null_mut()),
+            retained: Mutex::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            publishes: AtomicUsize::new(0),
+            queries: AtomicUsize::new(0),
+            degraded: AtomicBool::new(false),
+        }
+    }
+
+    /// Publish `snap` as the live snapshot for `epoch`.  Readers switch
+    /// to it atomically; in-flight queries keep the publication they
+    /// already loaded.
+    pub fn publish(&self, epoch: usize, snap: SharedSnapshot) -> Arc<Published> {
+        let published = Arc::new(Published {
+            epoch,
+            seq: self.seq.fetch_add(1, Ordering::Relaxed) + 1,
+            digests: leaf_digests(&snap),
+            snapshot: snap,
+        });
+        let raw = Arc::as_ptr(&published) as *mut Published;
+        // retain BEFORE exposing the pointer: a reader that loads it must
+        // always find the allocation alive
+        self.retained.lock().unwrap().push(published.clone());
+        self.current.store(raw, Ordering::Release);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        published
+    }
+
+    /// The latest publication, or `None` before the first publish.
+    /// Lock-free: one atomic load, then an `Arc` refcount bump.
+    pub fn latest(&self) -> Option<Arc<Published>> {
+        let p = self.current.load(Ordering::Acquire);
+        if p.is_null() {
+            return None;
+        }
+        // SAFETY: `p` was produced by `Arc::as_ptr` on a publication that
+        // `retained` keeps alive for the hub's whole lifetime, so the
+        // strong count is >= 1 here and bumping it hands out an owned
+        // handle to a live allocation.
+        unsafe {
+            Arc::increment_strong_count(p);
+            Some(Arc::from_raw(p))
+        }
+    }
+
+    /// Whether a snapshot has been published (the `/healthz` readiness
+    /// signal).
+    pub fn ready(&self) -> bool {
+        !self.current.load(Ordering::Acquire).is_null()
+    }
+
+    /// Total publications so far.
+    pub fn publishes(&self) -> usize {
+        self.publishes.load(Ordering::Relaxed)
+    }
+
+    /// Count one answered query (the serve lane calls this per job).
+    pub fn record_query(&self) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queries answered since the last call (the per-epoch fold: each
+    /// epoch record absorbs the delta).
+    pub fn take_queries(&self) -> usize {
+        self.queries.swap(0, Ordering::Relaxed)
+    }
+
+    /// Mark the serving path degraded (a replica failure under the
+    /// elastic fault policy) or recovered.
+    pub fn set_degraded(&self, degraded: bool) {
+        self.degraded.store(degraded, Ordering::Release);
+    }
+
+    /// Whether the serving path is degraded.
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Acquire)
+    }
+}
+
+/// One forward query against a specific publication.
+struct ServeJob {
+    published: Arc<Published>,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    embed: bool,
+    resp: Sender<anyhow::Result<ServeAnswer>>,
+}
+
+/// What a served query returns: the stats (and, for embed queries, the
+/// feature/probability planes) plus the epoch they were computed at.
+#[derive(Clone, Debug)]
+pub struct ServeAnswer {
+    /// Epoch of the publication that answered the query.
+    pub epoch: usize,
+    /// Per-slot loss / correct / confidence.
+    pub stats: BatchStats,
+    /// `[B, embed_dim]` row-major features (embed queries only).
+    pub emb: Option<Vec<f32>>,
+    /// `[B, classes]` row-major probabilities (embed queries only).
+    pub probs: Option<Vec<f32>>,
+}
+
+enum ServeReady {
+    Ok,
+    Fail(String),
+}
+
+/// A cloneable handle HTTP workers use to hand queries to the lane and
+/// block for the answer.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: Sender<ServeJob>,
+}
+
+impl ServeClient {
+    /// Run one forward query on the serving replica against `published`
+    /// and wait for the answer.  `embed` selects `fwd_embed` over
+    /// `fwd_stats`.
+    pub fn query(
+        &self,
+        published: Arc<Published>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        embed: bool,
+    ) -> anyhow::Result<ServeAnswer> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(ServeJob { published, x, y, embed, resp })
+            .map_err(|_| anyhow::anyhow!("serve lane is gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("serve lane dropped the query"))?
+    }
+}
+
+/// The serving replica's lane: owns the replica thread, surfaces its
+/// failures as fold-in events, and vends [`ServeClient`] handles.
+pub struct ServeLane {
+    tx: Option<Sender<ServeJob>>,
+    events_rx: Receiver<ServiceEvent>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeLane {
+    /// Spawn the lane: the replica builds on the lane thread (blocking
+    /// this call until ready, so build failures surface here), then the
+    /// thread serves queries until every [`ServeClient`] and the lane
+    /// itself are dropped.
+    pub fn spawn(build: ReplicaBuilder, hub: Arc<SnapshotHub>) -> anyhow::Result<Self> {
+        let (tx, rx) = channel::<ServeJob>();
+        let (events_tx, events_rx) = channel::<ServiceEvent>();
+        let (ready_tx, ready_rx) = channel::<ServeReady>();
+        let handle = std::thread::Builder::new()
+            .name("service-serve".into())
+            .spawn(move || lane_main(build, rx, events_tx, ready_tx, hub))?;
+        match ready_rx.recv() {
+            Ok(ServeReady::Ok) => {
+                Ok(ServeLane { tx: Some(tx), events_rx, handle: Some(handle) })
+            }
+            Ok(ServeReady::Fail(e)) => anyhow::bail!("serve lane spawn failed: {e}"),
+            Err(_) => anyhow::bail!("serve lane died during spawn"),
+        }
+    }
+
+    /// A query handle for HTTP workers (cloneable, `Send`).
+    pub fn client(&self) -> ServeClient {
+        ServeClient { tx: self.tx.as_ref().expect("lane alive until drop").clone() }
+    }
+
+    /// Non-blocking: every lane failure reported since the last call,
+    /// as fold-in [`ServiceEvent::Error`]s.
+    pub fn try_events(&mut self) -> Vec<ServiceEvent> {
+        let mut out = Vec::new();
+        loop {
+            match self.events_rx.try_recv() {
+                Ok(ev) => out.push(ev),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+}
+
+impl Drop for ServeLane {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // disconnect; the lane exits once clients are gone
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lane thread body: build the replica, then answer queries.  Parameters
+/// re-import only when the query's publication differs from the last
+/// synced one, so steady-state queries are pure forwards.
+fn lane_main(
+    build: ReplicaBuilder,
+    rx: Receiver<ServeJob>,
+    events_tx: Sender<ServiceEvent>,
+    ready_tx: Sender<ServeReady>,
+    hub: Arc<SnapshotHub>,
+) {
+    let mut replica = match build() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = ready_tx.send(ServeReady::Fail(e.to_string()));
+            return;
+        }
+    };
+    if ready_tx.send(ServeReady::Ok).is_err() {
+        return;
+    }
+    let mut synced: Option<u64> = None;
+    while let Ok(job) = rx.recv() {
+        let t = Timer::start();
+        let answer = serve_one(replica.as_mut(), &mut synced, &job);
+        hub.record_query();
+        if let Err(e) = &answer {
+            // a backend failure, not a client mistake (the HTTP layer
+            // validates inputs before submitting): degrade the health
+            // signal and put a named error in the fold-in stream
+            hub.set_degraded(true);
+            let _ = events_tx.send(ServiceEvent::Error {
+                epoch: job.published.epoch,
+                lane: ServiceLaneKind::Serve,
+                message: e.to_string(),
+                secs: t.elapsed_s(),
+            });
+        }
+        let _ = job.resp.send(answer);
+    }
+}
+
+fn serve_one(
+    replica: &mut dyn ReplicaBackend,
+    synced: &mut Option<u64>,
+    job: &ServeJob,
+) -> anyhow::Result<ServeAnswer> {
+    if *synced != Some(job.published.seq) {
+        replica.import_params(job.published.snapshot.params())?;
+        *synced = Some(job.published.seq);
+    }
+    let epoch = job.published.epoch;
+    if job.embed {
+        let es = replica.fwd_embed(&job.x, &job.y)?;
+        Ok(ServeAnswer { epoch, stats: es.stats, emb: Some(es.emb), probs: Some(es.probs) })
+    } else {
+        let stats = replica.fwd_stats(&job.x, &job.y)?;
+        Ok(ServeAnswer { epoch, stats, emb: None, probs: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::chaos::{ChaosBackend, ChaosPlan};
+    use crate::engine::testbed::MockBackend;
+    use crate::engine::DataParallel;
+
+    fn snap(param: f32) -> SharedSnapshot {
+        Arc::new(Snapshot::params_only(vec![vec![param]]))
+    }
+
+    #[test]
+    fn hub_starts_unready_and_publishes_atomically() {
+        let hub = SnapshotHub::new();
+        assert!(!hub.ready());
+        assert!(hub.latest().is_none());
+        let p = hub.publish(3, snap(1.25));
+        assert!(hub.ready());
+        assert_eq!(p.epoch, 3);
+        assert_eq!(p.digests.len(), 1);
+        let got = hub.latest().unwrap();
+        assert_eq!(got.epoch, 3);
+        assert_eq!(got.seq, p.seq);
+        assert_eq!(got.digests, p.digests);
+        assert_eq!(hub.publishes(), 1);
+    }
+
+    #[test]
+    fn latest_always_pairs_epoch_with_its_digests() {
+        // a small in-process hammer: writers swap publications while
+        // readers assert the (epoch, digests) pairing is never torn
+        let hub = Arc::new(SnapshotHub::new());
+        let epochs = 16usize;
+        let expected: Vec<Vec<String>> = (0..epochs)
+            .map(|e| leaf_digests(&Snapshot::params_only(vec![vec![e as f32 + 0.5]])))
+            .collect();
+        hub.publish(0, snap(0.5));
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let hub = hub.clone();
+                let expected = expected.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut seen = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        let p = hub.latest().unwrap();
+                        assert_eq!(p.digests, expected[p.epoch], "torn at epoch {}", p.epoch);
+                        seen += 1;
+                    }
+                    seen
+                })
+            })
+            .collect();
+        for e in 1..epochs {
+            hub.publish(e, snap(e as f32 + 0.5));
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: usize = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn lane_answers_against_the_published_snapshot() {
+        let hub = Arc::new(SnapshotHub::new());
+        let be = MockBackend::new();
+        let lane = ServeLane::spawn(be.replica_builder().unwrap(), hub.clone()).unwrap();
+        let client = lane.client();
+        let p1 = hub.publish(0, snap(0.5));
+        let a1 = client.query(p1, vec![0.25, 0.5], vec![1], false).unwrap();
+        assert_eq!(a1.epoch, 0);
+        // direct reference: a fresh backend with the same params
+        let mut direct = MockBackend::new();
+        direct.import_params(&[vec![0.5]]).unwrap();
+        let want = direct.fwd_stats(&[0.25, 0.5], &[1]).unwrap();
+        assert_eq!(a1.stats.loss[0].to_bits(), want.loss[0].to_bits());
+        // a new publication re-syncs the replica
+        let p2 = hub.publish(1, snap(2.5));
+        let a2 = client.query(p2, vec![0.25, 0.5], vec![1], false).unwrap();
+        assert_eq!(a2.epoch, 1);
+        assert_ne!(a2.stats.loss[0].to_bits(), a1.stats.loss[0].to_bits());
+        assert_eq!(hub.take_queries(), 2);
+        assert_eq!(hub.take_queries(), 0);
+    }
+
+    #[test]
+    fn embed_queries_ride_the_same_lane() {
+        let hub = Arc::new(SnapshotHub::new());
+        let be = MockBackend::new();
+        let lane = ServeLane::spawn(be.replica_builder().unwrap(), hub.clone()).unwrap();
+        let p = hub.publish(0, snap(1.5));
+        let ans = lane.client().query(p, vec![0.25, 0.5, 0.1, 0.2], vec![1, 2], true).unwrap();
+        let emb = ans.emb.unwrap();
+        assert_eq!(emb.len(), 4); // 2 slots x 2 features
+        assert_eq!(ans.probs.unwrap().len(), 2);
+        assert_eq!(emb[1].to_bits(), (emb[0] * 1.5).to_bits());
+    }
+
+    #[test]
+    fn killed_replica_degrades_and_reports_a_serve_error() {
+        let hub = Arc::new(SnapshotHub::new());
+        // rank-0 replica dies on its second device call (import counts
+        // no steps; fwd_stats does)
+        let primary = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(0, 1));
+        let mut lane =
+            ServeLane::spawn(primary.replica_builder().unwrap(), hub.clone()).unwrap();
+        let client = lane.client();
+        let p = hub.publish(2, snap(1.0));
+        assert!(client.query(p.clone(), vec![0.5], vec![1], false).is_ok());
+        assert!(!hub.degraded());
+        let err = client.query(p.clone(), vec![0.5], vec![1], false).unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
+        assert!(hub.degraded());
+        let events = lane.try_events();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            ServiceEvent::Error { epoch: 2, lane: ServiceLaneKind::Serve, message, .. } => {
+                assert!(message.contains("chaos"), "{message}");
+            }
+            other => panic!("expected a serve error event, got {other:?}"),
+        }
+        // the one-shot kill has fired; the lane keeps serving
+        assert!(client.query(p, vec![0.5], vec![1], false).is_ok());
+    }
+
+    #[test]
+    fn failed_builder_surfaces_at_spawn() {
+        let build: ReplicaBuilder = Box::new(|| anyhow::bail!("no artifacts"));
+        assert!(ServeLane::spawn(build, Arc::new(SnapshotHub::new())).is_err());
+    }
+}

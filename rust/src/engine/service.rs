@@ -81,6 +81,11 @@ pub enum ServiceLaneKind {
     Eval,
     /// The checkpoint-serialization lane (owns the writer).
     Checkpoint,
+    /// The online inference lane (owns the serving replica; see
+    /// [`crate::engine::serve`]).  It is query-driven rather than
+    /// FIFO-submitted, but its failures ride the same
+    /// [`ServiceEvent::Error`] fold-in stream.
+    Serve,
 }
 
 impl ServiceLaneKind {
@@ -89,6 +94,7 @@ impl ServiceLaneKind {
         match self {
             ServiceLaneKind::Eval => "eval",
             ServiceLaneKind::Checkpoint => "checkpoint",
+            ServiceLaneKind::Serve => "serve",
         }
     }
 }
@@ -149,8 +155,8 @@ impl ServiceEvent {
         }
     }
 
-    /// Barrier fold-in key: epoch first, eval before checkpoint within an
-    /// epoch (the synchronous pipeline's phase order).  A
+    /// Barrier fold-in key: epoch first, eval before checkpoint before
+    /// serve within an epoch (the synchronous pipeline's phase order).  A
     /// [`ServiceEvent::Error`] sorts where its lane's success event
     /// would have — it replaces exactly one job's completion.
     fn fold_key(&self) -> (usize, u8) {
@@ -158,7 +164,12 @@ impl ServiceEvent {
             ServiceEvent::Eval { epoch, .. } => (*epoch, 0),
             ServiceEvent::Checkpoint { epoch, .. } => (*epoch, 1),
             ServiceEvent::Error { epoch, lane, .. } => {
-                (*epoch, if *lane == ServiceLaneKind::Eval { 0 } else { 1 })
+                let slot = match lane {
+                    ServiceLaneKind::Eval => 0,
+                    ServiceLaneKind::Checkpoint => 1,
+                    ServiceLaneKind::Serve => 2,
+                };
+                (*epoch, slot)
             }
         }
     }

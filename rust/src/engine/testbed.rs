@@ -10,7 +10,7 @@
 //! reference backend for the pool's parameter-averaging mode.
 
 use super::backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
-use crate::runtime::BatchStats;
+use crate::runtime::{BatchStats, EmbedStats};
 
 /// Order-sensitive scalar-parameter backend (see module docs).
 #[derive(Clone, Debug)]
@@ -68,6 +68,24 @@ impl StepBackend for MockBackend {
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
         let b = y.len();
         Ok(self.stats(x, y, None, b))
+    }
+
+    /// Deterministic two-wide "embedding": per slot, the feature sum and
+    /// its product with `param` — enough structure for serving tests to
+    /// verify bitwise transport without an embedding artifact.
+    fn fwd_embed(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<EmbedStats> {
+        let b = y.len();
+        let dim = x.len() / b;
+        let stats = self.stats(x, y, None, b);
+        let mut emb = Vec::with_capacity(b * 2);
+        let mut probs = Vec::with_capacity(b);
+        for slot in 0..b {
+            let xs: f32 = x[slot * dim..(slot + 1) * dim].iter().sum();
+            emb.push(xs);
+            emb.push(xs * self.param);
+            probs.push(stats.conf[slot]);
+        }
+        Ok(EmbedStats { stats, emb, probs })
     }
 }
 

@@ -29,6 +29,7 @@ pub mod runtime;
 pub mod report;
 pub mod sampler;
 pub mod schedule;
+pub mod serve;
 pub mod state;
 pub mod strategies;
 pub mod util;

@@ -13,7 +13,7 @@
 //! --momentum --max_fraction --tau --drop_top --variant --eval_every
 //! --detailed_metrics --service-lane --checkpoint_every --checkpoint_dir
 //! --resume --checkpoint-pool --checkpoint-verify --checkpoint-compress
-//! --fault-policy --straggler-timeout-ms`
+//! --fault-policy --straggler-timeout-ms --serve --serve-threads`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -28,7 +28,8 @@ const OVERRIDE_KEYS: &[&str] = &[
     "checkpoint_every", "checkpoint_dir", "resume", "service-lane", "service_lane",
     "checkpoint_pool", "checkpoint-pool", "checkpoint_verify", "checkpoint-verify",
     "checkpoint_compress", "checkpoint-compress", "fault_policy", "fault-policy",
-    "straggler_timeout_ms", "straggler-timeout-ms",
+    "straggler_timeout_ms", "straggler-timeout-ms", "serve", "serve_threads",
+    "serve-threads",
 ];
 
 fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
@@ -198,6 +199,7 @@ Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
             --checkpoint_dir --resume --checkpoint-pool
             --checkpoint-verify --checkpoint-compress
             --fault-policy --straggler-timeout-ms
+            --serve --serve-threads
 Flags:      --verbose --quiet --out <dir>
 
 --workers N executes data-parallel: the epoch order is sharded across N
@@ -216,6 +218,14 @@ in fixed epoch order and are bitwise identical to the serial path
 (default: off).  --checkpoint_every K + --checkpoint_dir D write full
 checkpoints (params + momentum + trainer state); --resume continues a
 run from D bit-exactly.
+
+--serve <addr> serves live snapshots over HTTP while training
+(docs/serving.md): a third lane owns a serving replica subscribed to
+per-epoch params snapshots and answers POST /v1/stats, POST /v1/embed,
+GET /v1/snapshot, GET /healthz on <addr> (host:port; port 0 picks a
+free port).  --serve-threads N sizes the HTTP worker pool (default 2).
+Serving never perturbs training: records are bitwise identical with it
+on or off.
 
 --fault-policy {fail,elastic} picks what a multi-worker run does when a
 lane dies or stalls mid-epoch (docs/worker-model.md \"Fault tolerance\"):

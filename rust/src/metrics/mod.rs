@@ -112,9 +112,18 @@ pub struct EpochRecord {
     /// re-issue latency).
     pub time_reissue: f64,
     /// Service-lane job failures folded into this epoch under the
-    /// elastic fault policy (eval or checkpoint lane; under the fail
-    /// policy the first such failure aborts the run instead).
+    /// elastic fault policy (eval, checkpoint, or serve lane; under the
+    /// fail policy the first such failure aborts the run instead).
     pub service_errors: usize,
+    /// Snapshot publications to the inference lane's hub this epoch
+    /// (1 when `--serve` is on, 0 otherwise).
+    pub serve_publishes: usize,
+    /// Inference queries the serve lane answered since the previous
+    /// epoch barrier (0 when `--serve` is off or no clients queried).
+    pub serve_queries: usize,
+    /// Seconds spent exporting + publishing this epoch's snapshot to the
+    /// hub (0 when the publication reused the epoch's cached export).
+    pub time_publish: f64,
 }
 
 impl EpochRecord {
@@ -170,6 +179,9 @@ impl EpochRecord {
             ("lanes_rejoined", self.lanes_rejoined),
             ("time_reissue", self.time_reissue),
             ("service_errors", self.service_errors),
+            ("serve_publishes", self.serve_publishes),
+            ("serve_queries", self.serve_queries),
+            ("time_publish", self.time_publish),
         ];
         if let Json::Obj(m) = &mut o {
             if !self.worker_samples.is_empty() {
@@ -363,6 +375,21 @@ mod tests {
         assert_eq!(j.get("lanes_dropped").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("lanes_rejoined").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("service_errors").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn serve_fields_default_zero_and_serialize() {
+        let mut r = rec(0, 0.5, 1.0);
+        assert_eq!(r.serve_publishes, 0);
+        assert_eq!(r.serve_queries, 0);
+        assert_eq!(r.time_publish, 0.0);
+        r.serve_publishes = 1;
+        r.serve_queries = 12;
+        r.time_publish = 0.125;
+        let j = r.to_json();
+        assert_eq!(j.get("serve_publishes").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("serve_queries").unwrap().as_usize(), Some(12));
+        assert_eq!(j.get("time_publish").unwrap().as_f64(), Some(0.125));
     }
 
     #[test]

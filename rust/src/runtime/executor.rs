@@ -388,6 +388,10 @@ impl crate::engine::StepBackend for ModelExecutor {
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
         ModelExecutor::fwd_stats(self, x, y)
     }
+
+    fn fwd_embed(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<EmbedStats> {
+        ModelExecutor::fwd_embed(self, x, y)
+    }
 }
 
 /// The export/import round-trip preserves f32 bit patterns exactly

@@ -1,0 +1,169 @@
+//! Minimal HTTP/1.1 wire handling for the inference endpoints.
+//!
+//! Just enough protocol for `curl` and the serving test battery: parse
+//! one request (method, path, headers, `Content-Length`-framed body),
+//! write one JSON response, close the connection.  No keep-alive, no
+//! chunked encoding, no TLS — the lane serves JSON over plain sockets
+//! behind whatever front end the deployment puts in front of it.
+//!
+//! Everything read off the socket is untrusted: the request line and
+//! header block are size-capped, the body length is bounded, and
+//! malformed framing returns an error (the caller answers 400) instead
+//! of panicking or reading unbounded memory.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Header block cap: a request line + headers larger than this is
+/// rejected outright.
+const MAX_HEAD: usize = 16 * 1024;
+
+/// Body cap (batched f32 matrices in JSON are ~10 bytes/element; this
+/// admits millions of elements while bounding a hostile
+/// `Content-Length`).
+const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, ...), as sent.
+    pub method: String,
+    /// Request path (query strings are not split off; endpoints match
+    /// the full path).
+    pub path: String,
+    /// The request body (empty when no `Content-Length` was sent).
+    pub body: Vec<u8>,
+}
+
+/// Read and parse one HTTP/1.1 request from `stream`.
+pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
+    // read until the end of the header block
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    let split = loop {
+        if let Some(pos) = find_head_end(&head) {
+            break pos;
+        }
+        anyhow::ensure!(head.len() <= MAX_HEAD, "header block exceeds {MAX_HEAD} bytes");
+        let n = stream.read(&mut buf)?;
+        anyhow::ensure!(n > 0, "connection closed mid-request");
+        head.extend_from_slice(&buf[..n]);
+    };
+    let (head_bytes, mut rest) = {
+        let (h, r) = head.split_at(split);
+        (h.to_vec(), r[4..].to_vec()) // skip the \r\n\r\n
+    };
+    let head_str = std::str::from_utf8(&head_bytes)
+        .map_err(|_| anyhow::anyhow!("non-utf8 request head"))?;
+    let mut lines = head_str.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    anyhow::ensure!(
+        !method.is_empty() && path.starts_with('/'),
+        "malformed request line {request_line:?}"
+    );
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad content-length {value:?}"))?;
+            }
+        }
+    }
+    anyhow::ensure!(content_length <= MAX_BODY, "body exceeds {MAX_BODY} bytes");
+    // the body: whatever arrived behind the head, then the remainder
+    anyhow::ensure!(rest.len() <= content_length, "body longer than content-length");
+    let mut body = Vec::with_capacity(content_length);
+    body.append(&mut rest);
+    while body.len() < content_length {
+        let want = (content_length - body.len()).min(buf.len());
+        let n = stream.read(&mut buf[..want])?;
+        anyhow::ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&buf[..n]);
+    }
+    Ok(Request { method, path, body })
+}
+
+fn find_head_end(bytes: &[u8]) -> Option<usize> {
+    bytes.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write one JSON response and flush.  `Connection: close` — the caller
+/// drops the stream afterwards.
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Round-trip one request through a real socket pair.
+    fn roundtrip(raw: &[u8]) -> anyhow::Result<Request> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let req = read_request(&mut stream);
+        writer.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = roundtrip(
+            b"POST /v1/stats HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"x\":[1]}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/stats");
+        assert_eq!(req.body, b"{\"x\":[1]}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = roundtrip(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_framing() {
+        assert!(roundtrip(b"\r\n\r\n").is_err());
+        assert!(roundtrip(b"GET\r\n\r\n").is_err());
+        assert!(roundtrip(b"POST /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
+        // hostile content-length far past the cap
+        assert!(roundtrip(
+            b"POST /x HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n"
+        )
+        .is_err());
+        // body truncated below the declared length
+        assert!(roundtrip(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").is_err());
+    }
+}

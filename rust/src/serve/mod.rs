@@ -1,0 +1,510 @@
+//! The online inference endpoint: HTTP/JSON over the live snapshot hub.
+//!
+//! This is the user-facing half of the inference lane (the replica and
+//! the publication hub live in [`crate::engine::serve`]): a minimal
+//! `std::net::TcpListener` server with a small worker pool, speaking
+//! JSON via [`crate::util::json`] — no external dependencies.  Wired
+//! through `--serve <addr>` / `--serve-threads N`; see docs/serving.md
+//! for schemas and curl examples.
+//!
+//! # Endpoints
+//!
+//! | Endpoint           | Method | Purpose                                     |
+//! |--------------------|--------|---------------------------------------------|
+//! | `/healthz`         | GET    | readiness (first snapshot published) + degradation |
+//! | `/v1/snapshot`     | GET    | live publication: epoch, tier, leaf digests |
+//! | `/v1/stats`        | POST   | batched forward stats (`fwd_stats`)         |
+//! | `/v1/embed`        | POST   | batched features + probabilities (`fwd_embed`) |
+//!
+//! `POST` bodies are `{"x": [[f32; dim]; B], "y": [label; B]}` (a single
+//! flat `x` row is accepted as `B = 1`).  Responses carry the epoch of
+//! the publication that answered, so a client can correlate with
+//! `/v1/snapshot` — and because the hub swap is atomic, that pairing is
+//! never torn (`tests/inference_serving.rs`).
+//!
+//! # Query-path properties
+//!
+//! Workers read the hub with one atomic load (no lock), validate the
+//! payload *before* it can reach the device, and serialize actual
+//! forwards through the lane's single replica.  Float transport is
+//! lossless: the JSON serializer emits shortest-round-trip numbers, so
+//! served logits re-parse to the exact bits the device produced.
+
+pub mod http;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::serve::{ServeClient, SnapshotHub};
+use crate::jobj;
+use crate::util::json::{self, Json};
+
+/// Per-connection socket timeout: a stalled client can hold a worker at
+/// most this long.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The model's input/label geometry, used to validate query payloads
+/// before they are submitted to the replica — a malformed client request
+/// must never turn into a device error (which would degrade the lane).
+#[derive(Clone, Copy, Debug)]
+pub struct ServingShape {
+    /// Flattened per-sample feature count (`x` row length).
+    pub input_dim: usize,
+    /// Number of classes (`y` entries must be in `0..classes`).
+    pub classes: usize,
+}
+
+/// The HTTP front end: an accept thread feeding `--serve-threads` worker
+/// threads over a shared queue.  Dropping the server shuts it down and
+/// joins every thread.
+pub struct InferenceServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Ctx {
+    hub: Arc<SnapshotHub>,
+    client: ServeClient,
+    shape: Option<ServingShape>,
+}
+
+impl InferenceServer {
+    /// Bind `addr` (port 0 picks a free port — the bound address is
+    /// reported by [`InferenceServer::addr`]) and start serving with
+    /// `threads` workers.  `shape`, when known, turns client payload
+    /// mistakes into 400s instead of device errors.
+    pub fn start(
+        addr: &str,
+        threads: usize,
+        hub: Arc<SnapshotHub>,
+        client: ServeClient,
+        shape: Option<ServingShape>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(threads >= 1, "the inference server needs at least one worker");
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("--serve {addr}: bind failed: {e}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let ctx = Arc::new(Ctx { hub, client, shape });
+        let accept = {
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_main(listener, conn_tx, shutdown))?
+        };
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let conn_rx = conn_rx.clone();
+            let ctx = ctx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_main(conn_rx, ctx))?,
+            );
+        }
+        Ok(InferenceServer { addr: local, shutdown, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a dummy connection
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // the accept thread dropped conn_tx; workers drain and exit
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_main(listener: TcpListener, conn_tx: Sender<TcpStream>, shutdown: Arc<AtomicBool>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return; // drops conn_tx, releasing the workers
+                }
+                if conn_tx.send(stream).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn worker_main(conn_rx: Arc<Mutex<Receiver<TcpStream>>>, ctx: Arc<Ctx>) {
+    loop {
+        // hold the queue lock only for the dequeue, never during I/O
+        let stream = match conn_rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        handle_conn(stream, &ctx);
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let (status, body) = match http::read_request(&mut stream) {
+        Ok(req) => route(ctx, &req),
+        Err(e) => (400, error_body(&format!("bad request: {e}"))),
+    };
+    let _ = http::write_response(&mut stream, status, &body.to_compact());
+}
+
+fn route(ctx: &Ctx, req: &http::Request) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => health(ctx),
+        ("GET", "/v1/snapshot") => snapshot_info(ctx),
+        ("POST", "/v1/stats") => forward(ctx, &req.body, false),
+        ("POST", "/v1/embed") => forward(ctx, &req.body, true),
+        (_, "/healthz" | "/v1/snapshot" | "/v1/stats" | "/v1/embed") => {
+            (405, error_body("method not allowed"))
+        }
+        _ => (404, error_body("no such endpoint")),
+    }
+}
+
+fn error_body(msg: &str) -> Json {
+    jobj![("error", msg)]
+}
+
+fn health(ctx: &Ctx) -> (u16, Json) {
+    match ctx.hub.latest() {
+        None => (503, jobj![("status", "starting"), ("ready", false)]),
+        Some(p) => {
+            let status = if ctx.hub.degraded() { "degraded" } else { "ok" };
+            (200, jobj![("status", status), ("ready", true), ("epoch", p.epoch)])
+        }
+    }
+}
+
+fn snapshot_info(ctx: &Ctx) -> (u16, Json) {
+    match ctx.hub.latest() {
+        None => (503, error_body("no snapshot published yet")),
+        Some(p) => (
+            200,
+            jobj![
+                ("epoch", p.epoch),
+                ("tier", p.snapshot.tier().name()),
+                ("leaves", p.digests.len()),
+                ("digests", p.digests.clone()),
+            ],
+        ),
+    }
+}
+
+fn forward(ctx: &Ctx, body: &[u8], embed: bool) -> (u16, Json) {
+    let (x, y, batch) = match decode_batch(body, ctx.shape.as_ref()) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(p) = ctx.hub.latest() else {
+        return (503, error_body("no snapshot published yet"));
+    };
+    match ctx.client.query(p, x, y, embed) {
+        Ok(ans) => {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("epoch".into(), Json::from(ans.epoch));
+            obj.insert("batch".into(), Json::from(batch));
+            obj.insert("loss".into(), Json::from(ans.stats.loss));
+            obj.insert("correct".into(), Json::from(ans.stats.correct));
+            obj.insert("conf".into(), Json::from(ans.stats.conf));
+            if let Some(emb) = ans.emb {
+                obj.insert("emb".into(), Json::from(emb));
+            }
+            if let Some(probs) = ans.probs {
+                obj.insert("probs".into(), Json::from(probs));
+            }
+            (200, Json::Obj(obj))
+        }
+        Err(e) => (500, error_body(&format!("inference failed: {e}"))),
+    }
+}
+
+/// Decode `{"x": ..., "y": ...}` into a flat row-major batch, validating
+/// against the serving shape when one is configured.  Errors are
+/// `(status, body)` responses — parse failures carry the parser's
+/// line/column.
+#[allow(clippy::type_complexity)]
+fn decode_batch(
+    body: &[u8],
+    shape: Option<&ServingShape>,
+) -> Result<(Vec<f32>, Vec<i32>, usize), (u16, Json)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, error_body("body is not utf-8")))?;
+    let v = json::parse(text).map_err(|e| {
+        (400, jobj![("error", format!("json: {}", e.msg)), ("line", e.line), ("col", e.col)])
+    })?;
+    let xs = v
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| (400, error_body("missing array field \"x\"")))?;
+    // nested [[...]; B] or one flat row
+    let rows: Vec<&[Json]> = if xs.iter().all(|r| matches!(r, Json::Arr(_))) && !xs.is_empty() {
+        xs.iter().map(|r| r.as_arr().unwrap()).collect()
+    } else {
+        vec![xs]
+    };
+    let batch = rows.len();
+    let dim = rows[0].len();
+    if dim == 0 {
+        return Err((400, error_body("empty sample row in \"x\"")));
+    }
+    let mut x = Vec::with_capacity(batch * dim);
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != dim {
+            return Err((400, error_body(&format!("row {i} has {} values, row 0 has {dim}", row.len()))));
+        }
+        for v in *row {
+            match v.as_f64() {
+                Some(n) => x.push(n as f32),
+                None => return Err((400, error_body("non-numeric value in \"x\""))),
+            }
+        }
+    }
+    let ys = v
+        .get("y")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| (400, error_body("missing array field \"y\"")))?;
+    if ys.len() != batch {
+        return Err((
+            400,
+            error_body(&format!("\"y\" has {} labels for {batch} samples", ys.len())),
+        ));
+    }
+    let mut y = Vec::with_capacity(batch);
+    for v in ys {
+        match v.as_f64() {
+            Some(n) if n.fract() == 0.0 => y.push(n as i32),
+            _ => return Err((400, error_body("non-integer label in \"y\""))),
+        }
+    }
+    if let Some(s) = shape {
+        if dim != s.input_dim {
+            return Err((
+                400,
+                error_body(&format!("sample rows have {dim} values, model expects {}", s.input_dim)),
+            ));
+        }
+        if let Some(bad) = y.iter().find(|&&l| l < 0 || l as usize >= s.classes) {
+            return Err((
+                400,
+                error_body(&format!("label {bad} outside 0..{}", s.classes)),
+            ));
+        }
+    }
+    Ok((x, y, batch))
+}
+
+/// A tiny blocking HTTP client for the serving endpoints (tests, CI
+/// smoke, examples): one request, one `(status, body)` back.
+pub fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, String)> {
+    use std::io::{Read, Write};
+    let mut stream = TcpStream::connect_timeout(&addr, IO_TIMEOUT)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, payload) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed response: {text:?}"))?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line: {head:?}"))?;
+    Ok((status, payload.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::serve::ServeLane;
+    use crate::engine::snapshot::Snapshot;
+    use crate::engine::testbed::MockBackend;
+    use crate::engine::DataParallel;
+
+    fn server(shape: Option<ServingShape>) -> (InferenceServer, Arc<SnapshotHub>, ServeLane) {
+        let hub = Arc::new(SnapshotHub::new());
+        let lane =
+            ServeLane::spawn(MockBackend::new().replica_builder().unwrap(), hub.clone())
+                .unwrap();
+        let srv =
+            InferenceServer::start("127.0.0.1:0", 2, hub.clone(), lane.client(), shape).unwrap();
+        (srv, hub, lane)
+    }
+
+    fn publish(hub: &SnapshotHub, epoch: usize, param: f32) {
+        hub.publish(epoch, Arc::new(Snapshot::params_only(vec![vec![param]])));
+    }
+
+    #[test]
+    fn healthz_tracks_readiness_and_degradation() {
+        let (srv, hub, _lane) = server(None);
+        let (status, body) = http_request(srv.addr(), "GET", "/healthz", None).unwrap();
+        assert_eq!(status, 503, "{body}");
+        publish(&hub, 0, 1.0);
+        let (status, body) = http_request(srv.addr(), "GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(v.get("epoch").unwrap().as_usize(), Some(0));
+        hub.set_degraded(true);
+        let (_, body) = http_request(srv.addr(), "GET", "/healthz", None).unwrap();
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("status").unwrap().as_str(), Some("degraded"));
+    }
+
+    #[test]
+    fn snapshot_reports_epoch_tier_and_digests() {
+        let (srv, hub, _lane) = server(None);
+        publish(&hub, 4, 2.5);
+        let (status, body) = http_request(srv.addr(), "GET", "/v1/snapshot", None).unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("epoch").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("tier").unwrap().as_str(), Some("params"));
+        let digests = v.get("digests").unwrap().as_arr().unwrap();
+        assert_eq!(digests.len(), 1);
+        assert_eq!(digests[0].as_str().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn stats_roundtrip_is_bitwise() {
+        let (srv, hub, _lane) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
+        publish(&hub, 1, 0.75);
+        let (status, body) = http_request(
+            srv.addr(),
+            "POST",
+            "/v1/stats",
+            Some(r#"{"x": [[0.25, 0.5], [0.1, 0.2]], "y": [1, 2]}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("batch").unwrap().as_usize(), Some(2));
+        // direct reference on an identical backend
+        use crate::engine::{StateExchange, StepBackend};
+        let mut direct = MockBackend::new();
+        direct.import_params(&[vec![0.75]]).unwrap();
+        let want = direct.fwd_stats(&[0.25, 0.5, 0.1, 0.2], &[1, 2]).unwrap();
+        let got: Vec<f32> = v
+            .get("loss")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|n| n.as_f64().unwrap() as f32)
+            .collect();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> = want.loss.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    #[test]
+    fn embed_returns_feature_planes() {
+        let (srv, hub, _lane) = server(None);
+        publish(&hub, 0, 1.5);
+        let (status, body) = http_request(
+            srv.addr(),
+            "POST",
+            "/v1/embed",
+            Some(r#"{"x": [[0.25, 0.5]], "y": [1]}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("emb").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("probs").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn client_mistakes_are_400s_and_never_reach_the_device() {
+        let (srv, hub, mut lane) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
+        publish(&hub, 0, 1.0);
+        for (body, want) in [
+            ("{", "json"),
+            (r#"{"y": [1]}"#, "\"x\""),
+            (r#"{"x": [[1.0, 2.0]]}"#, "\"y\""),
+            (r#"{"x": [[1.0, 2.0]], "y": [1, 2]}"#, "labels"),
+            (r#"{"x": [[1.0, 2.0], [1.0]], "y": [1, 2]}"#, "row 1"),
+            (r#"{"x": [[1.0]], "y": [1]}"#, "model expects"),
+            (r#"{"x": [[1.0, 2.0]], "y": [7]}"#, "outside"),
+            (r#"{"x": [[1.0, 2.0]], "y": [1.5]}"#, "non-integer"),
+        ] {
+            let (status, resp) =
+                http_request(srv.addr(), "POST", "/v1/stats", Some(body)).unwrap();
+            assert_eq!(status, 400, "{body} -> {resp}");
+            assert!(resp.contains(want), "{body} -> {resp}");
+        }
+        // none of those degraded the lane or produced fold-in errors
+        assert!(!hub.degraded());
+        assert!(lane.try_events().is_empty());
+        // parse errors are positioned
+        let (_, resp) = http_request(srv.addr(), "POST", "/v1/stats", Some("{\n  broken")).unwrap();
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("line").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_named() {
+        let (srv, _hub, _lane) = server(None);
+        let (status, _) = http_request(srv.addr(), "GET", "/nope", None).unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = http_request(srv.addr(), "POST", "/healthz", None).unwrap();
+        assert_eq!(status, 405);
+        let (status, _) = http_request(srv.addr(), "POST", "/v1/stats", Some("{}")).unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn queries_before_first_publication_are_503() {
+        let (srv, _hub, _lane) = server(None);
+        let (status, _) = http_request(
+            srv.addr(),
+            "POST",
+            "/v1/stats",
+            Some(r#"{"x": [[1.0]], "y": [0]}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 503);
+        let (status, _) = http_request(srv.addr(), "GET", "/v1/snapshot", None).unwrap();
+        assert_eq!(status, 503);
+    }
+}

@@ -181,16 +181,23 @@ macro_rules! jobj {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Maximum container nesting accepted by the parser.  The parser is
+/// recursive-descent, and since the serve endpoints put it on an
+/// untrusted network boundary a hostile `[[[[…` must produce a
+/// positioned error, not a stack overflow.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
     line: usize,
     col: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn new(s: &'a str) -> Self {
-        Parser { bytes: s.as_bytes(), pos: 0, line: 1, col: 1 }
+        Parser { bytes: s.as_bytes(), pos: 0, line: 1, col: 1, depth: 0 }
     }
 
     fn err<T>(&self, msg: impl Into<String>) -> Result<T, JsonError> {
@@ -257,7 +264,11 @@ impl<'a> Parser<'a> {
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         match s.parse::<f64>() {
-            Ok(n) => Ok(Json::Num(n)),
+            // Rust parses out-of-range literals ("1e999") to ±inf instead
+            // of erroring; JSON has no infinities, so reject them here —
+            // accepting one would re-encode as null and break round-trips
+            Ok(n) if n.is_finite() => Ok(Json::Num(n)),
+            Ok(_) => self.err(format!("number {s:?} overflows f64")),
             Err(_) => self.err(format!("bad number {s:?}")),
         }
     }
@@ -311,12 +322,22 @@ impl<'a> Parser<'a> {
         })
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return self.err("nesting too deep");
+        }
+        Ok(())
+    }
+
     fn parse_arr(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.bump();
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -324,18 +345,23 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(v)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(v));
+                }
                 other => return self.err(format!("expected , or ], got {:?}", other.map(|c| c as char))),
             }
         }
     }
 
     fn parse_obj(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.bump();
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -348,7 +374,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 other => return self.err(format!("expected , or }}, got {:?}", other.map(|c| c as char))),
             }
         }
@@ -396,10 +425,16 @@ fn esc(s: &str, out: &mut String) {
 fn fmt_num(n: f64, out: &mut String) {
     if !n.is_finite() {
         out.push_str("null"); // JSON has no NaN/Inf
-    } else if n == n.trunc() && n.abs() < 1e15 {
+    } else if n == n.trunc() && n.abs() < 1e15 && !(n == 0.0 && n.is_sign_negative()) {
+        // exact integral values keep their plain form ("3", not "3.0");
+        // -0.0 must not take this path — `n as i64` drops the sign bit
         out.push_str(&format!("{}", n as i64));
     } else {
-        out.push_str(&format!("{n}"));
+        // Debug formatting is shortest-round-trip and switches to
+        // exponent notation at extreme magnitudes, so every finite f64
+        // (and any f32 widened into one) re-parses to the exact bits —
+        // served logits survive the wire losslessly.
+        out.push_str(&format!("{n:?}"));
     }
 }
 
@@ -530,5 +565,81 @@ mod tests {
     #[test]
     fn non_finite_serializes_as_null() {
         assert_eq!(Json::Num(f64::NAN).to_compact(), "null");
+    }
+
+    #[test]
+    fn integers_still_format_plain() {
+        assert_eq!(Json::Num(3.0).to_compact(), "3");
+        assert_eq!(Json::Num(-17.0).to_compact(), "-17");
+        assert_eq!(Json::Num(0.0).to_compact(), "0");
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        // regression: the integral fast path formatted -0.0 via `as i64`,
+        // printing "0" and silently flipping the sign bit on re-parse
+        let s = Json::Num(-0.0).to_compact();
+        let back = parse(&s).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "serialized as {s:?}");
+    }
+
+    #[test]
+    fn extreme_floats_roundtrip_bit_exact() {
+        for v in [
+            5e-324, // smallest denormal
+            2.2250738585072011e-308,
+            f64::MIN_POSITIVE,
+            -f64::MIN_POSITIVE,
+            1e300,
+            -1e300,
+            f64::MAX,
+            f64::MIN,
+            1e15, // just past the integral fast path
+            0.1,
+            1.0 / 3.0,
+            -0.0,
+        ] {
+            let s = Json::Num(v).to_compact();
+            let back = parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v:?} -> {s}");
+            // and the second encode is byte-stable
+            assert_eq!(Json::Num(back).to_compact(), s, "re-encode of {v:?}");
+        }
+    }
+
+    #[test]
+    fn f32_logits_roundtrip_bit_exact() {
+        // served logits are f32 widened to f64 on the wire
+        for v in [0.1f32, -0.0, f32::MIN_POSITIVE, 1e-45, 3.4e38, 1.0 / 3.0] {
+            let s = Json::from(v).to_compact();
+            let back = parse(&s).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back.to_bits(), v.to_bits(), "{v:?} -> {s}");
+        }
+    }
+
+    #[test]
+    fn overlong_numbers_are_positioned_errors_not_infinities() {
+        // regression: Rust parses out-of-range literals to ±inf, which
+        // would survive as Json::Num(inf) and re-encode as null
+        let long = format!("9{}", "0".repeat(400));
+        for src in ["1e999", "-1e999", long.as_str()] {
+            let e = parse(src).unwrap_err();
+            assert!(e.msg.contains("overflows"), "{src} -> {e}");
+            assert!(e.line >= 1 && e.col >= 1, "{src} -> {e}");
+        }
+        // underflow clamps to zero (finite), which JSON permits
+        assert_eq!(parse("1e-999").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn hostile_nesting_errors_instead_of_overflowing() {
+        let deep = "[".repeat(100_000);
+        let e = parse(&deep).unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{e}");
+        // at the bound, both container kinds still parse
+        let ok = format!("{}1{}", "[".repeat(128), "]".repeat(128));
+        assert!(parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(129), "]".repeat(129));
+        assert!(parse(&over).is_err());
     }
 }

@@ -23,10 +23,12 @@ use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
 use kakurenbo::data::Dataset;
 use kakurenbo::engine::testbed::MockBackend;
 use kakurenbo::engine::{
-    ChaosBackend, ChaosPlan, DataParallel, EvalSink, ServiceEvent, ServiceLaneKind,
-    ServiceLanes, StepMode, WorkerPool,
+    ChaosBackend, ChaosPlan, DataParallel, EvalSink, ServeLane, ServiceEvent, ServiceLaneKind,
+    ServiceLanes, SnapshotHub, StateExchange, StepBackend, StepMode, WorkerPool,
 };
 use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+use kakurenbo::serve::{http_request, InferenceServer};
+use kakurenbo::util::json;
 
 const B: usize = 8;
 /// Straggler timeout used by delay cells; injected delays are 2x this.
@@ -346,6 +348,60 @@ fn chaos_killed_eval_job_is_isolated_to_one_error_event() {
         }
         other => panic!("expected a recovered eval, got {other:?}"),
     }
+}
+
+/// Serve-lane configuration: a chaos-killed serving replica answers the
+/// in-flight HTTP query with a named 500, flips `/healthz` to degraded,
+/// and puts exactly one [`ServiceEvent::Error`] tagged with the serve
+/// lane into the fold-in stream — then keeps serving, and the post-fault
+/// answer is bitwise identical to an undisturbed backend's.
+#[test]
+fn chaos_killed_serve_replica_degrades_health_but_keeps_serving() {
+    use std::sync::Arc;
+
+    // undisturbed reference answer for the same batch + params
+    let mut direct = MockBackend::new();
+    direct.import_params(&[vec![1.5]]).unwrap();
+    let want = direct.fwd_stats(&[0.5, 0.25], &[1]).unwrap();
+
+    // the serving replica dies on its second forward call (imports count
+    // no device steps, same accounting as the eval-lane cell above)
+    let hub = Arc::new(SnapshotHub::new());
+    let chaotic = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(0, 1));
+    let mut lane = ServeLane::spawn(chaotic.replica_builder().unwrap(), hub.clone()).unwrap();
+    let srv = InferenceServer::start("127.0.0.1:0", 2, hub.clone(), lane.client(), None).unwrap();
+    hub.publish(4, Arc::new(kakurenbo::engine::Snapshot::params_only(vec![vec![1.5]])));
+
+    let body = r#"{"x": [[0.5, 0.25]], "y": [1]}"#;
+    let (code, text) = http_request(srv.addr(), "POST", "/v1/stats", Some(body)).unwrap();
+    assert_eq!(code, 200, "healthy first answer: {text}");
+
+    // second forward: the kill fires — named 500, degraded health
+    let (code, text) = http_request(srv.addr(), "POST", "/v1/stats", Some(body)).unwrap();
+    assert_eq!(code, 500, "{text}");
+    assert!(text.contains("chaos"), "{text}");
+    let (code, text) = http_request(srv.addr(), "GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200, "{text}");
+    let health = json::parse(&text).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str(), Some("degraded"));
+
+    // exactly one fold-in error, tagged with the serve lane
+    let events = lane.try_events();
+    assert_eq!(events.len(), 1, "{events:?}");
+    match &events[0] {
+        ServiceEvent::Error { epoch: 4, lane: ServiceLaneKind::Serve, message, .. } => {
+            assert!(message.contains("chaos"), "{message}");
+        }
+        other => panic!("expected a serve error event, got {other:?}"),
+    }
+
+    // the one-shot kill has fired: the lane recovers and the answer is
+    // bitwise identical to the undisturbed reference
+    let (code, text) = http_request(srv.addr(), "POST", "/v1/stats", Some(body)).unwrap();
+    assert_eq!(code, 200, "{text}");
+    let v = json::parse(&text).unwrap();
+    let loss = v.get("loss").unwrap().as_arr().unwrap()[0].as_f64().unwrap() as f32;
+    assert_eq!(loss.to_bits(), want.loss[0].to_bits(), "post-fault answer drifted");
 }
 
 // --- end-to-end: resume after a chaos-killed run (PJRT-gated) --------------

@@ -1,7 +1,8 @@
-//! CLI-level config validation: the `--dp` knob must be rejected with a
-//! clear error for configurations the data-parallel schedule cannot
-//! honor, through the same parse → override → validate pipeline the
-//! launcher runs (no runtime or artifacts required).
+//! CLI-level config validation: the `--dp` and `--serve` knobs must be
+//! rejected with a clear error for configurations the schedule or the
+//! inference server cannot honor, through the same parse → override →
+//! validate pipeline the launcher runs (no runtime or artifacts
+//! required).
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, DpMode, ExperimentConfig, StrategyConfig};
@@ -22,7 +23,7 @@ fn build_from_argv(argv: &[&str]) -> anyhow::Result<ExperimentConfig> {
             other => anyhow::bail!("unknown strategy {other}"),
         };
     }
-    for key in ["epochs", "seed", "workers", "dp"] {
+    for key in ["epochs", "seed", "workers", "dp", "serve", "serve-threads"] {
         if let Some(v) = args.flag(key) {
             cfg.apply_override(key, v)?;
         }
@@ -78,4 +79,36 @@ fn unknown_dp_value_rejected_at_parse() {
 fn default_dp_is_serial_equivalent() {
     let cfg = build_from_argv(&["train", "--workers", "4"]).unwrap();
     assert_eq!(cfg.dp, DpMode::SerialEquivalent);
+}
+
+#[test]
+fn serve_defaults_off_and_accepts_a_socket_address() {
+    let cfg = build_from_argv(&["train"]).unwrap();
+    assert_eq!(cfg.serve, None);
+    assert_eq!(cfg.serve_threads, 2);
+    // port 0 is explicitly supported (the OS picks a free port)
+    let cfg = build_from_argv(&["train", "--serve", "127.0.0.1:0"]).unwrap();
+    assert_eq!(cfg.serve.as_deref(), Some("127.0.0.1:0"));
+    let cfg =
+        build_from_argv(&["train", "--serve", "0.0.0.0:8080", "--serve-threads", "8"]).unwrap();
+    assert_eq!(cfg.serve.as_deref(), Some("0.0.0.0:8080"));
+    assert_eq!(cfg.serve_threads, 8);
+}
+
+#[test]
+fn serve_bad_addresses_rejected_with_clear_error() {
+    for addr in ["not-an-address", "8080", "127.0.0.1"] {
+        let err = build_from_argv(&["train", "--serve", addr]).unwrap_err().to_string();
+        assert!(err.contains("--serve"), "{addr}: {err}");
+        assert!(err.contains("host:port"), "unhelpful error for {addr}: {err}");
+    }
+}
+
+#[test]
+fn serve_threads_zero_rejected_with_clear_error() {
+    let err = build_from_argv(&["train", "--serve", "127.0.0.1:0", "--serve-threads", "0"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--serve-threads 0"), "{err}");
+    assert!(err.contains("at least one worker"), "{err}");
 }

@@ -1,0 +1,382 @@
+//! The online inference lane's end-to-end serving battery (ISSUE 8).
+//!
+//! Three contracts, layered like the other suites:
+//!
+//!   * **Fidelity** (mock stack, always runs): an answer served over
+//!     HTTP/JSON is bitwise identical to calling the backend directly on
+//!     the same snapshot — the JSON number formatter is shortest
+//!     round-trip, so f32 stats survive the wire exactly.
+//!   * **Atomicity** (mock stack, always runs): a hammer of concurrent
+//!     queries across a stream of snapshot publications never observes
+//!     torn state — every response's epoch is internally consistent with
+//!     its digests / its stats, for ≥ 1000 queries.
+//!   * **Isolation** (PJRT, skipped without artifacts): training with
+//!     `--serve` on produces records bitwise identical to off — including
+//!     composed with `--service-lane on` and `--workers 4` — and a
+//!     faulting serving replica follows the run's `--fault-policy`
+//!     (named abort under `fail`, count-and-degrade under `elastic`).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use kakurenbo::config::{presets, DatasetConfig, FaultPolicy, StrategyConfig};
+use kakurenbo::coordinator::{ServeRuntime, Trainer};
+use kakurenbo::engine::serve::leaf_digests;
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{
+    DataParallel, ServeLane, Snapshot, SnapshotHub, StateExchange, StepBackend,
+};
+use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
+use kakurenbo::serve::{http_request, InferenceServer, ServingShape};
+use kakurenbo::util::json::{self, Json};
+
+/// A full mock serving stack: hub + serving replica lane + HTTP server.
+fn mock_stack(threads: usize) -> (InferenceServer, Arc<SnapshotHub>, ServeLane) {
+    let hub = Arc::new(SnapshotHub::new());
+    let lane = ServeLane::spawn(MockBackend::new().replica_builder().unwrap(), hub.clone())
+        .unwrap();
+    let srv = InferenceServer::start("127.0.0.1:0", threads, hub.clone(), lane.client(), None)
+        .unwrap();
+    (srv, hub, lane)
+}
+
+/// Direct (no HTTP, no lane) reference stats for `param` on (`x`, `y`).
+fn direct_stats(param: f32, x: &[f32], y: &[i32]) -> kakurenbo::runtime::BatchStats {
+    let mut be = MockBackend::new();
+    be.import_params(&[vec![param]]).unwrap();
+    be.fwd_stats(x, y).unwrap()
+}
+
+fn f32_bits(v: &Json, key: &str) -> Vec<u32> {
+    v.get(key)
+        .unwrap_or_else(|| panic!("response missing {key:?}: {v:?}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|n| (n.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+/// Fidelity: `/v1/stats` and `/v1/embed` responses carry the exact bits
+/// the backend produced for the published snapshot — JSON transport is
+/// lossless for f32.
+#[test]
+fn served_answers_are_bitwise_equal_to_direct_forward() {
+    let (srv, hub, _lane) = mock_stack(2);
+    let param = 0.62584335_f32; // deliberately not a short decimal
+    hub.publish(3, Arc::new(Snapshot::params_only(vec![vec![param]])));
+
+    let x = [0.1234567_f32, 0.7654321, 0.33333334, 0.9999999];
+    let y = [1_i32, 2];
+    let want = direct_stats(param, &x, &y);
+    let mut emb_be = MockBackend::new();
+    emb_be.import_params(&[vec![param]]).unwrap();
+    let want_emb = emb_be.fwd_embed(&x, &y).unwrap();
+
+    let body = format!(
+        r#"{{"x": [[{}, {}], [{}, {}]], "y": [1, 2]}}"#,
+        x[0], x[1], x[2], x[3]
+    );
+    let (status, resp) = http_request(srv.addr(), "POST", "/v1/stats", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("epoch").unwrap().as_usize(), Some(3));
+    let want_loss: Vec<u32> = want.loss.iter().map(|l| l.to_bits()).collect();
+    let want_conf: Vec<u32> = want.conf.iter().map(|c| c.to_bits()).collect();
+    assert_eq!(f32_bits(&v, "loss"), want_loss, "loss bits drifted over the wire");
+    assert_eq!(f32_bits(&v, "conf"), want_conf, "conf bits drifted over the wire");
+
+    let (status, resp) = http_request(srv.addr(), "POST", "/v1/embed", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    let want_e: Vec<u32> = want_emb.emb.iter().map(|e| e.to_bits()).collect();
+    let want_p: Vec<u32> = want_emb.probs.iter().map(|p| p.to_bits()).collect();
+    assert_eq!(f32_bits(&v, "emb"), want_e, "emb bits drifted over the wire");
+    assert_eq!(f32_bits(&v, "probs"), want_p, "probs bits drifted over the wire");
+
+    // the lane counted the two forwards
+    assert_eq!(hub.take_queries(), 2);
+}
+
+/// Atomicity: concurrent queriers racing a stream of publications.  Every
+/// `/v1/snapshot` response's digests must be the published digests *of
+/// its own epoch*, and every `/v1/stats` response's loss must be the
+/// value *its* epoch's parameters produce — across ≥ 1000 queries and
+/// dozens of swaps, no response may mix two publications.
+#[test]
+fn swap_hammer_never_observes_torn_state() {
+    const EPOCHS: usize = 24;
+    const QUERIERS: usize = 4;
+    const MIN_PER_THREAD: usize = 260;
+
+    let (srv, hub, _lane) = mock_stack(QUERIERS);
+    let param_at = |e: usize| (e as f32 + 1.0) * 0.25;
+    let x = [0.3_f32, 0.6];
+    let y = [1_i32];
+    // per-epoch expectations, computed before any server traffic
+    let expected: Vec<(Vec<String>, u32)> = (0..EPOCHS)
+        .map(|e| {
+            let digests =
+                leaf_digests(&Snapshot::params_only(vec![vec![param_at(e)]]));
+            let loss = direct_stats(param_at(e), &x, &y).loss[0].to_bits();
+            (digests, loss)
+        })
+        .collect();
+
+    hub.publish(0, Arc::new(Snapshot::params_only(vec![vec![param_at(0)]])));
+    let done = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicUsize::new(0));
+    let addr = srv.addr();
+    let mut threads = Vec::new();
+    for q in 0..QUERIERS {
+        let done = done.clone();
+        let total = total.clone();
+        let expected = expected.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut mine = 0usize;
+            while !done.load(Ordering::Relaxed) || mine < MIN_PER_THREAD {
+                if (mine + q) % 2 == 0 {
+                    let (status, resp) =
+                        http_request(addr, "GET", "/v1/snapshot", None).unwrap();
+                    assert_eq!(status, 200, "{resp}");
+                    let v = json::parse(&resp).unwrap();
+                    let epoch = v.get("epoch").unwrap().as_usize().unwrap();
+                    let digests: Vec<String> = v
+                        .get("digests")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_str().unwrap().to_string())
+                        .collect();
+                    assert_eq!(
+                        digests, expected[epoch].0,
+                        "epoch {epoch} paired with another epoch's digests"
+                    );
+                } else {
+                    let (status, resp) = http_request(
+                        addr,
+                        "POST",
+                        "/v1/stats",
+                        Some(r#"{"x": [[0.3, 0.6]], "y": [1]}"#),
+                    )
+                    .unwrap();
+                    assert_eq!(status, 200, "{resp}");
+                    let v = json::parse(&resp).unwrap();
+                    let epoch = v.get("epoch").unwrap().as_usize().unwrap();
+                    let loss = f32_bits(&v, "loss");
+                    assert_eq!(
+                        loss[0], expected[epoch].1,
+                        "epoch {epoch} answered with another epoch's parameters"
+                    );
+                }
+                mine += 1;
+            }
+            total.fetch_add(mine, Ordering::Relaxed);
+        }));
+    }
+    // publish the remaining epochs while the queriers hammer
+    for e in 1..EPOCHS {
+        hub.publish(e, Arc::new(Snapshot::params_only(vec![vec![param_at(e)]])));
+        std::thread::sleep(std::time::Duration::from_millis(3));
+    }
+    done.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    let total = total.load(Ordering::Relaxed);
+    assert!(total >= 1000, "hammer too small to be meaningful: {total} queries");
+    assert_eq!(hub.publishes(), EPOCHS);
+    assert!(hub.take_queries() > 0);
+}
+
+// --- trainer-level (PJRT; skipped when artifacts are absent) -------------
+
+fn runtime() -> Option<XlaRuntime> {
+    XlaRuntime::new(&default_artifacts_dir()).ok()
+}
+
+fn small_cfg() -> kakurenbo::config::ExperimentConfig {
+    let mut cfg = presets::by_name("cifar100_wrn").unwrap();
+    cfg.epochs = 4;
+    if let DatasetConfig::GaussMixture(ref mut c) = cfg.dataset {
+        c.n_train = 512;
+        c.n_val = 192;
+    }
+    cfg.eval_every = 1;
+    cfg.strategy = StrategyConfig::kakurenbo(0.3);
+    cfg
+}
+
+fn assert_records_bitwise_eq(
+    a: &kakurenbo::metrics::RunResult,
+    b: &kakurenbo::metrics::RunResult,
+    ctx: &str,
+) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{ctx} epoch {}", x.epoch);
+        assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits(), "{ctx} epoch {}", x.epoch);
+        assert_eq!(x.val_loss.to_bits(), y.val_loss.to_bits(), "{ctx} epoch {}", x.epoch);
+        assert_eq!(x.hidden, y.hidden, "{ctx} epoch {}", x.epoch);
+        assert_eq!(x.moved_back, y.moved_back, "{ctx} epoch {}", x.epoch);
+        assert_eq!(x.trained_samples, y.trained_samples, "{ctx} epoch {}", x.epoch);
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "{ctx} epoch {}", x.epoch);
+    }
+}
+
+/// Isolation: `--serve` on vs off — identical records and identical
+/// final parameters, alone and composed with `--service-lane on` +
+/// `--workers 4`.  Serving is a read-only observer of training.
+#[test]
+fn serving_never_perturbs_training_records() {
+    let Some(rt) = runtime() else { return };
+    for (service_lane, workers) in [(false, 1usize), (true, 4)] {
+        let ctx = format!("service_lane={service_lane} workers={workers}");
+        let run = |serve: bool| {
+            let mut cfg = small_cfg();
+            cfg.service_lane = service_lane;
+            cfg.workers = workers;
+            cfg.serve = serve.then(|| "127.0.0.1:0".to_string());
+            let mut t = Trainer::new(&rt, cfg).unwrap();
+            let result = t.run().unwrap();
+            let params = t.exec.export_named_params().unwrap();
+            (result, params, t.serve_addr())
+        };
+        let (r_off, p_off, addr_off) = run(false);
+        let (r_on, p_on, addr_on) = run(true);
+        assert!(addr_off.is_none(), "{ctx}");
+        assert!(addr_on.is_some(), "{ctx}");
+        assert_records_bitwise_eq(&r_off, &r_on, &ctx);
+        for rec in &r_on.records {
+            assert_eq!(rec.serve_publishes, 1, "{ctx} epoch {}", rec.epoch);
+        }
+        assert!(r_off.records.iter().all(|r| r.serve_publishes == 0), "{ctx}");
+        assert_eq!(p_off.len(), p_on.len(), "{ctx}");
+        for ((na, da), (nb, db)) in p_off.iter().zip(&p_on) {
+            assert_eq!(na, nb, "{ctx}");
+            let ba: Vec<u32> = da.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = db.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb, "{ctx}: param {na} differs with serving on");
+        }
+    }
+}
+
+/// Fidelity at the executor level: after a real training run, a served
+/// `/v1/stats` answer over a validation batch is bitwise identical to
+/// calling `fwd_stats` on the training executor directly — the last
+/// publication *is* the final parameters.
+#[test]
+fn served_stats_match_direct_executor_forward() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.serve = Some("127.0.0.1:0".to_string());
+    let mut t = Trainer::new(&rt, cfg).unwrap();
+    t.run().unwrap();
+    let addr = t.serve_addr().unwrap();
+
+    let b = t.exec.meta.batch;
+    let dim = t.data.val.sample_dim;
+    let ll = t.data.val.label_len;
+    let x = t.data.val.x[..b * dim].to_vec();
+    let y = t.data.val.y[..b * ll].to_vec();
+    let rows: Vec<Json> = (0..b)
+        .map(|s| Json::from(x[s * dim..(s + 1) * dim].to_vec()))
+        .collect();
+    let labels: Vec<i64> = y.iter().map(|&l| l as i64).collect();
+    let body = kakurenbo::jobj![("x", Json::Arr(rows)), ("y", labels)].to_compact();
+
+    let (status, resp) = http_request(addr, "POST", "/v1/stats", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("epoch").unwrap().as_usize(), Some(t.cfg.epochs - 1));
+    assert_eq!(v.get("batch").unwrap().as_usize(), Some(b));
+
+    let want = StepBackend::fwd_stats(&mut t.exec, &x, &y).unwrap();
+    let want_loss: Vec<u32> = want.loss.iter().map(|l| l.to_bits()).collect();
+    let want_conf: Vec<u32> = want.conf.iter().map(|c| c.to_bits()).collect();
+    assert_eq!(f32_bits(&v, "loss"), want_loss, "served loss != executor loss");
+    assert_eq!(f32_bits(&v, "conf"), want_conf, "served conf != executor conf");
+
+    // /healthz and /v1/snapshot agree on the final epoch
+    let (status, resp) = http_request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let h = json::parse(&resp).unwrap();
+    assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(h.get("epoch").unwrap().as_usize(), Some(t.cfg.epochs - 1));
+    let (status, resp) = http_request(addr, "GET", "/v1/snapshot", None).unwrap();
+    assert_eq!(status, 200);
+    let s = json::parse(&resp).unwrap();
+    assert_eq!(s.get("epoch").unwrap().as_usize(), Some(t.cfg.epochs - 1));
+    assert_eq!(s.get("tier").unwrap().as_str(), Some("params"));
+}
+
+/// A faulting serving replica follows the run's fault policy.  The
+/// substituted [`ServeRuntime`] carries a replica that cannot host the
+/// executor's snapshots, so the first query fails on the lane: under
+/// `fail` the next epoch barrier aborts the run with the named serve-lane
+/// error; under `elastic` the run completes, the failure counts into
+/// `service_errors`, and `/healthz` reports `degraded`.
+#[test]
+fn serve_lane_faults_follow_the_fault_policy() {
+    let Some(rt) = runtime() else { return };
+    for policy in [FaultPolicy::Fail, FaultPolicy::Elastic] {
+        let mut cfg = small_cfg();
+        cfg.serve = Some("127.0.0.1:0".to_string());
+        cfg.fault_policy = policy;
+        let mut t = Trainer::new(&rt, cfg).unwrap();
+        // a Mock replica under a real executor's publications: every
+        // query forces a params import the replica must reject
+        let hub = Arc::new(SnapshotHub::new());
+        let lane =
+            ServeLane::spawn(MockBackend::new().replica_builder().unwrap(), hub.clone())
+                .unwrap();
+        let server =
+            InferenceServer::start("127.0.0.1:0", 1, hub.clone(), lane.client(), None)
+                .unwrap();
+        let addr = server.addr();
+        t.serve = Some(ServeRuntime { server, lane, hub });
+
+        // hammer the lane from a client thread for the whole run, so a
+        // failure lands before an epoch barrier regardless of timing
+        let done = Arc::new(AtomicBool::new(false));
+        let client = {
+            let done = done.clone();
+            std::thread::spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    let _ = http_request(
+                        addr,
+                        "POST",
+                        "/v1/stats",
+                        Some(r#"{"x": [[1.0, 2.0]], "y": [0]}"#),
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            })
+        };
+        let outcome = t.run();
+        match policy {
+            FaultPolicy::Fail => {
+                let err = outcome.unwrap_err().to_string();
+                assert!(err.contains("service serve lane failed"), "{err}");
+                assert!(err.contains("--fault-policy"), "{err}");
+            }
+            FaultPolicy::Elastic => {
+                let result = outcome.unwrap();
+                let errors: usize =
+                    result.records.iter().map(|r| r.service_errors).sum();
+                assert!(errors >= 1, "no serve failure folded into the records");
+                let (status, resp) = http_request(addr, "GET", "/healthz", None).unwrap();
+                assert_eq!(status, 200);
+                let v = json::parse(&resp).unwrap();
+                assert_eq!(
+                    v.get("status").unwrap().as_str(),
+                    Some("degraded"),
+                    "{resp}"
+                );
+            }
+        }
+        done.store(true, Ordering::Relaxed);
+        client.join().unwrap();
+    }
+}

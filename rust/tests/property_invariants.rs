@@ -1,7 +1,9 @@
 //! Property-based tests (mini-proptest harness, util::proptest) over the
 //! coordinator's invariants: hiding selector, schedules, samplers,
-//! sharding, the worker pool's deterministic reduction, DropTop, and the
-//! LR rule.
+//! sharding, the worker pool's deterministic reduction, DropTop, the
+//! LR rule, and the JSON wire format the inference lane serves over.
+
+use std::collections::BTreeMap;
 
 use kakurenbo::data::shard::{
     global_batch_order, global_step_order, shard_order, shard_order_aligned,
@@ -13,6 +15,7 @@ use kakurenbo::hiding::selector::{select, SelectMode, SelectorCfg};
 use kakurenbo::sampler::alias::AliasTable;
 use kakurenbo::sampler::fenwick::FenwickSampler;
 use kakurenbo::state::SampleState;
+use kakurenbo::util::json::{parse, Json};
 use kakurenbo::util::proptest::{check, Gen, Pair, USize, VecF32};
 use kakurenbo::util::rng::Rng;
 
@@ -523,4 +526,187 @@ fn state_roll_epoch_preserves_counts() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// JSON wire format (util::json) — the serving endpoints ride on it, so the
+// encoder/parser pair must round-trip bit-exactly and reject garbage with a
+// position instead of panicking or silently absorbing it.
+// ---------------------------------------------------------------------------
+
+/// Random JSON documents: depth-bounded trees over every value kind, with
+/// adversarial finite numbers and strings full of escape-worthy characters.
+struct JsonGen {
+    max_depth: usize,
+}
+
+fn json_num(rng: &mut Rng) -> f64 {
+    const POOL: [f64; 12] = [
+        0.0,
+        -0.0,
+        5e-324, // smallest denormal
+        2.2250738585072011e-308,
+        f64::MIN_POSITIVE,
+        1e300,
+        -1e300,
+        f64::MAX,
+        f64::MIN,
+        1e15, // just past the integral fast path
+        0.1,
+        0.333_333_333_333_333_3,
+    ];
+    match rng.below(4) {
+        0 => rng.below(2_000_001) as f64 - 1_000_000.0,
+        1 => (rng.f64() - 0.5) * 100.0,
+        2 => POOL[rng.below(POOL.len())],
+        // random mantissa over ~600 decades, always finite
+        _ => (rng.f64() - 0.5) * 10f64.powi(rng.below(601) as i32 - 300),
+    }
+}
+
+fn json_str(rng: &mut Rng) -> String {
+    const CHARS: [char; 16] = [
+        'a', 'B', '7', ' ', '"', '\\', '/', '\n', '\t', '\r', '\u{8}', '\u{c}', '\u{1}', 'é',
+        '→', '🦀',
+    ];
+    (0..rng.below(9)).map(|_| CHARS[rng.below(CHARS.len())]).collect()
+}
+
+fn json_value(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 || rng.chance(0.45) {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num(json_num(rng)),
+            _ => Json::Str(json_str(rng)),
+        };
+    }
+    if rng.chance(0.5) {
+        Json::Arr((0..rng.below(5)).map(|_| json_value(rng, depth - 1)).collect())
+    } else {
+        let mut m = BTreeMap::new();
+        for _ in 0..rng.below(5) {
+            m.insert(json_str(rng), json_value(rng, depth - 1));
+        }
+        Json::Obj(m)
+    }
+}
+
+impl Gen for JsonGen {
+    type Value = Json;
+
+    fn generate(&self, rng: &mut Rng) -> Json {
+        json_value(rng, self.max_depth)
+    }
+
+    fn shrink(&self, v: &Json) -> Vec<Json> {
+        // a failing container usually fails through one child: offer each
+        // child alone, then the container with the back half removed
+        match v {
+            Json::Arr(xs) => {
+                let mut out = xs.clone();
+                out.push(Json::Arr(xs[..xs.len() / 2].to_vec()));
+                out
+            }
+            Json::Obj(m) => {
+                let mut out: Vec<Json> = m.values().cloned().collect();
+                let half: BTreeMap<String, Json> =
+                    m.iter().take(m.len() / 2).map(|(k, x)| (k.clone(), x.clone())).collect();
+                out.push(Json::Obj(half));
+                out
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[test]
+fn json_roundtrip_is_byte_stable() {
+    check("json-roundtrip", 73, 400, &JsonGen { max_depth: 4 }, |v| {
+        let compact = v.to_compact();
+        let back = parse(&compact).map_err(|e| format!("{compact:?}: {e}"))?;
+        let again = back.to_compact();
+        if again != compact {
+            return Err(format!("re-encode drifted: {compact:?} -> {again:?}"));
+        }
+        if back != *v {
+            return Err(format!("value changed through the wire: {compact:?}"));
+        }
+        // pretty printing is a formatting choice, not a different document
+        let pretty = parse(&v.to_pretty()).map_err(|e| format!("pretty: {e}"))?;
+        if pretty.to_compact() != compact {
+            return Err(format!("pretty roundtrip drifted for {compact:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Corruptions of valid documents: truncation, hostile byte insertion,
+/// undefined escapes, and overlong number tails.
+struct MalformedGen;
+
+impl Gen for MalformedGen {
+    type Value = String;
+
+    fn generate(&self, rng: &mut Rng) -> String {
+        let mut s = json_value(rng, 3).to_compact();
+        let mut pos = rng.below(s.len() + 1);
+        while !s.is_char_boundary(pos) {
+            pos -= 1;
+        }
+        match rng.below(5) {
+            0 => s.truncate(pos),
+            1 => {
+                const HOSTILE: [char; 10] = ['\\', '"', '{', '[', ',', ':', 'e', '-', '.', 'x'];
+                s.insert(pos, HOSTILE[rng.below(HOSTILE.len())]);
+            }
+            2 => s.insert_str(pos, "\\q"),         // escape JSON never defined
+            3 => s.push_str("e999999999"),         // overlong exponent / trailing data
+            _ => s.insert_str(pos, &"9".repeat(400)), // 400-digit number fragment
+        }
+        s
+    }
+}
+
+#[test]
+fn json_malformed_inputs_error_with_positions_never_panic() {
+    check("json-malformed", 91, 600, &MalformedGen, |s| {
+        // some corruptions still form valid JSON; the contract is that
+        // parse never panics and every rejection names a source position
+        match parse(s) {
+            Ok(v) => {
+                let _ = v.to_compact();
+                Ok(())
+            }
+            Err(e) if e.line >= 1 && e.col >= 1 && !e.msg.is_empty() => Ok(()),
+            Err(e) => Err(format!("unpositioned error {e:?} for {s:?}")),
+        }
+    });
+}
+
+#[test]
+fn json_known_hostile_inputs_are_positioned_errors() {
+    for src in [
+        "",
+        "{",
+        "[1,",
+        "\"ab",
+        "\"\\q\"",
+        "\"\\u12\"",
+        "1e",
+        "--5",
+        "1.2.3",
+        "[1 2]",
+        "{\"a\" 1}",
+        "nul",
+        "+5",
+        ".5",
+        "01x",
+        "1e999",
+        "[}",
+    ] {
+        let e = parse(src).unwrap_err();
+        assert!(e.line >= 1 && e.col >= 1, "{src:?} -> {e:?}");
+        assert!(!e.msg.is_empty(), "{src:?} produced an empty message");
+    }
 }
