@@ -1,0 +1,213 @@
+//! Serving throughput sweep (criterion-free harness): concurrency ×
+//! coalescing batch × replica count, over a mock backend with an
+//! enforced per-dispatch latency floor that stands in for the PJRT
+//! device-call overhead batching amortizes.
+//!
+//! Reports QPS, p50/p99 query latency and mean batch fill per
+//! configuration, plus the headline speedup of coalescing + 2 replicas
+//! over per-query single-lane serving at the same concurrency, and
+//! records everything in results/serving.json (BENCH_serving.json in
+//! the CI perf-trajectory artifact).
+//!
+//! The sweep is PJRT-free on purpose: the serving fleet's batching and
+//! routing are host-side, and the floor makes the device economics
+//! explicit — so this bench runs anywhere, artifacts or not.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{
+    ReplicaBackend, ReplicaBuilder, ServeBatching, ServeFleet, Snapshot, SnapshotHub,
+    StateExchange, StepBackend,
+};
+use kakurenbo::runtime::{BatchStats, EmbedStats};
+use kakurenbo::util::json::Json;
+use kakurenbo::util::rng::Rng;
+use kakurenbo::util::table::Table;
+
+/// A mock backend whose every device call costs at least `floor` —
+/// the stand-in for the fixed PJRT dispatch + transfer overhead that
+/// makes coalescing profitable on real hardware.  Row semantics are
+/// exactly `MockBackend`'s, so batched answers stay bitwise checkable.
+struct FloorBackend {
+    inner: MockBackend,
+    floor: Duration,
+}
+
+impl FloorBackend {
+    fn spin(&self) {
+        let t = Instant::now();
+        while t.elapsed() < self.floor {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// A `Send` constructor for a fresh floored replica.
+    fn builder(floor: Duration) -> ReplicaBuilder {
+        Box::new(move || {
+            Ok(Box::new(FloorBackend { inner: MockBackend::new(), floor })
+                as Box<dyn ReplicaBackend>)
+        })
+    }
+}
+
+impl StepBackend for FloorBackend {
+    fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        sw: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<BatchStats> {
+        self.spin();
+        self.inner.train_step(x, y, sw, lr)
+    }
+
+    fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
+        self.spin();
+        self.inner.fwd_stats(x, y)
+    }
+
+    fn fwd_embed(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<EmbedStats> {
+        self.spin();
+        self.inner.fwd_embed(x, y)
+    }
+}
+
+impl StateExchange for FloorBackend {
+    fn export_state(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.export_state()
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.inner.import_state(state)
+    }
+}
+
+struct SweepResult {
+    qps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    fill: f64,
+    queries: usize,
+    batches: usize,
+}
+
+/// Hammer one fleet configuration with `concurrency` closed-loop
+/// clients issuing `n_queries` single-sample stats queries in total.
+fn run_config(
+    replicas: usize,
+    max_batch: usize,
+    concurrency: usize,
+    n_queries: usize,
+    floor: Duration,
+) -> anyhow::Result<SweepResult> {
+    const DIM: usize = 16;
+    let hub = Arc::new(SnapshotHub::new());
+    let builders = (0..replicas).map(|_| FloorBackend::builder(floor)).collect();
+    let batching = ServeBatching { max_batch, max_wait: Duration::from_micros(200) };
+    let fleet = ServeFleet::spawn(builders, hub.clone(), batching)?;
+    hub.publish(0, Arc::new(Snapshot::params_only(vec![vec![0.5]])));
+    let published = hub.latest().unwrap();
+
+    let wall = Instant::now();
+    let threads: Vec<_> = (0..concurrency)
+        .map(|c| {
+            let client = fleet.client();
+            let published = published.clone();
+            let mine = n_queries / concurrency + usize::from(c < n_queries % concurrency);
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut rng = Rng::new(c as u64 + 1);
+                let mut lat = Vec::with_capacity(mine);
+                for _ in 0..mine {
+                    let x: Vec<f32> = (0..DIM).map(|_| rng.f32()).collect();
+                    let y = vec![rng.below(DIM) as i32];
+                    let t = Instant::now();
+                    client.query(published.clone(), x, y, false)?;
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::with_capacity(n_queries);
+    for t in threads {
+        lat.extend(t.join().unwrap()?);
+    }
+    let secs = wall.elapsed().as_secs_f64();
+    drop(fleet);
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize];
+    let queries = hub.queries_total();
+    let batches = hub.batches_total();
+    Ok(SweepResult {
+        qps: n_queries as f64 / secs,
+        p50_us: pick(0.50),
+        p99_us: pick(0.99),
+        fill: queries as f64 / batches.max(1) as f64,
+        queries,
+        batches,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("KAKURENBO_QUICK").is_ok();
+    println!("=== serving throughput sweep{} ===", if quick { " (quick)" } else { "" });
+    let floor = Duration::from_micros(if quick { 150 } else { 300 });
+    let n_queries = if quick { 192 } else { 512 };
+
+    // (replicas, batch, concurrency); (1,1,8) is the per-query
+    // single-lane baseline the headline speedup is measured against
+    let configs = [(1usize, 1usize, 1usize), (1, 1, 8), (1, 8, 8), (2, 1, 8), (2, 8, 8)];
+    let mut t = Table::new(format!(
+        "serving sweep (floor {}µs, {n_queries} queries)",
+        floor.as_micros()
+    ))
+    .header(&["replicas", "batch", "clients", "QPS", "p50 µs", "p99 µs", "fill"]);
+    let mut rows = Vec::new();
+    let mut by_config = std::collections::HashMap::new();
+    for &(replicas, batch, clients) in &configs {
+        let r = run_config(replicas, batch, clients, n_queries, floor)?;
+        t.row(vec![
+            replicas.to_string(),
+            batch.to_string(),
+            clients.to_string(),
+            format!("{:.0}", r.qps),
+            format!("{:.0}", r.p50_us),
+            format!("{:.0}", r.p99_us),
+            format!("{:.2}", r.fill),
+        ]);
+        rows.push(kakurenbo::jobj![
+            ("replicas", replicas),
+            ("batch", batch),
+            ("concurrency", clients),
+            ("qps", r.qps),
+            ("p50_us", r.p50_us),
+            ("p99_us", r.p99_us),
+            ("fill", r.fill),
+            ("queries", r.queries),
+            ("batches", r.batches)
+        ]);
+        by_config.insert((replicas, batch, clients), r.qps);
+    }
+    t.print();
+
+    let speedup = by_config[&(2, 8, 8)] / by_config[&(1, 1, 8)];
+    println!("  batching + 2 replicas vs per-query single lane (8 clients): {speedup:.2}x");
+    let payload = kakurenbo::jobj![
+        ("quick", quick),
+        ("floor_us", floor.as_micros() as usize),
+        ("n_queries", n_queries),
+        ("speedup_batched_vs_per_query", speedup),
+        ("rows", Json::Arr(rows))
+    ];
+    let out = std::path::Path::new("results");
+    std::fs::create_dir_all(out)?;
+    let path = out.join("serving.json");
+    std::fs::write(&path, payload.to_pretty())?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}

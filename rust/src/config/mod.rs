@@ -393,8 +393,28 @@ pub struct ExperimentConfig {
     pub serve: Option<String>,
     /// Worker threads for the inference HTTP front end
     /// (`--serve-threads N`, default 2).  Must be at least 1; forwards
-    /// still serialize through the lane's single replica.
+    /// go to the serve fleet, which routes each query to the
+    /// least-loaded serving replica.
     pub serve_threads: usize,
+    /// Serving replicas (`--serve-replicas R`, default 1).  Each replica
+    /// is its own lane thread built via the `ReplicaBuilder` contract,
+    /// all reading the same snapshot hub; a failed replica degrades only
+    /// its own lane.
+    pub serve_replicas: usize,
+    /// Micro-batch size for query coalescing (`--serve-batch N`, default
+    /// 1 = off).  A serve lane dispatches as soon as N queries are
+    /// buffered or the oldest has waited `--serve-batch-wait-us`,
+    /// packing them into one batched device forward — answers are
+    /// bitwise identical to per-query execution.
+    pub serve_batch: usize,
+    /// Coalescing wait budget in microseconds
+    /// (`--serve-batch-wait-us T`, default 250).  Bounds the extra
+    /// latency the first query of a batch can pay waiting for company.
+    pub serve_batch_wait_us: u64,
+    /// Snapshot publications the hub retains (`--serve-retain K`,
+    /// default 2).  Older publications are freed; in-flight queries
+    /// keep the publication they already loaded.
+    pub serve_retain: usize,
 }
 
 impl ExperimentConfig {
@@ -430,6 +450,10 @@ impl ExperimentConfig {
             straggler_timeout_ms: 0,
             serve: None,
             serve_threads: 2,
+            serve_replicas: 1,
+            serve_batch: 1,
+            serve_batch_wait_us: 250,
+            serve_retain: 2,
         }
     }
 
@@ -489,6 +513,38 @@ impl ExperimentConfig {
             "--serve-threads {} is implausibly large (max 256)",
             self.serve_threads
         );
+        anyhow::ensure!(
+            self.serve_replicas >= 1,
+            "--serve-replicas 0: the serve fleet needs at least one replica"
+        );
+        anyhow::ensure!(
+            self.serve_replicas <= 64,
+            "--serve-replicas {} is implausibly large (max 64)",
+            self.serve_replicas
+        );
+        anyhow::ensure!(
+            self.serve_batch >= 1,
+            "--serve-batch 0: the coalescing buffer needs at least one slot (1 = off)"
+        );
+        anyhow::ensure!(
+            self.serve_batch <= 1024,
+            "--serve-batch {} is implausibly large (max 1024)",
+            self.serve_batch
+        );
+        anyhow::ensure!(
+            self.serve_batch_wait_us <= 1_000_000,
+            "--serve-batch-wait-us {} is implausibly large (max 1000000 = 1s)",
+            self.serve_batch_wait_us
+        );
+        anyhow::ensure!(
+            self.serve_retain >= 1,
+            "--serve-retain 0: the hub must retain at least the live publication"
+        );
+        anyhow::ensure!(
+            self.serve_retain <= 64,
+            "--serve-retain {} is implausibly large (max 64)",
+            self.serve_retain
+        );
         Ok(())
     }
 
@@ -529,6 +585,12 @@ impl ExperimentConfig {
             }
             "serve" => self.serve = Some(value.to_string()),
             "serve_threads" | "serve-threads" => self.serve_threads = value.parse()?,
+            "serve_replicas" | "serve-replicas" => self.serve_replicas = value.parse()?,
+            "serve_batch" | "serve-batch" => self.serve_batch = value.parse()?,
+            "serve_batch_wait_us" | "serve-batch-wait-us" => {
+                self.serve_batch_wait_us = value.parse()?
+            }
+            "serve_retain" | "serve-retain" => self.serve_retain = value.parse()?,
             "max_fraction" => match &mut self.strategy {
                 StrategyConfig::Kakurenbo { max_fraction, .. } => *max_fraction = value.parse()?,
                 StrategyConfig::Forget { fraction, .. }
@@ -572,6 +634,10 @@ impl ExperimentConfig {
             ("straggler_timeout_ms", self.straggler_timeout_ms as usize),
             ("serve", self.serve.clone().map(Json::from).unwrap_or(Json::Null)),
             ("serve_threads", self.serve_threads),
+            ("serve_replicas", self.serve_replicas),
+            ("serve_batch", self.serve_batch),
+            ("serve_batch_wait_us", self.serve_batch_wait_us as usize),
+            ("serve_retain", self.serve_retain),
         ]
     }
 }
@@ -802,6 +868,10 @@ mod tests {
         let mut c = base_cfg(StrategyConfig::Baseline);
         assert!(c.serve.is_none(), "serving defaults off");
         assert_eq!(c.serve_threads, 2);
+        assert_eq!(c.serve_replicas, 1, "one replica by default");
+        assert_eq!(c.serve_batch, 1, "coalescing defaults off");
+        assert_eq!(c.serve_batch_wait_us, 250);
+        assert_eq!(c.serve_retain, 2, "hub retains two publications");
         assert!(c.validate().is_ok());
         c.apply_override("serve", "127.0.0.1:0").unwrap();
         assert_eq!(c.serve.as_deref(), Some("127.0.0.1:0"));
@@ -809,8 +879,42 @@ mod tests {
         assert_eq!(c.serve_threads, 4);
         c.apply_override("serve-threads", "1").unwrap();
         assert_eq!(c.serve_threads, 1);
+        c.apply_override("serve_replicas", "3").unwrap();
+        c.apply_override("serve-batch", "8").unwrap();
+        c.apply_override("serve_batch_wait_us", "500").unwrap();
+        c.apply_override("serve-retain", "4").unwrap();
+        assert_eq!(c.serve_replicas, 3);
+        assert_eq!(c.serve_batch, 8);
+        assert_eq!(c.serve_batch_wait_us, 500);
+        assert_eq!(c.serve_retain, 4);
         assert!(c.validate().is_ok());
         assert!(c.apply_override("serve_threads", "many").is_err());
+        assert!(c.apply_override("serve-batch", "lots").is_err());
+    }
+
+    #[test]
+    fn serve_throughput_knob_bounds_validated() {
+        let mut c = base_cfg(StrategyConfig::Baseline);
+        for (field, bad, needle) in [
+            ("serve_replicas", "0", "--serve-replicas 0"),
+            ("serve_replicas", "65", "--serve-replicas 65"),
+            ("serve_batch", "0", "--serve-batch 0"),
+            ("serve_batch", "1025", "--serve-batch 1025"),
+            ("serve_batch_wait_us", "1000001", "--serve-batch-wait-us 1000001"),
+            ("serve_retain", "0", "--serve-retain 0"),
+            ("serve_retain", "65", "--serve-retain 65"),
+        ] {
+            let mut c2 = base_cfg(StrategyConfig::Baseline);
+            c2.apply_override(field, bad).unwrap();
+            let err = c2.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "{field}={bad}: {err}");
+        }
+        // the maxima themselves are fine
+        c.serve_replicas = 64;
+        c.serve_batch = 1024;
+        c.serve_batch_wait_us = 1_000_000;
+        c.serve_retain = 64;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -39,8 +39,8 @@ use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    CheckpointWriter, Engine, EvalSink, RefreshSink, ServeLane, ServiceEvent, ServiceLanes,
-    SharedSnapshot, SnapshotHub, StepMode, WorkerPool,
+    CheckpointWriter, Engine, EvalSink, RefreshSink, ServeBatching, ServeFleet, ServiceEvent,
+    ServiceLanes, SharedSnapshot, SnapshotHub, StepMode, WorkerPool,
 };
 use crate::serve::{InferenceServer, ServingShape};
 use crate::metrics::{EpochRecord, RunResult};
@@ -52,20 +52,21 @@ use crate::util::rng::Rng;
 use std::sync::Arc;
 
 /// The online inference lane's moving parts, held together so they spawn
-/// and shut down as one unit: the HTTP front end, the serving replica's
-/// lane, and the snapshot hub the epoch pipeline publishes into.
+/// and shut down as one unit: the HTTP front end, the serving replica
+/// fleet, and the snapshot hub the epoch pipeline publishes into.
 ///
 /// Field order is drop order: the HTTP server drains first (no new
-/// queries), then the lane joins, then the hub's retained publications
-/// release.
+/// queries), then the fleet's lanes join, then the hub's retained
+/// publications release.
 pub struct ServeRuntime {
     /// The HTTP front end (`--serve <addr>`); reports the bound address.
     pub server: InferenceServer,
-    /// The serving replica's lane; its failures fold in as serve-lane
+    /// The serving replica fleet (`--serve-replicas R` lanes with
+    /// `--serve-batch` coalescing); lane failures fold in as serve-lane
     /// [`ServiceEvent::Error`]s.
-    pub lane: ServeLane,
-    /// The publication hub: one atomically-swapped params snapshot per
-    /// epoch.
+    pub fleet: ServeFleet,
+    /// The publication hub: the live params snapshot plus the
+    /// `--serve-retain` most recent publications.
     pub hub: Arc<SnapshotHub>,
 }
 
@@ -300,19 +301,27 @@ impl Trainer {
     }
 
     /// Spawn the online inference lane if `cfg.serve` names an address
-    /// and it is not up yet: a snapshot hub, a serving replica on its own
-    /// lane thread (the same `ReplicaBuilder` contract the eval lane
-    /// uses), and the HTTP front end.  The dataset's geometry becomes the
-    /// serving shape, so malformed query payloads are rejected at the
-    /// HTTP layer and never reach the replica.
+    /// and it is not up yet: a retention-bounded snapshot hub,
+    /// `--serve-replicas` serving replicas each on its own lane thread
+    /// (the same `ReplicaBuilder` contract the eval lane uses) with
+    /// `--serve-batch` query coalescing, and the HTTP front end.  The
+    /// dataset's geometry becomes the serving shape, so malformed query
+    /// payloads are rejected at the HTTP layer and never reach a
+    /// replica.
     pub(crate) fn ensure_serve(&mut self) -> anyhow::Result<()> {
         if self.serve.is_some() {
             return Ok(());
         }
         let Some(addr) = self.cfg.serve.clone() else { return Ok(()) };
-        let hub = Arc::new(SnapshotHub::new());
-        let builder = crate::engine::DataParallel::replica_builder(&self.exec)?;
-        let lane = ServeLane::spawn(builder, hub.clone())?;
+        let hub = Arc::new(SnapshotHub::with_retain(self.cfg.serve_retain));
+        let builders = (0..self.cfg.serve_replicas)
+            .map(|_| crate::engine::DataParallel::replica_builder(&self.exec))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let batching = ServeBatching {
+            max_batch: self.cfg.serve_batch,
+            max_wait: std::time::Duration::from_micros(self.cfg.serve_batch_wait_us),
+        };
+        let fleet = ServeFleet::spawn(builders, hub.clone(), batching)?;
         let shape = ServingShape {
             input_dim: self.data.train.sample_dim,
             classes: self.data.train.classes,
@@ -321,11 +330,16 @@ impl Trainer {
             &addr,
             self.cfg.serve_threads,
             hub.clone(),
-            lane.client(),
+            fleet.client(),
             Some(shape),
         )?;
-        crate::info!("[serve] listening on {}", server.addr());
-        self.serve = Some(ServeRuntime { server, lane, hub });
+        crate::info!(
+            "[serve] listening on {} ({} replica lanes, batch {})",
+            server.addr(),
+            fleet.lanes(),
+            self.cfg.serve_batch
+        );
+        self.serve = Some(ServeRuntime { server, fleet, hub });
         Ok(())
     }
 
@@ -337,11 +351,12 @@ impl Trainer {
     }
 
     /// Fold the inference lane's activity into the epoch records at a
-    /// barrier: queries answered since the last fold attribute to the
-    /// newest record, and serving-replica failures ride the same
-    /// fault-policy contract as the eval/checkpoint lanes — named abort
-    /// under `fail`, count-and-continue (with `/healthz` degraded) under
-    /// `elastic`.
+    /// barrier: queries / device batches answered since the last fold
+    /// attribute to the newest record (with the mean batch fill and the
+    /// per-lane query split), and serving-replica failures ride the
+    /// same fault-policy contract as the eval/checkpoint lanes — named
+    /// abort under `fail`, count-and-continue (that lane down on
+    /// `/healthz`) under `elastic`.
     fn fold_serve(
         &mut self,
         records: &mut [EpochRecord],
@@ -349,10 +364,26 @@ impl Trainer {
     ) -> anyhow::Result<()> {
         let Some(serve) = self.serve.as_mut() else { return Ok(()) };
         let queries = serve.hub.take_queries();
+        let batches = serve.hub.take_batches();
+        let lane_queries = serve.hub.take_lane_queries();
         if let Some(rec) = records.last_mut() {
             rec.serve_queries += queries;
+            rec.serve_batches += batches;
+            rec.serve_batch_fill = if rec.serve_batches > 0 {
+                rec.serve_queries as f64 / rec.serve_batches as f64
+            } else {
+                0.0
+            };
+            if queries > 0 {
+                if rec.serve_lane_queries.len() < lane_queries.len() {
+                    rec.serve_lane_queries.resize(lane_queries.len(), 0);
+                }
+                for (slot, q) in rec.serve_lane_queries.iter_mut().zip(&lane_queries) {
+                    *slot += q;
+                }
+            }
         }
-        for ev in serve.lane.try_events() {
+        for ev in serve.fleet.try_events() {
             if let ServiceEvent::Error { epoch, lane, message, secs } = ev {
                 anyhow::ensure!(
                     self.cfg.fault_policy == FaultPolicy::Elastic,

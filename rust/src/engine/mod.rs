@@ -64,10 +64,10 @@
 //! lifecycle.  Async eval is bitwise identical to sync eval (the lane
 //! evaluates an exact snapshot with the identical accumulation order) —
 //! enforced by `tests/service_lane_determinism.rs`.  A third,
-//! query-driven lane lives in [`serve`]: the online inference lane's
-//! [`SnapshotHub`] (atomically-swapped live snapshot publications) and
-//! [`ServeLane`] (the serving replica), fronted by the HTTP layer in
-//! [`crate::serve`]; see docs/serving.md.
+//! query-driven lane lives in [`serve`]: the online inference fleet's
+//! [`SnapshotHub`] (live snapshot publications, retention-bounded) and
+//! [`ServeFleet`] (one or more serving replicas with query coalescing),
+//! fronted by the HTTP layer in [`crate::serve`]; see docs/serving.md.
 
 pub mod backend;
 pub mod chaos;
@@ -85,7 +85,7 @@ pub use modes::{
     RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
-pub use serve::{Published, ServeAnswer, ServeClient, ServeLane, SnapshotHub};
+pub use serve::{Published, ServeAnswer, ServeBatching, ServeClient, ServeFleet, SnapshotHub};
 pub use service::{CheckpointWriter, ServiceEvent, ServiceLaneKind, ServiceLanes};
 pub use snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 

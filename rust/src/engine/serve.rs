@@ -1,44 +1,67 @@
-//! The online inference lane: live snapshot publication + a serving
-//! replica, off the training critical path.
+//! The online inference fleet: live snapshot publication + serving
+//! replicas, off the training critical path.
 //!
 //! Two pieces (the HTTP surface lives in [`crate::serve`]):
 //!
 //! * [`SnapshotHub`] — the publication point.  The epoch pipeline
-//!   publishes each epoch's params-tier snapshot here (one atomic
-//!   pointer swap); query threads read the latest publication with a
-//!   **single atomic load and no lock**, so a swap can never expose a
-//!   torn `(epoch, digests, snapshot)` triple — the epoch a response
-//!   reports is always the epoch whose parameters answered it.
-//! * [`ServeLane`] — the replica owner.  Like the eval lane
-//!   (`engine/service.rs`), the serving replica is built *on* its lane
-//!   thread via the [`ReplicaBuilder`] contract (PJRT state is not
-//!   `Send`); query threads hand it jobs through a [`ServeClient`] and
-//!   block on a per-query reply channel.  The replica re-imports
-//!   parameters only when the publication under a query differs from
-//!   the one it last synced — queries between publications pay no
-//!   import.
+//!   publishes each epoch's params-tier snapshot here; query threads
+//!   read the latest publication as one `Arc` clone under a short lock,
+//!   so a swap can never expose a torn `(epoch, digests, snapshot)`
+//!   triple — the epoch a response reports is always the epoch whose
+//!   parameters answered it.  The hub retains only the most recent K
+//!   publications (`--serve-retain`, default 2): older `Published`
+//!   entries are evicted and freed, while in-flight readers stay sound
+//!   because a loaded publication is an owned `Arc` that outlives its
+//!   eviction.
+//! * [`ServeFleet`] — the replica owners.  `--serve-replicas R` builds
+//!   R serving replicas, each *on* its own lane thread via the
+//!   [`ReplicaBuilder`] contract (PJRT state is not `Send`).  Query
+//!   threads hand jobs to the least-loaded live lane through a
+//!   [`ServeClient`] and block on a per-query reply channel; a lane
+//!   that dies before answering forces a redispatch to a surviving
+//!   lane, so every query is answered exactly once.  Each lane
+//!   re-imports parameters only when the publication under a query
+//!   differs from the one it last synced — queries between
+//!   publications pay no import.
+//!
+//! # Micro-batching
+//!
+//! With `--serve-batch N > 1` a lane drains its queue into a coalescing
+//! buffer: it dispatches as soon as N queries accumulate or the oldest
+//! has waited `--serve-batch-wait-us`, packs compatible queries (same
+//! publication, same endpoint, same row width) into **one** batched
+//! `fwd_stats`/`fwd_embed` device call, and scatters per-row results
+//! back to each query's reply channel.  The forward is row-independent,
+//! so each query's slice is bitwise identical to what a solo forward
+//! would have produced (`tests/inference_serving.rs`).
 //!
 //! # Failure contract
 //!
-//! A backend failure on the lane (a killed replica, a failed import)
-//! marks the hub **degraded** (surfaced by `/healthz`), answers the
-//! in-flight query with the error, and emits a named
-//! [`ServiceEvent::Error`] tagged [`ServiceLaneKind::Serve`] into the
-//! fold-in stream the trainer drains at each epoch barrier — so
-//! `--fault-policy fail` aborts the run with a clear message while
-//! `elastic` counts the failure and keeps training.  Client-side input
-//! validation happens in the HTTP layer *before* a job is submitted, so
-//! malformed queries never reach the device and never degrade the lane.
+//! A backend failure on a lane (a killed replica, a failed import)
+//! marks **that lane** down, answers its in-flight queries with the
+//! error, and emits a named [`ServiceEvent::Error`] tagged
+//! [`ServiceLaneKind::Serve`] into the fold-in stream the trainer
+//! drains at each epoch barrier — so `--fault-policy fail` aborts the
+//! run with a clear message while `elastic` counts the failure and
+//! keeps training.  `/healthz` reports **degraded** only when every
+//! lane is down (or on an explicit [`SnapshotHub::set_degraded`]); a
+//! lane that answers successfully again marks itself back up.
+//! Client-side input validation happens in the HTTP layer *before* a
+//! job is submitted, so malformed queries never reach the device and
+//! never degrade a lane.
 //!
 //! # Determinism contract
 //!
-//! Serving is read-only: the lane touches only its own replica and the
-//! immutable published snapshots, so a run with `--serve` on is bitwise
-//! identical to one with it off (`tests/inference_serving.rs`).
+//! Serving is read-only: the lanes touch only their own replicas and
+//! the immutable published snapshots, so a run with `--serve` on is
+//! bitwise identical to one with it off — under every batching/replica
+//! configuration (`tests/inference_serving.rs`).
 
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::backend::{ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
 use super::service::{ServiceEvent, ServiceLaneKind};
@@ -64,13 +87,13 @@ pub fn leaf_digests(snap: &Snapshot) -> Vec<String> {
 }
 
 /// One publication: everything a response reports about the snapshot it
-/// was answered against, bundled so a single pointer load observes all
-/// of it or none of it.
+/// was answered against, bundled so a single hub read observes all of
+/// it or none of it.
 #[derive(Debug)]
 pub struct Published {
     /// The epoch this snapshot was exported at.
     pub epoch: usize,
-    /// Monotonic publication sequence number (the lane's sync key —
+    /// Monotonic publication sequence number (the lanes' sync key —
     /// distinct publications of the same epoch re-import).
     pub seq: u64,
     /// Per-leaf SHA-256 digests of the parameter section.
@@ -79,18 +102,46 @@ pub struct Published {
     pub snapshot: SharedSnapshot,
 }
 
-/// The atomically-swapped publication point (see module docs).
+/// How a serve lane coalesces queued queries into shared device
+/// forwards (see module docs).  `max_batch == 1` disables coalescing
+/// entirely — every query dispatches solo, exactly the pre-batching
+/// behavior.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeBatching {
+    /// Dispatch as soon as this many queries have accumulated.
+    pub max_batch: usize,
+    /// Dispatch once the oldest queued query has waited this long,
+    /// even if the batch is not full.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeBatching {
+    fn default() -> Self {
+        ServeBatching { max_batch: 1, max_wait: Duration::from_micros(250) }
+    }
+}
+
+/// The publication point shared by every serve lane (see module docs).
 ///
-/// Readers pay one `Acquire` pointer load per query; the publisher pays
-/// a short retention-list lock per epoch.  Every publication is retained
-/// for the hub's lifetime (bounded: one per epoch), which is what makes
-/// the lock-free read sound — a loaded pointer can never dangle.
+/// Readers pay one short lock + `Arc` clone per query; the publisher
+/// evicts beyond the K most recent publications, so a run's hub memory
+/// is bounded regardless of epoch count.  The hub also carries the
+/// fleet's health + throughput counters: per-lane up/down bits, query
+/// and batch counts (per-epoch deltas for the fold-in, cumulative
+/// totals for `/healthz`).
 pub struct SnapshotHub {
-    current: AtomicPtr<Published>,
-    retained: Mutex<Vec<Arc<Published>>>,
+    current: Mutex<Option<Arc<Published>>>,
+    retained: Mutex<VecDeque<Arc<Published>>>,
+    retain: usize,
     seq: AtomicU64,
     publishes: AtomicUsize,
     queries: AtomicUsize,
+    batches: AtomicUsize,
+    queries_total: AtomicUsize,
+    batches_total: AtomicUsize,
+    lane_queries: Mutex<Vec<usize>>,
+    lanes: AtomicUsize,
+    lanes_down: AtomicU64,
     degraded: AtomicBool,
 }
 
@@ -101,21 +152,36 @@ impl Default for SnapshotHub {
 }
 
 impl SnapshotHub {
-    /// An empty hub: not ready until the first [`SnapshotHub::publish`].
+    /// An empty hub retaining the default 2 most recent publications;
+    /// not ready until the first [`SnapshotHub::publish`].
     pub fn new() -> Self {
+        SnapshotHub::with_retain(2)
+    }
+
+    /// An empty hub retaining at most `retain` publications (clamped to
+    /// at least 1 — the live publication is never evicted).
+    pub fn with_retain(retain: usize) -> Self {
         SnapshotHub {
-            current: AtomicPtr::new(std::ptr::null_mut()),
-            retained: Mutex::new(Vec::new()),
+            current: Mutex::new(None),
+            retained: Mutex::new(VecDeque::new()),
+            retain: retain.max(1),
             seq: AtomicU64::new(0),
             publishes: AtomicUsize::new(0),
             queries: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            queries_total: AtomicUsize::new(0),
+            batches_total: AtomicUsize::new(0),
+            lane_queries: Mutex::new(Vec::new()),
+            lanes: AtomicUsize::new(0),
+            lanes_down: AtomicU64::new(0),
             degraded: AtomicBool::new(false),
         }
     }
 
     /// Publish `snap` as the live snapshot for `epoch`.  Readers switch
     /// to it atomically; in-flight queries keep the publication they
-    /// already loaded.
+    /// already loaded (their `Arc` outlives any eviction), and
+    /// publications beyond the retention bound are freed here.
     pub fn publish(&self, epoch: usize, snap: SharedSnapshot) -> Arc<Published> {
         let published = Arc::new(Published {
             epoch,
@@ -123,36 +189,28 @@ impl SnapshotHub {
             digests: leaf_digests(&snap),
             snapshot: snap,
         });
-        let raw = Arc::as_ptr(&published) as *mut Published;
-        // retain BEFORE exposing the pointer: a reader that loads it must
-        // always find the allocation alive
-        self.retained.lock().unwrap().push(published.clone());
-        self.current.store(raw, Ordering::Release);
+        {
+            let mut retained = self.retained.lock().unwrap();
+            retained.push_back(published.clone());
+            while retained.len() > self.retain {
+                retained.pop_front();
+            }
+        }
+        *self.current.lock().unwrap() = Some(published.clone());
         self.publishes.fetch_add(1, Ordering::Relaxed);
         published
     }
 
     /// The latest publication, or `None` before the first publish.
-    /// Lock-free: one atomic load, then an `Arc` refcount bump.
+    /// One short lock and an `Arc` clone — never a torn pairing.
     pub fn latest(&self) -> Option<Arc<Published>> {
-        let p = self.current.load(Ordering::Acquire);
-        if p.is_null() {
-            return None;
-        }
-        // SAFETY: `p` was produced by `Arc::as_ptr` on a publication that
-        // `retained` keeps alive for the hub's whole lifetime, so the
-        // strong count is >= 1 here and bumping it hands out an owned
-        // handle to a live allocation.
-        unsafe {
-            Arc::increment_strong_count(p);
-            Some(Arc::from_raw(p))
-        }
+        self.current.lock().unwrap().clone()
     }
 
     /// Whether a snapshot has been published (the `/healthz` readiness
     /// signal).
     pub fn ready(&self) -> bool {
-        !self.current.load(Ordering::Acquire).is_null()
+        self.current.lock().unwrap().is_some()
     }
 
     /// Total publications so far.
@@ -160,9 +218,56 @@ impl SnapshotHub {
         self.publishes.load(Ordering::Relaxed)
     }
 
-    /// Count one answered query (the serve lane calls this per job).
-    pub fn record_query(&self) {
+    /// How many publications the hub currently holds alive (≤ the
+    /// retention bound).
+    pub fn retained_count(&self) -> usize {
+        self.retained.lock().unwrap().len()
+    }
+
+    /// Register one serve lane; returns its lane id (the index used by
+    /// [`SnapshotHub::lane_down`] / [`SnapshotHub::lane_up`] and the
+    /// per-lane query counters).
+    pub fn register_lane(&self) -> usize {
+        self.lane_queries.lock().unwrap().push(0);
+        self.lanes.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// How many serve lanes are registered.
+    pub fn lanes(&self) -> usize {
+        self.lanes.load(Ordering::Relaxed)
+    }
+
+    /// Mark lane `id` down (a backend failure on that lane).
+    pub fn lane_down(&self, id: usize) {
+        self.lanes_down.fetch_or(1u64 << (id & 63), Ordering::AcqRel);
+    }
+
+    /// Mark lane `id` back up (it answered a query successfully).
+    pub fn lane_up(&self, id: usize) {
+        self.lanes_down.fetch_and(!(1u64 << (id & 63)), Ordering::AcqRel);
+    }
+
+    /// How many registered lanes are currently marked down.
+    pub fn lanes_down(&self) -> usize {
+        self.lanes_down.load(Ordering::Acquire).count_ones() as usize
+    }
+
+    /// Count one answered query on lane `lane` (the serve lanes call
+    /// this per job, success or failure).
+    pub fn record_query(&self, lane: usize) {
         self.queries.fetch_add(1, Ordering::Relaxed);
+        self.queries_total.fetch_add(1, Ordering::Relaxed);
+        let mut per = self.lane_queries.lock().unwrap();
+        if lane >= per.len() {
+            per.resize(lane + 1, 0);
+        }
+        per[lane] += 1;
+    }
+
+    /// Count one dispatched device batch (one coalesced forward).
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batches_total.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Queries answered since the last call (the per-epoch fold: each
@@ -171,23 +276,57 @@ impl SnapshotHub {
         self.queries.swap(0, Ordering::Relaxed)
     }
 
-    /// Mark the serving path degraded (a replica failure under the
-    /// elastic fault policy) or recovered.
+    /// Device batches dispatched since the last call (per-epoch fold).
+    pub fn take_batches(&self) -> usize {
+        self.batches.swap(0, Ordering::Relaxed)
+    }
+
+    /// Per-lane answered-query counts since the last call (per-epoch
+    /// fold; index = lane id).
+    pub fn take_lane_queries(&self) -> Vec<usize> {
+        let mut per = self.lane_queries.lock().unwrap();
+        let zeroed = vec![0; per.len()];
+        std::mem::replace(&mut *per, zeroed)
+    }
+
+    /// Cumulative answered queries over the hub's lifetime (`/healthz`).
+    pub fn queries_total(&self) -> usize {
+        self.queries_total.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative dispatched device batches over the hub's lifetime
+    /// (`/healthz`).
+    pub fn batches_total(&self) -> usize {
+        self.batches_total.load(Ordering::Relaxed)
+    }
+
+    /// Force the serving path degraded (or un-degraded) regardless of
+    /// per-lane health — the explicit override some tests and operators
+    /// use.
     pub fn set_degraded(&self, degraded: bool) {
         self.degraded.store(degraded, Ordering::Release);
     }
 
-    /// Whether the serving path is degraded.
+    /// Whether the serving path is degraded: explicitly forced, or
+    /// every registered lane is down.  A fleet with live lanes left
+    /// keeps reporting healthy — one dead replica out of R degrades
+    /// only its own lane.
     pub fn degraded(&self) -> bool {
-        self.degraded.load(Ordering::Acquire)
+        if self.degraded.load(Ordering::Acquire) {
+            return true;
+        }
+        let lanes = self.lanes();
+        lanes > 0 && self.lanes_down() >= lanes
     }
 }
 
-/// One forward query against a specific publication.
+/// One forward query against a specific publication.  Inputs ride in
+/// `Arc`s so a redispatch after a lane death re-sends the same buffers
+/// without copying.
 struct ServeJob {
     published: Arc<Published>,
-    x: Vec<f32>,
-    y: Vec<i32>,
+    x: Arc<Vec<f32>>,
+    y: Arc<Vec<i32>>,
     embed: bool,
     resp: Sender<anyhow::Result<ServeAnswer>>,
 }
@@ -211,17 +350,33 @@ enum ServeReady {
     Fail(String),
 }
 
-/// A cloneable handle HTTP workers use to hand queries to the lane and
-/// block for the answer.
+/// One lane's dispatch slot: the job sender (cleared when the lane is
+/// gone) and the number of queries currently waiting on it — the
+/// client's least-loaded routing signal.
+struct LaneSlot {
+    lane_id: usize,
+    tx: Mutex<Option<Sender<ServeJob>>>,
+    inflight: AtomicUsize,
+    /// Set by [`ServeFleet::kill_lane`]: the lane drops queued jobs
+    /// *unanswered* (simulating a crash), which is what forces clients
+    /// to redispatch.
+    stop: AtomicBool,
+}
+
+/// A cloneable handle HTTP workers use to hand queries to the fleet and
+/// block for the answer.  Each query goes to the live lane with the
+/// fewest in-flight queries; if that lane dies before answering, the
+/// query redispatches to a survivor — exactly one reply per query, no
+/// drops, no duplicates.
 #[derive(Clone)]
 pub struct ServeClient {
-    tx: Sender<ServeJob>,
+    slots: Arc<Vec<Arc<LaneSlot>>>,
 }
 
 impl ServeClient {
-    /// Run one forward query on the serving replica against `published`
-    /// and wait for the answer.  `embed` selects `fwd_embed` over
-    /// `fwd_stats`.
+    /// Run one forward query against `published` on the least-loaded
+    /// live serving replica and wait for the answer.  `embed` selects
+    /// `fwd_embed` over `fwd_stats`.
     pub fn query(
         &self,
         published: Arc<Published>,
@@ -229,46 +384,157 @@ impl ServeClient {
         y: Vec<i32>,
         embed: bool,
     ) -> anyhow::Result<ServeAnswer> {
-        let (resp, rx) = channel();
-        self.tx
-            .send(ServeJob { published, x, y, embed, resp })
-            .map_err(|_| anyhow::anyhow!("serve lane is gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("serve lane dropped the query"))?
+        let x = Arc::new(x);
+        let y = Arc::new(y);
+        let mut attempts = 0usize;
+        loop {
+            attempts += 1;
+            // a dead lane clears its sender on the first failed send, so
+            // this loop terminates; the cap is a defensive backstop
+            if attempts > 2 * self.slots.len() + 2 {
+                anyhow::bail!("serve lanes kept dying mid-query; giving up");
+            }
+            let mut pick: Option<&Arc<LaneSlot>> = None;
+            let mut best = usize::MAX;
+            for slot in self.slots.iter() {
+                if slot.tx.lock().unwrap().is_none() {
+                    continue;
+                }
+                let load = slot.inflight.load(Ordering::Relaxed);
+                if load < best {
+                    best = load;
+                    pick = Some(slot);
+                }
+            }
+            let Some(slot) = pick else {
+                anyhow::bail!("serve lane is gone");
+            };
+            let (resp, rx) = channel();
+            let job = ServeJob {
+                published: published.clone(),
+                x: x.clone(),
+                y: y.clone(),
+                embed,
+                resp,
+            };
+            {
+                let mut g = slot.tx.lock().unwrap();
+                match g.as_ref() {
+                    Some(tx) => {
+                        if tx.send(job).is_err() {
+                            // the lane's receiver is gone: retire the
+                            // slot so no one picks it again
+                            *g = None;
+                            continue;
+                        }
+                    }
+                    None => continue, // retired between pick and send
+                }
+            }
+            slot.inflight.fetch_add(1, Ordering::Relaxed);
+            let got = rx.recv();
+            slot.inflight.fetch_sub(1, Ordering::Relaxed);
+            match got {
+                Ok(answer) => return answer,
+                // the lane died holding the job without answering — it
+                // provably never replied, so redispatching cannot
+                // duplicate a reply
+                Err(_) => continue,
+            }
+        }
     }
 }
 
-/// The serving replica's lane: owns the replica thread, surfaces its
-/// failures as fold-in events, and vends [`ServeClient`] handles.
-pub struct ServeLane {
-    tx: Option<Sender<ServeJob>>,
+/// The serving replicas' fleet: owns R lane threads, surfaces their
+/// failures as fold-in events, and vends [`ServeClient`] handles that
+/// route to the least-loaded live lane.
+pub struct ServeFleet {
+    slots: Arc<Vec<Arc<LaneSlot>>>,
+    hub: Arc<SnapshotHub>,
     events_rx: Receiver<ServiceEvent>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
 }
 
-impl ServeLane {
-    /// Spawn the lane: the replica builds on the lane thread (blocking
-    /// this call until ready, so build failures surface here), then the
-    /// thread serves queries until every [`ServeClient`] and the lane
-    /// itself are dropped.
-    pub fn spawn(build: ReplicaBuilder, hub: Arc<SnapshotHub>) -> anyhow::Result<Self> {
-        let (tx, rx) = channel::<ServeJob>();
+impl ServeFleet {
+    /// Spawn one lane per builder: each replica builds on its own lane
+    /// thread (this call blocks until every lane is ready, so build
+    /// failures surface here), then the threads serve queries until
+    /// every [`ServeClient`] and the fleet itself are dropped.
+    pub fn spawn(
+        builders: Vec<ReplicaBuilder>,
+        hub: Arc<SnapshotHub>,
+        batching: ServeBatching,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!builders.is_empty(), "serve fleet needs at least one replica");
         let (events_tx, events_rx) = channel::<ServiceEvent>();
-        let (ready_tx, ready_rx) = channel::<ServeReady>();
-        let handle = std::thread::Builder::new()
-            .name("service-serve".into())
-            .spawn(move || lane_main(build, rx, events_tx, ready_tx, hub))?;
-        match ready_rx.recv() {
-            Ok(ServeReady::Ok) => {
-                Ok(ServeLane { tx: Some(tx), events_rx, handle: Some(handle) })
-            }
-            Ok(ServeReady::Fail(e)) => anyhow::bail!("serve lane spawn failed: {e}"),
-            Err(_) => anyhow::bail!("serve lane died during spawn"),
+        let mut slots = Vec::new();
+        let mut handles = Vec::new();
+        let mut readies = Vec::new();
+        for (i, build) in builders.into_iter().enumerate() {
+            let lane_id = hub.register_lane();
+            let (tx, rx) = channel::<ServeJob>();
+            let slot = Arc::new(LaneSlot {
+                lane_id,
+                tx: Mutex::new(Some(tx)),
+                inflight: AtomicUsize::new(0),
+                stop: AtomicBool::new(false),
+            });
+            let handle = {
+                let slot = slot.clone();
+                let hub = hub.clone();
+                let events_tx = events_tx.clone();
+                let (ready_tx, ready_rx) = channel::<ServeReady>();
+                readies.push(ready_rx);
+                std::thread::Builder::new()
+                    .name(format!("service-serve-{i}"))
+                    .spawn(move || lane_main(build, rx, events_tx, ready_tx, hub, slot, batching))?
+            };
+            slots.push(slot);
+            handles.push(Some(handle));
         }
+        let mut failure: Option<String> = None;
+        for ready_rx in &readies {
+            match ready_rx.recv() {
+                Ok(ServeReady::Ok) => {}
+                Ok(ServeReady::Fail(e)) => failure = Some(e),
+                Err(_) => failure = Some("serve lane died during spawn".into()),
+            }
+        }
+        let fleet = ServeFleet { slots: Arc::new(slots), hub, events_rx, handles };
+        match failure {
+            Some(e) => anyhow::bail!("serve lane spawn failed: {e}"), // fleet drops: healthy lanes join
+            None => Ok(fleet),
+        }
+    }
+
+    /// Spawn a single-lane fleet with coalescing off — the
+    /// one-replica, one-query-per-forward configuration.
+    pub fn spawn_single(build: ReplicaBuilder, hub: Arc<SnapshotHub>) -> anyhow::Result<Self> {
+        ServeFleet::spawn(vec![build], hub, ServeBatching::default())
     }
 
     /// A query handle for HTTP workers (cloneable, `Send`).
     pub fn client(&self) -> ServeClient {
-        ServeClient { tx: self.tx.as_ref().expect("lane alive until drop").clone() }
+        ServeClient { slots: self.slots.clone() }
+    }
+
+    /// How many lanes this fleet spawned (dead ones included).
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Kill lane `i` abruptly (chaos/testing): the lane drops its
+    /// queued jobs **unanswered** — as a crashed process would — which
+    /// forces their clients to redispatch to surviving lanes; the lane
+    /// is marked down on the hub and its thread joined.
+    pub fn kill_lane(&mut self, i: usize) {
+        let slot = &self.slots[i];
+        slot.stop.store(true, Ordering::Release);
+        drop(slot.tx.lock().unwrap().take());
+        self.hub.lane_down(slot.lane_id);
+        if let Some(h) = self.handles[i].take() {
+            let _ = h.join();
+        }
     }
 
     /// Non-blocking: every lane failure reported since the last call,
@@ -285,24 +551,32 @@ impl ServeLane {
     }
 }
 
-impl Drop for ServeLane {
+impl Drop for ServeFleet {
     fn drop(&mut self) {
-        drop(self.tx.take()); // disconnect; the lane exits once clients are gone
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for slot in self.slots.iter() {
+            // graceful: lanes drain + answer queued jobs, then exit
+            drop(slot.tx.lock().unwrap().take());
+        }
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
-/// Lane thread body: build the replica, then answer queries.  Parameters
-/// re-import only when the query's publication differs from the last
-/// synced one, so steady-state queries are pure forwards.
+/// Lane thread body: build the replica, then serve.  With coalescing on
+/// the lane blocks for the first query, keeps draining until the batch
+/// is full or the oldest query has waited `max_wait`, groups compatible
+/// queries, and dispatches each group as one device call.
 fn lane_main(
     build: ReplicaBuilder,
     rx: Receiver<ServeJob>,
     events_tx: Sender<ServiceEvent>,
     ready_tx: Sender<ServeReady>,
     hub: Arc<SnapshotHub>,
+    slot: Arc<LaneSlot>,
+    batching: ServeBatching,
 ) {
     let mut replica = match build() {
         Ok(r) => r,
@@ -315,42 +589,173 @@ fn lane_main(
         return;
     }
     let mut synced: Option<u64> = None;
-    while let Ok(job) = rx.recv() {
-        let t = Timer::start();
-        let answer = serve_one(replica.as_mut(), &mut synced, &job);
-        hub.record_query();
-        if let Err(e) = &answer {
-            // a backend failure, not a client mistake (the HTTP layer
-            // validates inputs before submitting): degrade the health
-            // signal and put a named error in the fold-in stream
-            hub.set_degraded(true);
-            let _ = events_tx.send(ServiceEvent::Error {
-                epoch: job.published.epoch,
-                lane: ServiceLaneKind::Serve,
-                message: e.to_string(),
-                secs: t.elapsed_s(),
-            });
+    loop {
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => break, // all senders gone: fleet teardown
+        };
+        let mut pending = vec![first];
+        if batching.max_batch > 1 {
+            let deadline = Instant::now() + batching.max_wait;
+            while pending.len() < batching.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    // past the wait budget: take whatever is already
+                    // queued, but don't wait for more
+                    match rx.try_recv() {
+                        Ok(job) => pending.push(job),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(job) => pending.push(job),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }
         }
-        let _ = job.resp.send(answer);
+        if slot.stop.load(Ordering::Acquire) {
+            // killed: drop the jobs unanswered so clients redispatch
+            continue;
+        }
+        for group in take_groups(pending) {
+            dispatch_group(replica.as_mut(), &mut synced, group, &hub, &slot, &events_tx);
+        }
     }
 }
 
-fn serve_one(
+/// Split drained jobs into coalescible groups — same publication, same
+/// endpoint, same row width — preserving arrival order within and
+/// across groups.
+fn take_groups(pending: Vec<ServeJob>) -> Vec<Vec<ServeJob>> {
+    let mut groups: Vec<((u64, bool, usize), Vec<ServeJob>)> = Vec::new();
+    for job in pending {
+        let rows = job.y.len().max(1);
+        let key = (job.published.seq, job.embed, job.x.len() / rows);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, group)) => group.push(job),
+            None => groups.push((key, vec![job])),
+        }
+    }
+    groups.into_iter().map(|(_, group)| group).collect()
+}
+
+/// Run one coalesced group and scatter the answers; failures answer
+/// every member, mark the lane down, and emit one fold-in event.
+fn dispatch_group(
     replica: &mut dyn ReplicaBackend,
     synced: &mut Option<u64>,
-    job: &ServeJob,
-) -> anyhow::Result<ServeAnswer> {
-    if *synced != Some(job.published.seq) {
-        replica.import_params(job.published.snapshot.params())?;
-        *synced = Some(job.published.seq);
+    group: Vec<ServeJob>,
+    hub: &SnapshotHub,
+    slot: &LaneSlot,
+    events_tx: &Sender<ServiceEvent>,
+) {
+    let t = Timer::start();
+    let result = run_group(replica, synced, &group);
+    hub.record_batch();
+    for _ in &group {
+        hub.record_query(slot.lane_id);
     }
-    let epoch = job.published.epoch;
-    if job.embed {
-        let es = replica.fwd_embed(&job.x, &job.y)?;
-        Ok(ServeAnswer { epoch, stats: es.stats, emb: Some(es.emb), probs: Some(es.probs) })
+    match result {
+        Ok(answers) => {
+            hub.lane_up(slot.lane_id);
+            for (job, answer) in group.into_iter().zip(answers) {
+                let _ = job.resp.send(Ok(answer));
+            }
+        }
+        Err(e) => {
+            // a backend failure, not a client mistake (the HTTP layer
+            // validates inputs before submitting): mark this lane down
+            // and put a named error in the fold-in stream
+            hub.lane_down(slot.lane_id);
+            let message = e.to_string();
+            let _ = events_tx.send(ServiceEvent::Error {
+                epoch: group[0].published.epoch,
+                lane: ServiceLaneKind::Serve,
+                message: message.clone(),
+                secs: t.elapsed_s(),
+            });
+            for job in group {
+                let _ = job.resp.send(Err(anyhow::anyhow!("{message}")));
+            }
+        }
+    }
+}
+
+/// Execute one group: sync parameters if the publication changed, then
+/// either the solo fast path (identical to pre-batching behavior) or
+/// one concatenated forward scattered back by row ranges.
+fn run_group(
+    replica: &mut dyn ReplicaBackend,
+    synced: &mut Option<u64>,
+    group: &[ServeJob],
+) -> anyhow::Result<Vec<ServeAnswer>> {
+    let published = &group[0].published;
+    if *synced != Some(published.seq) {
+        replica.import_params(published.snapshot.params())?;
+        *synced = Some(published.seq);
+    }
+    let epoch = published.epoch;
+    if group.len() == 1 {
+        let job = &group[0];
+        let answer = if job.embed {
+            let es = replica.fwd_embed(&job.x, &job.y)?;
+            ServeAnswer { epoch, stats: es.stats, emb: Some(es.emb), probs: Some(es.probs) }
+        } else {
+            let stats = replica.fwd_stats(&job.x, &job.y)?;
+            ServeAnswer { epoch, stats, emb: None, probs: None }
+        };
+        return Ok(vec![answer]);
+    }
+    // coalesced: one device forward over the concatenated rows, then
+    // per-job row ranges scatter back out — the forward is
+    // row-independent, so each slice is bitwise what a solo forward
+    // would have produced
+    let rows: Vec<usize> = group.iter().map(|job| job.y.len()).collect();
+    let total: usize = rows.iter().sum();
+    let mut x = Vec::with_capacity(group.iter().map(|job| job.x.len()).sum());
+    let mut y = Vec::with_capacity(total);
+    for job in group {
+        x.extend_from_slice(&job.x);
+        y.extend_from_slice(&job.y);
+    }
+    let mut answers = Vec::with_capacity(group.len());
+    if group[0].embed {
+        let es = replica.fwd_embed(&x, &y)?;
+        let emb_w = es.emb.len() / total.max(1);
+        let probs_w = es.probs.len() / total.max(1);
+        let mut at = 0usize;
+        for b in rows {
+            answers.push(ServeAnswer {
+                epoch,
+                stats: slice_stats(&es.stats, at, b),
+                emb: Some(es.emb[at * emb_w..(at + b) * emb_w].to_vec()),
+                probs: Some(es.probs[at * probs_w..(at + b) * probs_w].to_vec()),
+            });
+            at += b;
+        }
     } else {
-        let stats = replica.fwd_stats(&job.x, &job.y)?;
-        Ok(ServeAnswer { epoch, stats, emb: None, probs: None })
+        let stats = replica.fwd_stats(&x, &y)?;
+        let mut at = 0usize;
+        for b in rows {
+            answers.push(ServeAnswer {
+                epoch,
+                stats: slice_stats(&stats, at, b),
+                emb: None,
+                probs: None,
+            });
+            at += b;
+        }
+    }
+    Ok(answers)
+}
+
+fn slice_stats(stats: &BatchStats, at: usize, b: usize) -> BatchStats {
+    BatchStats {
+        loss: stats.loss[at..at + b].to_vec(),
+        correct: stats.correct[at..at + b].to_vec(),
+        conf: stats.conf[at..at + b].to_vec(),
     }
 }
 
@@ -418,11 +823,34 @@ mod tests {
     }
 
     #[test]
+    fn retention_is_bounded_and_evicted_readers_stay_sound() {
+        let hub = SnapshotHub::with_retain(2);
+        // an in-flight reader pins the very first publication...
+        let pinned = hub.publish(0, snap(0.5));
+        let pinned_digests = pinned.digests.clone();
+        // ...while a long run publishes far past the retention bound
+        for e in 1..50 {
+            hub.publish(e, snap(e as f32 + 0.5));
+            assert!(hub.retained_count() <= 2, "retained {} at epoch {e}", hub.retained_count());
+        }
+        assert_eq!(hub.publishes(), 50);
+        assert_eq!(hub.retained_count(), 2);
+        // the hub serves the newest publication...
+        assert_eq!(hub.latest().unwrap().epoch, 49);
+        // ...and the evicted publication is still fully readable through
+        // the reader's own Arc: digests, snapshot params, the lot
+        assert_eq!(pinned.epoch, 0);
+        assert_eq!(pinned.digests, pinned_digests);
+        assert_eq!(pinned.snapshot.params()[0][0].to_bits(), 0.5f32.to_bits());
+        assert_eq!(leaf_digests(&pinned.snapshot), pinned_digests);
+    }
+
+    #[test]
     fn lane_answers_against_the_published_snapshot() {
         let hub = Arc::new(SnapshotHub::new());
         let be = MockBackend::new();
-        let lane = ServeLane::spawn(be.replica_builder().unwrap(), hub.clone()).unwrap();
-        let client = lane.client();
+        let fleet = ServeFleet::spawn_single(be.replica_builder().unwrap(), hub.clone()).unwrap();
+        let client = fleet.client();
         let p1 = hub.publish(0, snap(0.5));
         let a1 = client.query(p1, vec![0.25, 0.5], vec![1], false).unwrap();
         assert_eq!(a1.epoch, 0);
@@ -438,19 +866,127 @@ mod tests {
         assert_ne!(a2.stats.loss[0].to_bits(), a1.stats.loss[0].to_bits());
         assert_eq!(hub.take_queries(), 2);
         assert_eq!(hub.take_queries(), 0);
+        // solo dispatches still count one device batch per query
+        assert_eq!(hub.take_batches(), 2);
+        assert_eq!(hub.take_lane_queries(), vec![2]);
+        assert_eq!(hub.take_lane_queries(), vec![0]);
     }
 
     #[test]
     fn embed_queries_ride_the_same_lane() {
         let hub = Arc::new(SnapshotHub::new());
         let be = MockBackend::new();
-        let lane = ServeLane::spawn(be.replica_builder().unwrap(), hub.clone()).unwrap();
+        let fleet = ServeFleet::spawn_single(be.replica_builder().unwrap(), hub.clone()).unwrap();
         let p = hub.publish(0, snap(1.5));
-        let ans = lane.client().query(p, vec![0.25, 0.5, 0.1, 0.2], vec![1, 2], true).unwrap();
+        let ans = fleet.client().query(p, vec![0.25, 0.5, 0.1, 0.2], vec![1, 2], true).unwrap();
         let emb = ans.emb.unwrap();
         assert_eq!(emb.len(), 4); // 2 slots x 2 features
         assert_eq!(ans.probs.unwrap().len(), 2);
         assert_eq!(emb[1].to_bits(), (emb[0] * 1.5).to_bits());
+    }
+
+    #[test]
+    fn coalesced_batch_scatters_bitwise_equal_answers() {
+        // long max_wait so the lane provably coalesces: the first query
+        // opens a 1s window, three more land well inside it, and one
+        // device batch answers all four
+        let hub = Arc::new(SnapshotHub::new());
+        let be = MockBackend::new();
+        let batching = ServeBatching { max_batch: 8, max_wait: Duration::from_secs(1) };
+        let fleet =
+            ServeFleet::spawn(vec![be.replica_builder().unwrap()], hub.clone(), batching).unwrap();
+        let p = hub.publish(0, snap(0.75));
+        let inputs: Vec<(Vec<f32>, Vec<i32>)> = (0..4)
+            .map(|i| (vec![0.1 * (i as f32 + 1.0), 0.2], vec![i as i32 % 3]))
+            .collect();
+        let workers: Vec<_> = inputs
+            .iter()
+            .cloned()
+            .map(|(x, y)| {
+                let client = fleet.client();
+                let p = p.clone();
+                std::thread::spawn(move || client.query(p, x, y, false).unwrap())
+            })
+            .collect();
+        let answers: Vec<ServeAnswer> =
+            workers.into_iter().map(|w| w.join().unwrap()).collect();
+        // one coalesced device call answered all four queries
+        assert_eq!(hub.take_queries(), 4);
+        assert_eq!(hub.take_batches(), 1);
+        // each answer is bitwise what a solo forward would produce
+        let mut direct = MockBackend::new();
+        direct.import_params(&[vec![0.75]]).unwrap();
+        for ((x, y), answer) in inputs.iter().zip(&answers) {
+            let want = direct.fwd_stats(x, y).unwrap();
+            assert_eq!(answer.epoch, 0);
+            assert_eq!(answer.stats.loss.len(), 1);
+            assert_eq!(answer.stats.loss[0].to_bits(), want.loss[0].to_bits());
+            assert_eq!(answer.stats.correct[0].to_bits(), want.correct[0].to_bits());
+            assert_eq!(answer.stats.conf[0].to_bits(), want.conf[0].to_bits());
+        }
+    }
+
+    #[test]
+    fn mixed_endpoints_split_into_separate_groups() {
+        // stats and embed queries coalesce only with their own kind:
+        // both answer correctly out of one drained buffer
+        let hub = Arc::new(SnapshotHub::new());
+        let be = MockBackend::new();
+        let batching = ServeBatching { max_batch: 8, max_wait: Duration::from_secs(1) };
+        let fleet =
+            ServeFleet::spawn(vec![be.replica_builder().unwrap()], hub.clone(), batching).unwrap();
+        let p = hub.publish(0, snap(1.5));
+        let workers: Vec<_> = (0..4)
+            .map(|i| {
+                let client = fleet.client();
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    client.query(p, vec![0.25, 0.5], vec![1], i % 2 == 1).unwrap()
+                })
+            })
+            .collect();
+        let answers: Vec<ServeAnswer> =
+            workers.into_iter().map(|w| w.join().unwrap()).collect();
+        for (i, answer) in answers.iter().enumerate() {
+            assert_eq!(answer.emb.is_some(), i % 2 == 1);
+            assert_eq!(answer.stats.loss.len(), 1);
+        }
+        assert_eq!(hub.take_queries(), 4);
+        // the drained buffer split by endpoint: at most one batch per kind
+        let batches = hub.take_batches();
+        assert!(batches >= 2 && batches <= 4, "batches = {batches}");
+    }
+
+    #[test]
+    fn fleet_routes_across_replicas_and_survives_a_killed_lane() {
+        let hub = Arc::new(SnapshotHub::new());
+        let be = MockBackend::new();
+        let builders = vec![be.replica_builder().unwrap(), be.replica_builder().unwrap()];
+        let mut fleet =
+            ServeFleet::spawn(builders, hub.clone(), ServeBatching::default()).unwrap();
+        assert_eq!(fleet.lanes(), 2);
+        assert_eq!(hub.lanes(), 2);
+        let client = fleet.client();
+        let p = hub.publish(0, snap(0.5));
+        for _ in 0..8 {
+            assert!(client.query(p.clone(), vec![0.25, 0.5], vec![1], false).is_ok());
+        }
+        // kill one lane: the fleet stays healthy on the survivor
+        fleet.kill_lane(0);
+        assert_eq!(hub.lanes_down(), 1);
+        assert!(!hub.degraded(), "one live lane must keep the fleet healthy");
+        let mut direct = MockBackend::new();
+        direct.import_params(&[vec![0.5]]).unwrap();
+        let want = direct.fwd_stats(&[0.25, 0.5], &[1]).unwrap();
+        for _ in 0..8 {
+            let got = client.query(p.clone(), vec![0.25, 0.5], vec![1], false).unwrap();
+            assert_eq!(got.stats.loss[0].to_bits(), want.loss[0].to_bits());
+        }
+        // kill the last lane: now queries fail and the hub is degraded
+        fleet.kill_lane(1);
+        assert_eq!(hub.lanes_down(), 2);
+        assert!(hub.degraded());
+        assert!(client.query(p, vec![0.25, 0.5], vec![1], false).is_err());
     }
 
     #[test]
@@ -459,16 +995,16 @@ mod tests {
         // rank-0 replica dies on its second device call (import counts
         // no steps; fwd_stats does)
         let primary = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(0, 1));
-        let mut lane =
-            ServeLane::spawn(primary.replica_builder().unwrap(), hub.clone()).unwrap();
-        let client = lane.client();
+        let mut fleet =
+            ServeFleet::spawn_single(primary.replica_builder().unwrap(), hub.clone()).unwrap();
+        let client = fleet.client();
         let p = hub.publish(2, snap(1.0));
         assert!(client.query(p.clone(), vec![0.5], vec![1], false).is_ok());
         assert!(!hub.degraded());
         let err = client.query(p.clone(), vec![0.5], vec![1], false).unwrap_err();
         assert!(err.to_string().contains("chaos"), "{err}");
         assert!(hub.degraded());
-        let events = lane.try_events();
+        let events = fleet.try_events();
         assert_eq!(events.len(), 1);
         match &events[0] {
             ServiceEvent::Error { epoch: 2, lane: ServiceLaneKind::Serve, message, .. } => {
@@ -476,13 +1012,27 @@ mod tests {
             }
             other => panic!("expected a serve error event, got {other:?}"),
         }
-        // the one-shot kill has fired; the lane keeps serving
+        // the one-shot kill has fired; the lane keeps serving, and a
+        // successful answer marks it back up
         assert!(client.query(p, vec![0.5], vec![1], false).is_ok());
+        assert!(!hub.degraded());
     }
 
     #[test]
     fn failed_builder_surfaces_at_spawn() {
         let build: ReplicaBuilder = Box::new(|| anyhow::bail!("no artifacts"));
-        assert!(ServeLane::spawn(build, Arc::new(SnapshotHub::new())).is_err());
+        assert!(ServeFleet::spawn_single(build, Arc::new(SnapshotHub::new())).is_err());
+    }
+
+    #[test]
+    fn failed_builder_in_a_fleet_tears_down_the_healthy_lanes() {
+        let be = MockBackend::new();
+        let builders: Vec<ReplicaBuilder> = vec![
+            be.replica_builder().unwrap(),
+            Box::new(|| anyhow::bail!("no artifacts")),
+        ];
+        let err = ServeFleet::spawn(builders, Arc::new(SnapshotHub::new()), ServeBatching::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("no artifacts"), "{err}");
     }
 }

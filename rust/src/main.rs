@@ -13,7 +13,8 @@
 //! --momentum --max_fraction --tau --drop_top --variant --eval_every
 //! --detailed_metrics --service-lane --checkpoint_every --checkpoint_dir
 //! --resume --checkpoint-pool --checkpoint-verify --checkpoint-compress
-//! --fault-policy --straggler-timeout-ms --serve --serve-threads`
+//! --fault-policy --straggler-timeout-ms --serve --serve-threads
+//! --serve-replicas --serve-batch --serve-batch-wait-us --serve-retain`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -29,7 +30,8 @@ const OVERRIDE_KEYS: &[&str] = &[
     "checkpoint_pool", "checkpoint-pool", "checkpoint_verify", "checkpoint-verify",
     "checkpoint_compress", "checkpoint-compress", "fault_policy", "fault-policy",
     "straggler_timeout_ms", "straggler-timeout-ms", "serve", "serve_threads",
-    "serve-threads",
+    "serve-threads", "serve_replicas", "serve-replicas", "serve_batch", "serve-batch",
+    "serve_batch_wait_us", "serve-batch-wait-us", "serve_retain", "serve-retain",
 ];
 
 fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
@@ -199,7 +201,8 @@ Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
             --checkpoint_dir --resume --checkpoint-pool
             --checkpoint-verify --checkpoint-compress
             --fault-policy --straggler-timeout-ms
-            --serve --serve-threads
+            --serve --serve-threads --serve-replicas --serve-batch
+            --serve-batch-wait-us --serve-retain
 Flags:      --verbose --quiet --out <dir>
 
 --workers N executes data-parallel: the epoch order is sharded across N
@@ -220,12 +223,17 @@ checkpoints (params + momentum + trainer state); --resume continues a
 run from D bit-exactly.
 
 --serve <addr> serves live snapshots over HTTP while training
-(docs/serving.md): a third lane owns a serving replica subscribed to
-per-epoch params snapshots and answers POST /v1/stats, POST /v1/embed,
+(docs/serving.md): a fleet of serving replicas subscribed to per-epoch
+params snapshots answers POST /v1/stats, POST /v1/embed,
 GET /v1/snapshot, GET /healthz on <addr> (host:port; port 0 picks a
-free port).  --serve-threads N sizes the HTTP worker pool (default 2).
-Serving never perturbs training: records are bitwise identical with it
-on or off.
+free port).  --serve-threads N sizes the HTTP worker pool (default 2);
+--serve-replicas R spawns R replica lanes (default 1, least-loaded
+routing, one dead lane degrades only itself); --serve-batch N coalesces
+up to N concurrent queries into one device forward, waiting at most
+--serve-batch-wait-us (default 250) for company — answers are bitwise
+identical to per-query execution; --serve-retain K bounds the hub to
+the K most recent publications (default 2).  Serving never perturbs
+training: records are bitwise identical with it on or off.
 
 --fault-policy {fail,elastic} picks what a multi-worker run does when a
 lane dies or stalls mid-epoch (docs/worker-model.md \"Fault tolerance\"):

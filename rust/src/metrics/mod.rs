@@ -118,9 +118,22 @@ pub struct EpochRecord {
     /// Snapshot publications to the inference lane's hub this epoch
     /// (1 when `--serve` is on, 0 otherwise).
     pub serve_publishes: usize,
-    /// Inference queries the serve lane answered since the previous
+    /// Inference queries the serve fleet answered since the previous
     /// epoch barrier (0 when `--serve` is off or no clients queried).
     pub serve_queries: usize,
+    /// Batched device forwards the serve fleet dispatched since the
+    /// previous epoch barrier — with `--serve-batch N > 1` coalescing,
+    /// several queries share one forward, so this is ≤ `serve_queries`.
+    pub serve_batches: usize,
+    /// Mean queries per dispatched serve batch this epoch
+    /// (`serve_queries / serve_batches`; 0 when nothing was served).
+    /// 1.0 means no coalescing happened, > 1 means queries shared
+    /// device forwards.
+    pub serve_batch_fill: f64,
+    /// Per-lane answered-query counts this epoch (index = serve lane
+    /// id; empty when `--serve` is off or no clients queried) — shows
+    /// how evenly the fleet's least-loaded routing spread the traffic.
+    pub serve_lane_queries: Vec<usize>,
     /// Seconds spent exporting + publishing this epoch's snapshot to the
     /// hub (0 when the publication reused the epoch's cached export).
     pub time_publish: f64,
@@ -181,6 +194,8 @@ impl EpochRecord {
             ("service_errors", self.service_errors),
             ("serve_publishes", self.serve_publishes),
             ("serve_queries", self.serve_queries),
+            ("serve_batches", self.serve_batches),
+            ("serve_batch_fill", self.serve_batch_fill),
             ("time_publish", self.time_publish),
         ];
         if let Json::Obj(m) = &mut o {
@@ -188,6 +203,12 @@ impl EpochRecord {
                 m.insert(
                     "worker_samples".into(),
                     Json::from(self.worker_samples.clone()),
+                );
+            }
+            if !self.serve_lane_queries.is_empty() {
+                m.insert(
+                    "serve_lane_queries".into(),
+                    Json::from(self.serve_lane_queries.clone()),
                 );
             }
             if !self.hidden_per_class.is_empty() {
@@ -382,13 +403,28 @@ mod tests {
         let mut r = rec(0, 0.5, 1.0);
         assert_eq!(r.serve_publishes, 0);
         assert_eq!(r.serve_queries, 0);
+        assert_eq!(r.serve_batches, 0);
+        assert_eq!(r.serve_batch_fill, 0.0);
+        assert!(r.serve_lane_queries.is_empty());
         assert_eq!(r.time_publish, 0.0);
+        // a quiet epoch serializes no per-lane split
+        let j = r.to_json();
+        assert!(j.get("serve_lane_queries").is_none());
         r.serve_publishes = 1;
         r.serve_queries = 12;
+        r.serve_batches = 3;
+        r.serve_batch_fill = 4.0;
+        r.serve_lane_queries = vec![7, 5];
         r.time_publish = 0.125;
         let j = r.to_json();
         assert_eq!(j.get("serve_publishes").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("serve_queries").unwrap().as_usize(), Some(12));
+        assert_eq!(j.get("serve_batches").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("serve_batch_fill").unwrap().as_f64(), Some(4.0));
+        let lanes = j.get("serve_lane_queries").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].as_usize(), Some(7));
+        assert_eq!(lanes[1].as_usize(), Some(5));
         assert_eq!(j.get("time_publish").unwrap().as_f64(), Some(0.125));
     }
 

@@ -2,14 +2,19 @@
 //!
 //! Just enough protocol for `curl` and the serving test battery: parse
 //! one request (method, path, headers, `Content-Length`-framed body),
-//! write one JSON response, close the connection.  No keep-alive, no
-//! chunked encoding, no TLS — the lane serves JSON over plain sockets
-//! behind whatever front end the deployment puts in front of it.
+//! write one JSON response.  Connections are **keep-alive** by default
+//! (HTTP/1.1 semantics) so a client hammering `/v1/stats` doesn't pay a
+//! TCP handshake per query — the caller loops request/response on one
+//! stream and honors the parsed [`Request::keep_alive`] flag, closing
+//! on `Connection: close`, HTTP/1.0 without `keep-alive`, or its own
+//! requests-per-connection bound.  No pipelining, no chunked encoding,
+//! no TLS — the lane serves JSON over plain sockets behind whatever
+//! front end the deployment puts in front of it.
 //!
 //! Everything read off the socket is untrusted: the request line and
 //! header block are size-capped, the body length is bounded, and
-//! malformed framing returns an error (the caller answers 400) instead
-//! of panicking or reading unbounded memory.
+//! malformed framing returns an error (the caller answers 400 and
+//! closes) instead of panicking or reading unbounded memory.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -33,10 +38,17 @@ pub struct Request {
     pub path: String,
     /// The request body (empty when no `Content-Length` was sent).
     pub body: Vec<u8>,
+    /// Whether the client wants the connection kept open after the
+    /// response: HTTP/1.1 defaults to `true`, HTTP/1.0 to `false`, and
+    /// a `Connection:` header overrides either way.
+    pub keep_alive: bool,
 }
 
-/// Read and parse one HTTP/1.1 request from `stream`.
-pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
+/// Read and parse one HTTP/1.1 request from `stream`.  Returns
+/// `Ok(None)` when the client closed the connection cleanly before
+/// sending any bytes — the normal end of a keep-alive session, not an
+/// error.
+pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Option<Request>> {
     // read until the end of the header block
     let mut head = Vec::new();
     let mut buf = [0u8; 1024];
@@ -46,7 +58,12 @@ pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
         }
         anyhow::ensure!(head.len() <= MAX_HEAD, "header block exceeds {MAX_HEAD} bytes");
         let n = stream.read(&mut buf)?;
-        anyhow::ensure!(n > 0, "connection closed mid-request");
+        if n == 0 {
+            // clean close between requests is how keep-alive ends;
+            // close mid-request is a framing error
+            anyhow::ensure!(head.is_empty(), "connection closed mid-request");
+            return Ok(None);
+        }
         head.extend_from_slice(&buf[..n]);
     };
     let (head_bytes, mut rest) = {
@@ -60,23 +77,38 @@ pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or_default().to_string();
     let path = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or_default();
     anyhow::ensure!(
         !method.is_empty() && path.starts_with('/'),
         "malformed request line {request_line:?}"
     );
     let mut content_length = 0usize;
+    // persistence default by protocol version; `Connection:` overrides
+    let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
                 content_length = value
                     .trim()
                     .parse()
                     .map_err(|_| anyhow::anyhow!("bad content-length {value:?}"))?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                for token in value.split(',') {
+                    let token = token.trim();
+                    if token.eq_ignore_ascii_case("close") {
+                        keep_alive = false;
+                    } else if token.eq_ignore_ascii_case("keep-alive") {
+                        keep_alive = true;
+                    }
+                }
             }
         }
     }
     anyhow::ensure!(content_length <= MAX_BODY, "body exceeds {MAX_BODY} bytes");
-    // the body: whatever arrived behind the head, then the remainder
+    // the body: whatever arrived behind the head, then the remainder.
+    // Bytes past the declared length would be a pipelined next request —
+    // unsupported, so reject them rather than silently corrupt framing.
     anyhow::ensure!(rest.len() <= content_length, "body longer than content-length");
     let mut body = Vec::with_capacity(content_length);
     body.append(&mut rest);
@@ -86,16 +118,22 @@ pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
         anyhow::ensure!(n > 0, "connection closed mid-body");
         body.extend_from_slice(&buf[..n]);
     }
-    Ok(Request { method, path, body })
+    Ok(Some(Request { method, path, body, keep_alive }))
 }
 
 fn find_head_end(bytes: &[u8]) -> Option<usize> {
     bytes.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Write one JSON response and flush.  `Connection: close` — the caller
-/// drops the stream afterwards.
-pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+/// Write one JSON response and flush.  `keep_alive` selects the
+/// `Connection:` header: `true` invites the client to reuse the stream,
+/// `false` announces the caller will drop it after this response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -105,8 +143,9 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> std::i
         503 => "Service Unavailable",
         _ => "Unknown",
     };
+    let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -120,7 +159,7 @@ mod tests {
     use std::net::TcpListener;
 
     /// Round-trip one request through a real socket pair.
-    fn roundtrip(raw: &[u8]) -> anyhow::Result<Request> {
+    fn roundtrip(raw: &[u8]) -> anyhow::Result<Option<Request>> {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let raw = raw.to_vec();
@@ -139,18 +178,43 @@ mod tests {
         let req = roundtrip(
             b"POST /v1/stats HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"x\":[1]}",
         )
+        .unwrap()
         .unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/stats");
         assert_eq!(req.body, b"{\"x\":[1]}");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
     fn parses_get_without_body() {
-        let req = roundtrip(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let req = roundtrip(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/healthz");
         assert!(req.body.is_empty());
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn connection_header_and_version_pick_persistence() {
+        // HTTP/1.1 + Connection: close -> close
+        let req = roundtrip(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        // HTTP/1.0 defaults to close...
+        let req = roundtrip(b"GET / HTTP/1.0\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        // ...unless the client asks to keep it open (case-insensitive,
+        // token list)
+        let req = roundtrip(b"GET / HTTP/1.0\r\nConnection: Keep-Alive, TE\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn clean_close_between_requests_is_not_an_error() {
+        // zero bytes then EOF: the keep-alive session ended
+        assert!(roundtrip(b"").unwrap().is_none());
     }
 
     #[test]
@@ -158,6 +222,9 @@ mod tests {
         assert!(roundtrip(b"\r\n\r\n").is_err());
         assert!(roundtrip(b"GET\r\n\r\n").is_err());
         assert!(roundtrip(b"POST /x HTTP/1.1\r\nContent-Length: zap\r\n\r\n").is_err());
+        // close mid-request-line (bytes arrived, then EOF) is an error,
+        // unlike the clean close above
+        assert!(roundtrip(b"GET /healthz HT").is_err());
         // hostile content-length far past the cap
         assert!(roundtrip(
             b"POST /x HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n"

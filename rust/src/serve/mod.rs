@@ -4,8 +4,10 @@
 //! the publication hub live in [`crate::engine::serve`]): a minimal
 //! `std::net::TcpListener` server with a small worker pool, speaking
 //! JSON via [`crate::util::json`] — no external dependencies.  Wired
-//! through `--serve <addr>` / `--serve-threads N`; see docs/serving.md
-//! for schemas and curl examples.
+//! through `--serve <addr>` / `--serve-threads N` (throughput knobs:
+//! `--serve-replicas`, `--serve-batch`, `--serve-batch-wait-us`,
+//! `--serve-retain`); see docs/serving.md for schemas and curl
+//! examples.
 //!
 //! # Endpoints
 //!
@@ -24,11 +26,17 @@
 //!
 //! # Query-path properties
 //!
-//! Workers read the hub with one atomic load (no lock), validate the
-//! payload *before* it can reach the device, and serialize actual
-//! forwards through the lane's single replica.  Float transport is
-//! lossless: the JSON serializer emits shortest-round-trip numbers, so
-//! served logits re-parse to the exact bits the device produced.
+//! Workers read the hub's live publication with one short lock + `Arc`
+//! clone, validate the payload *before* it can reach the device, and
+//! hand actual forwards to the serve fleet — the [`ServeClient`] routes
+//! each query to the least-loaded live replica, and with `--serve-batch
+//! N > 1` the lanes coalesce concurrent queries into shared device
+//! forwards.  Connections are keep-alive (bounded requests per
+//! connection, the per-connection IO timeout still applies), so a
+//! hammering client pays one TCP handshake, not one per query.  Float
+//! transport is lossless: the JSON serializer emits
+//! shortest-round-trip numbers, so served logits re-parse to the exact
+//! bits the device produced.
 
 pub mod http;
 
@@ -45,6 +53,11 @@ use crate::util::json::{self, Json};
 /// Per-connection socket timeout: a stalled client can hold a worker at
 /// most this long.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Keep-alive bound: one connection serves at most this many requests
+/// before the worker closes it, so a single client can't pin a worker
+/// forever while others queue.
+const MAX_REQS_PER_CONN: usize = 128;
 
 /// The model's input/label geometry, used to validate query payloads
 /// before they are submitted to the replica — a malformed client request
@@ -167,11 +180,30 @@ fn worker_main(conn_rx: Arc<Mutex<Receiver<TcpStream>>>, ctx: Arc<Ctx>) {
 fn handle_conn(mut stream: TcpStream, ctx: &Ctx) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let (status, body) = match http::read_request(&mut stream) {
-        Ok(req) => route(ctx, &req),
-        Err(e) => (400, error_body(&format!("bad request: {e}"))),
-    };
-    let _ = http::write_response(&mut stream, status, &body.to_compact());
+    // keep-alive loop: serve requests on this stream until the client
+    // closes, asks to close, errors, or hits the per-connection bound
+    for served in 0..MAX_REQS_PER_CONN {
+        match http::read_request(&mut stream) {
+            Ok(Some(req)) => {
+                let keep = req.keep_alive && served + 1 < MAX_REQS_PER_CONN;
+                let (status, body) = route(ctx, &req);
+                if http::write_response(&mut stream, status, &body.to_compact(), keep).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+            Ok(None) => return, // clean close between requests
+            Err(e) => {
+                // framing error: answer 400 and drop the stream — we
+                // can't trust where the next request would start
+                let body = error_body(&format!("bad request: {e}"));
+                let _ = http::write_response(&mut stream, 400, &body.to_compact(), false);
+                return;
+            }
+        }
+    }
 }
 
 fn route(ctx: &Ctx, req: &http::Request) -> (u16, Json) {
@@ -196,7 +228,18 @@ fn health(ctx: &Ctx) -> (u16, Json) {
         None => (503, jobj![("status", "starting"), ("ready", false)]),
         Some(p) => {
             let status = if ctx.hub.degraded() { "degraded" } else { "ok" };
-            (200, jobj![("status", status), ("ready", true), ("epoch", p.epoch)])
+            (
+                200,
+                jobj![
+                    ("status", status),
+                    ("ready", true),
+                    ("epoch", p.epoch),
+                    ("lanes", ctx.hub.lanes()),
+                    ("lanes_down", ctx.hub.lanes_down()),
+                    ("queries", ctx.hub.queries_total()),
+                    ("batches", ctx.hub.batches_total()),
+                ],
+            )
         }
     }
 }
@@ -351,22 +394,87 @@ pub fn http_request(
     Ok((status, payload.to_string()))
 }
 
+/// A persistent keep-alive HTTP client: many requests over one TCP
+/// connection (tests, CI smoke, hammering examples).  Responses are
+/// framed by `Content-Length`, so the stream stays usable for the next
+/// request.
+pub struct HttpPipe {
+    stream: TcpStream,
+}
+
+impl HttpPipe {
+    /// Connect to a serving endpoint; the connection persists until the
+    /// pipe is dropped, the server's per-connection request bound is
+    /// hit, or either side closes.
+    pub fn connect(addr: SocketAddr) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect_timeout(&addr, IO_TIMEOUT)?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        Ok(HttpPipe { stream })
+    }
+
+    /// Send one request on the persistent connection and read its
+    /// `(status, body)` response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> anyhow::Result<(u16, String)> {
+        use std::io::{BufRead, BufReader, Read, Write};
+        let body = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: pipe\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        );
+        self.stream.write_all(req.as_bytes())?;
+        self.stream.flush()?;
+        // parse the response head line-by-line; the body is framed by
+        // Content-Length (read_to_end would block on a live connection)
+        let mut reader = BufReader::new(&mut self.stream);
+        let mut status_line = String::new();
+        anyhow::ensure!(reader.read_line(&mut status_line)? > 0, "server closed the pipe");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("malformed status line: {status_line:?}"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            anyhow::ensure!(reader.read_line(&mut line)? > 0, "response head truncated");
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse()?;
+                }
+            }
+        }
+        let mut payload = vec![0u8; content_length];
+        reader.read_exact(&mut payload)?;
+        Ok((status, String::from_utf8_lossy(&payload).into_owned()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::serve::ServeLane;
+    use crate::engine::serve::ServeFleet;
     use crate::engine::snapshot::Snapshot;
     use crate::engine::testbed::MockBackend;
     use crate::engine::DataParallel;
 
-    fn server(shape: Option<ServingShape>) -> (InferenceServer, Arc<SnapshotHub>, ServeLane) {
+    fn server(shape: Option<ServingShape>) -> (InferenceServer, Arc<SnapshotHub>, ServeFleet) {
         let hub = Arc::new(SnapshotHub::new());
-        let lane =
-            ServeLane::spawn(MockBackend::new().replica_builder().unwrap(), hub.clone())
+        let fleet =
+            ServeFleet::spawn_single(MockBackend::new().replica_builder().unwrap(), hub.clone())
                 .unwrap();
         let srv =
-            InferenceServer::start("127.0.0.1:0", 2, hub.clone(), lane.client(), shape).unwrap();
-        (srv, hub, lane)
+            InferenceServer::start("127.0.0.1:0", 2, hub.clone(), fleet.client(), shape).unwrap();
+        (srv, hub, fleet)
     }
 
     fn publish(hub: &SnapshotHub, epoch: usize, param: f32) {
@@ -375,7 +483,7 @@ mod tests {
 
     #[test]
     fn healthz_tracks_readiness_and_degradation() {
-        let (srv, hub, _lane) = server(None);
+        let (srv, hub, _fleet) = server(None);
         let (status, body) = http_request(srv.addr(), "GET", "/healthz", None).unwrap();
         assert_eq!(status, 503, "{body}");
         publish(&hub, 0, 1.0);
@@ -384,6 +492,10 @@ mod tests {
         let v = json::parse(&body).unwrap();
         assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
         assert_eq!(v.get("epoch").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("lanes").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("lanes_down").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("queries").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("batches").unwrap().as_usize(), Some(0));
         hub.set_degraded(true);
         let (_, body) = http_request(srv.addr(), "GET", "/healthz", None).unwrap();
         let v = json::parse(&body).unwrap();
@@ -392,7 +504,7 @@ mod tests {
 
     #[test]
     fn snapshot_reports_epoch_tier_and_digests() {
-        let (srv, hub, _lane) = server(None);
+        let (srv, hub, _fleet) = server(None);
         publish(&hub, 4, 2.5);
         let (status, body) = http_request(srv.addr(), "GET", "/v1/snapshot", None).unwrap();
         assert_eq!(status, 200);
@@ -406,7 +518,7 @@ mod tests {
 
     #[test]
     fn stats_roundtrip_is_bitwise() {
-        let (srv, hub, _lane) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
+        let (srv, hub, _fleet) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
         publish(&hub, 1, 0.75);
         let (status, body) = http_request(
             srv.addr(),
@@ -439,7 +551,7 @@ mod tests {
 
     #[test]
     fn embed_returns_feature_planes() {
-        let (srv, hub, _lane) = server(None);
+        let (srv, hub, _fleet) = server(None);
         publish(&hub, 0, 1.5);
         let (status, body) = http_request(
             srv.addr(),
@@ -456,7 +568,7 @@ mod tests {
 
     #[test]
     fn client_mistakes_are_400s_and_never_reach_the_device() {
-        let (srv, hub, mut lane) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
+        let (srv, hub, mut fleet) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
         publish(&hub, 0, 1.0);
         for (body, want) in [
             ("{", "json"),
@@ -475,7 +587,7 @@ mod tests {
         }
         // none of those degraded the lane or produced fold-in errors
         assert!(!hub.degraded());
-        assert!(lane.try_events().is_empty());
+        assert!(fleet.try_events().is_empty());
         // parse errors are positioned
         let (_, resp) = http_request(srv.addr(), "POST", "/v1/stats", Some("{\n  broken")).unwrap();
         let v = json::parse(&resp).unwrap();
@@ -484,7 +596,7 @@ mod tests {
 
     #[test]
     fn unknown_paths_and_methods_are_named() {
-        let (srv, _hub, _lane) = server(None);
+        let (srv, _hub, _fleet) = server(None);
         let (status, _) = http_request(srv.addr(), "GET", "/nope", None).unwrap();
         assert_eq!(status, 404);
         let (status, _) = http_request(srv.addr(), "POST", "/healthz", None).unwrap();
@@ -495,7 +607,7 @@ mod tests {
 
     #[test]
     fn queries_before_first_publication_are_503() {
-        let (srv, _hub, _lane) = server(None);
+        let (srv, _hub, _fleet) = server(None);
         let (status, _) = http_request(
             srv.addr(),
             "POST",
@@ -506,5 +618,32 @@ mod tests {
         assert_eq!(status, 503);
         let (status, _) = http_request(srv.addr(), "GET", "/v1/snapshot", None).unwrap();
         assert_eq!(status, 503);
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_on_one_connection() {
+        let (srv, hub, _fleet) = server(Some(ServingShape { input_dim: 2, classes: 3 }));
+        publish(&hub, 5, 0.75);
+        // with only one worker-visible connection, every request below
+        // landing a correct answer proves the stream stayed usable
+        let mut pipe = HttpPipe::connect(srv.addr()).unwrap();
+        for i in 0..20 {
+            let (status, body) = pipe
+                .request("POST", "/v1/stats", Some(r#"{"x": [[0.25, 0.5]], "y": [1]}"#))
+                .unwrap();
+            assert_eq!(status, 200, "request {i}: {body}");
+            let v = json::parse(&body).unwrap();
+            assert_eq!(v.get("epoch").unwrap().as_usize(), Some(5));
+        }
+        // mixed surface over the same connection: a 400 must not poison
+        // the framing for the requests behind it
+        let (status, _) = pipe.request("GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        let (status, _) =
+            pipe.request("POST", "/v1/stats", Some(r#"{"y": [1]}"#)).unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = pipe.request("GET", "/v1/snapshot", None).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(hub.queries_total(), 20);
     }
 }

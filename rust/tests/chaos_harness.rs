@@ -23,7 +23,7 @@ use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
 use kakurenbo::data::Dataset;
 use kakurenbo::engine::testbed::MockBackend;
 use kakurenbo::engine::{
-    ChaosBackend, ChaosPlan, DataParallel, EvalSink, ServeLane, ServiceEvent, ServiceLaneKind,
+    ChaosBackend, ChaosPlan, DataParallel, EvalSink, ServeFleet, ServiceEvent, ServiceLaneKind,
     ServiceLanes, SnapshotHub, StateExchange, StepBackend, StepMode, WorkerPool,
 };
 use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
@@ -368,8 +368,9 @@ fn chaos_killed_serve_replica_degrades_health_but_keeps_serving() {
     // no device steps, same accounting as the eval-lane cell above)
     let hub = Arc::new(SnapshotHub::new());
     let chaotic = ChaosBackend::primary(MockBackend::new(), ChaosPlan::new().kill(0, 1));
-    let mut lane = ServeLane::spawn(chaotic.replica_builder().unwrap(), hub.clone()).unwrap();
-    let srv = InferenceServer::start("127.0.0.1:0", 2, hub.clone(), lane.client(), None).unwrap();
+    let mut fleet =
+        ServeFleet::spawn_single(chaotic.replica_builder().unwrap(), hub.clone()).unwrap();
+    let srv = InferenceServer::start("127.0.0.1:0", 2, hub.clone(), fleet.client(), None).unwrap();
     hub.publish(4, Arc::new(kakurenbo::engine::Snapshot::params_only(vec![vec![1.5]])));
 
     let body = r#"{"x": [[0.5, 0.25]], "y": [1]}"#;
@@ -386,7 +387,7 @@ fn chaos_killed_serve_replica_degrades_health_but_keeps_serving() {
     assert_eq!(health.get("status").unwrap().as_str(), Some("degraded"));
 
     // exactly one fold-in error, tagged with the serve lane
-    let events = lane.try_events();
+    let events = fleet.try_events();
     assert_eq!(events.len(), 1, "{events:?}");
     match &events[0] {
         ServiceEvent::Error { epoch: 4, lane: ServiceLaneKind::Serve, message, .. } => {

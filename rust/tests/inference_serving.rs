@@ -1,6 +1,6 @@
-//! The online inference lane's end-to-end serving battery (ISSUE 8).
+//! The online inference fleet's end-to-end serving battery (ISSUE 8/9).
 //!
-//! Three contracts, layered like the other suites:
+//! Four contracts, layered like the other suites:
 //!
 //!   * **Fidelity** (mock stack, always runs): an answer served over
 //!     HTTP/JSON is bitwise identical to calling the backend directly on
@@ -10,34 +10,44 @@
 //!     queries across a stream of snapshot publications never observes
 //!     torn state — every response's epoch is internally consistent with
 //!     its digests / its stats, for ≥ 1000 queries.
+//!   * **Equivalence** (mock stack, always runs): for random query sets
+//!     and random batch/replica configurations, the coalescing
+//!     multi-replica fleet answers bitwise identically to per-query
+//!     single-lane serving, and every query gets exactly one reply —
+//!     even when a chaos-killed lane forces mid-flight redispatch.
 //!   * **Isolation** (PJRT, skipped without artifacts): training with
 //!     `--serve` on produces records bitwise identical to off — including
-//!     composed with `--service-lane on` and `--workers 4` — and a
-//!     faulting serving replica follows the run's `--fault-policy`
-//!     (named abort under `fail`, count-and-degrade under `elastic`).
+//!     composed with `--service-lane on`, `--workers 4`,
+//!     `--serve-replicas 2` and `--serve-batch 8` — and a faulting
+//!     serving replica follows the run's `--fault-policy` (named abort
+//!     under `fail`, count-and-degrade under `elastic`).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use kakurenbo::config::{presets, DatasetConfig, FaultPolicy, StrategyConfig};
 use kakurenbo::coordinator::{ServeRuntime, Trainer};
 use kakurenbo::engine::serve::leaf_digests;
 use kakurenbo::engine::testbed::MockBackend;
 use kakurenbo::engine::{
-    DataParallel, ServeLane, Snapshot, SnapshotHub, StateExchange, StepBackend,
+    DataParallel, ServeAnswer, ServeBatching, ServeFleet, Snapshot, SnapshotHub, StateExchange,
+    StepBackend,
 };
 use kakurenbo::runtime::{default_artifacts_dir, XlaRuntime};
-use kakurenbo::serve::{http_request, InferenceServer, ServingShape};
+use kakurenbo::serve::{http_request, InferenceServer};
 use kakurenbo::util::json::{self, Json};
+use kakurenbo::util::rng::Rng;
 
-/// A full mock serving stack: hub + serving replica lane + HTTP server.
-fn mock_stack(threads: usize) -> (InferenceServer, Arc<SnapshotHub>, ServeLane) {
+/// A full mock serving stack: hub + single serving replica + HTTP server.
+fn mock_stack(threads: usize) -> (InferenceServer, Arc<SnapshotHub>, ServeFleet) {
     let hub = Arc::new(SnapshotHub::new());
-    let lane = ServeLane::spawn(MockBackend::new().replica_builder().unwrap(), hub.clone())
+    let fleet =
+        ServeFleet::spawn_single(MockBackend::new().replica_builder().unwrap(), hub.clone())
+            .unwrap();
+    let srv = InferenceServer::start("127.0.0.1:0", threads, hub.clone(), fleet.client(), None)
         .unwrap();
-    let srv = InferenceServer::start("127.0.0.1:0", threads, hub.clone(), lane.client(), None)
-        .unwrap();
-    (srv, hub, lane)
+    (srv, hub, fleet)
 }
 
 /// Direct (no HTTP, no lane) reference stats for `param` on (`x`, `y`).
@@ -62,7 +72,7 @@ fn f32_bits(v: &Json, key: &str) -> Vec<u32> {
 /// lossless for f32.
 #[test]
 fn served_answers_are_bitwise_equal_to_direct_forward() {
-    let (srv, hub, _lane) = mock_stack(2);
+    let (srv, hub, _fleet) = mock_stack(2);
     let param = 0.62584335_f32; // deliberately not a short decimal
     hub.publish(3, Arc::new(Snapshot::params_only(vec![vec![param]])));
 
@@ -109,7 +119,7 @@ fn swap_hammer_never_observes_torn_state() {
     const QUERIERS: usize = 4;
     const MIN_PER_THREAD: usize = 260;
 
-    let (srv, hub, _lane) = mock_stack(QUERIERS);
+    let (srv, hub, _fleet) = mock_stack(QUERIERS);
     let param_at = |e: usize| (e as f32 + 1.0) * 0.25;
     let x = [0.3_f32, 0.6];
     let y = [1_i32];
@@ -190,6 +200,139 @@ fn swap_hammer_never_observes_torn_state() {
     assert!(hub.take_queries() > 0);
 }
 
+/// One randomly generated forward query: row-major `x`, labels `y`,
+/// endpoint selector, and the answer slot it must fill exactly once.
+struct PropQuery {
+    x: Vec<f32>,
+    y: Vec<i32>,
+    embed: bool,
+}
+
+fn assert_answers_bitwise_eq(got: &ServeAnswer, want: &ServeAnswer, ctx: &str) {
+    assert_eq!(got.epoch, want.epoch, "{ctx}: epoch");
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&got.stats.loss), bits(&want.stats.loss), "{ctx}: loss");
+    assert_eq!(bits(&got.stats.correct), bits(&want.stats.correct), "{ctx}: correct");
+    assert_eq!(bits(&got.stats.conf), bits(&want.stats.conf), "{ctx}: conf");
+    match (&got.emb, &want.emb) {
+        (Some(g), Some(w)) => assert_eq!(bits(g), bits(w), "{ctx}: emb"),
+        (None, None) => {}
+        other => panic!("{ctx}: emb presence mismatch: {other:?}"),
+    }
+    match (&got.probs, &want.probs) {
+        (Some(g), Some(w)) => assert_eq!(bits(g), bits(w), "{ctx}: probs"),
+        (None, None) => {}
+        other => panic!("{ctx}: probs presence mismatch: {other:?}"),
+    }
+}
+
+/// Equivalence: for random query sets and random batch/replica configs,
+/// the coalescing multi-replica fleet answers bitwise identically to
+/// per-query single-lane serving, and every query is answered exactly
+/// once — including trials where a lane is chaos-killed mid-hammer and
+/// its queued queries must redispatch to the survivors.
+#[test]
+fn batched_fleet_matches_per_query_single_lane_bitwise() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..6 {
+        let replicas = 1 + rng.below(3); // 1..=3 lanes
+        let max_batch = 1 + rng.below(8); // 1..=8 coalesced slots
+        let kill = replicas > 1 && rng.chance(0.75);
+        let n_queries = 16 + rng.below(25); // 16..=40
+        let param = rng.normal_f32(0.0, 1.0);
+        let ctx = format!(
+            "trial {trial}: replicas={replicas} batch={max_batch} kill={kill} n={n_queries}"
+        );
+
+        // mixed shapes so the coalescer must group by row width / endpoint
+        let queries: Arc<Vec<PropQuery>> = Arc::new(
+            (0..n_queries)
+                .map(|_| {
+                    let rows = 1 + rng.below(3);
+                    let dim = 2 + rng.below(2);
+                    PropQuery {
+                        x: (0..rows * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                        y: (0..rows).map(|_| rng.below(dim) as i32).collect(),
+                        embed: rng.chance(0.4),
+                    }
+                })
+                .collect(),
+        );
+        let snapshot = Arc::new(Snapshot::params_only(vec![vec![param]]));
+
+        // reference: one lane, no coalescing, strictly sequential queries
+        let ref_hub = Arc::new(SnapshotHub::new());
+        let ref_fleet = ServeFleet::spawn_single(
+            MockBackend::new().replica_builder().unwrap(),
+            ref_hub.clone(),
+        )
+        .unwrap();
+        ref_hub.publish(trial, snapshot.clone());
+        let ref_pub = ref_hub.latest().unwrap();
+        let ref_client = ref_fleet.client();
+        let want: Vec<ServeAnswer> = queries
+            .iter()
+            .map(|q| ref_client.query(ref_pub.clone(), q.x.clone(), q.y.clone(), q.embed).unwrap())
+            .collect();
+
+        // subject: R replicas with coalescing on, hammered concurrently
+        let hub = Arc::new(SnapshotHub::new());
+        let builders = (0..replicas)
+            .map(|_| MockBackend::new().replica_builder().unwrap())
+            .collect();
+        let batching =
+            ServeBatching { max_batch, max_wait: Duration::from_millis(3) };
+        let mut fleet = ServeFleet::spawn(builders, hub.clone(), batching).unwrap();
+        hub.publish(trial, snapshot.clone());
+        let published = hub.latest().unwrap();
+        let answers: Arc<Mutex<Vec<Option<ServeAnswer>>>> =
+            Arc::new(Mutex::new(vec![None; n_queries]));
+        let hammers = 4.min(n_queries);
+        let threads: Vec<_> = (0..hammers)
+            .map(|h| {
+                let client = fleet.client();
+                let published = published.clone();
+                let queries = queries.clone();
+                let answers = answers.clone();
+                std::thread::spawn(move || {
+                    for i in (h..queries.len()).step_by(hammers) {
+                        let q = &queries[i];
+                        let a = client
+                            .query(published.clone(), q.x.clone(), q.y.clone(), q.embed)
+                            .unwrap();
+                        let prev = answers.lock().unwrap()[i].replace(a);
+                        assert!(prev.is_none(), "query {i} answered twice");
+                    }
+                })
+            })
+            .collect();
+        if kill {
+            // land the kill mid-hammer so in-flight queries redispatch
+            std::thread::sleep(Duration::from_millis(2));
+            fleet.kill_lane(0);
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+
+        let got = answers.lock().unwrap();
+        let answered = got.iter().filter(|a| a.is_some()).count();
+        assert_eq!(answered, n_queries, "{ctx}: a query went unanswered");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_answers_bitwise_eq(g.as_ref().unwrap(), w, &format!("{ctx} query {i}"));
+        }
+        assert_eq!(
+            hub.queries_total(),
+            n_queries,
+            "{ctx}: device forwards double- or under-counted"
+        );
+        if kill {
+            assert_eq!(hub.lanes_down(), 1, "{ctx}");
+            assert!(!hub.degraded(), "{ctx}: one dead lane of {replicas} must not degrade");
+        }
+    }
+}
+
 // --- trainer-level (PJRT; skipped when artifacts are absent) -------------
 
 fn runtime() -> Option<XlaRuntime> {
@@ -227,17 +370,24 @@ fn assert_records_bitwise_eq(
 
 /// Isolation: `--serve` on vs off — identical records and identical
 /// final parameters, alone and composed with `--service-lane on` +
-/// `--workers 4`.  Serving is a read-only observer of training.
+/// `--workers 4` + `--serve-replicas 2` + `--serve-batch 8`.  Serving
+/// is a read-only observer of training however the fleet is shaped.
 #[test]
 fn serving_never_perturbs_training_records() {
     let Some(rt) = runtime() else { return };
-    for (service_lane, workers) in [(false, 1usize), (true, 4)] {
-        let ctx = format!("service_lane={service_lane} workers={workers}");
+    for (service_lane, workers, replicas, batch) in
+        [(false, 1usize, 1usize, 1usize), (true, 4, 2, 8)]
+    {
+        let ctx = format!(
+            "service_lane={service_lane} workers={workers} replicas={replicas} batch={batch}"
+        );
         let run = |serve: bool| {
             let mut cfg = small_cfg();
             cfg.service_lane = service_lane;
             cfg.workers = workers;
             cfg.serve = serve.then(|| "127.0.0.1:0".to_string());
+            cfg.serve_replicas = replicas;
+            cfg.serve_batch = batch;
             let mut t = Trainer::new(&rt, cfg).unwrap();
             let result = t.run().unwrap();
             let params = t.exec.export_named_params().unwrap();
@@ -328,14 +478,14 @@ fn serve_lane_faults_follow_the_fault_policy() {
         // a Mock replica under a real executor's publications: every
         // query forces a params import the replica must reject
         let hub = Arc::new(SnapshotHub::new());
-        let lane =
-            ServeLane::spawn(MockBackend::new().replica_builder().unwrap(), hub.clone())
+        let fleet =
+            ServeFleet::spawn_single(MockBackend::new().replica_builder().unwrap(), hub.clone())
                 .unwrap();
         let server =
-            InferenceServer::start("127.0.0.1:0", 1, hub.clone(), lane.client(), None)
+            InferenceServer::start("127.0.0.1:0", 1, hub.clone(), fleet.client(), None)
                 .unwrap();
         let addr = server.addr();
-        t.serve = Some(ServeRuntime { server, lane, hub });
+        t.serve = Some(ServeRuntime { server, fleet, hub });
 
         // hammer the lane from a client thread for the whole run, so a
         // failure lands before an epoch barrier regardless of timing
