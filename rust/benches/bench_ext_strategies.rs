@@ -1,18 +1,21 @@
 //! Extension bench (paper Appendix C.4 discussion): KAKURENBO vs the
 //! related dynamic-pruning methods the paper discusses but does not run —
-//! InfoBatch [28] (unbiased dynamic pruning) and EL2N [15] (early
-//! error-norm pruning) — plus Random hiding as the floor.
+//! InfoBatch [28] (unbiased dynamic pruning), EL2N [15] (early
+//! error-norm pruning), and PFB (arXiv 2506.23674, cached-feature
+//! pre-forward pruning) — plus Random hiding as the floor.
 //!
 //! Expectation from the paper's arguments: InfoBatch is competitive on
 //! accuracy (its rescaling keeps the gradient unbiased) with similar
 //! step savings; EL2N loses accuracy when the score epoch is early and
-//! the pruning permanent; Random sits below all informed methods.
+//! the pruning permanent; PFB trades a periodic embedding harvest for
+//! zero per-epoch scoring forwards; Random sits below all informed
+//! methods.
 
 use kakurenbo::config::{presets, StrategyConfig};
 use kakurenbo::report::{comparison_table, BenchCtx};
 
 fn main() -> anyhow::Result<()> {
-    let ctx = BenchCtx::init("Extensions: InfoBatch / EL2N / Random vs KAKURENBO")?;
+    let ctx = BenchCtx::init("Extensions: InfoBatch / EL2N / PFB / Random vs KAKURENBO")?;
     let mut cfg = presets::by_name("imagenet_resnet50")?;
     ctx.scale_config(&mut cfg);
     let score_epoch = (cfg.epochs / 5).max(2);
@@ -24,6 +27,10 @@ fn main() -> anyhow::Result<()> {
         (
             "EL2N".to_string(),
             StrategyConfig::El2n { score_epoch, fraction: 0.3, restart: false },
+        ),
+        (
+            "PFB".to_string(),
+            StrategyConfig::Pfb { fraction: 0.3, refresh_every: 3 },
         ),
         ("Random".to_string(), StrategyConfig::RandomHiding { fraction: 0.3 }),
     ];

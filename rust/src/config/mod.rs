@@ -148,6 +148,15 @@ pub enum StrategyConfig {
         /// Whether training restarts from scratch after the prune.
         restart: bool,
     },
+    /// Partial Forward Blocking (arXiv 2506.23674) extension: per-epoch
+    /// pruning scored from a cached-feature centroid-distance proxy, with
+    /// the embedding cache refreshed every `refresh_every` epochs.
+    Pfb {
+        /// Fraction of the dataset pruned (pre-forward) per scored epoch.
+        fraction: f64,
+        /// Re-harvest the feature cache every N epochs (`--pfb-refresh-every`).
+        refresh_every: usize,
+    },
 }
 
 /// Which worker-pool schedule multi-worker (`--workers N`) training uses.
@@ -279,6 +288,7 @@ impl StrategyConfig {
             StrategyConfig::RandomHiding { .. } => "random".into(),
             StrategyConfig::InfoBatch { .. } => "infobatch".into(),
             StrategyConfig::El2n { .. } => "el2n".into(),
+            StrategyConfig::Pfb { .. } => "pfb".into(),
         }
     }
 
@@ -486,6 +496,18 @@ impl ExperimentConfig {
         if let StrategyConfig::Forget { prune_epoch, .. } = &self.strategy {
             anyhow::ensure!(*prune_epoch < self.epochs, "prune_epoch >= epochs");
         }
+        if let StrategyConfig::Pfb { fraction, refresh_every } = &self.strategy {
+            anyhow::ensure!(
+                (0.0..1.0).contains(fraction),
+                "--pfb-fraction {fraction} out of range: must be in [0, 1) \
+                 (pruning the whole dataset leaves nothing to train on)"
+            );
+            anyhow::ensure!(
+                *refresh_every >= 1,
+                "--pfb-refresh-every 0: the feature cache must be re-harvested \
+                 at least every epoch (use 1 for per-epoch refresh)"
+            );
+        }
         anyhow::ensure!(
             self.checkpoint_pool <= 256,
             "--checkpoint-pool {} is implausibly large (max 256; 0 = auto)",
@@ -596,9 +618,20 @@ impl ExperimentConfig {
                 StrategyConfig::Forget { fraction, .. }
                 | StrategyConfig::GradMatch { fraction, .. }
                 | StrategyConfig::El2n { fraction, .. }
+                | StrategyConfig::Pfb { fraction, .. }
                 | StrategyConfig::RandomHiding { fraction } => *fraction = value.parse()?,
                 StrategyConfig::InfoBatch { r } => *r = value.parse()?,
                 _ => anyhow::bail!("strategy has no fraction"),
+            },
+            "pfb_fraction" | "pfb-fraction" => match &mut self.strategy {
+                StrategyConfig::Pfb { fraction, .. } => *fraction = value.parse()?,
+                _ => anyhow::bail!("--pfb-fraction only applies to --strategy pfb"),
+            },
+            "pfb_refresh_every" | "pfb-refresh-every" => match &mut self.strategy {
+                StrategyConfig::Pfb { refresh_every, .. } => {
+                    *refresh_every = value.parse()?
+                }
+                _ => anyhow::bail!("--pfb-refresh-every only applies to --strategy pfb"),
             },
             "tau" => match &mut self.strategy {
                 StrategyConfig::Kakurenbo { tau, .. } => *tau = value.parse()?,
@@ -755,12 +788,46 @@ mod tests {
             StrategyConfig::RandomHiding { fraction: 0.2 },
             StrategyConfig::Forget { prune_epoch: 5, fraction: 0.3 },
             StrategyConfig::El2n { score_epoch: 4, fraction: 0.2, restart: false },
+            StrategyConfig::Pfb { fraction: 0.3, refresh_every: 3 },
         ] {
             let mut c = base_cfg(strategy);
             c.workers = 2;
             c.dp = DpMode::Average;
             assert!(c.validate().is_ok());
         }
+    }
+
+    #[test]
+    fn pfb_validation_and_overrides() {
+        let mut c = base_cfg(StrategyConfig::Pfb { fraction: 0.3, refresh_every: 3 });
+        assert!(c.validate().is_ok());
+        c.apply_override("pfb_fraction", "0.4").unwrap();
+        c.apply_override("pfb-refresh-every", "5").unwrap();
+        match c.strategy {
+            StrategyConfig::Pfb { fraction, refresh_every } => {
+                assert_eq!(fraction, 0.4);
+                assert_eq!(refresh_every, 5);
+            }
+            _ => unreachable!(),
+        }
+        // max_fraction aliases the pfb fraction like the other pruners
+        c.apply_override("max_fraction", "0.25").unwrap();
+        match c.strategy {
+            StrategyConfig::Pfb { fraction, .. } => assert_eq!(fraction, 0.25),
+            _ => unreachable!(),
+        }
+        // refresh_every = 0 is rejected with the flag named
+        c.apply_override("pfb_refresh_every", "0").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--pfb-refresh-every"), "{err}");
+        // fraction = 1.0 would prune everything
+        c.strategy = StrategyConfig::Pfb { fraction: 1.0, refresh_every: 2 };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--pfb-fraction"), "{err}");
+        // the pfb keys refuse to apply to other strategies
+        let mut k = base_cfg(StrategyConfig::kakurenbo(0.3));
+        assert!(k.apply_override("pfb_fraction", "0.1").is_err());
+        assert!(k.apply_override("pfb-refresh-every", "2").is_err());
     }
 
     #[test]

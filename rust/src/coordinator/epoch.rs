@@ -214,6 +214,7 @@ impl EpochPipeline {
     // --- Plan: strategy selection + LR -----------------------------------
     fn plan(&mut self, t: &mut Trainer, rec: &mut EpochRecord) -> anyhow::Result<EpochPlan> {
         let epoch = self.epoch;
+        rec.feature_cache_age = t.feat_cache.age(epoch as u32);
         let plan = {
             let mut ctx = PlanCtx {
                 epoch,
@@ -222,12 +223,16 @@ impl EpochPipeline {
                 state: &mut t.state,
                 rng: &mut t.rng,
                 exec: Some(&mut t.exec),
+                features: Some(&t.feat_cache),
             };
             t.strategy.plan_epoch(&mut ctx)?
         };
         if plan.reset_params {
             t.exec.reset_params(t.cfg.seed)?;
             t.schedule_offset = epoch;
+            // cached features came from the discarded parameters; the
+            // strategy's refresh cadence re-harvests from the new ones
+            t.feat_cache.invalidate();
         }
         rec.base_lr = t.cfg.lr.at(epoch - t.schedule_offset);
         rec.lr = rec.base_lr * plan.lr_scale;
@@ -235,6 +240,7 @@ impl EpochPipeline {
         rec.max_hidden = plan.max_hidden;
         rec.hidden = plan.hidden.len();
         rec.moved_back = plan.moved_back;
+        rec.pruned_pre_forward = plan.pruned_pre_forward;
         Ok(plan)
     }
 
@@ -320,6 +326,22 @@ impl EpochPipeline {
             // not train-barrier time
             rec.time_refresh_stall += t.refresh_stats(&plan.hidden, self.epoch as u32)?;
         }
+        // Feature-cache harvest cadence (PFB): re-harvest when the cache
+        // is cold (first epoch, post-restart, legacy resume) or its rows
+        // have aged `refresh_every` epochs.  The `fwd_embed` sweep fills
+        // the cache with post-training-pass embeddings *and* refreshes
+        // every sample's lagging stats in the same pass; the N-1 plans in
+        // between score from the cache with zero extra device forwards.
+        if let Some(every) = t.strategy.feature_refresh_every() {
+            let epoch = self.epoch as u32;
+            let due = !t.feat_cache.ready() || t.feat_cache.age(epoch) >= every;
+            if due {
+                let th = Timer::start();
+                rec.time_refresh_stall += t.harvest_features(epoch)?;
+                rec.time_feature_refresh = th.elapsed_s();
+                refreshed = t.data.train.n;
+            }
+        }
         rec.hidden_again = t.state.hidden_again_count();
         Ok(refreshed)
     }
@@ -389,7 +411,15 @@ impl EpochPipeline {
         // must match this exact epoch boundary — always written
         // synchronously, stamped with the epoch so resume can detect a
         // crash-torn directory.
-        super::resume::save(&dir, epoch, &t.state, &t.rng, &t.sb, t.schedule_offset)?;
+        super::resume::save(
+            &dir,
+            epoch,
+            &t.state,
+            &t.rng,
+            &t.sb,
+            &t.feat_cache,
+            t.schedule_offset,
+        )?;
         Ok(())
     }
 

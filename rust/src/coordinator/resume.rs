@@ -19,15 +19,22 @@
 //! per-run selector history (its rolling loss-CDF reservoir plus the
 //! overwrite cursor) rides along as `state_sb_history.e<epoch>.npy` +
 //! the manifest's `sb_cursor`, so an SB `--resume` replays the
-//! acceptance stream bit-exactly too.  Legacy checkpoints without a
+//! acceptance stream bit-exactly too.  PFB's feature cache is likewise
+//! stateful across epochs (plans between harvests score from rows
+//! harvested epochs ago): a committed cache rides along as
+//! `state_pfb_feats.e<epoch>.npy` (shape `[n, dim]`) plus the manifest's
+//! `pfb_dim`/`pfb_epoch`, so a `--resume` mid-cache-lifetime scores the
+//! resumed epochs from bit-identical rows.  Legacy checkpoints without a
 //! trainer-state file still load: [`load`] returns `None` and the
 //! trainer falls back to params-only resume (fresh stats, fresh RNG);
-//! trainer-state files from before SB persistence restore everything
-//! else and simply leave the selector re-warming, the old behavior.
+//! trainer-state files from before SB or feature-cache persistence
+//! restore everything else and simply leave the selector re-warming /
+//! the cache cold (PFB then trains a full epoch and re-harvests), the
+//! old behavior.
 
 use std::path::Path;
 
-use crate::state::SampleState;
+use crate::state::{FeatureCache, SampleState};
 use crate::strategies::sb::SbSelector;
 use crate::util::fsutil::{gc_files, write_atomic};
 use crate::util::json::{parse_file, Json};
@@ -88,6 +95,7 @@ pub fn save(
     state: &SampleState,
     rng: &Rng,
     sb: &SbSelector,
+    feats: &FeatureCache,
     schedule_offset: usize,
 ) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -123,16 +131,33 @@ pub fn save(
     let sb_file = state_file("sb_history", epoch);
     npy::write_f32(&dir.join(&sb_file), sb_history, &[sb_history.len()])?;
     keep.push(sb_file);
+    // PFB's feature cache, when a harvest has committed: the [n, dim]
+    // rows as their own payload, the dim + harvest-epoch stamps in the
+    // manifest.  Runs without a cache (every non-PFB strategy) write
+    // neither, keeping their manifests byte-compatible with before.
+    let mut pfb_meta: Vec<(&str, Json)> = Vec::new();
+    if let Some((dim, harvest_epoch, rows)) = feats.export() {
+        let feats_file = state_file("pfb_feats", epoch);
+        npy::write_f32(&dir.join(&feats_file), rows, &[n, dim])?;
+        keep.push(feats_file);
+        pfb_meta.push(("pfb_dim", Json::from(dim)));
+        pfb_meta.push(("pfb_epoch", Json::from(harvest_epoch as usize)));
+    }
     // RNG words as hex strings: u64 state does not survive a JSON f64
     let rng_hex: Vec<Json> =
         rng.state().iter().map(|w| Json::Str(format!("{w:016x}"))).collect();
-    let manifest = crate::jobj![
+    let mut manifest = crate::jobj![
         ("n", n),
         ("epoch", epoch),
         ("schedule_offset", schedule_offset),
         ("sb_cursor", sb_cursor),
         ("rng", Json::Arr(rng_hex)),
     ];
+    if let Json::Obj(m) = &mut manifest {
+        for (k, v) in pfb_meta {
+            m.insert(k.into(), v);
+        }
+    }
     // payloads reach stable storage before the manifest points at them
     for f in &keep {
         crate::util::fsutil::sync_file(&dir.join(f))?;
@@ -156,6 +181,7 @@ pub fn load(
     state: &mut SampleState,
     rng: &mut Rng,
     sb: &mut SbSelector,
+    feats: &mut FeatureCache,
 ) -> anyhow::Result<Option<usize>> {
     let path = dir.join(STATE_FILE);
     if !path.exists() {
@@ -216,6 +242,22 @@ pub fn load(
         let (history, _shape) = npy::read_f32(&dir.join(&name))?;
         sb.import_history(&history, cursor);
     }
+
+    // PFB feature cache: present since `pfb_dim` joined the manifest (and
+    // only when a harvest had committed at save time).  Anything else —
+    // legacy manifests, or a save taken before the first harvest — leaves
+    // the cache cold, and PFB falls back to a full epoch + re-harvest.
+    match (
+        m.get("pfb_dim").and_then(|d| d.as_usize()),
+        m.get("pfb_epoch").and_then(|e| e.as_usize()),
+    ) {
+        (Some(dim), Some(pfb_epoch)) => {
+            let name = state_file("pfb_feats", expected_epoch);
+            let (rows, _shape) = npy::read_f32(&dir.join(&name))?;
+            feats.import(dim, pfb_epoch as u32, rows)?;
+        }
+        _ => feats.invalidate(),
+    }
     Ok(Some(m.req("schedule_offset")?.as_usize().unwrap_or(0)))
 }
 
@@ -225,6 +267,11 @@ mod tests {
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("kakurenbo_resume_{name}_{}", std::process::id()))
+    }
+
+    /// A cold cache of size `n` — what every non-PFB run carries.
+    fn no_feats(n: usize) -> FeatureCache {
+        FeatureCache::new(n)
     }
 
     #[test]
@@ -240,12 +287,13 @@ mod tests {
         for _ in 0..23 {
             rng.next_u64();
         }
-        save(&dir, 7, &s, &rng, &SbSelector::new(1.0, 8), 5).unwrap();
+        save(&dir, 7, &s, &rng, &SbSelector::new(1.0, 8), &no_feats(10), 5).unwrap();
 
         let mut s2 = SampleState::new(10);
         let mut rng2 = Rng::new(0);
         let mut sb2 = SbSelector::new(1.0, 8);
-        let off = load(&dir, 7, &mut s2, &mut rng2, &mut sb2).unwrap();
+        let mut f2 = no_feats(10);
+        let off = load(&dir, 7, &mut s2, &mut rng2, &mut sb2, &mut f2).unwrap();
         assert_eq!(off, Some(5));
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&s.loss), bits(&s2.loss));
@@ -273,7 +321,8 @@ mod tests {
         let mut s = SampleState::new(4);
         let mut rng = Rng::new(1);
         let mut sb = SbSelector::new(1.0, 8);
-        assert_eq!(load(&dir, 0, &mut s, &mut rng, &mut sb).unwrap(), None);
+        let mut f = no_feats(4);
+        assert_eq!(load(&dir, 0, &mut s, &mut rng, &mut sb, &mut f).unwrap(), None);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -285,17 +334,18 @@ mod tests {
         let dir = tmp("mixed");
         let mut s = SampleState::new(5);
         s.set_hidden(&[1]);
-        save(&dir, 4, &s, &Rng::new(3), &SbSelector::new(1.0, 8), 2).unwrap();
+        save(&dir, 4, &s, &Rng::new(3), &SbSelector::new(1.0, 8), &no_feats(5), 2).unwrap();
         let mut restored = SampleState::new(5);
         let mut rng = Rng::new(0);
         let mut sb = SbSelector::new(1.0, 8);
+        let mut f = no_feats(5);
         let before = rng.state();
-        assert_eq!(load(&dir, 2, &mut restored, &mut rng, &mut sb).unwrap(), None);
+        assert_eq!(load(&dir, 2, &mut restored, &mut rng, &mut sb, &mut f).unwrap(), None);
         // nothing was restored on the mismatch path
         assert_eq!(restored.hidden_count(), 0);
         assert_eq!(rng.state(), before);
         // the matching epoch still restores
-        assert_eq!(load(&dir, 4, &mut restored, &mut rng, &mut sb).unwrap(), Some(2));
+        assert_eq!(load(&dir, 4, &mut restored, &mut rng, &mut sb, &mut f).unwrap(), Some(2));
         assert_eq!(restored.hidden_count(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -304,11 +354,12 @@ mod tests {
     fn sample_count_mismatch_rejected() {
         let dir = tmp("mismatch");
         let s = SampleState::new(6);
-        save(&dir, 0, &s, &Rng::new(2), &SbSelector::new(1.0, 8), 0).unwrap();
+        save(&dir, 0, &s, &Rng::new(2), &SbSelector::new(1.0, 8), &no_feats(6), 0).unwrap();
         let mut other = SampleState::new(7);
         let mut rng = Rng::new(2);
         let mut sb = SbSelector::new(1.0, 8);
-        assert!(load(&dir, 0, &mut other, &mut rng, &mut sb).is_err());
+        let mut f = no_feats(7);
+        assert!(load(&dir, 0, &mut other, &mut rng, &mut sb, &mut f).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -322,12 +373,13 @@ mod tests {
         for i in 0..40 {
             sb.record((i % 7) as f32); // overfilled: cursor has wrapped
         }
-        save(&dir, 9, &s, &Rng::new(5), &sb, 0).unwrap();
+        save(&dir, 9, &s, &Rng::new(5), &sb, &no_feats(3), 0).unwrap();
 
         let mut s2 = SampleState::new(3);
         let mut rng2 = Rng::new(5);
         let mut sb2 = SbSelector::new(1.0, 16);
-        assert_eq!(load(&dir, 9, &mut s2, &mut rng2, &mut sb2).unwrap(), Some(0));
+        let mut f2 = no_feats(3);
+        assert_eq!(load(&dir, 9, &mut s2, &mut rng2, &mut sb2, &mut f2).unwrap(), Some(0));
         let (h1, c1) = sb.export_history();
         let (h2, c2) = sb2.export_history();
         assert_eq!(c1, c2);
@@ -352,7 +404,7 @@ mod tests {
         s.set_hidden(&[2]);
         let mut warm = SbSelector::new(1.0, 8);
         warm.record(3.0);
-        save(&dir, 2, &s, &Rng::new(4), &warm, 6).unwrap();
+        save(&dir, 2, &s, &Rng::new(4), &warm, &no_feats(4), 6).unwrap();
         // rewrite the manifest as the pre-SB format: drop sb_cursor
         let path = dir.join(STATE_FILE);
         let m = parse_file(&path).unwrap();
@@ -367,10 +419,51 @@ mod tests {
         let mut s2 = SampleState::new(4);
         let mut rng2 = Rng::new(0);
         let mut sb2 = SbSelector::new(1.0, 8);
-        assert_eq!(load(&dir, 2, &mut s2, &mut rng2, &mut sb2).unwrap(), Some(6));
+        let mut f2 = no_feats(4);
+        assert_eq!(load(&dir, 2, &mut s2, &mut rng2, &mut sb2, &mut f2).unwrap(), Some(6));
         assert_eq!(s2.hidden_count(), 1);
         // selector untouched: still empty
         assert!(sb2.export_history().0.is_empty());
+        // a legacy manifest leaves the cache cold, not half-restored
+        assert!(!f2.ready());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A committed feature cache rides the roundtrip bit-exactly: rows,
+    /// dim, and the harvest-epoch stamp all survive, and a cold cache at
+    /// save time stays cold at load time.
+    #[test]
+    fn pfb_feature_cache_roundtrips_bitwise() {
+        let dir = tmp("pfb");
+        let s = SampleState::new(3);
+        let mut warm = FeatureCache::new(3);
+        warm.begin(2).unwrap();
+        warm.store_row(0, &[0.125, -3.5]).unwrap();
+        warm.store_row(1, &[1.0e-7, 42.0]).unwrap();
+        warm.store_row(2, &[-0.0, 7.25]).unwrap();
+        warm.commit(4);
+        save(&dir, 6, &s, &Rng::new(8), &SbSelector::new(1.0, 8), &warm, 0).unwrap();
+
+        let mut s2 = SampleState::new(3);
+        let mut rng2 = Rng::new(0);
+        let mut sb2 = SbSelector::new(1.0, 8);
+        // pre-seed the restored cache with junk: import must replace it
+        let mut f2 = FeatureCache::new(3);
+        f2.begin(5).unwrap();
+        f2.commit(1);
+        assert_eq!(load(&dir, 6, &mut s2, &mut rng2, &mut sb2, &mut f2).unwrap(), Some(0));
+        assert!(f2.ready());
+        assert_eq!(f2.dim(), 2);
+        assert_eq!(f2.harvest_epoch(), Some(4));
+        let bits = |f: &FeatureCache| -> Vec<u32> {
+            (0..3).flat_map(|i| f.row(i).iter().map(|v| v.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&warm), bits(&f2));
+
+        // a save with a cold cache invalidates any stale restored cache
+        save(&dir, 7, &s, &Rng::new(8), &SbSelector::new(1.0, 8), &no_feats(3), 0).unwrap();
+        assert_eq!(load(&dir, 7, &mut s2, &mut rng2, &mut sb2, &mut f2).unwrap(), Some(0));
+        assert!(!f2.ready());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -39,13 +39,14 @@ use crate::coordinator::epoch::EpochPipeline;
 use crate::data::shard::shard_order_aligned;
 use crate::data::TrainVal;
 use crate::engine::{
-    CheckpointWriter, Engine, EvalSink, RefreshSink, ServeBatching, ServeFleet, ServiceEvent,
-    ServiceLanes, SharedSnapshot, SnapshotHub, StepMode, WorkerPool,
+    execute_feature_harvest, execute_sharded_harvest, CheckpointWriter, Engine, EvalSink,
+    RefreshSink, ServeBatching, ServeFleet, ServiceEvent, ServiceLanes, SharedSnapshot,
+    SnapshotHub, StepMode, WorkerPool,
 };
 use crate::serve::{InferenceServer, ServingShape};
 use crate::metrics::{EpochRecord, RunResult};
 use crate::runtime::{ModelExecutor, XlaRuntime};
-use crate::state::SampleState;
+use crate::state::{FeatureCache, SampleState};
 use crate::strategies::sb::SbSelector;
 use crate::strategies::Strategy;
 use crate::util::rng::Rng;
@@ -82,6 +83,12 @@ pub struct Trainer {
     pub data: TrainVal,
     /// Per-sample lagging loss / PA / PC store.
     pub state: SampleState,
+    /// Penultimate-layer feature cache for pre-forward pruning strategies
+    /// (PFB): filled by the Refresh phase's embedding harvest every
+    /// `Strategy::feature_refresh_every` epochs, read by `plan_epoch`,
+    /// and carried through the exact-resume payload.  Empty (not-ready)
+    /// for strategies that never score from features.
+    pub feat_cache: FeatureCache,
     /// Calibrated paper-scale cost model.
     pub cost: CostModel,
     /// The pipelined step-execution driver (owns the reusable batch
@@ -145,6 +152,7 @@ impl Trainer {
             data.train.classes
         );
         let state = SampleState::new(data.train.n);
+        let feat_cache = FeatureCache::new(data.train.n);
         let cost = rt.cost_model(&mut exec)?;
         // calibration perturbs params: reset to the seeded init
         exec.reset_params(cfg.seed)?;
@@ -173,6 +181,7 @@ impl Trainer {
             exec,
             data,
             state,
+            feat_cache,
             cost,
             engine,
             pool,
@@ -203,6 +212,7 @@ impl Trainer {
                 &mut self.state,
                 &mut self.rng,
                 &mut self.sb,
+                &mut self.feat_cache,
             )? {
                 Some(offset) => {
                     self.schedule_offset = offset;
@@ -484,6 +494,42 @@ impl Trainer {
                 None,
                 StepMode::Forward,
                 &mut sink,
+            )?;
+            Ok(0.0)
+        }
+    }
+
+    /// Full-dataset embedding harvest into the feature cache (PFB's
+    /// scoring pass), sharded across the worker pool under the same
+    /// threshold rule as [`Trainer::refresh_stats`] — at least one batch
+    /// per worker, else single-stream.  One `fwd_embed` sweep fills the
+    /// cache *and* refreshes every sample's lagging stats; the commit
+    /// stamps the rows with `epoch`.  Returns the pool's gather stall
+    /// (0 single-stream).
+    pub(crate) fn harvest_features(&mut self, epoch: u32) -> anyhow::Result<f64> {
+        let n = self.data.train.n;
+        let all: Vec<u32> = (0..n as u32).collect();
+        if self.cfg.workers > 1 && n >= self.cfg.workers * self.engine.batch() {
+            let shards = shard_order_aligned(&all, self.cfg.workers, self.engine.batch());
+            let pout = execute_sharded_harvest(
+                &mut self.pool,
+                &mut self.exec,
+                &self.data.train,
+                &shards,
+                epoch,
+                &mut self.state,
+                &mut self.feat_cache,
+            )?;
+            Ok(pout.workers.iter().map(|w| w.wait_s).sum())
+        } else {
+            execute_feature_harvest(
+                &mut self.engine,
+                &mut self.exec,
+                &self.data.train,
+                &all,
+                epoch,
+                &mut self.state,
+                &mut self.feat_cache,
             )?;
             Ok(0.0)
         }

@@ -81,8 +81,8 @@ pub mod testbed;
 pub use backend::{DataParallel, ReplicaBackend, ReplicaBuilder, StateExchange, StepBackend};
 pub use chaos::{ChaosAction, ChaosBackend, ChaosEvent, ChaosPlan};
 pub use modes::{
-    execute_plan, execute_sharded_average, execute_sharded_plain, EpochOutcome, EvalSink,
-    RefreshSink, SbSink, TrainSink,
+    execute_feature_harvest, execute_plan, execute_sharded_average, execute_sharded_harvest,
+    execute_sharded_plain, EmbedSink, EpochOutcome, EvalSink, RefreshSink, SbSink, TrainSink,
 };
 pub use pool::{PoolOutcome, WorkerPool, WorkerReport};
 pub use serve::{Published, ServeAnswer, ServeBatching, ServeClient, ServeFleet, SnapshotHub};
@@ -91,7 +91,7 @@ pub use snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
 
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::Dataset;
-use crate::runtime::BatchStats;
+use crate::runtime::{BatchStats, EmbedStats};
 
 /// Which device entry point each assembled batch goes through.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -103,16 +103,59 @@ pub enum StepMode {
     },
     /// Forward-only stats pass (`fwd_stats`).
     Forward,
+    /// Forward pass through the embedding head (`fwd_embed`): per-slot
+    /// stats plus penultimate-layer features, delivered to sinks via
+    /// [`StepSink::on_embed`].  Errors on backends without an embedding
+    /// artifact.
+    Embed,
 }
 
-fn dispatch(
+/// What one dispatched device step produced: plain stats, or stats plus
+/// the embedding payload when the step ran through the embedding head.
+pub(crate) enum StepOutput {
+    /// `train_step` / `fwd_stats` result.
+    Stats(BatchStats),
+    /// `fwd_embed` result (stats + features + probabilities).
+    Embed(EmbedStats),
+}
+
+impl StepOutput {
+    /// Collapse to the per-slot stats, dropping any embedding payload.
+    pub(crate) fn into_stats(self) -> BatchStats {
+        match self {
+            StepOutput::Stats(s) => s,
+            StepOutput::Embed(e) => e.stats,
+        }
+    }
+}
+
+pub(crate) fn dispatch(
     backend: &mut dyn StepBackend,
     mode: StepMode,
     buf: &BatchAssembler,
-) -> anyhow::Result<BatchStats> {
-    match mode {
-        StepMode::Train { lr } => backend.train_step(&buf.x, &buf.y, &buf.sw, lr),
-        StepMode::Forward => backend.fwd_stats(&buf.x, &buf.y),
+) -> anyhow::Result<StepOutput> {
+    Ok(match mode {
+        StepMode::Train { lr } => {
+            StepOutput::Stats(backend.train_step(&buf.x, &buf.y, &buf.sw, lr)?)
+        }
+        StepMode::Forward => StepOutput::Stats(backend.fwd_stats(&buf.x, &buf.y)?),
+        StepMode::Embed => StepOutput::Embed(backend.fwd_embed(&buf.x, &buf.y)?),
+    })
+}
+
+/// Feed one dispatched step's output to the sink through the matching
+/// entry point — the single routing spot shared by the serial and
+/// overlapped schedules (and the worker pool's reduction loop).
+pub(crate) fn feed_sink(
+    sink: &mut dyn StepSink,
+    ctx: &mut StepCtx,
+    slots: &[u32],
+    real: usize,
+    out: &StepOutput,
+) -> anyhow::Result<()> {
+    match out {
+        StepOutput::Stats(stats) => sink.on_batch(ctx, slots, real, stats),
+        StepOutput::Embed(es) => sink.on_embed(ctx, slots, real, es),
     }
 }
 
@@ -136,7 +179,7 @@ impl StepCtx<'_> {
         mode: StepMode,
     ) -> anyhow::Result<BatchStats> {
         self.scratch.fill(self.data, indices, weights);
-        dispatch(self.backend, mode, self.scratch)
+        Ok(dispatch(self.backend, mode, self.scratch)?.into_stats())
     }
 }
 
@@ -152,6 +195,21 @@ pub trait StepSink {
         real: usize,
         stats: &BatchStats,
     ) -> anyhow::Result<()>;
+
+    /// Consume one executed embedding step's output ([`StepMode::Embed`]).
+    /// The default forwards the embedded stats to [`StepSink::on_batch`],
+    /// so stat-only sinks work unchanged under the embed mode; sinks that
+    /// actually harvest features (the coordinator's feature-cache scoring
+    /// pass) override it.
+    fn on_embed(
+        &mut self,
+        ctx: &mut StepCtx,
+        slots: &[u32],
+        real: usize,
+        es: &EmbedStats,
+    ) -> anyhow::Result<()> {
+        self.on_batch(ctx, slots, real, &es.stats)
+    }
 
     /// Called once after the last batch (SB flushes its partial queue).
     fn finish(&mut self, _ctx: &mut StepCtx) -> anyhow::Result<()> {
@@ -236,10 +294,10 @@ impl Engine {
         for (ci, chunk) in chunks.iter().enumerate() {
             let w = weights.map(|ws| &ws[ci * b..ci * b + chunk.len()]);
             cur.fill(data, chunk, w);
-            let stats = dispatch(&mut *backend, mode, &cur)?;
+            let out = dispatch(&mut *backend, mode, &cur)?;
             let mut ctx =
                 StepCtx { backend: &mut *backend, scratch: &mut self.scratch, data };
-            sink.on_batch(&mut ctx, &cur.slots, cur.real, &stats)?;
+            feed_sink(sink, &mut ctx, &cur.slots, cur.real, &out)?;
         }
         let mut ctx = StepCtx { backend, scratch: &mut self.scratch, data };
         sink.finish(&mut ctx)?;
@@ -290,10 +348,10 @@ impl Engine {
                         .map_err(|_| anyhow::anyhow!("prefetch worker unavailable"))?;
                 }
                 // Device step + sink run while the worker gathers ci+1.
-                let stats = dispatch(&mut *backend, mode, &cur)?;
+                let out = dispatch(&mut *backend, mode, &cur)?;
                 let mut ctx =
                     StepCtx { backend: &mut *backend, scratch: &mut *scratch, data };
-                sink.on_batch(&mut ctx, &cur.slots, cur.real, &stats)?;
+                feed_sink(sink, &mut ctx, &cur.slots, cur.real, &out)?;
                 free.push(cur);
             }
             drop(fill_tx); // worker drains and exits

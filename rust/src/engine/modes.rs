@@ -9,6 +9,9 @@
 //!   batches via [`StepCtx::step_now`].
 //! * [`EvalSink`]    — eval-accumulate: top-1 correct + loss sums over the
 //!   validation set.
+//! * [`EmbedSink`]   — feature harvest: store penultimate-layer embedding
+//!   rows into the coordinator's [`FeatureCache`] (PFB's amortized
+//!   scoring pass), recording the ride-along stats like a refresh.
 //!
 //! [`execute_plan`] is the coordinator-facing entry point: it consumes the
 //! strategy's `BatchMode` and routes the epoch order through the right
@@ -19,8 +22,8 @@ use super::pool::{PoolOutcome, WorkerPool};
 use super::{Engine, StepBackend, StepCtx, StepMode, StepSink};
 use crate::data::shard::Shard;
 use crate::data::Dataset;
-use crate::runtime::BatchStats;
-use crate::state::SampleState;
+use crate::runtime::{BatchStats, EmbedStats};
+use crate::state::{FeatureCache, SampleState};
 use crate::strategies::sb::SbSelector;
 use crate::strategies::BatchMode;
 use crate::util::rng::Rng;
@@ -250,6 +253,109 @@ impl StepSink for EvalSink {
         self.accumulate(real, stats);
         Ok(())
     }
+}
+
+/// Feature-harvest adapter: store each real slot's embedding row into the
+/// [`FeatureCache`] and record the ride-along stats (the embed pass
+/// doubles as a full stat refresh, so PFB's per-sample diagnostics never
+/// go stale even though it skips the hidden-list refresh).
+///
+/// Only legal under [`StepMode::Embed`]: a batch arriving through
+/// [`StepSink::on_batch`] means the caller dispatched the wrong mode, and
+/// the sink errors instead of silently caching nothing.
+pub struct EmbedSink<'a> {
+    cache: &'a mut FeatureCache,
+    state: &'a mut SampleState,
+    epoch: u32,
+    started: bool,
+}
+
+impl<'a> EmbedSink<'a> {
+    /// A sink harvesting into `cache`, stamping stat updates with `epoch`.
+    /// The cache's row width is taken from the first executed batch
+    /// (`emb.len() / slots`), so the same sink serves any embedding head.
+    pub fn new(cache: &'a mut FeatureCache, state: &'a mut SampleState, epoch: u32) -> Self {
+        EmbedSink { cache, state, epoch, started: false }
+    }
+}
+
+impl StepSink for EmbedSink<'_> {
+    fn on_batch(
+        &mut self,
+        _ctx: &mut StepCtx,
+        _slots: &[u32],
+        _real: usize,
+        _stats: &BatchStats,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("EmbedSink consumes embedding steps only (use StepMode::Embed)")
+    }
+
+    fn on_embed(
+        &mut self,
+        _ctx: &mut StepCtx,
+        slots: &[u32],
+        real: usize,
+        es: &EmbedStats,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!slots.is_empty(), "embed batch with zero slots");
+        let dim = es.emb.len() / slots.len();
+        if !self.started {
+            self.cache.begin(dim)?;
+            self.started = true;
+        }
+        for (slot, &sample) in slots[..real].iter().enumerate() {
+            self.cache.store_row(sample as usize, &es.emb[slot * dim..(slot + 1) * dim])?;
+            self.state.record(
+                sample as usize,
+                es.stats.loss[slot],
+                es.stats.correct[slot] > 0.5,
+                es.stats.conf[slot],
+                self.epoch,
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Execute one feature-harvest sweep single-stream: drive `indices`
+/// through the backend's embedding head and commit the resulting rows to
+/// `cache`, stamped with `epoch`.  Inherits the engine's double-buffered
+/// prefetch like every other mode.
+pub fn execute_feature_harvest(
+    engine: &mut Engine,
+    backend: &mut dyn StepBackend,
+    data: &Dataset,
+    indices: &[u32],
+    epoch: u32,
+    state: &mut SampleState,
+    cache: &mut FeatureCache,
+) -> anyhow::Result<()> {
+    let mut sink = EmbedSink::new(cache, state, epoch);
+    engine.run(backend, data, indices, None, StepMode::Embed, &mut sink)?;
+    cache.commit(epoch);
+    Ok(())
+}
+
+/// Execute one feature-harvest sweep through the worker pool's
+/// serial-equivalent schedule: worker `w` gathers `shards[w]`, every
+/// embed step runs on the primary in fixed `(step, worker)` order, and
+/// the committed cache is bitwise identical to the single-stream sweep
+/// (the same contract as the hidden-stat refresh, chaos/elastic semantics
+/// included).  Returns the pool's accounting for the metrics roll-up.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_sharded_harvest(
+    pool: &mut WorkerPool,
+    backend: &mut dyn StepBackend,
+    data: &Dataset,
+    shards: &[Shard],
+    epoch: u32,
+    state: &mut SampleState,
+    cache: &mut FeatureCache,
+) -> anyhow::Result<PoolOutcome> {
+    let mut sink = EmbedSink::new(cache, state, epoch);
+    let pout = pool.run_serial_equivalent(backend, data, shards, StepMode::Embed, &mut sink)?;
+    cache.commit(epoch);
+    Ok(pout)
 }
 
 /// Execute one planned epoch order: consumes the strategy's `BatchMode`

@@ -87,7 +87,7 @@ use std::time::Duration;
 use super::backend::{accumulate_state, finish_average, DataParallel, ReplicaBuilder, StateExchange};
 use super::chaos::{ChaosAction, ChaosPlan};
 use super::snapshot::{SharedSnapshot, Snapshot, SnapshotTier};
-use super::{dispatch, StepBackend, StepCtx, StepMode, StepSink};
+use super::{dispatch, feed_sink, StepBackend, StepCtx, StepMode, StepSink};
 use crate::data::batch::{BatchAssembler, DoubleBuffer};
 use crate::data::shard::{reissue_tail, Shard};
 use crate::data::Dataset;
@@ -258,6 +258,11 @@ fn lane_main(build: ReplicaBuilder, cmd_rx: Receiver<LaneCmd>, reply_tx: Sender<
                         replica.train_step(&buf.x, &buf.y, &buf.sw, lr)
                     }
                     StepMode::Forward => replica.fwd_stats(&buf.x, &buf.y),
+                    // replies carry stats only — embeddings never cross
+                    // the lane channel (rejected before lanes spin up)
+                    StepMode::Embed => Err(anyhow::anyhow!(
+                        "StepMode::Embed is not supported on data-parallel replica lanes"
+                    )),
                 };
                 let stats = match result {
                     Ok(s) => s,
@@ -554,10 +559,10 @@ impl WorkerPool {
                             outcome.rejoined_lanes += 1;
                             outcome.time_reissue += t.elapsed_s();
                         };
-                        let stats = dispatch(&mut *backend, mode, &buf)?;
+                        let out = dispatch(&mut *backend, mode, &buf)?;
                         let mut ctx =
                             StepCtx { backend: &mut *backend, scratch: &mut *scratch, data };
-                        sink.on_batch(&mut ctx, &buf.slots, buf.real, &stats)?;
+                        feed_sink(sink, &mut ctx, &buf.slots, buf.real, &out)?;
                         outcome.samples += buf.real;
                         outcome.workers[w].samples += buf.real;
                         outcome.workers[w].steps += 1;
@@ -638,6 +643,11 @@ impl WorkerPool {
         mode: StepMode,
         sink: &mut dyn StepSink,
     ) -> anyhow::Result<PoolOutcome> {
+        anyhow::ensure!(
+            !matches!(mode, StepMode::Embed),
+            "StepMode::Embed runs through the serial-equivalent schedule only \
+             (replica lane replies carry stats, not embeddings)"
+        );
         let out = self.run_data_parallel_inner(primary, data, shards, mode, sink);
         if out.is_err() {
             // an aborted run can leave lanes with out-of-phase commands in
@@ -851,13 +861,13 @@ impl WorkerPool {
                                 let rb = rec_buf
                                     .get_or_insert_with(|| BatchAssembler::new(data, bs));
                                 rb.fill(data, shards[w].step_batch(s, bs), None);
-                                let stats = dispatch(&mut *primary, mode, rb)?;
+                                let out = dispatch(&mut *primary, mode, rb)?;
                                 let mut ctx = StepCtx {
                                     backend: &mut *primary,
                                     scratch: &mut *scratch,
                                     data,
                                 };
-                                sink.on_batch(&mut ctx, &rb.slots, rb.real, &stats)?;
+                                feed_sink(sink, &mut ctx, &rb.slots, rb.real, &out)?;
                                 outcome.samples += rb.real;
                                 outcome.workers[w].samples += rb.real;
                                 outcome.workers[w].steps += 1;
@@ -1193,7 +1203,7 @@ mod tests {
                     continue;
                 }
                 buf.fill(&d, idx, None);
-                let stats = dispatch(&mut ref_be, mode, &buf).unwrap();
+                let stats = dispatch(&mut ref_be, mode, &buf).unwrap().into_stats();
                 let mut ctx =
                     StepCtx { backend: &mut ref_be, scratch: &mut scratch, data: &d };
                 ref_sink.on_batch(&mut ctx, &buf.slots, buf.real, &stats).unwrap();

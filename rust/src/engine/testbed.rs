@@ -19,6 +19,15 @@ pub struct MockBackend {
     pub param: f32,
     /// Bit pattern of `param` after each executed train step, in order.
     pub trace: Vec<u64>,
+    /// `train_step` invocations since construction.
+    pub train_calls: usize,
+    /// `fwd_stats` invocations since construction.
+    pub fwd_calls: usize,
+    /// `fwd_embed` invocations since construction.  Together with the two
+    /// counters above this lets tests assert *device-call budgets* — e.g.
+    /// that a cached-feature scoring pass performs zero extra forwards in
+    /// epochs that reuse the cache.
+    pub embed_calls: usize,
 }
 
 impl Default for MockBackend {
@@ -28,9 +37,17 @@ impl Default for MockBackend {
 }
 
 impl MockBackend {
-    /// A fresh backend with `param = 1.0` and an empty trace.
+    /// A fresh backend with `param = 1.0`, an empty trace, and zeroed
+    /// call counters.
     pub fn new() -> Self {
-        MockBackend { param: 1.0, trace: vec![] }
+        MockBackend { param: 1.0, trace: vec![], train_calls: 0, fwd_calls: 0, embed_calls: 0 }
+    }
+
+    /// Total device forwards that are *not* training steps (stat
+    /// refreshes, evals, embedding harvests) — the quantity pre-forward
+    /// pruning strategies promise to amortize.
+    pub fn forward_calls(&self) -> usize {
+        self.fwd_calls + self.embed_calls
     }
 
     fn stats(&self, x: &[f32], y: &[i32], sw: Option<&[f32]>, b: usize) -> BatchStats {
@@ -57,6 +74,7 @@ impl StepBackend for MockBackend {
         lr: f32,
     ) -> anyhow::Result<BatchStats> {
         let b = sw.len();
+        self.train_calls += 1;
         let stats = self.stats(x, y, Some(sw), b);
         for (slot, &w) in sw.iter().enumerate() {
             self.param += stats.loss[slot] * w * lr * 1e-3;
@@ -67,14 +85,20 @@ impl StepBackend for MockBackend {
 
     fn fwd_stats(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<BatchStats> {
         let b = y.len();
+        self.fwd_calls += 1;
         Ok(self.stats(x, y, None, b))
     }
 
     /// Deterministic two-wide "embedding": per slot, the feature sum and
     /// its product with `param` — enough structure for serving tests to
-    /// verify bitwise transport without an embedding artifact.
+    /// verify bitwise transport without an embedding artifact.  The
+    /// feature sum is a pure function of the sample index (the dataset is
+    /// immutable), and `param` encodes the whole training history, so the
+    /// emitted embedding is deterministic per (sample, epoch) without any
+    /// hidden state.
     fn fwd_embed(&mut self, x: &[f32], y: &[i32]) -> anyhow::Result<EmbedStats> {
         let b = y.len();
+        self.embed_calls += 1;
         let dim = x.len() / b;
         let stats = self.stats(x, y, None, b);
         let mut emb = Vec::with_capacity(b * 2);

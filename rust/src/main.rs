@@ -14,7 +14,8 @@
 //! --detailed_metrics --service-lane --checkpoint_every --checkpoint_dir
 //! --resume --checkpoint-pool --checkpoint-verify --checkpoint-compress
 //! --fault-policy --straggler-timeout-ms --serve --serve-threads
-//! --serve-replicas --serve-batch --serve-batch-wait-us --serve-retain`
+//! --serve-replicas --serve-batch --serve-batch-wait-us --serve-retain
+//! --pfb-fraction --pfb-refresh-every`
 
 use kakurenbo::cli::Args;
 use kakurenbo::config::{presets, StrategyConfig};
@@ -32,6 +33,7 @@ const OVERRIDE_KEYS: &[&str] = &[
     "straggler_timeout_ms", "straggler-timeout-ms", "serve", "serve_threads",
     "serve-threads", "serve_replicas", "serve-replicas", "serve_batch", "serve-batch",
     "serve_batch_wait_us", "serve-batch-wait-us", "serve_retain", "serve-retain",
+    "pfb_fraction", "pfb-fraction", "pfb_refresh_every", "pfb-refresh-every",
 ];
 
 fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig> {
@@ -45,6 +47,7 @@ fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig>
         "random" => StrategyConfig::RandomHiding { fraction },
         "infobatch" => StrategyConfig::InfoBatch { r: fraction },
         "el2n" => StrategyConfig::El2n { score_epoch: 4, fraction, restart: false },
+        "pfb" => StrategyConfig::Pfb { fraction, refresh_every: 3 },
         other if other.starts_with("kakurenbo-v") => {
             let comps = kakurenbo::config::Components::from_bits(&other["kakurenbo-".len()..])?;
             StrategyConfig::Kakurenbo {
@@ -56,7 +59,7 @@ fn strategy_by_name(name: &str, fraction: f64) -> anyhow::Result<StrategyConfig>
             }
         }
         other => anyhow::bail!(
-            "unknown strategy {other:?}; available: baseline kakurenbo kakurenbo-vXXXX iswr sb forget gradmatch random infobatch el2n"
+            "unknown strategy {other:?}; available: baseline kakurenbo kakurenbo-vXXXX iswr sb forget gradmatch random infobatch el2n pfb"
         ),
     })
 }
@@ -193,10 +196,11 @@ USAGE:
   kakurenbo variants
 
 Strategies: baseline kakurenbo kakurenbo-vXXXX (ablation bits HE/MB/RF/LR)
-            iswr sb forget gradmatch random infobatch el2n
+            iswr sb forget gradmatch random infobatch el2n pfb
             (catalog with citations + flags: docs/strategies.md)
 Overrides:  --epochs --seed --workers --dp --base_lr --warmup_epochs
             --momentum --max_fraction --tau --drop_top --variant
+            --pfb-fraction --pfb-refresh-every
             --eval_every --service-lane --checkpoint_every
             --checkpoint_dir --resume --checkpoint-pool
             --checkpoint-verify --checkpoint-compress
@@ -234,6 +238,12 @@ up to N concurrent queries into one device forward, waiting at most
 identical to per-query execution; --serve-retain K bounds the hub to
 the K most recent publications (default 2).  Serving never perturbs
 training: records are bitwise identical with it on or off.
+
+--strategy pfb prunes pre-forward from a cached-feature proxy:
+--pfb-fraction F drops the F most redundant samples per scored epoch,
+--pfb-refresh-every N re-harvests penultimate-layer embeddings every N
+epochs (one fwd_embed sweep; the N-1 epochs in between score from the
+cache with zero extra device forwards).
 
 --fault-policy {fail,elastic} picks what a multi-worker run does when a
 lane dies or stalls mid-epoch (docs/worker-model.md \"Fault tolerance\"):

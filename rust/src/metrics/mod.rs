@@ -137,6 +137,16 @@ pub struct EpochRecord {
     /// Seconds spent exporting + publishing this epoch's snapshot to the
     /// hub (0 when the publication reused the epoch's cached export).
     pub time_publish: f64,
+    /// Epochs the feature cache's rows lagged this epoch's plan (PFB:
+    /// 0 on harvest-plan epochs and for strategies without a cache).
+    pub feature_cache_age: usize,
+    /// Seconds the Refresh phase spent in the embedding harvest sweep
+    /// that refilled the feature cache (0 on cache-reuse epochs — the
+    /// zero-extra-forwards epochs PFB amortizes its scoring into).
+    pub time_feature_refresh: f64,
+    /// Samples this epoch's plan excluded *before* any forward pass ran
+    /// on them (PFB's cached-feature pruning; 0 for loss-based hiding).
+    pub pruned_pre_forward: usize,
 }
 
 impl EpochRecord {
@@ -197,6 +207,9 @@ impl EpochRecord {
             ("serve_batches", self.serve_batches),
             ("serve_batch_fill", self.serve_batch_fill),
             ("time_publish", self.time_publish),
+            ("feature_cache_age", self.feature_cache_age),
+            ("time_feature_refresh", self.time_feature_refresh),
+            ("pruned_pre_forward", self.pruned_pre_forward),
         ];
         if let Json::Obj(m) = &mut o {
             if !self.worker_samples.is_empty() {

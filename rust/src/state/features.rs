@@ -1,0 +1,266 @@
+//! The coordinator's feature cache: penultimate-layer embeddings
+//! harvested by the engine's [`StepMode::Embed`] scoring pass and reused
+//! across epochs by pre-forward pruning strategies (PFB).
+//!
+//! The cache is what makes PFB's scoring *amortized* instead of per-epoch:
+//! one `fwd_embed` sweep every `--pfb-refresh-every N` epochs fills it, and
+//! the N following plans score samples from the cached rows with a cheap
+//! per-class centroid-distance proxy — zero extra device forwards in the
+//! cache-reuse epochs.  It is coordinator state: it rides the exact-resume
+//! payload (`coordinator/resume.rs`) beside the per-sample stats, so a
+//! `--resume` mid-cache-lifetime replays the same scores bit for bit.
+//!
+//! [`StepMode::Embed`]: crate::engine::StepMode
+
+use crate::data::Dataset;
+
+/// Row-major `[n, dim]` store of per-sample embedding rows plus the epoch
+/// whose parameters produced them.  Snapshotted wholesale by the
+/// exact-resume path; see the module docs for the lifecycle.
+#[derive(Clone, Debug)]
+pub struct FeatureCache {
+    /// Sample count (fixed at construction; every harvest covers all n).
+    n: usize,
+    /// Embedding width of the current harvest (0 until the first one).
+    dim: usize,
+    /// `[n, dim]` row-major features.
+    feats: Vec<f32>,
+    /// Epoch whose post-training parameters produced the rows, once a
+    /// harvest has committed.
+    harvest_epoch: Option<u32>,
+}
+
+impl FeatureCache {
+    /// An empty cache for `n` samples; [`FeatureCache::ready`] is false
+    /// until the first committed harvest.
+    pub fn new(n: usize) -> Self {
+        FeatureCache { n, dim: 0, feats: Vec::new(), harvest_epoch: None }
+    }
+
+    /// Sample count the cache was sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding width of the current rows (0 when never harvested).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Whether a committed harvest is available to score from.
+    pub fn ready(&self) -> bool {
+        self.harvest_epoch.is_some() && self.dim > 0
+    }
+
+    /// Epoch stamped by the last committed harvest.
+    pub fn harvest_epoch(&self) -> Option<u32> {
+        self.harvest_epoch
+    }
+
+    /// Epochs the cached rows lag `epoch` (0 when not ready — a cache
+    /// that cannot be scored from has no meaningful age).
+    pub fn age(&self, epoch: u32) -> usize {
+        match self.harvest_epoch {
+            Some(h) if self.ready() => epoch.saturating_sub(h) as usize,
+            _ => 0,
+        }
+    }
+
+    /// Start a harvest at embedding width `dim`: (re)allocates the row
+    /// store and drops the previous stamp, so a harvest that errors
+    /// mid-sweep leaves the cache not-ready instead of half-stale.
+    pub fn begin(&mut self, dim: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(dim > 0, "feature cache rows must be non-empty");
+        self.dim = dim;
+        self.harvest_epoch = None;
+        self.feats.clear();
+        self.feats.resize(self.n * dim, 0.0);
+        Ok(())
+    }
+
+    /// Store one sample's embedding row (during a harvest sweep).
+    pub fn store_row(&mut self, sample: usize, row: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            row.len() == self.dim && self.dim > 0,
+            "feature row width {} != cache dim {} (begin() not called?)",
+            row.len(),
+            self.dim
+        );
+        anyhow::ensure!(sample < self.n, "sample {sample} out of range (n = {})", self.n);
+        self.feats[sample * self.dim..(sample + 1) * self.dim].copy_from_slice(row);
+        Ok(())
+    }
+
+    /// Commit the harvest: stamp the rows with the epoch whose parameters
+    /// produced them.  Scoring is only legal after this.
+    pub fn commit(&mut self, epoch: u32) {
+        self.harvest_epoch = Some(epoch);
+    }
+
+    /// One sample's cached row.
+    pub fn row(&self, sample: usize) -> &[f32] {
+        &self.feats[sample * self.dim..(sample + 1) * self.dim]
+    }
+
+    /// The PFB proxy (arXiv 2506.23674): per-class centroids in feature
+    /// space, then each sample's Euclidean distance to its own class
+    /// centroid.  Samples *closest* to their centroid are the most
+    /// redundant — pruning the smallest distances removes the examples
+    /// the model has already consolidated.  Accumulation runs in fixed
+    /// sample-index order with f64 sums, so the scores are deterministic
+    /// for identical cached rows (the exact-resume contract).
+    pub fn centroid_distances(&self, data: &Dataset) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.ready(), "feature cache not ready (no committed harvest)");
+        anyhow::ensure!(
+            data.n == self.n,
+            "dataset n {} != cache n {}",
+            data.n,
+            self.n
+        );
+        let dim = self.dim;
+        let mut sums = vec![0.0f64; data.classes * dim];
+        let mut counts = vec![0usize; data.classes];
+        for i in 0..self.n {
+            let c = data.label(i) as usize;
+            counts[c] += 1;
+            let row = self.row(i);
+            let acc = &mut sums[c * dim..(c + 1) * dim];
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += v as f64;
+            }
+        }
+        let mut scores = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let c = data.label(i) as usize;
+            let count = counts[c].max(1) as f64;
+            let centroid = &sums[c * dim..(c + 1) * dim];
+            let mut d2 = 0.0f64;
+            for (&v, &s) in self.row(i).iter().zip(centroid) {
+                let diff = v as f64 - s / count;
+                d2 += diff * diff;
+            }
+            scores.push(d2.sqrt() as f32);
+        }
+        Ok(scores)
+    }
+
+    /// Snapshot the cache for the resume payload: `(dim, harvest_epoch,
+    /// rows)`, or `None` when there is nothing to persist.
+    pub fn export(&self) -> Option<(usize, u32, &[f32])> {
+        let epoch = self.harvest_epoch?;
+        if self.dim == 0 {
+            return None;
+        }
+        Some((self.dim, epoch, &self.feats))
+    }
+
+    /// Restore a snapshot previously produced by [`FeatureCache::export`].
+    pub fn import(&mut self, dim: usize, epoch: u32, feats: Vec<f32>) -> anyhow::Result<()> {
+        anyhow::ensure!(dim > 0, "imported feature cache dim must be > 0");
+        anyhow::ensure!(
+            feats.len() == self.n * dim,
+            "imported feature cache len {} != n ({}) * dim ({})",
+            feats.len(),
+            self.n,
+            dim
+        );
+        self.dim = dim;
+        self.feats = feats;
+        self.harvest_epoch = Some(epoch);
+        Ok(())
+    }
+
+    /// Drop any harvested rows (a resume with no cache payload, or a
+    /// restart): the next plan falls back to a full epoch until the
+    /// strategy's refresh cadence re-harvests.
+    pub fn invalidate(&mut self) {
+        self.dim = 0;
+        self.feats.clear();
+        self.harvest_epoch = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gauss_mixture, GaussMixtureCfg};
+
+    fn tiny(n: usize) -> Dataset {
+        gauss_mixture(
+            &GaussMixtureCfg { n_train: n, n_val: 4, dim: 4, classes: 2, ..Default::default() },
+            3,
+        )
+        .train
+    }
+
+    #[test]
+    fn lifecycle_begin_store_commit() {
+        let mut c = FeatureCache::new(3);
+        assert!(!c.ready());
+        assert_eq!(c.age(5), 0);
+        c.begin(2).unwrap();
+        assert!(!c.ready(), "uncommitted harvest must not be scoreable");
+        c.store_row(0, &[1.0, 0.0]).unwrap();
+        c.store_row(1, &[0.0, 1.0]).unwrap();
+        c.store_row(2, &[1.0, 1.0]).unwrap();
+        assert!(c.store_row(3, &[0.0, 0.0]).is_err());
+        assert!(c.store_row(0, &[0.0]).is_err());
+        c.commit(4);
+        assert!(c.ready());
+        assert_eq!(c.harvest_epoch(), Some(4));
+        assert_eq!(c.age(6), 2);
+        // a fresh begin() drops the stamp until the new commit
+        c.begin(2).unwrap();
+        assert!(!c.ready());
+    }
+
+    #[test]
+    fn centroid_distance_prefers_outliers() {
+        let d = tiny(4);
+        let mut c = FeatureCache::new(4);
+        c.begin(2).unwrap();
+        // class layout comes from the synthetic set; score against the
+        // rows we store, grouping by the dataset's own labels
+        let far: Vec<usize> = (0..4).filter(|&i| i % 2 == 1).collect();
+        for i in 0..4 {
+            if far.contains(&i) {
+                c.store_row(i, &[10.0 + i as f32, -10.0]).unwrap();
+            } else {
+                c.store_row(i, &[0.1, 0.1]).unwrap();
+            }
+        }
+        c.commit(0);
+        let scores = c.centroid_distances(&d).unwrap();
+        assert_eq!(scores.len(), 4);
+        assert!(scores.iter().all(|s| s.is_finite()));
+        // identical rows score identically; scoring is deterministic
+        let again = c.centroid_distances(&d).unwrap();
+        let a: Vec<u32> = scores.iter().map(|s| s.to_bits()).collect();
+        let b: Vec<u32> = again.iter().map(|s| s.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn export_import_round_trips_bitwise() {
+        let mut c = FeatureCache::new(2);
+        assert!(c.export().is_none());
+        c.begin(3).unwrap();
+        c.store_row(0, &[0.25, -1.5, 3.75]).unwrap();
+        c.store_row(1, &[1.0e-7, 2.0, -0.0]).unwrap();
+        c.commit(7);
+        let (dim, epoch, rows) = c.export().unwrap();
+        let rows = rows.to_vec();
+        let mut r = FeatureCache::new(2);
+        r.import(dim, epoch, rows.clone()).unwrap();
+        assert!(r.ready());
+        assert_eq!(r.harvest_epoch(), Some(7));
+        let a: Vec<u32> = rows.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = (0..2).flat_map(|i| r.row(i).iter().map(|v| v.to_bits())).collect();
+        assert_eq!(a, b);
+        assert!(r.import(0, 1, vec![]).is_err());
+        assert!(r.import(2, 1, vec![0.0; 3]).is_err());
+        r.invalidate();
+        assert!(!r.ready());
+        assert!(r.export().is_none());
+    }
+}

@@ -7,6 +7,10 @@
 //! hiding selector, the baselines (ISWR / SB / FORGET), and all the
 //! per-class diagnostics (Figs. 6-8) read from.
 
+pub mod features;
+
+pub use features::FeatureCache;
+
 use crate::data::Dataset;
 
 /// Per-sample lagging statistics: the store the hiding selector, the

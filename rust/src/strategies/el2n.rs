@@ -136,6 +136,7 @@ mod tests {
             state: &mut state,
             rng: &mut rng,
             exec: None,
+            features: None,
         };
         assert!(s.plan_epoch(&mut ctx).is_err());
     }

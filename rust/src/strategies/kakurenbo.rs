@@ -111,6 +111,7 @@ impl Strategy for Kakurenbo {
             moved_back: sel.moved_back,
             reset_params: false,
             batch_mode: super::BatchMode::Plain,
+            pruned_pre_forward: 0,
         })
     }
 }

@@ -13,13 +13,14 @@ pub mod infobatch;
 pub mod gradmatch;
 pub mod iswr;
 pub mod kakurenbo;
+pub mod pfb;
 pub mod random_hiding;
 pub mod sb;
 
 use crate::config::StrategyConfig;
 use crate::data::Dataset;
 use crate::runtime::ModelExecutor;
-use crate::state::SampleState;
+use crate::state::{FeatureCache, SampleState};
 use crate::util::rng::Rng;
 
 /// How the coordinator consumes the plan's order.
@@ -52,6 +53,10 @@ pub struct EpochPlan {
     pub reset_params: bool,
     /// How the engine consumes `order` (plain train vs SB select-train).
     pub batch_mode: BatchMode,
+    /// Samples excluded from the epoch *before* any forward pass ran on
+    /// them this epoch (PFB's cached-feature pruning): the plan decided
+    /// from cached scores alone, so these cost zero device work.
+    pub pruned_pre_forward: usize,
 }
 
 impl EpochPlan {
@@ -67,6 +72,7 @@ impl EpochPlan {
             moved_back: 0,
             reset_params: false,
             batch_mode: BatchMode::Plain,
+            pruned_pre_forward: 0,
         }
     }
 }
@@ -87,6 +93,9 @@ pub struct PlanCtx<'a> {
     /// The executor, for strategies that run an extra selection pass
     /// (GradMatch / EL2N `fwd_embed`); `None` in executor-free tests.
     pub exec: Option<&'a mut ModelExecutor>,
+    /// The coordinator's feature cache (PFB scores from it instead of
+    /// running a forward pass); `None` when the trainer keeps no cache.
+    pub features: Option<&'a FeatureCache>,
 }
 
 /// One per-epoch planning policy: turns per-sample state into the epoch's
@@ -109,6 +118,14 @@ pub trait Strategy: Send {
     /// (baseline, ISWR, SB) keep the 0.0 default.
     fn fraction_ceiling(&self, _epoch: usize) -> f64 {
         0.0
+    }
+    /// If `Some(n)`, the coordinator harvests penultimate-layer embeddings
+    /// into the feature cache every `n` epochs (the engine's
+    /// `StepMode::Embed` sweep at the epoch's Refresh phase).  Strategies
+    /// that never score from cached features keep the `None` default and
+    /// pay no harvest cost.
+    fn feature_refresh_every(&self) -> Option<usize> {
+        None
     }
 }
 
@@ -141,6 +158,9 @@ pub fn build(cfg: &StrategyConfig, total_epochs: usize) -> Box<dyn Strategy> {
         StrategyConfig::El2n { score_epoch, fraction, restart } => {
             Box::new(el2n::El2n::new(*score_epoch, *fraction, *restart))
         }
+        StrategyConfig::Pfb { fraction, refresh_every } => {
+            Box::new(pfb::Pfb::new(*fraction, *refresh_every))
+        }
     }
 }
 
@@ -166,6 +186,7 @@ mod tests {
             StrategyConfig::El2n { score_epoch: 5, fraction: 0.15, restart: false },
             StrategyConfig::GradMatch { fraction: 0.3, every_r: 2 },
             StrategyConfig::InfoBatch { r: 0.5 },
+            StrategyConfig::Pfb { fraction: 0.3, refresh_every: 3 },
         ];
         for cfg in &cfgs {
             let s = build(cfg, total);
@@ -182,7 +203,8 @@ mod tests {
                     StrategyConfig::RandomHiding { fraction }
                     | StrategyConfig::Forget { fraction, .. }
                     | StrategyConfig::El2n { fraction, .. }
-                    | StrategyConfig::GradMatch { fraction, .. } => *fraction,
+                    | StrategyConfig::GradMatch { fraction, .. }
+                    | StrategyConfig::Pfb { fraction, .. } => *fraction,
                     StrategyConfig::InfoBatch { r } => *r,
                     _ => 0.0,
                 }
@@ -244,6 +266,18 @@ pub(crate) mod testutil {
         data: &Dataset,
         state: &mut SampleState,
     ) -> EpochPlan {
+        run_plan_with_features(strat, epoch, data, state, None)
+    }
+
+    /// Like [`run_plan`], with an optional feature cache (PFB's scored
+    /// epochs read from it; everything else ignores it).
+    pub fn run_plan_with_features(
+        strat: &mut dyn Strategy,
+        epoch: usize,
+        data: &Dataset,
+        state: &mut SampleState,
+        features: Option<&crate::state::FeatureCache>,
+    ) -> EpochPlan {
         // per-epoch RNG stream, as the trainer's persistent RNG would give
         let mut rng = Rng::new(7 + 1000 * epoch as u64);
         let mut ctx = PlanCtx {
@@ -253,6 +287,7 @@ pub(crate) mod testutil {
             state,
             rng: &mut rng,
             exec: None,
+            features,
         };
         strat.plan_epoch(&mut ctx).unwrap()
     }

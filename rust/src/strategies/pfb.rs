@@ -1,0 +1,195 @@
+//! Partial Forward Blocking (Dong et al., arXiv 2506.23674) as an
+//! extension strategy: per-epoch pruning decided *before* any forward
+//! pass runs, from a cached-feature redundancy proxy.
+//!
+//! Where KAKURENBO ranks samples by their lagging training loss (which
+//! the training pass itself keeps fresh), PFB scores samples in feature
+//! space: penultimate-layer embeddings are harvested once every
+//! `refresh_every` epochs (the coordinator's `StepMode::Embed` sweep at
+//! the epoch's Refresh phase, see [`Strategy::feature_refresh_every`]),
+//! and every plan in between reads the cached rows.  A sample's score is
+//! its Euclidean distance to its own class centroid
+//! ([`FeatureCache::centroid_distances`]): samples *closest* to the
+//! centroid are the most redundant — the model has consolidated them —
+//! so the `fraction` smallest distances are pruned for the epoch.
+//!
+//! The pruning is "pre-forward" in the PFB paper's sense: in the
+//! cache-reuse epochs the decision costs zero device forwards (the
+//! invariant battery pins this with MockBackend call counters), unlike
+//! loss-based hiding which needs the sample to have passed through the
+//! model at least once per scoring window.  Pruned samples are still
+//! marked hidden in [`SampleState`] for the Fig. 6-8 diagnostics, but
+//! the coordinator does not stats-refresh them
+//! ([`Strategy::refresh_hidden_stats`] is false) — their next embedding
+//! harvest refreshes both rows and stats in the same sweep.
+//!
+//! [`FeatureCache::centroid_distances`]: crate::state::FeatureCache::centroid_distances
+//! [`SampleState`]: crate::state::SampleState
+
+use super::{EpochPlan, PlanCtx, Strategy};
+use crate::sampler::shuffled;
+use crate::util::stats::argselect_smallest;
+
+/// PFB: prune the `fraction` most redundant samples per epoch, scored
+/// from the cached-feature centroid-distance proxy (see module docs).
+pub struct Pfb {
+    /// Fraction of the dataset pruned per scored epoch.
+    pub fraction: f64,
+    /// Re-harvest the feature cache every N epochs.
+    pub refresh_every: usize,
+}
+
+impl Pfb {
+    /// Prune `fraction` per epoch from a cache refreshed every
+    /// `refresh_every` epochs (min 1).
+    pub fn new(fraction: f64, refresh_every: usize) -> Self {
+        Pfb { fraction, refresh_every: refresh_every.max(1) }
+    }
+}
+
+impl Strategy for Pfb {
+    fn name(&self) -> String {
+        "pfb".into()
+    }
+
+    fn fraction_ceiling(&self, _epoch: usize) -> f64 {
+        self.fraction
+    }
+
+    fn feature_refresh_every(&self) -> Option<usize> {
+        Some(self.refresh_every)
+    }
+
+    fn plan_epoch(&mut self, ctx: &mut PlanCtx) -> anyhow::Result<EpochPlan> {
+        ctx.state.roll_epoch();
+        let n = ctx.data.n;
+        // No committed harvest yet (epoch 0, post-restart, or a resume
+        // that predates the first harvest): train the full epoch and let
+        // the Refresh-phase cadence fill the cache.
+        let ready = ctx.features.is_some_and(|f| f.ready());
+        if !ready {
+            return Ok(EpochPlan::plain(crate::sampler::epoch_permutation(n, ctx.rng)));
+        }
+        let cache = ctx.features.unwrap();
+        let scores = cache.centroid_distances(ctx.data)?;
+        let k = ((n as f64) * self.fraction).floor() as usize;
+        let hidden = argselect_smallest(&scores, k);
+        let mut is_hidden = vec![false; n];
+        for &i in &hidden {
+            is_hidden[i as usize] = true;
+        }
+        let kept: Vec<u32> = (0..n as u32).filter(|&i| !is_hidden[i as usize]).collect();
+        ctx.state.set_hidden(&hidden);
+        let order = shuffled(&kept, ctx.rng);
+        let max_hidden = hidden.len();
+        let pruned_pre_forward = hidden.len();
+        Ok(EpochPlan {
+            order,
+            hidden,
+            max_hidden,
+            pruned_pre_forward,
+            ..EpochPlan::plain(vec![])
+        })
+    }
+
+    /// PFB never stats-refreshes the pruned list: the decision came from
+    /// cached features (not lagging loss), and the next embedding harvest
+    /// refreshes rows *and* stats in one sweep.  An extra refresh pass
+    /// would break the zero-extra-forwards promise of cache-reuse epochs.
+    fn refresh_hidden_stats(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::FeatureCache;
+    use crate::strategies::testutil::*;
+
+    /// A committed cache where sample i's row is [i, 0, ...]: within each
+    /// class the lowest-index members sit closest to the class centroid's
+    /// low side, and the distances are strictly graded.
+    fn graded_cache(n: usize, dim: usize) -> FeatureCache {
+        let mut c = FeatureCache::new(n);
+        c.begin(dim).unwrap();
+        for i in 0..n {
+            let mut row = vec![0.0f32; dim];
+            row[0] = i as f32;
+            c.store_row(i, &row).unwrap();
+        }
+        c.commit(0);
+        c
+    }
+
+    #[test]
+    fn cold_cache_trains_full_epoch() {
+        let tv = tiny_data(32);
+        let mut state = graded_state(32);
+        let mut s = Pfb::new(0.25, 3);
+        // no cache at all
+        let plan = run_plan(&mut s, 0, &tv.train, &mut state);
+        assert_eq!(plan.order.len(), 32);
+        assert!(plan.hidden.is_empty());
+        assert_eq!(plan.pruned_pre_forward, 0);
+        // a cache that exists but has no committed harvest
+        let cold = FeatureCache::new(32);
+        let plan = run_plan_with_features(&mut s, 1, &tv.train, &mut state, Some(&cold));
+        assert_eq!(plan.order.len(), 32);
+        assert!(plan.hidden.is_empty());
+    }
+
+    #[test]
+    fn warm_cache_prunes_fraction_pre_forward() {
+        let n = 40;
+        let tv = tiny_data(n);
+        let mut state = graded_state(n);
+        let cache = graded_cache(n, 4);
+        let mut s = Pfb::new(0.25, 3);
+        let plan = run_plan_with_features(&mut s, 2, &tv.train, &mut state, Some(&cache));
+        let k = (n as f64 * 0.25).floor() as usize;
+        assert_eq!(plan.hidden.len(), k);
+        assert_eq!(plan.pruned_pre_forward, k);
+        assert_eq!(plan.max_hidden, k);
+        assert_eq!(plan.order.len(), n - k);
+        assert!(plan.weights.is_none());
+        // hidden and trained sets are disjoint and cover the dataset
+        let mut seen = vec![false; n];
+        for &i in plan.hidden.iter().chain(plan.order.iter()) {
+            assert!(!seen[i as usize], "sample {i} appears twice");
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // state marks exactly the hidden set
+        assert_eq!(state.hidden_count(), k);
+        for &i in &plan.hidden {
+            assert!(state.hidden[i as usize]);
+        }
+    }
+
+    #[test]
+    fn identical_cache_and_seed_replan_bitwise() {
+        let n = 24;
+        let tv = tiny_data(n);
+        let cache = graded_cache(n, 3);
+        let mut a = Pfb::new(0.3, 2);
+        let mut b = Pfb::new(0.3, 2);
+        let mut sa = graded_state(n);
+        let mut sb = graded_state(n);
+        let pa = run_plan_with_features(&mut a, 5, &tv.train, &mut sa, Some(&cache));
+        let pb = run_plan_with_features(&mut b, 5, &tv.train, &mut sb, Some(&cache));
+        assert_eq!(pa.order, pb.order);
+        assert_eq!(pa.hidden, pb.hidden);
+    }
+
+    #[test]
+    fn reports_refresh_cadence_and_ceiling() {
+        let s = Pfb::new(0.15, 4);
+        assert_eq!(s.feature_refresh_every(), Some(4));
+        assert_eq!(s.fraction_ceiling(0), 0.15);
+        assert!(!s.refresh_hidden_stats());
+        // refresh_every is clamped to at least 1 (config validation
+        // rejects 0 before it gets here, but the clamp keeps the type safe)
+        assert_eq!(Pfb::new(0.1, 0).refresh_every, 1);
+    }
+}

@@ -285,6 +285,102 @@ fn randomized_seed_matrix_recovers_bitwise() {
     }
 }
 
+/// Embed-mode coverage (PFB's feature-harvest sweep) over the kill /
+/// delay matrix: the committed feature cache — the scoring input every
+/// later PFB epoch prunes from — and the stat refresh the sweep doubles
+/// as must come out bitwise identical under elastic lane re-issue.  A
+/// chaos-hit harvest that drifted by one bit would silently shift every
+/// pruning decision until the next refresh.
+#[test]
+fn embed_harvest_kill_delay_matrix_commits_bitwise_identical_cache() {
+    use kakurenbo::engine::execute_sharded_harvest;
+    use kakurenbo::state::{FeatureCache, SampleState};
+
+    const N: usize = 97;
+    const HARVEST_EPOCH: u32 = 5;
+    let harvest = |w: usize,
+                   chaos: Option<ChaosPlan>,
+                   elastic: bool,
+                   timeout_ms: u64|
+     -> anyhow::Result<(Vec<u32>, Vec<u32>, usize, usize)> {
+        let d = tiny(N);
+        let order: Vec<u32> = (0..N as u32).collect();
+        let shards = shard_order_aligned(&order, w, B);
+        let mut pool = WorkerPool::new(&d, B);
+        pool.set_fault_policy(elastic, timeout_ms);
+        if let Some(plan) = chaos {
+            pool.inject_chaos(plan);
+        }
+        let mut be = MockBackend::new();
+        let mut state = SampleState::new(N);
+        let mut cache = FeatureCache::new(N);
+        let out = execute_sharded_harvest(
+            &mut pool,
+            &mut be,
+            &d,
+            &shards,
+            HARVEST_EPOCH,
+            &mut state,
+            &mut cache,
+        )?;
+        let (_dim, epoch, rows) = cache.export().expect("harvest must commit the cache");
+        assert_eq!(epoch, HARVEST_EPOCH);
+        Ok((
+            rows.iter().map(|v| v.to_bits()).collect(),
+            state.loss.iter().map(|v| v.to_bits()).collect(),
+            out.dropped_lanes,
+            out.rejoined_lanes,
+        ))
+    };
+
+    for w in [2usize, 4] {
+        let order: Vec<u32> = (0..N as u32).collect();
+        let steps = shard_order_aligned(&order, w, B)[0].steps(B);
+        let (base_rows, base_loss, _, _) = harvest(w, None, false, 0).unwrap();
+        for kill_at in kill_points(steps) {
+            for delay_ms in [0u64, 2 * TIMEOUT_MS] {
+                let mut plan = ChaosPlan::new().kill(w - 1, kill_at);
+                let timeout = if delay_ms > 0 {
+                    plan = plan.delay(0, kill_at, delay_ms);
+                    TIMEOUT_MS
+                } else {
+                    0
+                };
+                let ctx = format!("embed W={w} kill@{kill_at} delay={delay_ms}ms");
+                let (rows, loss, dropped, rejoined) =
+                    harvest(w, Some(plan), true, timeout).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                assert!(dropped >= 1, "{ctx}: no lane dropped");
+                assert_eq!(dropped, rejoined, "{ctx}");
+                assert_eq!(rows, base_rows, "feature rows drifted: {ctx}");
+                assert_eq!(loss, base_loss, "refreshed stats drifted: {ctx}");
+            }
+        }
+    }
+}
+
+/// Embed mode never crosses replica lanes: the data-parallel schedule
+/// rejects it up front with the documented error (lane replies carry
+/// stats only), and the fail policy on the serial-equivalent schedule
+/// still aborts a killed harvest by name instead of committing a
+/// partial cache.
+#[test]
+fn embed_mode_dp_rejection_and_fail_policy_are_named_errors() {
+    let d = tiny(53);
+    let order: Vec<u32> = (0..53u32).collect();
+    let shards = shard_order_aligned(&order, 2, B);
+
+    let err = dp_run(&d, &shards, ChaosPlan::new(), false, 0, StepMode::Embed)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("serial-equivalent schedule only"), "{err}");
+
+    let err =
+        serial_run(&d, &shards, Some(ChaosPlan::new().kill(1, 0)), false, 0, StepMode::Embed)
+            .unwrap_err()
+            .to_string();
+    assert!(err.contains("worker 1 gather lane died at step 0"), "{err}");
+}
+
 /// Chaos composes with ragged shards (the satellite deadlock fix): a
 /// kill on the long lane of a maximally ragged layout still recovers
 /// bitwise, with the short lane long since retired from the barrier.

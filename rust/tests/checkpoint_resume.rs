@@ -61,6 +61,8 @@ fn assert_records_bitwise_eq(
         assert_eq!(x.moved_back, y.moved_back, "epoch {}", x.epoch);
         assert_eq!(x.trained_samples, y.trained_samples, "epoch {}", x.epoch);
         assert_eq!(x.backprop_samples, y.backprop_samples, "epoch {}", x.epoch);
+        assert_eq!(x.pruned_pre_forward, y.pruned_pre_forward, "epoch {}", x.epoch);
+        assert_eq!(x.feature_cache_age, y.feature_cache_age, "epoch {}", x.epoch);
     }
 }
 
@@ -156,6 +158,52 @@ fn resumed_baseline_run_matches_tail_via_service_lane() {
 
     assert_eq!(resumed_result.records.first().unwrap().epoch, 4);
     assert_records_bitwise_eq(&resumed_result.records, &full_result.records[4..]);
+    assert_params_bitwise_eq(&resumed, &full);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// PFB's resume contract crosses the feature-cache lifetime: the run is
+/// killed *between* cache refreshes, so the epoch the resumed run plans
+/// first must score from embedding rows harvested epochs earlier — rows
+/// that only exist if the checkpoint carried them (`state_pfb_feats`)
+/// and `--resume` restored them bit for bit.  A resume that silently
+/// re-harvested (or started cold) would shift the prune set and diverge
+/// from the uninterrupted run's tail.
+#[test]
+fn resumed_pfb_run_restores_feature_cache_mid_lifetime() {
+    let Some(rt) = runtime() else { return };
+    let dir = tmp_dir("pfb");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut cfg = small_cfg();
+    cfg.strategy = StrategyConfig::Pfb { fraction: 0.25, refresh_every: 3 };
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.checkpoint_every = 0;
+    ref_cfg.checkpoint_dir = None;
+    let mut full = Trainer::new(&rt, ref_cfg).unwrap();
+    let full_result = full.run().unwrap();
+
+    // killed after epoch 2: the epoch-2 checkpoint carries the cache
+    // harvested at epoch 0 (refresh_every=3 defers the next harvest to
+    // epoch 3), so the kill lands mid-cache-lifetime
+    {
+        let mut t = Trainer::new(&rt, cfg.clone()).unwrap();
+        for epoch in 0..3 {
+            t.run_epoch(epoch).unwrap();
+        }
+        assert_eq!(t.feat_cache.age(2), 2, "kill point must sit between harvests");
+    }
+
+    // resume: epoch 3 plans from the *restored* epoch-0 embedding rows
+    cfg.resume = true;
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    let resumed_result = resumed.run().unwrap();
+
+    assert_eq!(resumed_result.records.first().unwrap().epoch, 3);
+    assert_records_bitwise_eq(&resumed_result.records, &full_result.records[3..]);
     assert_params_bitwise_eq(&resumed, &full);
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -20,10 +20,20 @@ fn build_from_argv(argv: &[&str]) -> anyhow::Result<ExperimentConfig> {
             "sb" => StrategyConfig::SelectiveBackprop { beta: 1.0 },
             "infobatch" => StrategyConfig::InfoBatch { r: 0.3 },
             "gradmatch" => StrategyConfig::GradMatch { fraction: 0.3, every_r: 3 },
+            "pfb" => StrategyConfig::Pfb { fraction: 0.3, refresh_every: 3 },
             other => anyhow::bail!("unknown strategy {other}"),
         };
     }
-    for key in ["epochs", "seed", "workers", "dp", "serve", "serve-threads"] {
+    for key in [
+        "epochs",
+        "seed",
+        "workers",
+        "dp",
+        "serve",
+        "serve-threads",
+        "pfb-fraction",
+        "pfb-refresh-every",
+    ] {
         if let Some(v) = args.flag(key) {
             cfg.apply_override(key, v)?;
         }
@@ -102,6 +112,41 @@ fn serve_bad_addresses_rejected_with_clear_error() {
         assert!(err.contains("--serve"), "{addr}: {err}");
         assert!(err.contains("host:port"), "unhelpful error for {addr}: {err}");
     }
+}
+
+#[test]
+fn pfb_refresh_every_zero_rejected_with_clear_error() {
+    let err = build_from_argv(&["train", "--strategy", "pfb", "--pfb-refresh-every", "0"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--pfb-refresh-every 0"), "{err}");
+    assert!(err.contains("at least every epoch"), "unhelpful error: {err}");
+}
+
+#[test]
+fn pfb_flags_validate_range_and_strategy_scope() {
+    // in-range override lands in the config
+    let cfg = build_from_argv(&[
+        "train", "--strategy", "pfb", "--pfb-fraction", "0.4", "--pfb-refresh-every", "5",
+    ])
+    .unwrap();
+    match cfg.strategy {
+        StrategyConfig::Pfb { fraction, refresh_every } => {
+            assert_eq!(fraction, 0.4);
+            assert_eq!(refresh_every, 5);
+        }
+        other => panic!("unexpected strategy {other:?}"),
+    }
+    // pruning the whole dataset is rejected, with the flag named
+    let err = build_from_argv(&["train", "--strategy", "pfb", "--pfb-fraction", "1.0"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--pfb-fraction"), "{err}");
+    // pfb flags refuse to apply to other strategies
+    let err = build_from_argv(&["train", "--strategy", "baseline", "--pfb-fraction", "0.2"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--strategy pfb"), "{err}");
 }
 
 #[test]

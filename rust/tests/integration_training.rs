@@ -131,6 +131,26 @@ fn random_hiding_fixed_fraction() {
 }
 
 #[test]
+fn pfb_prunes_pre_forward_from_cached_features() {
+    if runtime().is_none() { return }
+    let r = run(StrategyConfig::Pfb { fraction: 0.25, refresh_every: 2 });
+    // epoch 0 plans cold (cache not yet harvested): full data, no pruning
+    assert_eq!(r.records[0].trained_samples, 768);
+    assert_eq!(r.records[0].pruned_pre_forward, 0);
+    // every scored epoch prunes floor(768 * 0.25) = 192 samples before
+    // any forward pass ran on them
+    for rec in &r.records[1..] {
+        assert_eq!(rec.pruned_pre_forward, 192, "epoch {}", rec.epoch);
+        assert_eq!(rec.hidden, 192, "epoch {}", rec.epoch);
+        assert_eq!(rec.trained_samples, 768 - 192, "epoch {}", rec.epoch);
+    }
+    // plan-time cache age cycles with the harvest cadence (harvests land
+    // at the refresh phase of epochs 0, 2, 4)
+    let ages: Vec<usize> = r.records.iter().map(|rec| rec.feature_cache_age).collect();
+    assert_eq!(ages, vec![0, 1, 2, 1, 2, 1]);
+}
+
+#[test]
 fn deterministic_runs_same_seed() {
     if runtime().is_none() { return }
     let a = run(StrategyConfig::kakurenbo(0.3));

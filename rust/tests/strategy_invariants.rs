@@ -1,0 +1,436 @@
+//! Cross-strategy invariant battery: every strategy in the catalog is
+//! driven through a full plan -> train -> refresh -> harvest loop on the
+//! deterministic [`MockBackend`] and checked, every epoch, against the
+//! contracts the coordinator relies on:
+//!
+//! - hidden/pruned counts never exceed the strategy's own
+//!   `fraction_ceiling` (InfoBatch, whose ceiling is an expectation, is
+//!   instead held to its exact invariant: pruned samples are below the
+//!   pre-plan mean loss);
+//! - the hidden list is disjoint from the trained order and every entry
+//!   is marked in `SampleState` (`hidden_count` matches a full scan);
+//! - `pruned_pre_forward` is claimed only by cached-feature pruning
+//!   (PFB), where it equals the hidden count;
+//! - the whole loop replays bitwise identically under a fixed seed.
+//!
+//! Executor-backed strategies (EL2N at its score epoch, GradMatch at its
+//! selection epochs) cannot plan without a PJRT `fwd_embed` artifact;
+//! the battery exercises their executor-free epochs and pins the
+//! documented error they must raise otherwise.
+//!
+//! The final test pins PFB's device-call budget: epochs that reuse the
+//! feature cache perform ZERO extra device forwards — only train steps —
+//! while harvest epochs pay exactly one embedding sweep.
+
+use kakurenbo::config::StrategyConfig;
+use kakurenbo::data::synth::{gauss_mixture, GaussMixtureCfg};
+use kakurenbo::data::{Dataset, TrainVal};
+use kakurenbo::engine::testbed::MockBackend;
+use kakurenbo::engine::{execute_feature_harvest, Engine, RefreshSink, StepMode, TrainSink};
+use kakurenbo::state::{FeatureCache, SampleState};
+use kakurenbo::strategies::{build, EpochPlan, PlanCtx};
+use kakurenbo::util::rng::Rng;
+
+const N: usize = 48;
+const BATCH: usize = 8;
+const EPOCHS: usize = 8;
+const LR: f32 = 0.05;
+
+fn tiny() -> TrainVal {
+    gauss_mixture(
+        &GaussMixtureCfg { n_train: N, n_val: 16, dim: 6, classes: 3, ..Default::default() },
+        11,
+    )
+}
+
+/// Every strategy that can plan all of `0..EPOCHS` without an executor.
+/// EL2N's score epoch sits beyond the horizon so its (plain) prologue
+/// epochs run here; its in-horizon behavior is pinned separately below,
+/// as is GradMatch (which selects from epoch 1 on).
+fn catalog() -> Vec<StrategyConfig> {
+    vec![
+        StrategyConfig::Baseline,
+        StrategyConfig::kakurenbo(0.3),
+        StrategyConfig::Iswr,
+        StrategyConfig::SelectiveBackprop { beta: 1.0 },
+        StrategyConfig::Forget { prune_epoch: 4, fraction: 0.25 },
+        StrategyConfig::RandomHiding { fraction: 0.2 },
+        StrategyConfig::InfoBatch { r: 0.5 },
+        StrategyConfig::El2n { score_epoch: EPOCHS + 2, fraction: 0.15, restart: false },
+        StrategyConfig::Pfb { fraction: 0.25, refresh_every: 3 },
+    ]
+}
+
+/// Everything one epoch decided, reduced to bit patterns for exact
+/// replay comparison.
+#[derive(Debug, PartialEq)]
+struct EpochTrace {
+    order: Vec<u32>,
+    weight_bits: Option<Vec<u32>>,
+    hidden: Vec<u32>,
+    lr_scale_bits: u64,
+    pruned_pre_forward: usize,
+}
+
+/// Full-run outcome: per-epoch decisions plus the backend's bit-exact
+/// parameter history and the final per-sample loss store.
+#[derive(Debug, PartialEq)]
+struct Sim {
+    epochs: Vec<EpochTrace>,
+    param_bits: u32,
+    step_trace: Vec<u64>,
+    loss_bits: Vec<u32>,
+}
+
+fn check_invariants(
+    name: &str,
+    epoch: usize,
+    ceiling: f64,
+    plan: &EpochPlan,
+    state: &SampleState,
+    loss_before: &[f32],
+) {
+    let tag = format!("{name} epoch {epoch}");
+    let cap = (N as f64 * ceiling).floor() as usize;
+
+    // Index sanity: everything addresses a real sample, hidden is a set.
+    assert!(plan.order.iter().all(|&i| (i as usize) < N), "{tag}: order out of range");
+    assert!(plan.hidden.iter().all(|&i| (i as usize) < N), "{tag}: hidden out of range");
+    let mut is_hidden = vec![false; N];
+    for &h in &plan.hidden {
+        assert!(!is_hidden[h as usize], "{tag}: duplicate hidden sample {h}");
+        is_hidden[h as usize] = true;
+    }
+
+    // Hidden never trains this epoch.
+    assert!(
+        plan.order.iter().all(|&i| !is_hidden[i as usize]),
+        "{tag}: hidden sample appears in train order"
+    );
+
+    // Ceiling: hard cap from the strategy's own fraction_ceiling.
+    // InfoBatch prunes below-mean samples with probability r, so its
+    // exact invariant is membership (below the pre-plan mean), not a
+    // deterministic count bound.
+    if name == "infobatch" {
+        let finite: Vec<f32> = loss_before.iter().copied().filter(|l| l.is_finite()).collect();
+        let mean = finite.iter().map(|&l| l as f64).sum::<f64>() / finite.len().max(1) as f64;
+        for &h in &plan.hidden {
+            assert!(
+                (loss_before[h as usize] as f64) < mean,
+                "{tag}: pruned above-mean sample {h}"
+            );
+        }
+    } else {
+        assert!(
+            plan.hidden.len() <= cap,
+            "{tag}: {} hidden > ceiling {cap} (F_e={ceiling})",
+            plan.hidden.len()
+        );
+        assert!(
+            plan.max_hidden <= cap,
+            "{tag}: {} candidates > ceiling {cap}",
+            plan.max_hidden
+        );
+    }
+
+    // Coverage: samples neither trained nor hidden are bounded by the
+    // same ceiling (permanent pruners like FORGET/EL2N shrink the order
+    // instead of filling `hidden`).  ISWR draws with replacement, so its
+    // per-epoch distinct coverage is genuinely random — skip it.
+    if name != "iswr" {
+        let mut touched = vec![false; N];
+        for &i in &plan.order {
+            touched[i as usize] = true;
+        }
+        for &h in &plan.hidden {
+            touched[h as usize] = true;
+        }
+        let untouched = touched.iter().filter(|&&t| !t).count();
+        assert!(untouched <= cap, "{tag}: {untouched} untouched samples > ceiling {cap}");
+    }
+
+    // State marks agree with the plan, and the O(1) counter agrees with
+    // a full scan of the flags.
+    let scan = state.hidden.iter().filter(|&&h| h).count();
+    assert_eq!(state.hidden_count(), scan, "{tag}: hidden_count drifted from flag scan");
+    for &h in &plan.hidden {
+        assert!(state.hidden[h as usize], "{tag}: hidden sample {h} not marked in state");
+    }
+
+    // Pre-forward pruning is PFB's claim alone, and there it must cover
+    // the whole hidden list (the plan came from cached scores).
+    if name == "pfb" {
+        assert_eq!(plan.pruned_pre_forward, plan.hidden.len(), "{tag}: pfb pre-forward count");
+    } else {
+        assert_eq!(plan.pruned_pre_forward, 0, "{tag}: non-PFB claims pre-forward pruning");
+    }
+
+    // LR compensation only ever scales up (Eq. 8), and weights are
+    // positive finite per-position multipliers.
+    assert!(
+        plan.lr_scale.is_finite() && plan.lr_scale >= 1.0,
+        "{tag}: lr_scale {}",
+        plan.lr_scale
+    );
+    if let Some(w) = &plan.weights {
+        assert_eq!(w.len(), plan.order.len(), "{tag}: weights misaligned with order");
+        assert!(w.iter().all(|&x| x.is_finite() && x > 0.0), "{tag}: non-positive weight");
+    }
+}
+
+/// Drive one strategy through the full coordinator-shaped loop, checking
+/// invariants at every epoch.  SB's candidate stream is plain-trained
+/// here (the invariants under test are plan-level; its accept-queue
+/// semantics have their own tests).
+fn simulate(cfg: &StrategyConfig, seed: u64) -> Sim {
+    let tv = tiny();
+    let data: &Dataset = &tv.train;
+    let mut strat = build(cfg, EPOCHS);
+    let mut state = SampleState::new(N);
+    let mut cache = FeatureCache::new(N);
+    let mut rng = Rng::new(seed);
+    let mut backend = MockBackend::new();
+    let mut engine = Engine::new(data, BATCH);
+    let mut epochs = Vec::new();
+
+    for epoch in 0..EPOCHS {
+        let loss_before = state.loss.clone();
+        let plan = {
+            let mut ctx = PlanCtx {
+                epoch,
+                total_epochs: EPOCHS,
+                data,
+                state: &mut state,
+                rng: &mut rng,
+                exec: None,
+                features: Some(&cache),
+            };
+            strat.plan_epoch(&mut ctx).expect("plan_epoch")
+        };
+        if plan.reset_params {
+            // mirror the coordinator: restart parameters, and drop any
+            // feature rows harvested from the discarded model
+            backend.param = 1.0;
+            cache.invalidate();
+        }
+        let ceiling = strat.fraction_ceiling(epoch);
+        check_invariants(&strat.name(), epoch, ceiling, &plan, &state, &loss_before);
+
+        let mut sink = TrainSink::new(&mut state, epoch as u32);
+        engine
+            .run(
+                &mut backend,
+                data,
+                &plan.order,
+                plan.weights.as_deref(),
+                StepMode::Train { lr: LR },
+                &mut sink,
+            )
+            .expect("train");
+
+        if strat.refresh_hidden_stats() && !plan.hidden.is_empty() {
+            let mut sink = RefreshSink::new(&mut state, epoch as u32);
+            engine
+                .run(&mut backend, data, &plan.hidden, None, StepMode::Forward, &mut sink)
+                .expect("refresh");
+        }
+
+        if let Some(every) = strat.feature_refresh_every() {
+            let e = epoch as u32;
+            if !cache.ready() || cache.age(e) >= every {
+                let all: Vec<u32> = (0..N as u32).collect();
+                execute_feature_harvest(&mut engine, &mut backend, data, &all, e, &mut state, &mut cache)
+                    .expect("harvest");
+            }
+        }
+
+        epochs.push(EpochTrace {
+            order: plan.order,
+            weight_bits: plan.weights.map(|w| w.iter().map(|x| x.to_bits()).collect()),
+            hidden: plan.hidden,
+            lr_scale_bits: plan.lr_scale.to_bits(),
+            pruned_pre_forward: plan.pruned_pre_forward,
+        });
+    }
+
+    Sim {
+        epochs,
+        param_bits: backend.param.to_bits(),
+        step_trace: backend.trace,
+        loss_bits: state.loss.iter().map(|l| l.to_bits()).collect(),
+    }
+}
+
+#[test]
+fn invariants_hold_for_every_strategy_every_epoch() {
+    for cfg in &catalog() {
+        simulate(cfg, 42); // asserts inside check_invariants
+    }
+}
+
+/// Plan -> train -> refresh -> harvest round-trips are a pure function
+/// of (config, seed): two independent replays agree on every order,
+/// weight bit, hidden list, parameter bit, and loss bit.
+#[test]
+fn full_loop_replays_bitwise_under_fixed_seed() {
+    for cfg in &catalog() {
+        let a = simulate(cfg, 1234);
+        let b = simulate(cfg, 1234);
+        assert_eq!(a, b, "{:?} replay diverged", build(cfg, EPOCHS).name());
+    }
+}
+
+/// Different seeds must actually change the randomized strategies —
+/// guards against the harness accidentally ignoring its seed.
+#[test]
+fn seed_reaches_the_planning_rng() {
+    let cfg = StrategyConfig::RandomHiding { fraction: 0.2 };
+    let a = simulate(&cfg, 1);
+    let b = simulate(&cfg, 2);
+    assert_ne!(a.epochs[1].hidden, b.epochs[1].hidden, "seed did not reach planning");
+}
+
+fn plan_once(
+    strat: &mut dyn kakurenbo::strategies::Strategy,
+    epoch: usize,
+    data: &Dataset,
+    state: &mut SampleState,
+) -> anyhow::Result<EpochPlan> {
+    let mut rng = Rng::new(7 + 1000 * epoch as u64);
+    let mut ctx = PlanCtx {
+        epoch,
+        total_epochs: EPOCHS,
+        data,
+        state,
+        rng: &mut rng,
+        exec: None,
+        features: None,
+    };
+    strat.plan_epoch(&mut ctx)
+}
+
+/// GradMatch trains plain at epoch 0, then must refuse to select without
+/// `fwd_embed` access — with the documented error, not a panic.
+#[test]
+fn gradmatch_without_executor_reports_documented_error() {
+    let tv = tiny();
+    let mut state = SampleState::new(N);
+    let mut strat = build(&StrategyConfig::GradMatch { fraction: 0.3, every_r: 3 }, EPOCHS);
+    let p0 = plan_once(&mut *strat, 0, &tv.train, &mut state).expect("epoch 0 is plain");
+    assert_eq!(p0.order.len(), N);
+    let err = plan_once(&mut *strat, 1, &tv.train, &mut state).unwrap_err();
+    assert!(
+        err.to_string().contains("executor access"),
+        "undocumented error: {err}"
+    );
+}
+
+/// EL2N trains plain through its prologue, then must refuse to score
+/// without `fwd_embed` access — with the documented error.
+#[test]
+fn el2n_without_executor_reports_documented_error() {
+    let tv = tiny();
+    let mut state = SampleState::new(N);
+    let mut strat =
+        build(&StrategyConfig::El2n { score_epoch: 2, fraction: 0.2, restart: false }, EPOCHS);
+    for epoch in 0..2 {
+        let p = plan_once(&mut *strat, epoch, &tv.train, &mut state).expect("prologue is plain");
+        assert_eq!(p.order.len(), N, "epoch {epoch}");
+    }
+    let err = plan_once(&mut *strat, 2, &tv.train, &mut state).unwrap_err();
+    assert!(
+        err.to_string().contains("executor access"),
+        "undocumented error: {err}"
+    );
+}
+
+/// PFB's device-call budget, per epoch:
+///
+/// - harvest epochs (0, N, 2N, ...) pay exactly one embedding sweep over
+///   the dataset (`fwd_embed` batches) on top of their train steps;
+/// - every cache-reuse epoch performs ZERO extra device forwards — the
+///   plan prunes from cached scores alone, and `fwd_stats` is never
+///   called at all (PFB opts out of the hidden-stat refresh because the
+///   harvest sweep already refreshes every sample's stats).
+#[test]
+fn pfb_cache_reuse_epochs_cost_zero_extra_forwards() {
+    const EVERY: usize = 3;
+    const FRACTION: f64 = 0.25;
+    let tv = tiny();
+    let data: &Dataset = &tv.train;
+    let mut strat = build(&StrategyConfig::Pfb { fraction: FRACTION, refresh_every: EVERY }, EPOCHS);
+    let mut state = SampleState::new(N);
+    let mut cache = FeatureCache::new(N);
+    let mut rng = Rng::new(99);
+    let mut backend = MockBackend::new();
+    let mut engine = Engine::new(data, BATCH);
+    let batches = |len: usize| len.div_ceil(BATCH);
+    let k = (N as f64 * FRACTION).floor() as usize;
+
+    for epoch in 0..EPOCHS {
+        let plan = {
+            let mut ctx = PlanCtx {
+                epoch,
+                total_epochs: EPOCHS,
+                data,
+                state: &mut state,
+                rng: &mut rng,
+                exec: None,
+                features: Some(&cache),
+            };
+            strat.plan_epoch(&mut ctx).expect("plan")
+        };
+        // epoch 0 plans cold (full data); every later epoch scores from
+        // the cache and prunes exactly floor(N * fraction) pre-forward
+        if epoch == 0 {
+            assert_eq!(plan.order.len(), N);
+            assert!(plan.hidden.is_empty());
+        } else {
+            assert_eq!(plan.hidden.len(), k, "epoch {epoch}");
+            assert_eq!(plan.pruned_pre_forward, k, "epoch {epoch}");
+            assert_eq!(plan.order.len(), N - k, "epoch {epoch}");
+        }
+
+        let (train0, fwd0) = (backend.train_calls, backend.forward_calls());
+        let mut sink = TrainSink::new(&mut state, epoch as u32);
+        engine
+            .run(&mut backend, data, &plan.order, None, StepMode::Train { lr: LR }, &mut sink)
+            .expect("train");
+        assert!(!strat.refresh_hidden_stats(), "PFB must skip the hidden-stat forward pass");
+
+        let every = strat.feature_refresh_every().expect("PFB harvests");
+        assert_eq!(every, EVERY);
+        let harvest_due = !cache.ready() || cache.age(epoch as u32) >= every;
+        assert_eq!(harvest_due, epoch % EVERY == 0, "cadence at epoch {epoch}");
+        if harvest_due {
+            let all: Vec<u32> = (0..N as u32).collect();
+            execute_feature_harvest(
+                &mut engine,
+                &mut backend,
+                data,
+                &all,
+                epoch as u32,
+                &mut state,
+                &mut cache,
+            )
+            .expect("harvest");
+        }
+
+        let train_delta = backend.train_calls - train0;
+        let fwd_delta = backend.forward_calls() - fwd0;
+        assert_eq!(train_delta, batches(plan.order.len()), "train steps at epoch {epoch}");
+        if harvest_due {
+            assert_eq!(fwd_delta, batches(N), "harvest sweep at epoch {epoch}");
+        } else {
+            // the acceptance criterion: cache-reuse epochs are free of
+            // any non-train device call
+            assert_eq!(fwd_delta, 0, "extra device forwards at cache-reuse epoch {epoch}");
+        }
+    }
+
+    // PFB never uses the plain stats forward at all.
+    assert_eq!(backend.fwd_calls, 0, "fwd_stats must never run under PFB");
+    // Harvests landed at 0, 3, 6: three sweeps of ceil(N/BATCH) batches.
+    assert_eq!(backend.embed_calls, 3 * batches(N));
+}
